@@ -1,0 +1,62 @@
+//! Mapping explorer: sweep every strategy's configuration space for a model
+//! and GPU budget, print the top configurations with their step-time
+//! breakdowns, and show what MoE Parallel Folding unlocks.
+//!
+//! Run: `cargo run --release --example mapping_explorer -- \
+//!        [--model qwen2-57b-a14b] [--gpus 64] [--top 5]`
+
+use moe_folding::autotune;
+use moe_folding::config::{ModelConfig, TrainConfig};
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let model = ModelConfig::by_name(args.get_or("model", "qwen2-57b-a14b"))
+        .expect("unknown model");
+    let gpus = args.get_usize("gpus", 64);
+    let top = args.get_usize("top", 5);
+    let train = TrainConfig::paper_default(args.get_usize("seq", 4096), args.get_usize("gbs", 256));
+    let pm = PerfModel::default();
+
+    println!("# {} on {gpus} GPUs (seq {}, gbs {})\n", model.name, train.seq_len,
+             train.global_batch_size);
+    let mut best_coupled = 0.0f64;
+    let mut best_folded = 0.0f64;
+    for strategy in Strategy::ALL {
+        let r = autotune::tune(&pm, &model, gpus, &train, strategy);
+        println!(
+            "== {} — {} candidates, {} OOM ==",
+            strategy.name(),
+            r.evaluated,
+            r.oom_count
+        );
+        for e in r.feasible.iter().take(top) {
+            let b = &e.breakdown;
+            println!(
+                "  {}  [a2a {:.0}ms, etp {:.0}ms, bubble {:.0}ms, dp {:.0}ms]",
+                e.summary(),
+                b.moe_a2a_ms,
+                b.moe_etp_ms,
+                b.pp_bubble_ms,
+                b.dp_exposed_ms
+            );
+        }
+        if let Some(e) = r.best {
+            match strategy {
+                Strategy::MCore => best_coupled = e.mfu,
+                Strategy::MCoreFolding => best_folded = e.mfu,
+                _ => {}
+            }
+        }
+        println!();
+    }
+    if best_coupled > 0.0 && best_folded > 0.0 {
+        println!(
+            "folding uplift: {:.1}% -> {:.1}% MFU ({:+.1} pts)",
+            best_coupled * 100.0,
+            best_folded * 100.0,
+            (best_folded - best_coupled) * 100.0
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! Quickstart: plan a parallel mapping for Mixtral 8x22B on 128 GPUs,
+//! compare the coupled (MCore) and folded strategies, and inspect the
+//! process groups the dispatcher would use.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use moe_folding::autotune;
+use moe_folding::cluster::ClusterSpec;
+use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::mapping::ParallelMapping;
+use moe_folding::perfmodel::{PerfModel, Strategy};
+
+fn main() {
+    let pm = PerfModel::default();
+    let model = ModelConfig::mixtral_8x22b();
+    let train = TrainConfig::paper_default(4096, 256);
+    println!(
+        "model: {} ({:.0}B total / {:.0}B active params)\n",
+        model.name,
+        model.total_params() as f64 / 1e9,
+        model.active_params() as f64 / 1e9
+    );
+
+    // 1. Auto-tune both strategies on 128 GPUs.
+    for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
+        let r = autotune::tune(&pm, &model, 128, &train, strategy);
+        println!("== {} (best of {} candidates) ==", strategy.name(), r.evaluated);
+        for e in r.feasible.iter().take(3) {
+            println!("  {}", e.summary());
+        }
+        println!();
+    }
+
+    // 2. Show what folding changes: the paper's Table-3 optimum decouples
+    //    ETP (1) from TP (2) and folds EP=8 into consecutive ranks.
+    let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+    let mapping = ParallelMapping::folded(cfg).expect("valid mapping");
+    let cluster = ClusterSpec::eos(128);
+    println!("folded optimum {}:", cfg.tag());
+    println!(
+        "  attention TP group of rank 0: {:?}",
+        mapping.attention.group_of("TP", 0).unwrap()
+    );
+    println!(
+        "  MoE EP group of rank 0:       {:?}",
+        mapping.moe.group_of("EP", 0).unwrap()
+    );
+    println!("  fold report: {:?}", mapping.fold_report(&cluster));
+    println!("  (EP fits in one NVLink domain: {})",
+             mapping.fold_report(&cluster).moe_comm_intra_node());
+}

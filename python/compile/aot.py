@@ -1,0 +1,184 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per preset):
+  train_step       (params..., inputs, targets) -> (loss, grads...)
+  eval_loss        (params..., inputs, targets) -> (loss,)
+  moe_block        Pallas-kernel MoE block fwd (dispatcher cross-check)
+  moe_block_ref    pure-jnp MoE block fwd (same signature)
+  grouped_ffn      per-rank expert-shard compute (distributed trainer)
+  router           gating probs (distributed trainer)
+
+A line-based manifest (`manifest.txt`) records each artifact's input/output
+shapes so the Rust side can allocate literals without re-deriving them.
+
+Usage: python -m compile.aot --out ../artifacts [--preset test,e2e]
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.grouped_ffn import grouped_ffn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(x) -> str:
+    shape = "x".join(str(d) for d in x.shape) or "scalar"
+    return f"{x.dtype}:{shape}"
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest_lines = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, example_args, static_kwargs=None):
+        """Lower fn(*example_args) and write `<name>.hlo.txt` + manifest."""
+        static_kwargs = static_kwargs or {}
+        wrapped = functools.partial(fn, **static_kwargs) if static_kwargs else fn
+        lowered = jax.jit(wrapped).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        # Record I/O shapes: inputs = flattened example args; outputs from an
+        # abstract eval.
+        flat_in, _ = jax.tree_util.tree_flatten(example_args)
+        out_shape = jax.eval_shape(wrapped, *example_args)
+        flat_out, _ = jax.tree_util.tree_flatten(out_shape)
+        self.manifest_lines.append(f"artifact {name}")
+        self.manifest_lines.append(f"path {path}")
+        for x in flat_in:
+            self.manifest_lines.append(f"in {_spec_str(x)}")
+        for x in flat_out:
+            self.manifest_lines.append(f"out {_spec_str(x)}")
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, "
+              f"{len(flat_in)} in / {len(flat_out)} out)")
+
+    def meta(self, key: str, value):
+        self.manifest_lines.append(f"meta {key} {value}")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.manifest_lines) + "\n")
+        print(f"  wrote manifest.txt ({len(self.manifest_lines)} lines)")
+
+
+def export_preset(ex: Exporter, preset: str, batch: int, seq: int):
+    spec = M.PRESETS[preset]
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(spec, key)
+    flat_params, treedef = jax.tree_util.tree_flatten(params)
+    n_params = M.num_params(params)
+    print(f"preset {preset}: {n_params / 1e6:.1f}M params, "
+          f"batch {batch} x seq {seq}")
+
+    inputs = jnp.zeros((batch, seq), jnp.int32)
+    targets = jnp.zeros((batch, seq), jnp.int32)
+
+    # train_step over flat params (stable ordering for the Rust side).
+    def train_step_flat(*args):
+        fp = args[: len(flat_params)]
+        inp, tgt = args[len(flat_params):]
+        params_ = jax.tree_util.tree_unflatten(treedef, fp)
+        loss, grads = M.make_train_step(spec, use_pallas=True)(params_, inp, tgt)
+        gflat, _ = jax.tree_util.tree_flatten(grads)
+        return (loss, *gflat)
+
+    def eval_loss_flat(*args):
+        fp = args[: len(flat_params)]
+        inp, tgt = args[len(flat_params):]
+        params_ = jax.tree_util.tree_unflatten(treedef, fp)
+        return (M.make_eval_loss(spec, use_pallas=True)(params_, inp, tgt),)
+
+    ex.meta(f"{preset}.num_params", n_params)
+    ex.meta(f"{preset}.num_param_tensors", len(flat_params))
+    ex.meta(f"{preset}.batch", batch)
+    ex.meta(f"{preset}.seq", seq)
+    ex.meta(f"{preset}.hidden", spec.hidden)
+    ex.meta(f"{preset}.layers", spec.layers)
+    ex.meta(f"{preset}.experts", spec.num_experts)
+    ex.meta(f"{preset}.top_k", spec.top_k)
+    ex.meta(f"{preset}.vocab", spec.vocab)
+
+    ex.export(f"{preset}_train_step", train_step_flat, (*flat_params, inputs, targets))
+    ex.export(f"{preset}_eval_loss", eval_loss_flat, (*flat_params, inputs, targets))
+
+    # Standalone MoE block (both kernel and reference paths) for the Rust
+    # dispatcher cross-check.
+    h, e, f = spec.hidden, spec.num_experts, spec.ffn
+    n_tok = batch * seq
+    cap = spec.capacity(n_tok)
+    tok = jnp.zeros((n_tok, h), jnp.float32)
+    wr = jnp.zeros((h, e), jnp.float32)
+    wg = jnp.zeros((e, h, f), jnp.float32)
+    wu = jnp.zeros((e, h, f), jnp.float32)
+    wd = jnp.zeros((e, f, h), jnp.float32)
+    ex.meta(f"{preset}.moe_capacity", cap)
+
+    ex.export(
+        f"{preset}_moe_block",
+        lambda t, r, g, u, d: (M.moe_block(t, r, g, u, d, top_k=spec.top_k,
+                                           capacity=cap, use_pallas=True),),
+        (tok, wr, wg, wu, wd),
+    )
+    ex.export(
+        f"{preset}_moe_block_ref",
+        lambda t, r, g, u, d: (ref.moe_block_ref(t, r, g, u, d, spec.top_k, cap),),
+        (tok, wr, wg, wu, wd),
+    )
+
+    # Per-rank expert shard compute (EP-local experts) + router, the pieces
+    # the Rust distributed trainer executes between its collectives.
+    for ep in (1, 2, 4):
+        if e % ep:
+            continue
+        el = e // ep
+        bins = jnp.zeros((el, cap, h), jnp.float32)
+        ex.export(
+            f"{preset}_grouped_ffn_ep{ep}",
+            lambda b, g, u, d: (grouped_ffn(b, g, u, d),),
+            (bins, wg[:el], wu[:el], wd[:el]),
+        )
+    ex.export(f"{preset}_router", lambda t, r: (jax.nn.softmax(t @ r, axis=-1),),
+              (tok, wr))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="test,e2e",
+                    help="comma-separated preset list")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    args = ap.parse_args()
+
+    defaults = {"test": (4, 64), "small": (4, 128), "e2e": (4, 256)}
+    ex = Exporter(args.out)
+    for preset in args.preset.split(","):
+        b, s = defaults[preset]
+        export_preset(ex, preset, args.batch or b, args.seq or s)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Pallas kernel: token permutation (gather by routing order).
+
+The dispatcher's permute/un-permute steps are pure data movement — on GPU
+the paper uses fused gather kernels; here the Pallas version streams row
+blocks and gathers with dynamic indices. interpret=True as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(x_ref, idx_ref, o_ref):
+    """x_ref: [N, H] (full); idx_ref: [BM]; o_ref: [BM, H]."""
+    o_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=0)
+
+
+def _pick_block(n: int) -> int:
+    for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def permute(x, src_idx, *, block_m: int | None = None):
+    """Gather rows: out[i] = x[src_idx[i]]. x [N,H], src_idx [M] -> [M,H]."""
+    n, h = x.shape
+    m = src_idx.shape[0]
+    bm = block_m or _pick_block(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, h), lambda i: (0, 0)),  # full table resident
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), x.dtype),
+        interpret=True,
+    )(x, src_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("num_tokens",))
+def unpermute_combine(rows, dst_idx, weights, *, num_tokens: int):
+    """Weighted scatter-add: out[dst_idx[i]] += weights[i] * rows[i].
+
+    The combine step (inverse permutation + gate weighting). Scatter-add has
+    no race-free Pallas expression across grid cells, so this half stays a
+    jnp segment op (it lowers to the same XLA scatter the ref uses).
+    """
+    h = rows.shape[-1]
+    out = jnp.zeros((num_tokens, h), rows.dtype)
+    return out.at[dst_idx].add(rows * weights[:, None])

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest compares every kernel against
+these functions across shapes/dtypes (hypothesis sweeps), and the Rust side
+cross-checks its dispatcher against the `moe_block_ref` artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU FFN for one expert: x [n, h] -> [n, h]."""
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def grouped_ffn_ref(x, w_gate, w_up, w_down):
+    """Grouped expert FFN over capacity bins.
+
+    x: [E, C, H]; w_gate/w_up: [E, H, F]; w_down: [E, F, H] -> [E, C, H].
+    """
+    g = jnp.einsum("ech,ehf->ecf", x, w_gate)
+    u = jnp.einsum("ech,ehf->ecf", x, w_up)
+    return jnp.einsum("ecf,efh->ech", jax.nn.silu(g) * u, w_down)
+
+
+def router_topk_ref(tokens, w_router, top_k):
+    """Softmax gating + top-k.
+
+    tokens: [N, H]; w_router: [H, E] -> (probs [N, K], experts [N, K] i32).
+    Implemented as K rounds of (argmax, mask) rather than jax.lax.top_k:
+    identical semantics (ties break toward the lower index) but it lowers to
+    plain HLO — lax.top_k emits a `topk(..., largest=true)` op that the
+    xla_extension 0.5.1 text parser rejects. Equivalence to lax.top_k is
+    pinned by `test_router_topk_ref_equals_lax_topk`.
+    """
+    logits = tokens @ w_router
+    probs = jax.nn.softmax(logits, axis=-1)
+    remaining = probs
+    vals, idxs = [], []
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)
+        vals.append(jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0])
+        idxs.append(idx.astype(jnp.int32))
+        remaining = remaining - jax.nn.one_hot(idx, probs.shape[-1],
+                                               dtype=probs.dtype) * 2.0
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def permute_ref(x, src_idx):
+    """Gather rows: out[i] = x[src_idx[i]].
+
+    x: [N, H]; src_idx: [M] i32 -> [M, H].
+    """
+    return jnp.take(x, src_idx, axis=0)
+
+
+def capacity_dispatch_ref(tokens, probs, experts, num_experts, capacity):
+    """Scatter routed token copies into capacity bins (GShard-style).
+
+    tokens: [N, H]; probs/experts: [N, K].
+    Returns (bins [E, C, H], combine info (experts_f, pos_f, keep_f, probs_f)
+    flattened to [N*K]) for the combine step.
+    Position-based dropping: earlier (token, k) copies win.
+    """
+    n, k = experts.shape
+    h = tokens.shape[-1]
+    experts_f = experts.reshape(-1)                       # [N*K]
+    probs_f = probs.reshape(-1)
+    one_hot = jax.nn.one_hot(experts_f, num_experts, dtype=jnp.int32)
+    pos_f = jnp.cumsum(one_hot, axis=0) - 1               # [N*K, E]
+    pos_f = jnp.take_along_axis(pos_f, experts_f[:, None], axis=1)[:, 0]
+    keep_f = pos_f < capacity
+    pos_clamped = jnp.where(keep_f, pos_f, 0)
+    x_rep = jnp.repeat(tokens, k, axis=0)                 # [N*K, H]
+    contrib = jnp.where(keep_f[:, None], x_rep, jnp.zeros_like(x_rep))
+    bins = jnp.zeros((num_experts, capacity, h), tokens.dtype)
+    bins = bins.at[experts_f, pos_clamped].add(contrib)
+    return bins, (experts_f, pos_clamped, keep_f, probs_f)
+
+
+def capacity_combine_ref(out_bins, combine_info, n, k):
+    """Gather expert outputs back and gate-weight them. Returns [N, H]."""
+    experts_f, pos_f, keep_f, probs_f = combine_info
+    rows = out_bins[experts_f, pos_f]                     # [N*K, H]
+    rows = rows * (probs_f * keep_f)[:, None]
+    return rows.reshape(n, k, -1).sum(axis=1)
+
+
+def moe_block_ref(tokens, w_router, w_gate, w_up, w_down, top_k, capacity):
+    """Full MoE block (router -> dispatch -> grouped FFN -> combine)."""
+    n = tokens.shape[0]
+    e = w_router.shape[1]
+    probs, experts = router_topk_ref(tokens, w_router, top_k)
+    bins, info = capacity_dispatch_ref(tokens, probs, experts, e, capacity)
+    out_bins = grouped_ffn_ref(bins, w_gate, w_up, w_down)
+    return capacity_combine_ref(out_bins, info, n, top_k)

@@ -1,0 +1,64 @@
+"""Pallas kernel: fused router — gating GEMM + softmax + top-k.
+
+Fuses the three small ops that precede every MoE dispatch so the logits
+never round-trip through HBM. Top-k is computed by K iterations of
+(argmax, mask) inside the kernel — K is tiny (2–8), and this avoids a sort.
+
+interpret=True (see grouped_ffn.py for why).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(top_k, x_ref, w_ref, probs_ref, idx_ref):
+    """x_ref: [BN, H]; w_ref: [H, E]; probs_ref: [BN, K]; idx_ref: [BN, K]."""
+    logits = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    remaining = probs
+    for k in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)
+        val = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+        probs_ref[:, k] = val.astype(probs_ref.dtype)
+        idx_ref[:, k] = idx.astype(jnp.int32)
+        # Mask the selected expert for the next round.
+        e = remaining.shape[-1]
+        onehot = jax.nn.one_hot(idx, e, dtype=remaining.dtype)
+        remaining = remaining - onehot * 2.0  # push below any valid prob
+
+
+def _pick_block_n(n: int) -> int:
+    for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block_n"))
+def router_topk(tokens, w_router, *, top_k: int, block_n: int | None = None):
+    """tokens [N, H], w_router [H, E] -> (probs [N, K] f32, idx [N, K] i32)."""
+    n, h = tokens.shape
+    e = w_router.shape[-1]
+    bn = block_n or _pick_block_n(n)
+    grid = (n // bn,)
+    kernel = functools.partial(_kernel, top_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, top_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((n, top_k), jnp.int32),
+        ],
+        interpret=True,
+    )(tokens, w_router)

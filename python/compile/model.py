@@ -1,0 +1,241 @@
+"""Layer 2: the MoE transformer in JAX, calling the L1 Pallas kernels.
+
+Build-time only — `aot.py` lowers the functions here to HLO text that the
+Rust coordinator loads via PJRT. Python never runs on the training loop's
+hot path.
+
+Architecture (a scaled-down Mixtral): RMSNorm → causal GQA attention →
+RMSNorm → top-k routed MoE FFN (SwiGLU experts, capacity-factor dispatch,
+sub-sequence dropping semantics) with residual connections; sinusoidal
+positions; tied embeddings optional. The MoE forward path runs the Pallas
+`grouped_ffn` kernel through a custom-VJP wrapper so jax.grad works.
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.grouped_ffn import grouped_ffn_ad
+from .kernels.router_topk import router_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static architecture description (mirrors rust `ModelConfig`)."""
+
+    hidden: int
+    layers: int
+    heads: int
+    ffn: int
+    num_experts: int
+    top_k: int
+    vocab: int
+    capacity_factor: float = 1.25
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    def capacity(self, n_tokens: int) -> int:
+        cap = math.ceil(self.capacity_factor * n_tokens * self.top_k / self.num_experts)
+        # Keep MXU-aligned-ish and static.
+        return max(8, ((cap + 7) // 8) * 8)
+
+
+PRESETS = {
+    # Unit-test scale.
+    "test": ModelSpec(hidden=64, layers=2, heads=2, ffn=128, num_experts=4,
+                      top_k=2, vocab=256),
+    # Integration scale.
+    "small": ModelSpec(hidden=128, layers=2, heads=4, ffn=256, num_experts=8,
+                       top_k=2, vocab=512),
+    # E2E driver (~150M total / ~45M active params with vocab 8192).
+    "e2e": ModelSpec(hidden=512, layers=8, heads=8, ffn=1408, num_experts=8,
+                     top_k=2, vocab=8192),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, key):
+    """Initialize the parameter pytree (all f32)."""
+    keys = jax.random.split(key, spec.layers + 2)
+    h, f, e = spec.hidden, spec.ffn, spec.num_experts
+    kv_dim = spec.hidden  # MHA (no GQA at tiny scale)
+
+    def dense(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    layers = []
+    for li in range(spec.layers):
+        k = jax.random.split(keys[li], 8)
+        layers.append({
+            "ln1": jnp.ones((h,), jnp.float32),
+            "wqkv": dense(k[0], (h, h + 2 * kv_dim), h),
+            "wo": dense(k[1], (h, h), h),
+            "ln2": jnp.ones((h,), jnp.float32),
+            "router": dense(k[2], (h, e), h),
+            "w_gate": dense(k[3], (e, h, f), h),
+            "w_up": dense(k[4], (e, h, f), h),
+            "w_down": dense(k[5], (e, f, h), f),
+        })
+    return {
+        "embed": dense(keys[-2], (spec.vocab, h), h) * math.sqrt(h) / 10.0,
+        "layers": layers,
+        "ln_f": jnp.ones((h,), jnp.float32),
+        "head": dense(keys[-1], (h, spec.vocab), h),
+    }
+
+
+def num_params(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def sinusoidal_positions(seq, dim):
+    pos = jnp.arange(seq)[:, None]
+    i = jnp.arange(dim // 2)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def attention(x, layer, spec: ModelSpec):
+    """Causal multi-head attention. x: [B, S, H]."""
+    b, s, h = x.shape
+    qkv = x @ layer["wqkv"]
+    q, k, v = jnp.split(qkv, [h, 2 * h], axis=-1)
+    hd = spec.head_dim
+
+    def heads(t):
+        return t.reshape(b, s, spec.heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bnqd,bnkd->bnqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnqk,bnkd->bnqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h)
+    return out @ layer["wo"]
+
+
+def moe_ffn(x, layer, spec: ModelSpec, use_pallas: bool):
+    """MoE FFN over flattened tokens. x: [N, H] -> ([N, H], aux_loss)."""
+    n, h = x.shape
+    e, k = spec.num_experts, spec.top_k
+    cap = spec.capacity(n)
+
+    if use_pallas:
+        # The Pallas kernel picks the experts (forward path); the combine
+        # weights are recomputed differentiably so jax.grad flows through
+        # the gate (pallas_call has no VJP; indices carry no gradient).
+        _, experts = router_topk(
+            jax.lax.stop_gradient(x), jax.lax.stop_gradient(layer["router"]),
+            top_k=k,
+        )
+        probs = jax.nn.softmax(x @ layer["router"], axis=-1)
+        probs_k = jnp.take_along_axis(probs, experts, axis=1)
+    else:
+        probs_k, experts = ref.router_topk_ref(x, layer["router"], k)
+
+    bins, info = ref.capacity_dispatch_ref(x, probs_k, experts, e, cap)
+    ffn = grouped_ffn_ad if use_pallas else ref.grouped_ffn_ref
+    out_bins = ffn(bins, layer["w_gate"], layer["w_up"], layer["w_down"])
+    y = ref.capacity_combine_ref(out_bins, info, n, k)
+
+    # Switch-style aux loss on the full softmax.
+    probs = jax.nn.softmax(x @ layer["router"], axis=-1)
+    f_top1 = jnp.mean(jax.nn.one_hot(jnp.argmax(probs, -1), e), axis=0)
+    p_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_top1 * p_mean)
+    return y, aux
+
+
+def forward(params, token_ids, spec: ModelSpec, use_pallas: bool = True):
+    """token_ids: [B, S] i32 -> logits [B, S, V], aux loss sum."""
+    b, s = token_ids.shape
+    x = params["embed"][token_ids] + sinusoidal_positions(s, spec.hidden)[None]
+    aux_total = 0.0
+    for layer in params["layers"]:
+        x = x + attention(rmsnorm(x, layer["ln1"]), layer, spec)
+        flat = rmsnorm(x, layer["ln2"]).reshape(b * s, spec.hidden)
+        y, aux = moe_ffn(flat, layer, spec, use_pallas)
+        x = x + y.reshape(b, s, spec.hidden)
+        aux_total = aux_total + aux
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["head"], aux_total
+
+
+def loss_fn(params, inputs, targets, spec: ModelSpec, use_pallas: bool = True,
+            aux_weight: float = 0.01):
+    """Next-token cross entropy + load-balancing aux loss."""
+    logits, aux = forward(params, inputs, spec, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux_weight * aux / spec.layers
+
+
+def make_train_step(spec: ModelSpec, use_pallas: bool = True):
+    """Returns train_step(params, inputs, targets) -> (loss, grads)."""
+
+    def step(params, inputs, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, inputs, targets, spec, use_pallas
+        )
+        return loss, grads
+
+    return step
+
+
+def make_eval_loss(spec: ModelSpec, use_pallas: bool = True):
+    def ev(params, inputs, targets):
+        return loss_fn(params, inputs, targets, spec, use_pallas)
+
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# Standalone MoE block (rust dispatcher cross-check artifact)
+# ---------------------------------------------------------------------------
+
+
+def moe_block(tokens, w_router, w_gate, w_up, w_down, *, top_k, capacity,
+              use_pallas=True):
+    """Single MoE block: tokens [N,H] -> [N,H] (capacity-factor dispatch)."""
+    n = tokens.shape[0]
+    e = w_router.shape[1]
+    if use_pallas:
+        _, experts = router_topk(
+            jax.lax.stop_gradient(tokens), jax.lax.stop_gradient(w_router),
+            top_k=top_k,
+        )
+        probs = jax.nn.softmax(tokens @ w_router, axis=-1)
+        probs_k = jnp.take_along_axis(probs, experts, axis=1)
+    else:
+        probs_k, experts = ref.router_topk_ref(tokens, w_router, top_k)
+    bins, info = ref.capacity_dispatch_ref(tokens, probs_k, experts, e, capacity)
+    ffn = grouped_ffn_ad if use_pallas else ref.grouped_ffn_ref
+    out_bins = ffn(bins, w_gate, w_up, w_down)
+    return ref.capacity_combine_ref(out_bins, info, n, top_k)
+
+
+__all__ = [
+    "ModelSpec", "PRESETS", "init_params", "num_params", "forward",
+    "loss_fn", "make_train_step", "make_eval_loss", "moe_block", "rmsnorm",
+]

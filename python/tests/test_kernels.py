@@ -1,0 +1,199 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the core
+correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.grouped_ffn import grouped_ffn, grouped_ffn_ad
+from compile.kernels.permute import permute, unpermute_combine
+from compile.kernels.router_topk import router_topk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.sampled_from([1, 2, 4, 8]),
+    c=st.sampled_from([8, 16, 32, 64]),
+    h=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([32, 64, 128]),
+)
+def test_grouped_ffn_matches_ref(e, c, h, f):
+    k = jax.random.split(jax.random.PRNGKey(e * 1000 + c + h + f), 4)
+    x = rand(k[0], (e, c, h))
+    wg = rand(k[1], (e, h, f), scale=h ** -0.5)
+    wu = rand(k[2], (e, h, f), scale=h ** -0.5)
+    wd = rand(k[3], (e, f, h), scale=f ** -0.5)
+    got = grouped_ffn(x, wg, wu, wd)
+    want = ref.grouped_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_ffn_dtypes(dtype):
+    k = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = rand(k[0], (4, 16, 32), dtype)
+    wg = rand(k[1], (4, 32, 64), dtype, scale=0.2)
+    wu = rand(k[2], (4, 32, 64), dtype, scale=0.2)
+    wd = rand(k[3], (4, 64, 32), dtype, scale=0.2)
+    got = grouped_ffn(x, wg, wu, wd)
+    want = ref.grouped_ffn_ref(x, wg, wu, wd)
+    assert got.dtype == dtype
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("block_c", [8, 16, 32])
+def test_grouped_ffn_block_sizes_agree(block_c):
+    k = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = rand(k[0], (2, 32, 16))
+    wg = rand(k[1], (2, 16, 32))
+    wu = rand(k[2], (2, 16, 32))
+    wd = rand(k[3], (2, 32, 16))
+    base = ref.grouped_ffn_ref(x, wg, wu, wd)
+    got = grouped_ffn(x, wg, wu, wd, block_c=block_c)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_ffn_zero_capacity_rows_stay_zero():
+    # Empty bin rows (padding) must produce zero output rows.
+    e, c, h, f = 2, 8, 16, 32
+    k = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jnp.zeros((e, c, h))
+    wg, wu, wd = (rand(k[1], (e, h, f)), rand(k[2], (e, h, f)),
+                  rand(k[3], (e, f, h)))
+    out = grouped_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-7)
+
+
+def test_grouped_ffn_ad_gradients_match_ref():
+    """custom_vjp backward == jax.grad through the reference math."""
+    k = jax.random.split(jax.random.PRNGKey(11), 4)
+    e, c, h, f = 2, 16, 16, 32
+    x = rand(k[0], (e, c, h))
+    wg = rand(k[1], (e, h, f), scale=h ** -0.5)
+    wu = rand(k[2], (e, h, f), scale=h ** -0.5)
+    wd = rand(k[3], (e, f, h), scale=f ** -0.5)
+
+    def loss_kernel(x, wg, wu, wd):
+        return jnp.sum(jnp.square(grouped_ffn_ad(x, wg, wu, wd)))
+
+    def loss_ref(x, wg, wu, wd):
+        return jnp.sum(jnp.square(ref.grouped_ffn_ref(x, wg, wu, wd)))
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# router_topk
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 64, 128]),
+    h=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8, 64]),
+    k=st.sampled_from([1, 2, 8]),
+)
+def test_router_topk_matches_ref(n, h, e, k):
+    if k > e:
+        return
+    keys = jax.random.split(jax.random.PRNGKey(n + h + e + k), 2)
+    tokens = rand(keys[0], (n, h))
+    w = rand(keys[1], (h, e), scale=h ** -0.5)
+    probs, idx = router_topk(tokens, w, top_k=k)
+    rp, ri = ref.router_topk_ref(tokens, w, k)
+    np.testing.assert_allclose(probs, rp, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(idx, ri)
+
+
+def test_router_topk_probs_descending():
+    keys = jax.random.split(jax.random.PRNGKey(42), 2)
+    tokens = rand(keys[0], (64, 32))
+    w = rand(keys[1], (32, 8))
+    probs, idx = router_topk(tokens, w, top_k=4)
+    assert np.all(np.diff(np.asarray(probs), axis=1) <= 1e-7)
+    # No duplicate experts per token.
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == 4
+
+
+def test_router_topk_ref_equals_lax_topk():
+    """The argmax-loop reference must match jax.lax.top_k exactly."""
+    keys = jax.random.split(jax.random.PRNGKey(77), 2)
+    tokens = rand(keys[0], (128, 32))
+    w = rand(keys[1], (32, 16), scale=0.2)
+    probs, idx = ref.router_topk_ref(tokens, w, 4)
+    lp = jax.nn.softmax(tokens @ w, axis=-1)
+    lv, li = jax.lax.top_k(lp, 4)
+    np.testing.assert_allclose(probs, lv, rtol=1e-6)
+    np.testing.assert_array_equal(idx, li.astype(np.int32))
+
+
+def test_router_topk_uniform_gate_tie_break():
+    """Zero weights => uniform probs => experts 0..k-1 selected (stable)."""
+    tokens = rand(jax.random.PRNGKey(1), (16, 8))
+    w = jnp.zeros((8, 4))
+    probs, idx = router_topk(tokens, w, top_k=2)
+    np.testing.assert_allclose(probs, 0.25 * jnp.ones((16, 2)), rtol=1e-6)
+    np.testing.assert_array_equal(idx, np.tile([0, 1], (16, 1)))
+
+
+# ---------------------------------------------------------------------------
+# permute
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 32, 128]),
+    h=st.sampled_from([8, 64]),
+    m=st.sampled_from([8, 16, 64]),
+)
+def test_permute_matches_ref(n, h, m):
+    keys = jax.random.split(jax.random.PRNGKey(n * h + m), 2)
+    x = rand(keys[0], (n, h))
+    idx = jax.random.randint(keys[1], (m,), 0, n, jnp.int32)
+    got = permute(x, idx)
+    want = ref.permute_ref(x, idx)
+    np.testing.assert_allclose(got, want)
+
+
+def test_permute_unpermute_roundtrip():
+    """permute by a bijection then weighted scatter-add back restores x."""
+    n, h = 32, 16
+    x = rand(jax.random.PRNGKey(2), (n, h))
+    perm = jax.random.permutation(jax.random.PRNGKey(3), n).astype(jnp.int32)
+    rows = permute(x, perm)
+    restored = unpermute_combine(rows, perm, jnp.ones((n,)), num_tokens=n)
+    np.testing.assert_allclose(restored, x, rtol=1e-6, atol=1e-6)
+
+
+def test_unpermute_combine_accumulates_duplicates():
+    rows = jnp.ones((4, 2))
+    dst = jnp.array([0, 0, 1, 1], jnp.int32)
+    w = jnp.array([0.25, 0.75, 0.5, 0.5])
+    out = unpermute_combine(rows, dst, w, num_tokens=2)
+    np.testing.assert_allclose(out, jnp.ones((2, 2)))

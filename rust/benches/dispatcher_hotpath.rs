@@ -1,0 +1,86 @@
+//! Hot-path micro-benchmarks for the L3 coordinator (EXPERIMENTS.md §Perf):
+//! routing, permutation, the full functional dispatch over 4 simulated
+//! ranks, and the perf-model estimator (the autotuner's inner loop).
+use moe_folding::config::DropPolicy;
+use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::dispatcher::{DistributedMoeLayer, Permutation, Router, RouterConfig};
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::simcomm::run_ranks;
+use moe_folding::train::math::SwigluExpert;
+use moe_folding::util::benchkit::{black_box, Harness};
+use moe_folding::util::Rng;
+
+fn main() {
+    let mut h = Harness::new();
+    let mut rng = Rng::seed_from_u64(1);
+    let (hdim, e, n) = (256usize, 8usize, 4096usize);
+    let router = Router::init(
+        RouterConfig {
+            hidden: hdim,
+            num_experts: e,
+            top_k: 2,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::SubSequence,
+            capacity_override: None,
+        },
+        &mut rng,
+    );
+    let mut tokens = vec![0.0f32; n * hdim];
+    rng.fill_normal(&mut tokens, 1.0);
+
+    h.bench("router/route_4096x256", || {
+        black_box(router.route(&tokens));
+    });
+
+    let decision = router.route(&tokens);
+    h.bench("permute/build_plan", || {
+        black_box(Permutation::from_assignments(&decision.assignments, e));
+    });
+    let perm = Permutation::from_assignments(&decision.assignments, e);
+    h.bench("permute/gather_4096x256", || {
+        black_box(perm.permute(&tokens, hdim, &decision.assignments));
+    });
+
+    // Full functional dispatch over 4 ranks (EP4), small expert FFN.
+    let experts: Vec<SwigluExpert> =
+        (0..e).map(|_| SwigluExpert::init(64, 128, &mut rng)).collect();
+    let small_router = Router::init(
+        RouterConfig {
+            hidden: 64,
+            num_experts: e,
+            top_k: 2,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::SubSequence,
+            capacity_override: None,
+        },
+        &mut rng,
+    );
+    let mut small_tokens = vec![0.0f32; 4 * 128 * 64];
+    rng.fill_normal(&mut small_tokens, 1.0);
+    h.bench("dispatch/ep4_128tok_per_rank", || {
+        let outs = run_ranks(4, |rank, comm| {
+            let layer = DistributedMoeLayer {
+                router: small_router.clone(),
+                local_experts: experts[rank * 2..(rank + 1) * 2].to_vec(),
+                ep_group: vec![0, 1, 2, 3],
+                etp_group: vec![rank],
+                ep_index: rank,
+                num_experts: e,
+                seq_group: None,
+            };
+            let mine = small_tokens[rank * 128 * 64..(rank + 1) * 128 * 64].to_vec();
+            layer.forward(&comm, &mine).0
+        });
+        black_box(outs);
+    });
+
+    // Perf-model estimator throughput (autotune inner loop).
+    let pm = PerfModel::default();
+    let model = ModelConfig::mixtral_8x22b();
+    let train = TrainConfig::paper_default(4096, 256);
+    let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+    h.bench("perfmodel/estimate_single_config", || {
+        black_box(pm.estimate(&model, cfg, &train, Strategy::MCoreFolding).unwrap());
+    });
+    let _ = h.write_csv("target/bench_dispatcher_hotpath.csv");
+}

@@ -1,0 +1,28 @@
+//! Bench/regenerator for **Figure 3**: strong-scaling MFU curves up to
+//! 1024 GPUs for all four models and four methods.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Figure 3 — strong scaling (series = method, x = GPUs, y = MFU)\n");
+    for model in ModelConfig::paper_models() {
+        println!("### {}", model.name);
+        let gpus: &[usize] = if model.name.contains("Llama3") {
+            &[256, 512, 1024]
+        } else if model.name.contains("Qwen") {
+            &[64, 128, 256, 512, 1024]
+        } else {
+            &[128, 256, 512, 1024]
+        };
+        print!("{}", coordinator::strong_scaling(&pm, &model, gpus).markdown());
+    }
+    let mut h = Harness::new();
+    let m = ModelConfig::mixtral_8x22b_g8t8();
+    h.bench("fig3/g8t8_1024gpu_point", || {
+        black_box(coordinator::strong_scaling(&pm, &m, &[1024]));
+    });
+    let _ = h.write_csv("target/bench_fig3.csv");
+}

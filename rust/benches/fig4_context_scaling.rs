@@ -1,0 +1,22 @@
+//! Bench/regenerator for **Figure 4**: MFU vs context length (16K..128K),
+//! MCore vs MCore w/ Folding.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Figure 4 — context scaling to 128K\n");
+    for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {
+        let model = ModelConfig::by_name(name).unwrap();
+        println!("### {}", model.name);
+        print!("{}", coordinator::context_scaling(&pm, &model).markdown());
+    }
+    let mut h = Harness::new();
+    let model = ModelConfig::qwen2_57b_a14b();
+    h.bench("fig4/qwen2_sweep", || {
+        black_box(coordinator::context_scaling(&pm, &model));
+    });
+    let _ = h.write_csv("target/bench_fig4.csv");
+}

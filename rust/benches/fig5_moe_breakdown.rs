@@ -1,0 +1,24 @@
+//! Bench/regenerator for **Figure 5**: MoE-layer latency breakdown across
+//! (EP, ETP) mappings at fixed attention TP4/CP1, for Mixtral 8x22B and the
+//! fine-grained G8T8 variant. `*` marks mappings only folding can express.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    for name in ["mixtral-8x22b", "mixtral-8x22b-g8t8"] {
+        let model = ModelConfig::by_name(name).unwrap();
+        for ep_etp in [8usize, 16] {
+            println!("\n## Figure 5 — {} MoE breakdown, EPxETP={}\n", model.name, ep_etp);
+            print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
+        }
+    }
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b_g8t8();
+    h.bench("fig5/g8t8_breakdown_sweep", || {
+        black_box(coordinator::fig5_breakdown(&pm, &model, 16));
+    });
+    let _ = h.write_csv("target/bench_fig5.csv");
+}

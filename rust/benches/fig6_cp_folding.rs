@@ -1,0 +1,22 @@
+//! Bench/regenerator for **Figure 6**: MoE-layer latency vs CP size with
+//! and without folding. Without folding the EP group strides across CP,
+//! pushing All-to-All onto InfiniBand once CPxEP leaves the NVLink domain.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {
+        let model = ModelConfig::by_name(name).unwrap();
+        println!("\n## Figure 6 — {} MoE latency vs CP (folded vs legacy)\n", model.name);
+        print!("{}", coordinator::fig6_cp_folding(&pm, &model).markdown());
+    }
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b();
+    h.bench("fig6/mixtral_cp_sweep", || {
+        black_box(coordinator::fig6_cp_folding(&pm, &model));
+    });
+    let _ = h.write_csv("target/bench_fig6.csv");
+}

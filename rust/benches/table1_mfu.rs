@@ -1,0 +1,22 @@
+//! Bench/regenerator for **Table 1**: MFU of five parallelism strategies
+//! across the four paper models. Prints the table and criterion-style
+//! timings of the underlying estimator sweep.
+use moe_folding::coordinator;
+use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Table 1 — MFU by parallelism strategy (paper: FSDP 4.3/OOM/9.9/2.2, FSDP+EP 23.4/19.6/25.4/9.0, TP+EP+DP 36.6/OOM/23.1/8.7, MCore 46.3/38.8/35.3/17.1, Folding 49.3/41.6/39.0/28.8)\n");
+    print!("{}", coordinator::table1(&pm).markdown());
+
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b();
+    let train = TrainConfig::paper_default(4096, 256);
+    let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+    h.bench("estimate/mixtral_folded_128gpu", || {
+        black_box(pm.estimate(&model, cfg, &train, Strategy::MCoreFolding).unwrap());
+    });
+    let _ = h.write_csv("target/bench_table1.csv");
+}

@@ -1,0 +1,22 @@
+//! Bench/regenerator for **Table 2**: FP8 vs BF16 throughput on Mixtral
+//! 8x22B @128 GPUs (paper: 458.3/487.7 BF16, 575.1/631.7 FP8; 1.26-1.30x).
+use moe_folding::coordinator;
+use moe_folding::config::{ModelConfig, ParallelConfig, Precision, TrainConfig};
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Table 2 — Mixtral 8x22B BF16 vs FP8\n");
+    print!("{}", coordinator::table2(&pm).markdown());
+
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b();
+    let mut train = TrainConfig::paper_default(4096, 256);
+    train.precision = Precision::Fp8;
+    let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+    h.bench("estimate/mixtral_fp8", || {
+        black_box(pm.estimate(&model, cfg, &train, Strategy::MCoreFolding).unwrap());
+    });
+    let _ = h.write_csv("target/bench_table2.csv");
+}

@@ -1,0 +1,21 @@
+//! Bench/regenerator for **Table 3**: the optimal parallel mapping found by
+//! tuning each strategy's dimensions (the auto-tuner's output).
+use moe_folding::autotune;
+use moe_folding::config::{ModelConfig, TrainConfig};
+use moe_folding::coordinator;
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Table 3 — optimal parallel mappings per strategy\n");
+    print!("{}", coordinator::table3(&pm).markdown());
+
+    let mut h = Harness::new();
+    let model = ModelConfig::qwen2_57b_a14b();
+    let train = TrainConfig::paper_default(4096, 256);
+    h.bench("autotune/qwen2_folding_64gpu_full_sweep", || {
+        black_box(autotune::tune(&pm, &model, 64, &train, Strategy::MCoreFolding));
+    });
+    let _ = h.write_csv("target/bench_table3.csv");
+}

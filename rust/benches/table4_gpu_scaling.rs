@@ -1,0 +1,26 @@
+//! Bench/regenerator for **Table 4** (the data behind Figure 3): MFU at
+//! fixed parallel config while GPUs scale 128 -> 1024.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Table 4 — strong-scaling detail (GBS 1024)\n");
+    for model in ModelConfig::paper_models() {
+        let gpus: &[usize] = if model.name.contains("Llama3") || model.name.contains("Qwen") {
+            &[256, 512, 1024]
+        } else {
+            &[128, 256, 512, 1024]
+        };
+        println!("### {}", model.name);
+        print!("{}", coordinator::strong_scaling(&pm, &model, gpus).markdown());
+    }
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b();
+    h.bench("strong_scaling/mixtral_row", || {
+        black_box(coordinator::strong_scaling(&pm, &model, &[1024]));
+    });
+    let _ = h.write_csv("target/bench_table4.csv");
+}

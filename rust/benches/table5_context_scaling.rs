@@ -1,0 +1,22 @@
+//! Bench/regenerator for **Table 5** (the data behind Figure 4): context
+//! scaling to 128K tokens with tokens-per-batch held constant.
+use moe_folding::config::ModelConfig;
+use moe_folding::coordinator;
+use moe_folding::perfmodel::PerfModel;
+use moe_folding::util::benchkit::{black_box, Harness};
+
+fn main() {
+    let pm = PerfModel::default();
+    println!("\n## Table 5 — context-scaling detail (paper folded: 47.6 -> 42.9 Mixtral)\n");
+    for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {
+        let model = ModelConfig::by_name(name).unwrap();
+        println!("### {}", model.name);
+        print!("{}", coordinator::context_scaling(&pm, &model).markdown());
+    }
+    let mut h = Harness::new();
+    let model = ModelConfig::mixtral_8x22b();
+    h.bench("context_scaling/mixtral_sweep", || {
+        black_box(coordinator::context_scaling(&pm, &model));
+    });
+    let _ = h.write_csv("target/bench_table5.csv");
+}

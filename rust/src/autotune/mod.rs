@@ -1,0 +1,214 @@
+//! Parallelism auto-tuner: sweep a strategy's legal configuration space and
+//! return the best-MFU feasible mapping.
+//!
+//! The paper reports "the MFU achieved with the optimal parallelism
+//! configuration found by tuning its supported parallelism dimensions" for
+//! every baseline; this module is that tuning loop, and regenerates Table 3.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::config::{ModelConfig, ParallelConfig, TrainConfig};
+use crate::perfmodel::{PerfModel, StepEstimate, Strategy};
+
+/// One tuning outcome.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub strategy: Strategy,
+    pub best: Option<StepEstimate>,
+    /// All feasible (non-OOM) estimates, sorted by descending MFU.
+    pub feasible: Vec<StepEstimate>,
+    pub evaluated: usize,
+    pub oom_count: usize,
+}
+
+impl TuneResult {
+    /// "OOM" or "41.6%" — the Table-1 cell for this (model, strategy).
+    pub fn table_cell(&self) -> String {
+        match &self.best {
+            Some(e) => format!("{:.1}%", e.mfu * 100.0),
+            None => "OOM".to_string(),
+        }
+    }
+}
+
+/// Sweep every candidate configuration of `strategy` for `model` on `gpus`
+/// GPUs and keep the best non-OOM estimate.
+pub fn tune(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpus: usize,
+    train: &TrainConfig,
+    strategy: Strategy,
+) -> TuneResult {
+    let candidates = strategy.candidates(model, gpus);
+    let evaluated = candidates.len();
+    let mut feasible = Vec::new();
+    let mut oom_count = 0usize;
+    for cfg in candidates {
+        match pm.estimate(model, cfg, train, strategy) {
+            Ok(e) if e.oom => oom_count += 1,
+            Ok(e) => feasible.push(e),
+            Err(_) => {}
+        }
+    }
+    feasible.sort_by(|a, b| b.mfu.partial_cmp(&a.mfu).unwrap());
+    TuneResult {
+        strategy,
+        best: feasible.first().cloned(),
+        feasible,
+        evaluated,
+        oom_count,
+    }
+}
+
+/// Tune all five strategies in parallel threads (they're independent).
+pub fn tune_all(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpus: usize,
+    train: &TrainConfig,
+) -> Vec<TuneResult> {
+    let (tx, rx) = mpsc::channel();
+    thread::scope(|s| {
+        for strategy in Strategy::ALL {
+            let tx = tx.clone();
+            let pm = pm.clone();
+            let model = model.clone();
+            let train = train.clone();
+            s.spawn(move || {
+                let r = tune(&pm, &model, gpus, &train, strategy);
+                let _ = tx.send(r);
+            });
+        }
+    });
+    drop(tx);
+    let mut results: Vec<TuneResult> = rx.into_iter().collect();
+    results.sort_by_key(|r| Strategy::ALL.iter().position(|s| *s == r.strategy));
+    results
+}
+
+/// Constrained tune: fix some dimensions (e.g. Figure 6 sweeps CP while
+/// tuning the rest). `None` = free dimension.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Constraints {
+    pub tp: Option<usize>,
+    pub cp: Option<usize>,
+    pub ep: Option<usize>,
+    pub etp: Option<usize>,
+    pub pp: Option<usize>,
+}
+
+impl Constraints {
+    pub fn admits(&self, c: &ParallelConfig) -> bool {
+        self.tp.map_or(true, |v| c.tp == v)
+            && self.cp.map_or(true, |v| c.cp == v)
+            && self.ep.map_or(true, |v| c.ep == v)
+            && self.etp.map_or(true, |v| c.etp == v)
+            && self.pp.map_or(true, |v| c.pp == v)
+    }
+}
+
+/// Tune under dimension constraints.
+pub fn tune_constrained(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpus: usize,
+    train: &TrainConfig,
+    strategy: Strategy,
+    cons: Constraints,
+) -> TuneResult {
+    let candidates: Vec<ParallelConfig> = strategy
+        .candidates(model, gpus)
+        .into_iter()
+        .filter(|c| cons.admits(c))
+        .collect();
+    let evaluated = candidates.len();
+    let mut feasible = Vec::new();
+    let mut oom_count = 0;
+    for cfg in candidates {
+        match pm.estimate(model, cfg, train, strategy) {
+            Ok(e) if e.oom => oom_count += 1,
+            Ok(e) => feasible.push(e),
+            Err(_) => {}
+        }
+    }
+    feasible.sort_by(|a, b| b.mfu.partial_cmp(&a.mfu).unwrap());
+    TuneResult { strategy, best: feasible.first().cloned(), feasible, evaluated, oom_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_finds_feasible_configs() {
+        let pm = PerfModel::default();
+        let m = ModelConfig::mixtral_8x22b();
+        let t = TrainConfig::paper_default(4096, 256);
+        let r = tune(&pm, &m, 128, &t, Strategy::MCoreFolding);
+        assert!(r.best.is_some());
+        assert!(r.evaluated > 10);
+        let best = r.best.unwrap();
+        assert!(best.mfu > 0.2, "best {:.3}", best.mfu);
+    }
+
+    #[test]
+    fn folding_never_worse_than_mcore() {
+        // Folding's space is a superset, so the tuned optimum dominates.
+        let pm = PerfModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        for (m, gpus) in [
+            (ModelConfig::mixtral_8x22b(), 128),
+            (ModelConfig::qwen2_57b_a14b(), 64),
+        ] {
+            let mcore = tune(&pm, &m, gpus, &t, Strategy::MCore);
+            let folded = tune(&pm, &m, gpus, &t, Strategy::MCoreFolding);
+            let a = mcore.best.map(|e| e.mfu).unwrap_or(0.0);
+            let b = folded.best.map(|e| e.mfu).unwrap_or(0.0);
+            assert!(b >= a, "{}: folded {b:.3} < mcore {a:.3}", m.name);
+        }
+    }
+
+    #[test]
+    fn constraints_respected() {
+        let pm = PerfModel::default();
+        let m = ModelConfig::mixtral_8x22b();
+        let t = TrainConfig::paper_default(4096, 256);
+        let cons = Constraints { tp: Some(4), cp: Some(1), ..Default::default() };
+        let r = tune_constrained(&pm, &m, 128, &t, Strategy::MCoreFolding, cons);
+        for e in &r.feasible {
+            assert_eq!(e.config.tp, 4);
+            assert_eq!(e.config.cp, 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod calibration {
+    use super::*;
+
+    /// Manual calibration dump: `cargo test --release calibration_table1 -- --ignored --nocapture`
+    #[test]
+    #[ignore]
+    fn calibration_table1() {
+        let pm = PerfModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        for (m, gpus) in [
+            (ModelConfig::mixtral_8x22b(), 128),
+            (ModelConfig::llama3_8x70b(), 256),
+            (ModelConfig::qwen2_57b_a14b(), 64),
+            (ModelConfig::mixtral_8x22b_g8t8(), 128),
+        ] {
+            println!("=== {} ({} GPUs) ===", m.name, gpus);
+            for r in tune_all(&pm, &m, gpus, &t) {
+                let cfgs = r
+                    .best
+                    .as_ref()
+                    .map(|e| e.config.tag())
+                    .unwrap_or_else(|| "-".into());
+                println!("  {:<18} {:>7}   {}", r.strategy.name(), r.table_cell(), cfgs);
+            }
+        }
+    }
+}

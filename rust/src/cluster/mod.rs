@@ -1,0 +1,188 @@
+//! Cluster model: the simulated testbed standing in for the Eos DGX-H100
+//! cluster of the paper (§4.1).
+//!
+//! Every performance number in the reproduction flows through this model:
+//! per-GPU peak flops, HBM capacity, and — crucially for MoE Parallel
+//! Folding — the two-tier interconnect (NVLink inside a node, InfiniBand
+//! across nodes). The paper's technique is precisely about placing
+//! communication-heavy parallel groups inside the NVLink domain, so the
+//! fidelity that matters here is the intra/inter-node bandwidth gap
+//! (450 GB/s vs 50 GB/s per GPU), not absolute silicon details.
+
+
+
+use crate::config::Precision;
+
+/// A single accelerator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Peak dense BF16 throughput in TFLOP/s.
+    pub peak_bf16_tflops: f64,
+    /// Peak dense FP8 throughput in TFLOP/s.
+    pub peak_fp8_tflops: f64,
+    /// HBM capacity in GiB.
+    pub hbm_gib: f64,
+    /// HBM bandwidth in GB/s (used for memory-bound op estimates).
+    pub hbm_bw_gbs: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA H100 SXM (the paper's GPU).
+    pub fn h100() -> Self {
+        Self {
+            peak_bf16_tflops: 989.5,
+            peak_fp8_tflops: 1979.0,
+            hbm_gib: 80.0,
+            hbm_bw_gbs: 3350.0,
+        }
+    }
+
+    pub fn peak_tflops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Bf16 => self.peak_bf16_tflops,
+            Precision::Fp8 => self.peak_fp8_tflops,
+        }
+    }
+}
+
+/// Link class between two ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Same device (no transfer).
+    Loopback,
+    /// Same node: NVLink / NVSwitch.
+    NvLink,
+    /// Cross-node: InfiniBand.
+    InfiniBand,
+}
+
+/// The cluster: `num_nodes` nodes of `gpus_per_node` GPUs each.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    pub gpus_per_node: usize,
+    pub num_nodes: usize,
+    /// Uni-directional NVLink bandwidth per GPU, GB/s.
+    pub nvlink_bw_gbs: f64,
+    /// Uni-directional InfiniBand bandwidth per GPU, GB/s (400 Gb/s NIC).
+    pub ib_bw_gbs: f64,
+    /// Per-message launch latency on NVLink, microseconds.
+    pub nvlink_latency_us: f64,
+    /// Per-message latency across IB, microseconds.
+    pub ib_latency_us: f64,
+}
+
+impl ClusterSpec {
+    /// The Eos testbed of the paper: DGX H100, NVLink4 450 GB/s, 400 Gbps IB.
+    pub fn eos(num_gpus: usize) -> Self {
+        assert!(num_gpus >= 1);
+        let gpus_per_node = 8usize.min(num_gpus);
+        Self {
+            gpu: GpuSpec::h100(),
+            gpus_per_node,
+            num_nodes: num_gpus.div_ceil(gpus_per_node),
+            nvlink_bw_gbs: 450.0,
+            ib_bw_gbs: 50.0,
+            nvlink_latency_us: 3.0,
+            ib_latency_us: 8.0,
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus_per_node * self.num_nodes
+    }
+
+    /// Node index hosting a global rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Classify the link between two global ranks.
+    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+        if a == b {
+            LinkKind::Loopback
+        } else if self.node_of(a) == self.node_of(b) {
+            LinkKind::NvLink
+        } else {
+            LinkKind::InfiniBand
+        }
+    }
+
+    /// Number of distinct nodes spanned by a rank group.
+    pub fn nodes_spanned(&self, group: &[usize]) -> usize {
+        let mut nodes: Vec<usize> = group.iter().map(|&r| self.node_of(r)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+
+    /// True if the whole group sits inside one NVLink domain.
+    pub fn fits_in_node(&self, group: &[usize]) -> bool {
+        self.nodes_spanned(group) <= 1
+    }
+
+    /// Bandwidth (GB/s per GPU) of the slowest link class used by the group.
+    pub fn group_bottleneck_bw(&self, group: &[usize]) -> f64 {
+        if self.fits_in_node(group) {
+            self.nvlink_bw_gbs
+        } else {
+            self.ib_bw_gbs
+        }
+    }
+
+    /// Latency (us) of the slowest link class used by the group.
+    pub fn group_latency_us(&self, group: &[usize]) -> f64 {
+        if self.fits_in_node(group) {
+            self.nvlink_latency_us
+        } else {
+            self.ib_latency_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eos_shapes() {
+        let c = ClusterSpec::eos(128);
+        assert_eq!(c.num_nodes, 16);
+        assert_eq!(c.num_gpus(), 128);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(7), 0);
+        assert_eq!(c.node_of(8), 1);
+    }
+
+    #[test]
+    fn small_cluster_is_single_node() {
+        let c = ClusterSpec::eos(4);
+        assert_eq!(c.num_nodes, 1);
+        assert_eq!(c.gpus_per_node, 4);
+    }
+
+    #[test]
+    fn link_classes() {
+        let c = ClusterSpec::eos(16);
+        assert_eq!(c.link(0, 0), LinkKind::Loopback);
+        assert_eq!(c.link(0, 7), LinkKind::NvLink);
+        assert_eq!(c.link(0, 8), LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn group_span() {
+        let c = ClusterSpec::eos(32);
+        assert!(c.fits_in_node(&[0, 1, 2, 3, 4, 5, 6, 7]));
+        assert!(!c.fits_in_node(&[0, 8]));
+        assert_eq!(c.nodes_spanned(&[0, 8, 16, 24]), 4);
+        assert_eq!(c.group_bottleneck_bw(&[0, 1]), 450.0);
+        assert_eq!(c.group_bottleneck_bw(&[0, 8]), 50.0);
+    }
+
+    #[test]
+    fn peak_flops_by_precision() {
+        let g = GpuSpec::h100();
+        assert_eq!(g.peak_tflops(Precision::Bf16), 989.5);
+        assert_eq!(g.peak_tflops(Precision::Fp8), 1979.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Analytic cost models for the collectives the MoE training stack issues.
+//!
+//! Hierarchical α–β models: a collective over a rank group is costed by how
+//! its traffic maps onto the two-tier fabric (NVLink within a node,
+//! InfiniBand across nodes). This is the mechanism that makes MoE Parallel
+//! Folding measurable — the same All-to-All volume is ~9× cheaper when the
+//! EP group folds into one NVLink domain.
+//!
+//! Conventions:
+//! * `bytes` is the payload *per participating rank* (the natural NCCL
+//!   convention: AllGather input bytes, ReduceScatter input bytes / n, …
+//!   is normalized per primitive below).
+//! * returned times are in **microseconds**.
+
+use crate::cluster::ClusterSpec;
+
+/// How a group's members spread over nodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupShape {
+    /// total ranks in the group
+    pub n: usize,
+    /// distinct nodes spanned
+    pub nodes: usize,
+    /// ranks of this group living on one node (n / nodes for the regular
+    /// layouts produced by `mapping`)
+    pub local: usize,
+}
+
+impl GroupShape {
+    pub fn of(cluster: &ClusterSpec, group: &[usize]) -> Self {
+        let n = group.len().max(1);
+        let nodes = cluster.nodes_spanned(group).max(1);
+        Self { n, nodes, local: (n / nodes).max(1) }
+    }
+
+    pub fn single_node(&self) -> bool {
+        self.nodes <= 1
+    }
+}
+
+/// Collective cost model over a cluster.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    pub cluster: ClusterSpec,
+    /// Efficiency factor on NVLink algorithms (protocol overheads), ~0.8.
+    pub nvlink_eff: f64,
+    /// Efficiency factor on IB algorithms, ~0.85.
+    pub ib_eff: f64,
+}
+
+impl CommModel {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        Self { cluster, nvlink_eff: 0.80, ib_eff: 0.85 }
+    }
+
+    fn nv_bw(&self) -> f64 {
+        self.cluster.nvlink_bw_gbs * 1e9 * self.nvlink_eff // B/s
+    }
+
+    fn ib_bw(&self) -> f64 {
+        self.cluster.ib_bw_gbs * 1e9 * self.ib_eff
+    }
+
+    fn lat(&self, shape: GroupShape) -> f64 {
+        if shape.single_node() {
+            self.cluster.nvlink_latency_us
+        } else {
+            self.cluster.ib_latency_us
+        }
+    }
+
+    /// Ring AllReduce of `bytes` per rank.
+    pub fn all_reduce(&self, group: &[usize], bytes: f64) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        if s.single_node() {
+            let t = 2.0 * (s.n as f64 - 1.0) / s.n as f64 * bytes / self.nv_bw();
+            return t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s);
+        }
+        // Hierarchical: intra-node reduce-scatter + inter-node all-reduce of
+        // the shard + intra-node all-gather.
+        let intra = 2.0 * (s.local as f64 - 1.0) / s.local as f64 * bytes / self.nv_bw();
+        let inter =
+            2.0 * (s.nodes as f64 - 1.0) / s.nodes as f64 * (bytes / s.local as f64) / self.ib_bw();
+        (intra + inter) * 1e6 + 2.0 * (s.n as f64) * self.cluster.ib_latency_us
+    }
+
+    /// AllGather: each rank contributes `bytes`, receives `n*bytes`.
+    pub fn all_gather(&self, group: &[usize], bytes_per_rank: f64) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        let total = bytes_per_rank * s.n as f64;
+        if s.single_node() {
+            let t = (s.n as f64 - 1.0) / s.n as f64 * total / self.nv_bw();
+            return t * 1e6 + (s.n as f64 - 1.0) * self.lat(s);
+        }
+        let intra = (s.local as f64 - 1.0) / s.local as f64 * total / self.nv_bw();
+        let inter = (s.nodes as f64 - 1.0) / s.nodes as f64 * total / self.ib_bw();
+        (intra + inter) * 1e6 + (s.n as f64) * self.cluster.ib_latency_us
+    }
+
+    /// ReduceScatter of a `bytes_total_per_rank` input buffer held by every
+    /// rank (each receives a reduced 1/n shard). Dual of AllGather — same
+    /// α–β cost with the shard as the per-rank contribution.
+    pub fn reduce_scatter(&self, group: &[usize], bytes_total_per_rank: f64) -> f64 {
+        let n = GroupShape::of(&self.cluster, group).n.max(1) as f64;
+        self.all_gather(group, bytes_total_per_rank / n)
+    }
+
+    /// AllToAll of `bytes_per_rank` total payload held by each rank
+    /// (each rank sends `bytes_per_rank / n` to every peer).
+    ///
+    /// On a single node the NVSwitch gives full bisection: time ≈
+    /// `bytes * (n-1)/n / nvlink`. Across nodes, the fraction of traffic
+    /// leaving the node (`(nodes-1)/nodes` of it) is squeezed through the
+    /// per-GPU NIC.
+    pub fn all_to_all(&self, group: &[usize], bytes_per_rank: f64) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        let frac_remote = (s.n - s.local) as f64 / s.n as f64; // peers off-node
+        let frac_local = (s.local as f64 - 1.0) / s.n as f64;
+        let t_local = bytes_per_rank * frac_local / self.nv_bw();
+        let t_remote = bytes_per_rank * frac_remote / self.ib_bw();
+        // NVSwitch traffic and NIC traffic proceed concurrently; the slower
+        // path dominates, plus per-peer launch latency.
+        let bw_time = t_local.max(t_remote) * 1e6;
+        let lat = if s.single_node() {
+            self.cluster.nvlink_latency_us * (s.n as f64 - 1.0).min(8.0)
+        } else {
+            self.cluster.ib_latency_us * (s.nodes as f64).min(16.0)
+        };
+        bw_time + lat
+    }
+
+    /// Variable AllToAll — costed like AllToAll with an imbalance factor:
+    /// the busiest rank carries `imbalance`× the mean payload.
+    pub fn all_to_all_v(&self, group: &[usize], mean_bytes_per_rank: f64, imbalance: f64) -> f64 {
+        self.all_to_all(group, mean_bytes_per_rank * imbalance.max(1.0))
+    }
+
+    /// Point-to-point send of `bytes` between two specific ranks.
+    pub fn p2p(&self, a: usize, b: usize, bytes: f64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let (bw, lat) = if self.cluster.node_of(a) == self.cluster.node_of(b) {
+            (self.nv_bw(), self.cluster.nvlink_latency_us)
+        } else {
+            (self.ib_bw(), self.cluster.ib_latency_us)
+        };
+        bytes / bw * 1e6 + lat
+    }
+
+    /// Broadcast from the group leader.
+    pub fn broadcast(&self, group: &[usize], bytes: f64) -> f64 {
+        // tree broadcast ~ allgather of bytes/n chunks; approximate with AG.
+        self.all_gather(group, bytes / group.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(gpus: usize) -> CommModel {
+        CommModel::new(ClusterSpec::eos(gpus))
+    }
+
+    #[test]
+    fn zero_cost_for_singleton_groups() {
+        let m = model(8);
+        assert_eq!(m.all_reduce(&[3], 1e9), 0.0);
+        assert_eq!(m.all_to_all(&[3], 1e9), 0.0);
+        assert_eq!(m.all_gather(&[3], 1e9), 0.0);
+    }
+
+    #[test]
+    fn intra_node_a2a_is_much_cheaper() {
+        let m = model(64);
+        let intra: Vec<usize> = (0..8).collect();
+        let inter: Vec<usize> = (0..64).step_by(8).collect(); // one per node
+        let bytes = 64e6;
+        let t_in = m.all_to_all(&intra, bytes);
+        let t_out = m.all_to_all(&inter, bytes);
+        assert!(
+            t_out > 5.0 * t_in,
+            "inter {t_out:.1}us should dwarf intra {t_in:.1}us"
+        );
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let m = model(8);
+        let g: Vec<usize> = (0..8).collect();
+        let t1 = m.all_reduce(&g, 1e8);
+        let t2 = m.all_reduce(&g, 2e8);
+        assert!(t2 > 1.8 * t1 && t2 < 2.2 * t1);
+    }
+
+    #[test]
+    fn hierarchical_allreduce_bottleneck_is_ib() {
+        let m = model(64);
+        let g: Vec<usize> = (0..64).collect();
+        let bytes = 1e9;
+        let t = m.all_reduce(&g, bytes);
+        // Lower bound: inter-node phase alone at IB speed.
+        let inter_floor = 2.0 * 7.0 / 8.0 * (bytes / 8.0) / (50e9 * 0.85) * 1e6;
+        assert!(t > inter_floor, "t={t} floor={inter_floor}");
+    }
+
+    #[test]
+    fn a2a_v_imbalance_monotone() {
+        let m = model(16);
+        let g: Vec<usize> = (0..16).collect();
+        let t1 = m.all_to_all_v(&g, 1e8, 1.0);
+        let t2 = m.all_to_all_v(&g, 1e8, 1.5);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn p2p_link_classes() {
+        let m = model(16);
+        let t_nv = m.p2p(0, 1, 1e8);
+        let t_ib = m.p2p(0, 8, 1e8);
+        assert!(t_ib > 5.0 * t_nv);
+    }
+}

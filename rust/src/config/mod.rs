@@ -1,0 +1,7 @@
+//! Configuration layer: model zoo, parallel mappings, training knobs.
+
+pub mod models;
+pub mod parallel;
+
+pub use models::{ModelConfig, TinyScale};
+pub use parallel::{DropPolicy, ParallelConfig, Precision, TrainConfig, ZeroStage};

@@ -1,0 +1,365 @@
+//! Model zoo: the four MoE architectures evaluated in the paper plus small
+//! test/e2e configurations.
+//!
+//! Architectural numbers are taken from the public model cards:
+//! - Mixtral 8x22B (coarse-grained, 8 experts, top-2)
+//! - Llama3-8x70B (coarse-grained upcycle of Llama3-70B, 8 experts, top-2)
+//! - Qwen2-57B-A14B (fine-grained, 64 experts, top-8)
+//! - Mixtral-8x22B-G8T8 (fine-grained re-parameterization of 8x22B:
+//!   64 experts, top-8, expert FFN 1/8 of the original)
+
+
+
+/// Architecture description of a (MoE) transformer.
+///
+/// All MoE models in the paper replace every dense FFN with an MoE FFN; the
+/// `moe_layer_freq` field allows hybrid dense/MoE stacks for ablations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Transformer hidden size (d_model).
+    pub hidden_size: usize,
+    /// Number of transformer layers.
+    pub num_layers: usize,
+    /// Number of attention (query) heads.
+    pub num_heads: usize,
+    /// Number of KV heads (GQA groups). Equal to `num_heads` for MHA.
+    pub num_query_groups: usize,
+    /// FFN hidden size of a *single expert* (SwiGLU intermediate size).
+    pub moe_ffn_hidden_size: usize,
+    /// FFN hidden size used by dense layers (if any) and by the optional
+    /// shared expert.
+    pub ffn_hidden_size: usize,
+    /// Number of routed experts (E). 0 => dense model.
+    pub num_experts: usize,
+    /// Active experts per token (K of top-K routing).
+    pub top_k: usize,
+    /// Shared-expert intermediate size (Qwen2-style). 0 => none.
+    pub shared_expert_ffn_hidden_size: usize,
+    /// 1 => every layer is MoE; 2 => every other layer, etc.
+    pub moe_layer_freq: usize,
+    pub vocab_size: usize,
+    /// Default training sequence length.
+    pub seq_len: usize,
+    /// Untie input/output embeddings (true for all paper models).
+    pub untie_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden_size / self.num_heads
+    }
+
+    /// Number of MoE layers in the stack.
+    pub fn num_moe_layers(&self) -> usize {
+        if self.num_experts == 0 {
+            0
+        } else {
+            self.num_layers / self.moe_layer_freq
+        }
+    }
+
+    /// Number of dense-FFN layers in the stack.
+    pub fn num_dense_layers(&self) -> usize {
+        self.num_layers - self.num_moe_layers()
+    }
+
+    /// Attention parameters per layer: QKV + output projection (GQA-aware).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let h = self.hidden_size as u64;
+        let hd = self.head_dim() as u64;
+        let q = h * h;
+        let kv = 2 * h * (self.num_query_groups as u64 * hd);
+        let o = h * h;
+        // 2 RMSNorm weight vectors per layer (attn + mlp input norms).
+        q + kv + o + 2 * h
+    }
+
+    /// Parameters of a single routed expert (SwiGLU: gate, up, down).
+    pub fn params_per_expert(&self) -> u64 {
+        3 * self.hidden_size as u64 * self.moe_ffn_hidden_size as u64
+    }
+
+    /// Dense-FFN parameters per layer (SwiGLU).
+    pub fn dense_ffn_params_per_layer(&self) -> u64 {
+        3 * self.hidden_size as u64 * self.ffn_hidden_size as u64
+    }
+
+    /// Shared-expert parameters per MoE layer (0 if the model has none).
+    pub fn shared_expert_params_per_layer(&self) -> u64 {
+        3 * self.hidden_size as u64 * self.shared_expert_ffn_hidden_size as u64
+    }
+
+    /// Router (gating) parameters per MoE layer.
+    pub fn router_params_per_layer(&self) -> u64 {
+        self.hidden_size as u64 * self.num_experts as u64
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        let embeds = (if self.untie_embeddings { 2 } else { 1 })
+            * self.vocab_size as u64
+            * self.hidden_size as u64;
+        let attn = self.num_layers as u64 * self.attn_params_per_layer();
+        let moe = self.num_moe_layers() as u64
+            * (self.num_experts as u64 * self.params_per_expert()
+                + self.shared_expert_params_per_layer()
+                + self.router_params_per_layer());
+        let dense = self.num_dense_layers() as u64 * self.dense_ffn_params_per_layer();
+        let final_norm = self.hidden_size as u64;
+        embeds + attn + moe + dense + final_norm
+    }
+
+    /// Parameters activated per token (top-K experts instead of all E).
+    pub fn active_params(&self) -> u64 {
+        let embeds = (if self.untie_embeddings { 2 } else { 1 })
+            * self.vocab_size as u64
+            * self.hidden_size as u64;
+        let attn = self.num_layers as u64 * self.attn_params_per_layer();
+        let moe = self.num_moe_layers() as u64
+            * (self.top_k as u64 * self.params_per_expert()
+                + self.shared_expert_params_per_layer()
+                + self.router_params_per_layer());
+        let dense = self.num_dense_layers() as u64 * self.dense_ffn_params_per_layer();
+        embeds + attn + dense + moe + self.hidden_size as u64
+    }
+
+    /// True for "fine-grained" MoE in the paper's sense: many small experts,
+    /// several active per token.
+    pub fn is_fine_grained(&self) -> bool {
+        self.num_experts >= 16 && self.top_k >= 4
+    }
+
+    // ----- model zoo ------------------------------------------------------
+
+    /// Mixtral 8x22B: 56 layers, hidden 6144, 8 experts, top-2 (~141B total).
+    pub fn mixtral_8x22b() -> Self {
+        Self {
+            name: "Mixtral-8x22B".into(),
+            hidden_size: 6144,
+            num_layers: 56,
+            num_heads: 48,
+            num_query_groups: 8,
+            moe_ffn_hidden_size: 16384,
+            ffn_hidden_size: 16384,
+            num_experts: 8,
+            top_k: 2,
+            shared_expert_ffn_hidden_size: 0,
+            moe_layer_freq: 1,
+            vocab_size: 32768,
+            seq_len: 4096,
+            untie_embeddings: true,
+        }
+    }
+
+    /// Llama3-8x70B: Llama3-70B upcycled to 8 experts, top-2 (~465B total).
+    pub fn llama3_8x70b() -> Self {
+        Self {
+            name: "Llama3-8x70B".into(),
+            hidden_size: 8192,
+            num_layers: 80,
+            num_heads: 64,
+            num_query_groups: 8,
+            moe_ffn_hidden_size: 28672,
+            ffn_hidden_size: 28672,
+            num_experts: 8,
+            top_k: 2,
+            shared_expert_ffn_hidden_size: 0,
+            moe_layer_freq: 1,
+            vocab_size: 128256,
+            seq_len: 4096,
+            untie_embeddings: true,
+        }
+    }
+
+    /// Qwen2-57B-A14B: 28 layers, hidden 3584, 64 experts top-8 + shared
+    /// expert (57B total / 14B active).
+    pub fn qwen2_57b_a14b() -> Self {
+        Self {
+            name: "Qwen2-57B-A14B".into(),
+            hidden_size: 3584,
+            num_layers: 28,
+            num_heads: 28,
+            num_query_groups: 4,
+            moe_ffn_hidden_size: 2560,
+            ffn_hidden_size: 18944,
+            num_experts: 64,
+            top_k: 8,
+            shared_expert_ffn_hidden_size: 20480,
+            moe_layer_freq: 1,
+            vocab_size: 151936,
+            seq_len: 4096,
+            untie_embeddings: true,
+        }
+    }
+
+    /// Mixtral-8x22B-G8T8: fine-grained re-parameterization of Mixtral 8x22B
+    /// (64 experts, top-8, expert FFN = 16384/8 = 2048). Same total params.
+    pub fn mixtral_8x22b_g8t8() -> Self {
+        Self {
+            name: "Mixtral-8x22B-G8T8".into(),
+            moe_ffn_hidden_size: 2048,
+            num_experts: 64,
+            top_k: 8,
+            ..Self::mixtral_8x22b()
+        }
+    }
+
+    /// Mixtral 8x7B — used in the paper's appendix accuracy validation.
+    pub fn mixtral_8x7b() -> Self {
+        Self {
+            name: "Mixtral-8x7B".into(),
+            hidden_size: 4096,
+            num_layers: 32,
+            num_heads: 32,
+            num_query_groups: 8,
+            moe_ffn_hidden_size: 14336,
+            ffn_hidden_size: 14336,
+            num_experts: 8,
+            top_k: 2,
+            shared_expert_ffn_hidden_size: 0,
+            moe_layer_freq: 1,
+            vocab_size: 32768,
+            seq_len: 4096,
+            untie_embeddings: true,
+        }
+    }
+
+    /// Tiny MoE used by the end-to-end training example (~tens of millions
+    /// of params; exact count depends on `scale`).
+    pub fn tiny_moe(scale: TinyScale) -> Self {
+        let (hidden, layers, ffn, vocab) = match scale {
+            TinyScale::Test => (64, 2, 128, 256),
+            TinyScale::Small => (256, 4, 512, 2048),
+            TinyScale::E2e => (512, 8, 1408, 8192),
+            TinyScale::Hundred => (768, 12, 2048, 16384),
+        };
+        Self {
+            name: format!("tiny-moe-{scale:?}").to_lowercase(),
+            hidden_size: hidden,
+            num_layers: layers,
+            num_heads: (hidden / 64).max(1),
+            num_query_groups: (hidden / 64).max(1),
+            moe_ffn_hidden_size: ffn,
+            ffn_hidden_size: ffn,
+            num_experts: 8,
+            top_k: 2,
+            shared_expert_ffn_hidden_size: 0,
+            moe_layer_freq: 1,
+            vocab_size: vocab,
+            seq_len: 512,
+            untie_embeddings: false,
+        }
+    }
+
+    /// Look up a zoo model by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        let n = name.to_lowercase().replace('_', "-");
+        Some(match n.as_str() {
+            "mixtral-8x22b" | "mixtral8x22b" => Self::mixtral_8x22b(),
+            "llama3-8x70b" | "llama38x70b" => Self::llama3_8x70b(),
+            "qwen2-57b-a14b" | "qwen2-57b" => Self::qwen2_57b_a14b(),
+            "mixtral-8x22b-g8t8" | "g8t8" => Self::mixtral_8x22b_g8t8(),
+            "mixtral-8x7b" => Self::mixtral_8x7b(),
+            "tiny" | "tiny-moe" => Self::tiny_moe(TinyScale::Small),
+            "tiny-e2e" => Self::tiny_moe(TinyScale::E2e),
+            "tiny-100m" => Self::tiny_moe(TinyScale::Hundred),
+            _ => return None,
+        })
+    }
+
+    /// The four models of the paper's evaluation, in Table 1 order.
+    pub fn paper_models() -> Vec<Self> {
+        vec![
+            Self::mixtral_8x22b(),
+            Self::llama3_8x70b(),
+            Self::qwen2_57b_a14b(),
+            Self::mixtral_8x22b_g8t8(),
+        ]
+    }
+}
+
+/// Size presets for the tiny model family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TinyScale {
+    /// Unit-test scale (sub-second).
+    Test,
+    /// Small: quick integration tests.
+    Small,
+    /// E2E driver default (~50M params).
+    E2e,
+    /// ~100M params for the recorded end-to-end run.
+    Hundred,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixtral_total_params_plausible() {
+        let m = ModelConfig::mixtral_8x22b();
+        let p = m.total_params() as f64 / 1e9;
+        // Public number: ~141B total.
+        assert!(p > 120.0 && p < 160.0, "got {p}B");
+    }
+
+    #[test]
+    fn mixtral_active_params_plausible() {
+        let m = ModelConfig::mixtral_8x22b();
+        let p = m.active_params() as f64 / 1e9;
+        // Public number: ~39B active.
+        assert!(p > 32.0 && p < 46.0, "got {p}B");
+    }
+
+    #[test]
+    fn qwen2_totals() {
+        let m = ModelConfig::qwen2_57b_a14b();
+        let total = m.total_params() as f64 / 1e9;
+        let active = m.active_params() as f64 / 1e9;
+        assert!(total > 48.0 && total < 66.0, "total {total}B");
+        assert!(active > 11.0 && active < 18.0, "active {active}B");
+    }
+
+    #[test]
+    fn llama3_8x70b_is_large() {
+        let m = ModelConfig::llama3_8x70b();
+        let p = m.total_params() as f64 / 1e9;
+        // 8x the 70B FFN stack: > 400B total.
+        assert!(p > 380.0, "got {p}B");
+    }
+
+    #[test]
+    fn g8t8_preserves_total_expert_params() {
+        let base = ModelConfig::mixtral_8x22b();
+        let g = ModelConfig::mixtral_8x22b_g8t8();
+        assert_eq!(
+            base.num_experts as u64 * base.params_per_expert(),
+            g.num_experts as u64 * g.params_per_expert()
+        );
+        assert!(g.is_fine_grained());
+        assert!(!base.is_fine_grained());
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for name in [
+            "Mixtral-8x22B",
+            "llama3-8x70b",
+            "qwen2-57b-a14b",
+            "g8t8",
+            "tiny",
+        ] {
+            assert!(ModelConfig::by_name(name).is_some(), "{name}");
+        }
+        assert!(ModelConfig::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in ModelConfig::paper_models() {
+            assert_eq!(m.hidden_size % m.num_heads, 0, "{}", m.name);
+            assert_eq!(m.num_heads % m.num_query_groups, 0, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Parallelism configuration: the 5-D hybrid space of the paper.
+//!
+//! Attention layers are mapped over `TP × CP × DP × PP`; MoE layers over
+//! `ETP × EP × EDP × PP` (paper §3.2). With MoE Parallel Folding the two
+//! mappings are independent except that the PP decomposition must agree.
+
+
+
+/// Numeric precision of the training run (affects peak flops + memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Bf16,
+    /// FP8 delayed scaling (Transformer-Engine style): GEMMs run at 2x the
+    /// BF16 peak; non-GEMM work and cast/amax overheads stay in BF16.
+    Fp8,
+}
+
+/// ZeRO / distributed-optimizer sharding level along the DP axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ZeroStage {
+    /// Plain DDP: full optimizer state replicated.
+    None,
+    /// ZeRO-1 / Megatron distributed optimizer: optimizer states sharded.
+    Zero1,
+    /// ZeRO-3 / FSDP: parameters, gradients and optimizer states sharded.
+    Zero3,
+}
+
+/// Token-dropping policy of the MoE router (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropPolicy {
+    /// Dropless (MegaBlocks-style): every token is processed.
+    Dropless,
+    /// Capacity-factor dropping where top-k selection consistency is enforced
+    /// across the full sequence (gather of logits across CP/TP ranks).
+    FullSequence,
+    /// Capacity-factor dropping decided per local sub-sequence (the paper's
+    /// default: no logit gather, less communication, balanced a2a).
+    SubSequence,
+}
+
+/// The 5-D hybrid parallel mapping.
+///
+/// `dp` and `edp` are derived from the world size; they are not free knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelConfig {
+    /// Total number of GPUs.
+    pub world_size: usize,
+    /// Attention tensor parallelism.
+    pub tp: usize,
+    /// Context parallelism (sequence split for attention).
+    pub cp: usize,
+    /// Pipeline parallelism (shared by attention and MoE).
+    pub pp: usize,
+    /// Expert parallelism (MoE).
+    pub ep: usize,
+    /// Expert tensor parallelism (MoE). With folding this is independent of
+    /// `tp`; the coupled (legacy MCore) mapping forces `etp == tp`.
+    pub etp: usize,
+    /// Virtual pipeline stages per rank (interleaved 1F1B). 1 = plain 1F1B.
+    pub vpp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(world_size: usize, tp: usize, cp: usize, ep: usize, etp: usize, pp: usize) -> Self {
+        Self { world_size, tp, cp, pp, ep, etp, vpp: 1 }
+    }
+
+    /// Attention-side data parallelism.
+    pub fn dp(&self) -> usize {
+        self.world_size / (self.tp * self.cp * self.pp)
+    }
+
+    /// MoE-side data parallelism (Expert-DP).
+    pub fn edp(&self) -> usize {
+        self.world_size / (self.etp * self.ep * self.pp)
+    }
+
+    /// Size of the attention model-parallel block (ranks sharing one replica
+    /// of one pipeline stage's attention weights).
+    pub fn attn_inner(&self) -> usize {
+        self.tp * self.cp
+    }
+
+    /// Size of the MoE model-parallel block.
+    pub fn moe_inner(&self) -> usize {
+        self.etp * self.ep
+    }
+
+    /// Whether this mapping is expressible without MoE Parallel Folding,
+    /// i.e. in the coupled legacy MCore scheme: `etp == tp` and the EP group
+    /// is a sub-group of attention DP (`ep` divides `dp`), and no folding of
+    /// EP across CP.
+    pub fn is_legacy_expressible(&self) -> bool {
+        self.etp == self.tp && self.cp == 1 && self.dp() % self.ep == 0
+    }
+
+    /// Validate divisibility and group-consistency constraints.
+    pub fn validate(&self, num_experts: usize, num_layers: usize) -> Result<(), String> {
+        let need = |cond: bool, msg: &str| if cond { Ok(()) } else { Err(msg.to_string()) };
+        need(self.world_size > 0, "world_size must be > 0")?;
+        for (v, n) in [
+            (self.tp, "tp"),
+            (self.cp, "cp"),
+            (self.pp, "pp"),
+            (self.ep, "ep"),
+            (self.etp, "etp"),
+            (self.vpp, "vpp"),
+        ] {
+            need(v > 0, &format!("{n} must be > 0"))?;
+        }
+        need(
+            self.world_size % (self.tp * self.cp * self.pp) == 0,
+            &format!(
+                "world_size {} not divisible by tp*cp*pp = {}",
+                self.world_size,
+                self.tp * self.cp * self.pp
+            ),
+        )?;
+        need(
+            self.world_size % (self.etp * self.ep * self.pp) == 0,
+            &format!(
+                "world_size {} not divisible by etp*ep*pp = {}",
+                self.world_size,
+                self.etp * self.ep * self.pp
+            ),
+        )?;
+        if num_experts > 0 {
+            need(
+                num_experts % self.ep == 0,
+                &format!("num_experts {num_experts} not divisible by ep {}", self.ep),
+            )?;
+        }
+        need(
+            num_layers % (self.pp * self.vpp) == 0,
+            &format!("num_layers {num_layers} not divisible by pp*vpp"),
+        )?;
+        Ok(())
+    }
+
+    /// Short "tpXcpYepZ..." string used in reports.
+    pub fn tag(&self) -> String {
+        format!(
+            "TP{}CP{}EP{}ETP{}PP{}DP{}EDP{}",
+            self.tp,
+            self.cp,
+            self.ep,
+            self.etp,
+            self.pp,
+            self.dp(),
+            self.edp()
+        )
+    }
+}
+
+/// Training hyper-parameters relevant to the performance model and trainer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Global batch size in sequences.
+    pub global_batch_size: usize,
+    /// Micro-batch size in sequences (per model replica per pipeline slot).
+    pub micro_batch_size: usize,
+    /// Sequence length (overrides the model default when set).
+    pub seq_len: usize,
+    pub precision: Precision,
+    /// MoE capacity factor (>= 1.0). Ignored in dropless mode.
+    pub capacity_factor: f64,
+    pub drop_policy: DropPolicy,
+    /// Recompute granularity: fraction of activation memory retained
+    /// (1.0 = no recompute, ~0.35 = selective recompute of attention).
+    pub activation_retained_frac: f64,
+    /// Overlap DP gradient communication with the backward pass.
+    pub overlap_grad_reduce: bool,
+    /// Overlap ZeRO-3 parameter all-gather with compute (FSDP prefetch).
+    pub overlap_param_gather: bool,
+}
+
+impl TrainConfig {
+    pub fn paper_default(seq_len: usize, global_batch_size: usize) -> Self {
+        Self {
+            global_batch_size,
+            micro_batch_size: 1,
+            seq_len,
+            precision: Precision::Bf16,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::SubSequence,
+            activation_retained_frac: 0.4,
+            overlap_grad_reduce: true,
+            overlap_param_gather: true,
+        }
+    }
+
+    /// Number of microbatches per pipeline (per data-parallel replica).
+    pub fn num_microbatches(&self, dp: usize) -> usize {
+        (self.global_batch_size / (self.micro_batch_size * dp)).max(1)
+    }
+
+    pub fn tokens_per_global_batch(&self) -> usize {
+        self.global_batch_size * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_derivation() {
+        let p = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        assert_eq!(p.dp(), 8);
+        assert_eq!(p.edp(), 2);
+        assert!(p.validate(8, 56).is_ok());
+    }
+
+    #[test]
+    fn folded_config_not_legacy_expressible() {
+        // Mixtral folded optimum from Table 3: TP2 EP8 PP8 ETP1 on 128 GPUs.
+        let p = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        assert!(!p.is_legacy_expressible()); // etp(1) != tp(2)
+        // MCore coupled optimum: TP2 EP4 PP8.
+        let q = ParallelConfig::new(128, 2, 1, 4, 2, 8);
+        assert!(q.is_legacy_expressible());
+    }
+
+    #[test]
+    fn validate_rejects_bad_divisibility() {
+        let p = ParallelConfig::new(100, 3, 1, 8, 1, 8);
+        assert!(p.validate(8, 56).is_err());
+        let q = ParallelConfig::new(128, 2, 1, 3, 1, 8);
+        assert!(q.validate(8, 56).is_err()); // 8 experts % ep 3
+    }
+
+    #[test]
+    fn microbatch_count() {
+        let t = TrainConfig::paper_default(4096, 256);
+        assert_eq!(t.num_microbatches(8), 32);
+        assert_eq!(t.tokens_per_global_batch(), 256 * 4096);
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        let p = ParallelConfig::new(64, 2, 2, 2, 2, 2);
+        assert_eq!(p.dp(), 8);
+        assert_eq!(p.edp(), 8);
+        assert!(p.tag().contains("TP2CP2EP2ETP2PP2"));
+    }
+}

@@ -1,0 +1,288 @@
+//! Leader-side orchestration: plan a parallel mapping (auto-tune or
+//! explicit), report it, and regenerate the paper's tables.
+//!
+//! This is the layer the CLI talks to; the heavy lifting lives in
+//! [`crate::autotune`] / [`crate::perfmodel`] (planning) and
+//! [`crate::train`] (execution).
+
+use crate::autotune::{self, Constraints, TuneResult};
+use crate::config::{ModelConfig, ParallelConfig, Precision, TrainConfig};
+use crate::metrics::{pct, Table};
+use crate::perfmodel::{PerfModel, Strategy};
+
+/// Table 1: MFU of all five strategies over the paper's four models.
+pub fn table1(pm: &PerfModel) -> Table {
+    let mut t = Table::new(&["Strategy", "Mixtral-8x22B (128)", "Llama3-8x70B (256)",
+                             "Qwen2-57B-A14B (64)", "Mixtral-8x22B-G8T8 (128)"]);
+    let cases = [
+        (ModelConfig::mixtral_8x22b(), 128),
+        (ModelConfig::llama3_8x70b(), 256),
+        (ModelConfig::qwen2_57b_a14b(), 64),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128),
+    ];
+    let train = TrainConfig::paper_default(4096, 256);
+    let mut per_model: Vec<Vec<TuneResult>> = Vec::new();
+    for (model, gpus) in &cases {
+        per_model.push(autotune::tune_all(pm, model, *gpus, &train));
+    }
+    for (si, strategy) in Strategy::ALL.iter().enumerate() {
+        let mut row = vec![strategy.name().to_string()];
+        for results in &per_model {
+            row.push(results[si].table_cell());
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Table 2: BF16 vs FP8 on Mixtral 8x22B @ 128 GPUs.
+pub fn table2(pm: &PerfModel) -> Table {
+    let model = ModelConfig::mixtral_8x22b();
+    let mut t = Table::new(&["Configuration", "Precision", "TFLOPS",
+                             "Speedup vs BF16", "Speedup w/ Folding"]);
+    let mut results = Vec::new();
+    for precision in [Precision::Bf16, Precision::Fp8] {
+        let mut train = TrainConfig::paper_default(4096, 256);
+        train.precision = precision;
+        for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
+            let r = autotune::tune(pm, &model, 128, &train, strategy);
+            let tflops = r.best.as_ref().map(|e| e.tflops_per_gpu).unwrap_or(0.0);
+            results.push((strategy, precision, tflops));
+        }
+    }
+    let base_bf16 = results[0].2; // MCore BF16
+    let fold_bf16 = results[1].2;
+    for (strategy, precision, tflops) in &results {
+        let vs_bf16 = match precision {
+            Precision::Fp8 => {
+                let base = if *strategy == Strategy::MCore { base_bf16 } else { fold_bf16 };
+                format!("{:.2}x", tflops / base)
+            }
+            _ => "-".into(),
+        };
+        let vs_fold = if *strategy == Strategy::MCoreFolding {
+            let base = if *precision == Precision::Bf16 { base_bf16 } else { results[2].2 };
+            format!("{:.2}x", tflops / base)
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            strategy.name().to_string(),
+            format!("{precision:?}"),
+            format!("{tflops:.1}"),
+            vs_bf16,
+            vs_fold,
+        ]);
+    }
+    t
+}
+
+/// Table 3: optimal parallel mappings found by the tuner.
+pub fn table3(pm: &PerfModel) -> Table {
+    let mut t = Table::new(&["Model", "Method", "GPUs", "CP", "TP", "EP", "PP", "ETP", "MFU"]);
+    let cases = [
+        (ModelConfig::mixtral_8x22b(), 128),
+        (ModelConfig::qwen2_57b_a14b(), 64),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128),
+        (ModelConfig::llama3_8x70b(), 256),
+    ];
+    let train = TrainConfig::paper_default(4096, 256);
+    for (model, gpus) in &cases {
+        for r in autotune::tune_all(pm, model, *gpus, &train) {
+            match &r.best {
+                Some(e) => {
+                    let c = e.config;
+                    t.row(&[
+                        model.name.clone(),
+                        r.strategy.name().to_string(),
+                        gpus.to_string(),
+                        c.cp.to_string(),
+                        c.tp.to_string(),
+                        c.ep.to_string(),
+                        c.pp.to_string(),
+                        c.etp.to_string(),
+                        pct(e.mfu),
+                    ]);
+                }
+                None => {
+                    t.row(&[
+                        model.name.clone(),
+                        r.strategy.name().to_string(),
+                        gpus.to_string(),
+                        "-".into(), "-".into(), "-".into(), "-".into(), "-".into(),
+                        "OOM".into(),
+                    ]);
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Figure 3 / Table 4: strong scaling (GBS 1024, GPUs up to 1024).
+pub fn strong_scaling(pm: &PerfModel, model: &ModelConfig, gpu_counts: &[usize]) -> Table {
+    let mut t = Table::new(&["Method", "GPUs", "MFU"]);
+    let train = TrainConfig::paper_default(4096, 1024);
+    for strategy in [Strategy::MCore, Strategy::MCoreFolding, Strategy::FsdpEp, Strategy::TpEpDp] {
+        for &gpus in gpu_counts {
+            let r = autotune::tune(pm, model, gpus, &train, strategy);
+            t.row(&[
+                strategy.name().to_string(),
+                gpus.to_string(),
+                r.table_cell(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 4 / Table 5: context scaling (fixed tokens per batch).
+pub fn context_scaling(pm: &PerfModel, model: &ModelConfig) -> Table {
+    let mut t = Table::new(&["Method", "GPUs", "SeqLen", "CP", "TP", "EP", "PP", "ETP",
+                             "GBS", "MFU"]);
+    // (gpus, seq, gbs) from Table 5: tokens/batch constant at ~4M.
+    let points = [(128usize, 16384usize, 1024usize), (256, 32768, 512),
+                  (512, 65536, 256), (1024, 131072, 128)];
+    for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
+        for (gpus, seq, gbs) in &points {
+            let train = TrainConfig::paper_default(*seq, *gbs);
+            let r = autotune::tune(pm, model, *gpus, &train, strategy);
+            match &r.best {
+                Some(e) => {
+                    let c = e.config;
+                    t.row(&[
+                        strategy.name().to_string(),
+                        gpus.to_string(),
+                        seq.to_string(),
+                        c.cp.to_string(),
+                        c.tp.to_string(),
+                        c.ep.to_string(),
+                        c.pp.to_string(),
+                        c.etp.to_string(),
+                        gbs.to_string(),
+                        pct(e.mfu),
+                    ]);
+                }
+                None => {
+                    t.row(&[strategy.name().to_string(), gpus.to_string(),
+                            seq.to_string(), "-".into(), "-".into(), "-".into(),
+                            "-".into(), "-".into(), gbs.to_string(), "OOM".into()]);
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Figure 5: MoE layer latency breakdown across (EP, ETP) mappings with the
+/// attention side fixed at TP=4, CP=1.
+pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Table {
+    let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
+                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)", "Folded"]);
+    let train = TrainConfig::paper_default(4096, 256);
+    let mut combos = Vec::new();
+    let mut ep = 1;
+    while ep <= ep_etp {
+        let etp = ep_etp / ep;
+        if model.num_experts % ep == 0 && etp <= 8 {
+            combos.push((ep, etp));
+        }
+        ep *= 2;
+    }
+    for (ep, etp) in combos {
+        // Attention fixed: TP4, CP1 — folding decouples the MoE grid.
+        let cfg = ParallelConfig::new(128, 4, 1, ep, etp, 1);
+        let folded_needed = etp != 4; // not expressible in the coupled scheme
+        for folded in [false, true] {
+            if !folded && folded_needed {
+                continue;
+            }
+            let Ok(b) = pm.moe_layer_breakdown(model, cfg, &train, folded) else {
+                continue;
+            };
+            t.row(&[
+                format!("EP{ep}xETP{etp}{}", if folded { "*" } else { "" }),
+                format!("{:.0}", b.router_us + b.permute_us),
+                format!("{:.0}", b.a2a_us),
+                format!("{:.0}", b.etp_comm_us),
+                format!("{:.0}", b.expert_gemm_us),
+                format!("{:.0}", b.total()),
+                folded.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 6: MoE layer latency vs CP size, with and without folding.
+pub fn fig6_cp_folding(pm: &PerfModel, model: &ModelConfig) -> Table {
+    let mut t = Table::new(&["CP", "SeqLen", "Mapping", "A2A (µs)", "Total (µs)"]);
+    for (cp, seq) in [(1usize, 8192usize), (2, 16384), (4, 32768), (8, 65536)] {
+        let train = TrainConfig::paper_default(seq, 256);
+        let cfg = ParallelConfig::new(128, 2, cp, 8, 1, 1);
+        // Folded: EP group sits in consecutive ranks (NVLink). Legacy: EP
+        // strides over CP×TP (crosses nodes once cp*tp >= 8).
+        for folded in [true, false] {
+            let mapping = if folded {
+                pm.moe_layer_breakdown(model, cfg, &train, true)
+            } else {
+                let legacy_cfg = ParallelConfig::new(128, 2, cp, 8, 2, 1);
+                pm.moe_layer_breakdown(model, legacy_cfg, &train, false)
+            };
+            if let Ok(b) = mapping {
+                t.row(&[
+                    cp.to_string(),
+                    seq.to_string(),
+                    if folded { "folded*".into() } else { "legacy".to_string() },
+                    format!("{:.0}", b.a2a_us),
+                    format!("{:.0}", b.total()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Plan: tune one model/strategy under optional dimension constraints.
+pub fn plan(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpus: usize,
+    train: &TrainConfig,
+    strategy: Strategy,
+    cons: Constraints,
+) -> TuneResult {
+    autotune::tune_constrained(pm, model, gpus, train, strategy, cons)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_has_folded_rows() {
+        let pm = PerfModel::default();
+        let t = fig5_breakdown(&pm, &ModelConfig::mixtral_8x22b(), 8);
+        assert!(t.rows.iter().any(|r| r[0].ends_with('*')));
+        assert!(t.rows.len() >= 3);
+    }
+
+    #[test]
+    fn fig6_folded_cheaper_at_large_cp() {
+        let pm = PerfModel::default();
+        let t = fig6_cp_folding(&pm, &ModelConfig::mixtral_8x22b());
+        // At CP=8 (cp*tp=16 > node), legacy A2A must exceed folded A2A.
+        let cp8: Vec<&Vec<String>> = t.rows.iter().filter(|r| r[0] == "8").collect();
+        assert_eq!(cp8.len(), 2);
+        let folded: f64 = cp8.iter().find(|r| r[2] == "folded*").unwrap()[3].parse().unwrap();
+        let legacy: f64 = cp8.iter().find(|r| r[2] == "legacy").unwrap()[3].parse().unwrap();
+        assert!(legacy > 1.5 * folded, "legacy {legacy} vs folded {folded}");
+    }
+
+    #[test]
+    fn strong_scaling_rows_complete() {
+        let pm = PerfModel::default();
+        let t = strong_scaling(&pm, &ModelConfig::qwen2_57b_a14b(), &[64, 128]);
+        assert_eq!(t.rows.len(), 8);
+    }
+}

@@ -1,0 +1,224 @@
+//! The flexible token-level MoE dispatcher (paper §3.3): router with
+//! token-dropping (full/sub-sequence) and dropless modes ([`router`]),
+//! expert-order permutation ([`permute`]), and the distributed
+//! EP×ETP dispatch workflow over the functional communicator
+//! ([`workflow`]).
+
+pub mod permute;
+pub mod router;
+pub mod workflow;
+
+pub use permute::Permutation;
+pub use router::{Assignment, RouteDecision, Router, RouterConfig};
+pub use workflow::{reference_moe_forward, DispatchStats, DistributedMoeLayer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DropPolicy;
+    use crate::simcomm::run_ranks;
+    use crate::train::math::SwigluExpert;
+    use crate::util::Rng;
+
+    const H: usize = 16;
+    const F: usize = 32;
+    const E: usize = 8;
+
+    fn build_router(top_k: usize, policy: DropPolicy, seed: u64) -> Router {
+        let mut rng = Rng::seed_from_u64(seed);
+        Router::init(
+            RouterConfig {
+                hidden: H,
+                num_experts: E,
+                top_k,
+                capacity_factor: 1.0,
+                drop_policy: policy,
+                capacity_override: None,
+            },
+            &mut rng,
+        )
+    }
+
+    fn build_experts(seed: u64) -> Vec<SwigluExpert> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..E).map(|_| SwigluExpert::init(H, F, &mut rng)).collect()
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut t = vec![0.0; n * H];
+        rng.fill_normal(&mut t, 1.0);
+        t
+    }
+
+    /// Core equivalence: distributed forward over (ep, etp) == single-rank
+    /// reference, for every parallel decomposition of 4 ranks.
+    fn check_equivalence(ep: usize, etp: usize, policy: DropPolicy) {
+        let world = ep * etp;
+        let n_per_rank = 12;
+        let router = build_router(2, policy, 100);
+        let experts = build_experts(200);
+        let all_tokens = tokens(n_per_rank * world, 300);
+
+        // Rank layout: grid (ep, etp), etp fastest — EP group = ranks with
+        // the same etp coordinate; ETP group = consecutive ranks.
+        let outs = run_ranks(world, |rank, comm| {
+            let ep_idx = rank / etp;
+            let etp_idx = rank % etp;
+            let ep_group: Vec<usize> = (0..ep).map(|i| i * etp + etp_idx).collect();
+            let etp_group: Vec<usize> = (0..etp).map(|i| ep_idx * etp + i).collect();
+            let epr = E / ep;
+            let local_experts: Vec<SwigluExpert> = (0..epr)
+                .map(|le| {
+                    let global = ep_idx * epr + le;
+                    if etp > 1 {
+                        experts[global].shard(etp, etp_idx)
+                    } else {
+                        experts[global].clone()
+                    }
+                })
+                .collect();
+            let layer = DistributedMoeLayer {
+                router: router.clone(),
+                local_experts,
+                ep_group,
+                etp_group,
+                ep_index: ep_idx,
+                num_experts: E,
+                seq_group: None,
+            };
+            let my_tokens =
+                all_tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+            layer.forward(&comm, &my_tokens).0
+        });
+
+        // Reference applies the drop per rank-sized chunk (sub-sequence
+        // scope == per-rank scope).
+        let reference = reference_moe_forward(&router, &experts, &all_tokens, Some(n_per_rank));
+        let distributed: Vec<f32> = outs.concat();
+        assert_eq!(distributed.len(), reference.len());
+        for (i, (a, b)) in distributed.iter().zip(&reference).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-4 * (1.0 + b.abs()),
+                "ep={ep} etp={etp} {policy:?}: idx {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn equivalence_ep2() {
+        check_equivalence(2, 1, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_ep4() {
+        check_equivalence(4, 1, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_ep8() {
+        check_equivalence(8, 1, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_etp2() {
+        check_equivalence(1, 2, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_ep2_etp2() {
+        check_equivalence(2, 2, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_ep4_etp2() {
+        check_equivalence(4, 2, DropPolicy::Dropless);
+    }
+
+    #[test]
+    fn equivalence_with_subsequence_drop() {
+        check_equivalence(2, 1, DropPolicy::SubSequence);
+        check_equivalence(4, 2, DropPolicy::SubSequence);
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let router = build_router(2, DropPolicy::Dropless, 1);
+        let experts = build_experts(2);
+        let outs = run_ranks(2, |rank, comm| {
+            let epr = E / 2;
+            let local: Vec<SwigluExpert> =
+                experts[rank * epr..(rank + 1) * epr].to_vec();
+            let layer = DistributedMoeLayer {
+                router: router.clone(),
+                local_experts: local,
+                ep_group: vec![0, 1],
+                etp_group: vec![rank],
+                ep_index: rank,
+                num_experts: E,
+                seq_group: None,
+            };
+            layer.forward(&comm, &tokens(8, 40 + rank as u64)).1
+        });
+        for s in outs {
+            assert!(s.a2a_send_bytes > 0);
+            assert!(s.a2a_recv_bytes > 0);
+            assert_eq!(s.tokens_routed, 16); // 8 tokens * top-2, dropless
+            assert_eq!(s.etp_ag_bytes, 0); // etp=1
+        }
+    }
+
+    #[test]
+    fn full_sequence_drop_consistent_across_partitions() {
+        // Full-sequence dropping must give the same result no matter how the
+        // sequence is split across ranks — that's its defining property.
+        let router = build_router(2, DropPolicy::FullSequence, 7);
+        let experts = build_experts(8);
+        let all_tokens = tokens(16, 9);
+
+        // Reference: full-batch scope.
+        let reference = reference_moe_forward(&router, &experts, &all_tokens, None);
+
+        let outs = run_ranks(2, |rank, comm| {
+            let epr = E / 2;
+            let layer = DistributedMoeLayer {
+                router: router.clone(),
+                local_experts: experts[rank * epr..(rank + 1) * epr].to_vec(),
+                ep_group: vec![0, 1],
+                etp_group: vec![rank],
+                ep_index: rank,
+                num_experts: E,
+                seq_group: Some(vec![0, 1]),
+            };
+            let mine = all_tokens[rank * 8 * H..(rank + 1) * 8 * H].to_vec();
+            layer.forward(&comm, &mine).0
+        });
+        let distributed: Vec<f32> = outs.concat();
+        for (a, b) in distributed.iter().zip(&reference) {
+            assert!((a - b).abs() < 2e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dropping_caps_tokens_routed() {
+        let router = build_router(2, DropPolicy::SubSequence, 11);
+        let experts = build_experts(12);
+        let outs = run_ranks(2, |rank, comm| {
+            let epr = E / 2;
+            let layer = DistributedMoeLayer {
+                router: router.clone(),
+                local_experts: experts[rank * epr..(rank + 1) * epr].to_vec(),
+                ep_group: vec![0, 1],
+                etp_group: vec![rank],
+                ep_index: rank,
+                num_experts: E,
+                seq_group: None,
+            };
+            layer.forward(&comm, &tokens(32, 13 + rank as u64)).1
+        });
+        for s in outs {
+            assert!(s.tokens_routed <= 64);
+            assert_eq!(s.tokens_routed + s.tokens_dropped, 64);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Token permutation: reorder routed token-copies so that copies bound for
+//! the same expert are contiguous (paper §3.1.2 "Token Dispatching"), plus
+//! the inverse operation for the combine phase.
+
+use super::router::Assignment;
+
+/// The permutation plan derived from a routing decision: for each kept
+/// assignment, where its copy sits in the expert-sorted buffer.
+#[derive(Debug, Clone)]
+pub struct Permutation {
+    /// Sorted order: indices into `assignments` (kept only), grouped by
+    /// expert ascending, stable within an expert (token order preserved).
+    pub order: Vec<usize>,
+    /// Number of kept copies per expert.
+    pub counts: Vec<usize>,
+    /// Start offset of each expert's segment in the permuted buffer.
+    pub offsets: Vec<usize>,
+}
+
+impl Permutation {
+    /// Build from assignments (only `kept` copies participate).
+    pub fn from_assignments(assignments: &[Assignment], num_experts: usize) -> Self {
+        let mut counts = vec![0usize; num_experts];
+        for a in assignments.iter().filter(|a| a.kept) {
+            counts[a.expert] += 1;
+        }
+        let mut offsets = vec![0usize; num_experts + 1];
+        for e in 0..num_experts {
+            offsets[e + 1] = offsets[e] + counts[e];
+        }
+        let mut cursor = offsets.clone();
+        let mut order = vec![usize::MAX; offsets[num_experts]];
+        for (i, a) in assignments.iter().enumerate() {
+            if a.kept {
+                order[cursor[a.expert]] = i;
+                cursor[a.expert] += 1;
+            }
+        }
+        Self { order, counts, offsets: offsets[..num_experts].to_vec() }
+    }
+
+    pub fn total(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Gather token rows into expert-sorted order.
+    /// `tokens` is [n × h]; assignments map copies to source tokens.
+    pub fn permute(&self, tokens: &[f32], h: usize, assignments: &[Assignment]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total() * h];
+        for (slot, &ai) in self.order.iter().enumerate() {
+            let src = assignments[ai].token;
+            out[slot * h..(slot + 1) * h].copy_from_slice(&tokens[src * h..(src + 1) * h]);
+        }
+        out
+    }
+
+    /// Scatter expert outputs back: accumulate `prob`-weighted copies into
+    /// each source token's row (the combine/un-permute step).
+    pub fn unpermute_accumulate(
+        &self,
+        expert_out: &[f32],
+        h: usize,
+        assignments: &[Assignment],
+        num_tokens: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; num_tokens * h];
+        for (slot, &ai) in self.order.iter().enumerate() {
+            let a = assignments[ai];
+            let dst = &mut out[a.token * h..(a.token + 1) * h];
+            let src = &expert_out[slot * h..(slot + 1) * h];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += a.prob * s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asg(token: usize, expert: usize, prob: f32, kept: bool) -> Assignment {
+        Assignment { token, expert, prob, kept }
+    }
+
+    #[test]
+    fn groups_by_expert_stably() {
+        let assignments = vec![
+            asg(0, 1, 0.5, true),
+            asg(0, 0, 0.5, true),
+            asg(1, 1, 1.0, true),
+            asg(2, 0, 1.0, true),
+        ];
+        let p = Permutation::from_assignments(&assignments, 2);
+        assert_eq!(p.counts, vec![2, 2]);
+        assert_eq!(p.offsets, vec![0, 2]);
+        // expert 0 segment: assignment idx 1 (token 0) then 3 (token 2).
+        assert_eq!(p.order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn dropped_copies_excluded() {
+        let assignments = vec![asg(0, 0, 1.0, true), asg(1, 0, 1.0, false)];
+        let p = Permutation::from_assignments(&assignments, 1);
+        assert_eq!(p.total(), 1);
+    }
+
+    #[test]
+    fn permute_unpermute_roundtrip_identity_expert() {
+        // With an "identity expert" and probs summing to 1 per token, the
+        // roundtrip returns the original tokens.
+        let h = 4;
+        let tokens: Vec<f32> = (0..3 * h).map(|x| x as f32).collect();
+        let assignments = vec![
+            asg(0, 0, 0.25, true),
+            asg(0, 1, 0.75, true),
+            asg(1, 1, 1.0, true),
+            asg(2, 0, 1.0, true),
+        ];
+        let p = Permutation::from_assignments(&assignments, 2);
+        let permuted = p.permute(&tokens, h, &assignments);
+        let restored = p.unpermute_accumulate(&permuted, h, &assignments, 3);
+        for (a, b) in tokens.iter().zip(&restored) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unpermute_weights_by_prob() {
+        let h = 1;
+        let tokens = vec![2.0f32];
+        let assignments = vec![asg(0, 0, 0.3, true), asg(0, 1, 0.7, true)];
+        let p = Permutation::from_assignments(&assignments, 2);
+        let permuted = p.permute(&tokens, h, &assignments);
+        // expert 0 doubles, expert 1 triples.
+        let expert_out = vec![permuted[0] * 2.0, permuted[1] * 3.0];
+        let out = p.unpermute_accumulate(&expert_out, h, &assignments, 1);
+        let expect = 0.3 * 4.0 + 0.7 * 6.0;
+        assert!((out[0] - expect).abs() < 1e-6);
+    }
+}

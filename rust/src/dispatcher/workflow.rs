@@ -1,0 +1,261 @@
+//! The distributed MoE layer: the paper's token-dispatcher workflow
+//! (§3.3, Figure 2) executed functionally over [`crate::simcomm`].
+//!
+//! Forward pipeline per rank:
+//! 1. route local tokens (sub-sequence or full-sequence drop scope),
+//! 2. permute copies into expert order,
+//! 3. **All-to-All-V** over the EP group (dispatch),
+//! 4. **AllGather-V** over the ETP group,
+//! 5. expert FFN shard compute,
+//! 6. **ReduceScatter-V** over the ETP group,
+//! 7. **All-to-All-V** back (combine),
+//! 8. un-permute + gate-weighted accumulate.
+//!
+//! Dropped tokens contribute zero (the transformer's residual path carries
+//! them), exactly like Megatron-Core's `capacity_factor` behaviour.
+
+use crate::config::DropPolicy;
+use crate::simcomm::Communicator;
+use crate::train::math::SwigluExpert;
+
+use super::permute::Permutation;
+use super::router::{Assignment, RouteDecision, Router};
+
+/// Communication volume accounting for one forward (bytes, f32 payloads).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DispatchStats {
+    pub a2a_send_bytes: usize,
+    pub a2a_recv_bytes: usize,
+    pub etp_ag_bytes: usize,
+    pub etp_rs_bytes: usize,
+    pub tokens_routed: usize,
+    pub tokens_dropped: usize,
+}
+
+/// One rank's slice of a distributed MoE layer.
+pub struct DistributedMoeLayer {
+    /// Replicated router (identical weights on every rank).
+    pub router: Router,
+    /// This rank's expert shards: `num_experts / ep` experts, each holding
+    /// a `1/etp` column shard of the FFN.
+    pub local_experts: Vec<SwigluExpert>,
+    /// Global ranks of this rank's EP group (sorted).
+    pub ep_group: Vec<usize>,
+    /// Global ranks of this rank's ETP group (sorted).
+    pub etp_group: Vec<usize>,
+    /// This rank's index within `ep_group`.
+    pub ep_index: usize,
+    pub num_experts: usize,
+    /// Optional sequence group for full-sequence dropping (global ranks that
+    /// together hold one full sequence). `None` => sub-sequence scope.
+    pub seq_group: Option<Vec<usize>>,
+}
+
+impl DistributedMoeLayer {
+    pub fn experts_per_rank(&self) -> usize {
+        self.num_experts / self.ep_group.len()
+    }
+
+    /// Which EP-group index owns `expert`.
+    fn owner_of(&self, expert: usize) -> usize {
+        expert / self.experts_per_rank()
+    }
+
+    /// Routing with the configured drop scope.
+    fn route(&self, comm: &Communicator, tokens: &[f32]) -> RouteDecision {
+        let h = self.router.config.hidden;
+        let n_local = tokens.len() / h;
+        match (&self.seq_group, self.router.config.drop_policy) {
+            (Some(group), DropPolicy::FullSequence) if group.len() > 1 => {
+                // Gather gate probabilities across the sequence group so the
+                // capacity decision sees the whole sequence.
+                let probs_local = self.router.gate_probs(tokens);
+                let gathered = comm.all_gather_v(group, &probs_local);
+                let e = self.router.config.num_experts;
+                let n_total = gathered.len() / e;
+                let mut assignments = self.router.topk(&gathered, n_total);
+                self.router.apply_capacity(&mut assignments, n_total);
+                // Slice out this rank's tokens (group members hold equal
+                // chunks in group order).
+                let my_idx = group.iter().position(|&r| r == comm.rank()).unwrap();
+                let offset = my_idx * n_local;
+                let k = self.router.config.top_k.min(e);
+                let mut local: Vec<Assignment> = assignments
+                    [offset * k..(offset + n_local) * k]
+                    .iter()
+                    .map(|a| Assignment { token: a.token - offset, ..*a })
+                    .collect();
+                let mut expert_load = vec![0usize; e];
+                for a in local.iter_mut() {
+                    if a.kept {
+                        expert_load[a.expert] += 1;
+                    }
+                }
+                RouteDecision {
+                    assignments: local,
+                    num_tokens: n_local,
+                    expert_load,
+                    aux_loss: 0.0,
+                }
+            }
+            _ => self.router.route(tokens),
+        }
+    }
+
+    /// Full forward of the MoE layer for this rank's `tokens` [n × h].
+    /// Returns (outputs [n × h], stats). Must be called collectively by all
+    /// ranks of the EP×ETP block.
+    pub fn forward(&self, comm: &Communicator, tokens: &[f32]) -> (Vec<f32>, DispatchStats) {
+        let h = self.router.config.hidden;
+        let n_local = tokens.len() / h;
+        let ep = self.ep_group.len();
+        let epr = self.experts_per_rank();
+        let mut stats = DispatchStats::default();
+
+        // 1-2. Route + permute into expert-sorted order.
+        let decision = self.route(comm, tokens);
+        stats.tokens_routed = decision.assignments.iter().filter(|a| a.kept).count();
+        stats.tokens_dropped = decision.assignments.len() - stats.tokens_routed;
+        let perm = Permutation::from_assignments(&decision.assignments, self.num_experts);
+        let permuted = perm.permute(tokens, h, &decision.assignments);
+
+        // 3. All-to-All-V dispatch. Send buffer for EP peer p:
+        //    [counts for p's epr experts..., token rows...].
+        let mut sends: Vec<Vec<f32>> = Vec::with_capacity(ep);
+        for p in 0..ep {
+            let first = p * epr;
+            let start_off = if first == 0 { 0 } else { perm.offsets[first] };
+            let end_off = if first + epr < self.num_experts {
+                perm.offsets[first + epr]
+            } else {
+                perm.total()
+            };
+            let mut buf = Vec::with_capacity(epr + (end_off - start_off) * h);
+            for le in 0..epr {
+                buf.push(perm.counts[first + le] as f32);
+            }
+            buf.extend_from_slice(&permuted[start_off * h..end_off * h]);
+            stats.a2a_send_bytes += buf.len() * 4;
+            sends.push(buf);
+        }
+        let received = comm.all_to_all_v(&self.ep_group, sends);
+
+        // Parse: per peer, counts per local expert + rows grouped by expert.
+        // Regroup into per-local-expert buffers, preserving peer order so
+        // the return path can undo the layout.
+        let mut per_expert: Vec<Vec<f32>> = vec![Vec::new(); epr];
+        // counts_from[p][le] = rows peer p sent for local expert le.
+        let mut counts_from = vec![vec![0usize; epr]; ep];
+        for (p, buf) in received.iter().enumerate() {
+            stats.a2a_recv_bytes += buf.len() * 4;
+            let mut off = epr;
+            for le in 0..epr {
+                counts_from[p][le] = buf[le] as usize;
+            }
+            for le in 0..epr {
+                let rows = counts_from[p][le];
+                per_expert[le].extend_from_slice(&buf[off..off + rows * h]);
+                off += rows * h;
+            }
+        }
+
+        // 4-6. ETP: AllGather-V tokens, compute the FFN shard, then
+        // ReduceScatter-V (implemented as deterministic AllReduce + slice).
+        let etp = self.etp_group.len();
+        let mut expert_outputs: Vec<Vec<f32>> = Vec::with_capacity(epr);
+        for (le, mine) in per_expert.iter().enumerate() {
+            let (gathered, my_offset, my_len) = if etp > 1 {
+                // Exchange lengths first (AllGather-V of [len]).
+                let lens = comm.all_gather_v(&self.etp_group, &[mine.len() as f32]);
+                let gathered = comm.all_gather_v(&self.etp_group, mine);
+                stats.etp_ag_bytes += gathered.len() * 4;
+                let my_idx =
+                    self.etp_group.iter().position(|&r| r == comm.rank()).unwrap();
+                let my_offset: usize =
+                    lens[..my_idx].iter().map(|&l| l as usize).sum();
+                (gathered, my_offset, mine.len())
+            } else {
+                (mine.clone(), 0, mine.len())
+            };
+            let partial = self.local_experts[le].forward(&gathered);
+            let full = if etp > 1 {
+                let reduced = comm.all_reduce_sum(&self.etp_group, &partial);
+                stats.etp_rs_bytes += reduced.len() * 4 / etp;
+                reduced[my_offset..my_offset + my_len].to_vec()
+            } else {
+                partial
+            };
+            expert_outputs.push(full);
+        }
+
+        // 7. All-to-All-V combine: send each peer's rows back in the same
+        // per-peer-per-expert layout it used.
+        let mut returns: Vec<Vec<f32>> = vec![Vec::new(); ep];
+        let mut cursor = vec![0usize; epr];
+        for p in 0..ep {
+            for le in 0..epr {
+                let rows = counts_from[p][le];
+                let start = cursor[le];
+                returns[p].extend_from_slice(&expert_outputs[le][start * h..(start + rows) * h]);
+                cursor[le] += rows;
+            }
+        }
+        let combined = comm.all_to_all_v(&self.ep_group, returns);
+
+        // Reassemble into the original permuted order: peer p returned rows
+        // for the experts it owns, in expert order — which is exactly the
+        // contiguous segment we sent it.
+        let mut expert_sorted_out = vec![0.0f32; perm.total() * h];
+        for (p, buf) in combined.iter().enumerate() {
+            let first = p * epr;
+            let start_off = if first == 0 { 0 } else { perm.offsets[first] };
+            expert_sorted_out[start_off * h..start_off * h + buf.len()]
+                .copy_from_slice(buf);
+        }
+
+        // 8. Un-permute with gate weighting.
+        let out = perm.unpermute_accumulate(
+            &expert_sorted_out,
+            h,
+            &decision.assignments,
+            n_local,
+        );
+        (out, stats)
+    }
+}
+
+/// Single-process reference: the same MoE layer computed without any
+/// parallelism (full-width experts). `chunk_tokens` emulates the drop scope:
+/// `Some(c)` applies capacity per c-token chunk (sub-sequence semantics of a
+/// c-token rank shard); `None` uses the full batch (full-sequence).
+pub fn reference_moe_forward(
+    router: &Router,
+    experts: &[SwigluExpert],
+    tokens: &[f32],
+    chunk_tokens: Option<usize>,
+) -> Vec<f32> {
+    let h = router.config.hidden;
+    let n = tokens.len() / h;
+    let chunk = chunk_tokens.unwrap_or(n).max(1);
+    let mut out = vec![0.0f32; n * h];
+    for start in (0..n).step_by(chunk) {
+        let end = (start + chunk).min(n);
+        let slice = &tokens[start * h..end * h];
+        let decision = router.route(slice);
+        let perm = Permutation::from_assignments(&decision.assignments, router.config.num_experts);
+        let permuted = perm.permute(slice, h, &decision.assignments);
+        let mut expert_out = vec![0.0f32; perm.total() * h];
+        for e in 0..router.config.num_experts {
+            let s = perm.offsets[e];
+            let cnt = perm.counts[e];
+            if cnt == 0 {
+                continue;
+            }
+            let y = experts[e].forward(&permuted[s * h..(s + cnt) * h]);
+            expert_out[s * h..(s + cnt) * h].copy_from_slice(&y);
+        }
+        let o = perm.unpermute_accumulate(&expert_out, h, &decision.assignments, end - start);
+        out[start * h..end * h].copy_from_slice(&o);
+    }
+    out
+}

@@ -1,0 +1,41 @@
+//! # moe-folding
+//!
+//! A reproduction of **"MoE Parallel Folding: Heterogeneous Parallelism
+//! Mappings for Efficient Large-Scale MoE Model Training with Megatron
+//! Core"** (NVIDIA, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: parallel
+//!   group generation with MoE Parallel Folding ([`mapping`]), the flexible
+//!   token dispatcher ([`dispatcher`]) running over a functional in-process
+//!   communicator ([`simcomm`]), a 1F1B pipeline scheduler ([`pipeline`]),
+//!   an analytic cluster + collectives performance model
+//!   ([`cluster`], [`collectives`], [`perfmodel`]) that regenerates every
+//!   table and figure of the paper, a parallelism auto-tuner ([`autotune`]),
+//!   and an end-to-end distributed trainer ([`train`]) that executes
+//!   JAX/Pallas-authored compute via PJRT ([`runtime`]).
+//! * **Layer 2** — `python/compile/model.py`: the MoE transformer fwd/bwd in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the MoE hot
+//!   spot (grouped expert FFN, router top-k, token permute).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod autotune;
+pub mod cluster;
+pub mod dispatcher;
+pub mod simcomm;
+pub mod train;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod mapping;
+pub mod model;
+pub mod perfmodel;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+
+/// Crate version string for CLI banners.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

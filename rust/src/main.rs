@@ -1,0 +1,196 @@
+//! `moe-folding` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   plan       auto-tune a parallel mapping for a model + GPU budget
+//!   mapping    print the folded/legacy process groups for a config
+//!   table1..5  regenerate the paper's tables
+//!   fig5/fig6  MoE-layer breakdown ablations
+//!   train      run the end-to-end trainer on AOT artifacts
+//!   artifacts  list artifacts in the manifest
+
+use moe_folding::autotune::Constraints;
+use moe_folding::cluster::ClusterSpec;
+use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::coordinator;
+use moe_folding::mapping::ParallelMapping;
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::train::{train, TrainerConfig};
+use moe_folding::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "moe-folding {} — MoE Parallel Folding reproduction
+
+USAGE: moe-folding <command> [options]
+
+COMMANDS:
+  plan      --model <name> --gpus <n> [--strategy <s>] [--tp N --cp N --ep N --etp N --pp N]
+  mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy]
+  table1 | table2 | table3 | table4 | table5
+  fig5      [--model <name>] [--ep-etp 8|16]
+  fig6      [--model <name>]
+  train     [--preset test|e2e] [--steps N] [--dp N] [--lr F] [--artifacts DIR]
+  artifacts [--dir DIR]
+
+MODELS: mixtral-8x22b, llama3-8x70b, qwen2-57b-a14b, mixtral-8x22b-g8t8, tiny
+STRATEGIES: fsdp, fsdp-ep, tp-ep-dp, mcore, folding (default)",
+        moe_folding::VERSION
+    );
+    std::process::exit(2);
+}
+
+fn parse_strategy(s: &str) -> Strategy {
+    match s {
+        "fsdp" => Strategy::Fsdp,
+        "fsdp-ep" => Strategy::FsdpEp,
+        "tp-ep-dp" => Strategy::TpEpDp,
+        "mcore" => Strategy::MCore,
+        "folding" | "mcore-folding" => Strategy::MCoreFolding,
+        _ => {
+            eprintln!("unknown strategy {s}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn model_arg(args: &Args, default: &str) -> ModelConfig {
+    let name = args.get_or("model", default);
+    ModelConfig::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model {name}");
+        std::process::exit(2);
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        usage()
+    };
+    let pm = PerfModel::default();
+
+    match cmd {
+        "plan" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            let gpus = args.get_usize("gpus", 128);
+            let strategy = parse_strategy(args.get_or("strategy", "folding"));
+            let train_cfg = TrainConfig::paper_default(
+                args.get_usize("seq", model.seq_len),
+                args.get_usize("gbs", 256),
+            );
+            let cons = Constraints {
+                tp: args.get("tp").map(|v| v.parse().unwrap()),
+                cp: args.get("cp").map(|v| v.parse().unwrap()),
+                ep: args.get("ep").map(|v| v.parse().unwrap()),
+                etp: args.get("etp").map(|v| v.parse().unwrap()),
+                pp: args.get("pp").map(|v| v.parse().unwrap()),
+            };
+            let r = coordinator::plan(&pm, &model, gpus, &train_cfg, strategy, cons);
+            println!(
+                "# {} | {} | {} GPUs | {} candidates evaluated, {} OOM",
+                model.name,
+                strategy.name(),
+                gpus,
+                r.evaluated,
+                r.oom_count
+            );
+            for e in r.feasible.iter().take(args.get_usize("top", 10)) {
+                println!("{}", e.summary());
+            }
+            if r.feasible.is_empty() {
+                println!("no feasible configuration (all OOM)");
+            }
+        }
+        "mapping" => {
+            let gpus = args.get_usize("gpus", 16);
+            let cfg = ParallelConfig::new(
+                gpus,
+                args.get_usize("tp", 2),
+                args.get_usize("cp", 1),
+                args.get_usize("ep", 4),
+                args.get_usize("etp", 1),
+                args.get_usize("pp", 1),
+            );
+            let mapping = if args.flag("legacy") {
+                ParallelMapping::legacy(cfg)
+            } else {
+                ParallelMapping::folded(cfg)
+            }
+            .map_err(|e| anyhow::anyhow!(e))?;
+            println!("# {} ({})", cfg.tag(), if mapping.legacy { "legacy" } else { "folded" });
+            for (name, set) in
+                [("attention", &mapping.attention), ("moe", &mapping.moe)]
+            {
+                println!("[{name}]");
+                for (axis, groups) in &set.groups {
+                    println!("  {axis}: {groups:?}");
+                }
+            }
+            let cluster = ClusterSpec::eos(gpus);
+            println!("fold report: {:?}", mapping.fold_report(&cluster));
+        }
+        "table1" => print!("{}", coordinator::table1(&pm).markdown()),
+        "table2" => print!("{}", coordinator::table2(&pm).markdown()),
+        "table3" => print!("{}", coordinator::table3(&pm).markdown()),
+        "table4" => {
+            for model in ModelConfig::paper_models() {
+                println!("## {}", model.name);
+                print!(
+                    "{}",
+                    coordinator::strong_scaling(&pm, &model, &[128, 256, 512, 1024]).markdown()
+                );
+            }
+        }
+        "table5" => {
+            for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {
+                let model = ModelConfig::by_name(name).unwrap();
+                println!("## {}", model.name);
+                print!("{}", coordinator::context_scaling(&pm, &model).markdown());
+            }
+        }
+        "fig5" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            let ep_etp = args.get_usize("ep-etp", 8);
+            print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
+        }
+        "fig6" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            print!("{}", coordinator::fig6_cp_folding(&pm, &model).markdown());
+        }
+        "train" => {
+            let cfg = TrainerConfig {
+                preset: args.get_or("preset", "test").to_string(),
+                artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+                steps: args.get_usize("steps", 50),
+                lr: args.get_f64("lr", 1e-3) as f32,
+                dp: args.get_usize("dp", 1),
+                seed: args.get_usize("seed", 42) as u64,
+                log_every: args.get_usize("log-every", 10),
+                clip_norm: args.get_f64("clip", 1.0) as f32,
+            };
+            let report = train(&cfg)?;
+            println!(
+                "trained {} params for {} steps (dp={}): loss {:.4} -> {:.4}, {:.0} tokens/s, {:.1}s",
+                report.num_params,
+                cfg.steps,
+                cfg.dp,
+                report.initial_loss,
+                report.final_loss,
+                report.tokens_per_second,
+                report.wall_seconds
+            );
+            if let Some(path) = args.get("loss-csv") {
+                std::fs::write(path, report.loss_csv())?;
+                println!("wrote {path}");
+            }
+        }
+        "artifacts" => {
+            let rt = moe_folding::runtime::Runtime::cpu(args.get_or("dir", "artifacts"))?;
+            println!("platform: {}", rt.platform());
+            for name in rt.artifact_names() {
+                println!("  {name}");
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

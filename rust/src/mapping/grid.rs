@@ -1,0 +1,131 @@
+//! Generic N-dimensional rank grid.
+//!
+//! A [`Grid`] reshapes the flat rank range `0..world` into named axes
+//! (slowest first) and derives, for each axis, the partition of ranks into
+//! process groups: two ranks are in the same group for axis `i` iff their
+//! coordinates agree on every *other* axis.
+
+use std::collections::BTreeMap;
+
+use super::{GroupPartition, GroupSet};
+
+/// An N-D reshape of `0..world` with named axes, slowest-varying first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Grid {
+    pub world: usize,
+    /// (name, extent), slowest first.
+    pub axes: Vec<(String, usize)>,
+    /// stride of each axis in the flat rank id.
+    strides: Vec<usize>,
+}
+
+impl Grid {
+    pub fn new(world: usize, axes: &[(&str, usize)]) -> Result<Self, String> {
+        let prod: usize = axes.iter().map(|(_, e)| e).product();
+        if prod != world {
+            return Err(format!(
+                "grid axes {:?} product {prod} != world {world}",
+                axes
+            ));
+        }
+        let mut strides = vec![1usize; axes.len()];
+        for i in (0..axes.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * axes[i + 1].1;
+        }
+        Ok(Self {
+            world,
+            axes: axes.iter().map(|(n, e)| (n.to_string(), *e)).collect(),
+            strides,
+        })
+    }
+
+    /// Coordinates of a flat rank.
+    pub fn coords(&self, rank: usize) -> Vec<usize> {
+        self.axes
+            .iter()
+            .zip(&self.strides)
+            .map(|((_, extent), stride)| (rank / stride) % extent)
+            .collect()
+    }
+
+    /// Flat rank from coordinates.
+    pub fn rank(&self, coords: &[usize]) -> usize {
+        coords
+            .iter()
+            .zip(&self.strides)
+            .map(|(c, s)| c * s)
+            .sum()
+    }
+
+    /// Partition of ranks into groups along `axis`.
+    pub fn groups(&self, axis: &str) -> GroupPartition {
+        let ai = self
+            .axes
+            .iter()
+            .position(|(n, _)| n == axis)
+            .unwrap_or_else(|| panic!("no axis {axis}"));
+        let extent = self.axes[ai].1;
+        let stride = self.strides[ai];
+        let num_groups = self.world / extent;
+        let mut out = Vec::with_capacity(num_groups);
+        // Enumerate base ranks: all ranks whose coordinate on `axis` is 0.
+        for base in 0..self.world {
+            if (base / stride) % extent != 0 {
+                continue;
+            }
+            out.push((0..extent).map(|k| base + k * stride).collect());
+        }
+        out
+    }
+
+    /// All groups for all axes.
+    pub fn group_set(&self) -> GroupSet {
+        let mut groups = BTreeMap::new();
+        for (name, _) in &self.axes {
+            groups.insert(name.clone(), self.groups(name));
+        }
+        GroupSet { groups }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_coords_roundtrip() {
+        let g = Grid::new(24, &[("A", 2), ("B", 3), ("C", 4)]).unwrap();
+        for r in 0..24 {
+            assert_eq!(g.rank(&g.coords(r)), r);
+        }
+        assert_eq!(g.coords(0), vec![0, 0, 0]);
+        assert_eq!(g.coords(23), vec![1, 2, 3]);
+        // C is fastest-varying.
+        assert_eq!(g.coords(1), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn innermost_axis_groups_are_consecutive() {
+        let g = Grid::new(8, &[("PP", 2), ("TP", 4)]).unwrap();
+        let tp = g.groups("TP");
+        assert_eq!(tp, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        let pp = g.groups("PP");
+        assert_eq!(pp, vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]]);
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let g = Grid::new(64, &[("PP", 2), ("DP", 4), ("CP", 2), ("TP", 4)]).unwrap();
+        for axis in ["PP", "DP", "CP", "TP"] {
+            let part = g.groups(axis);
+            let mut all: Vec<usize> = part.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..64).collect::<Vec<_>>(), "axis {axis}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_product() {
+        assert!(Grid::new(10, &[("A", 3), ("B", 3)]).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Faithful port of the paper's appendix Listing 1 (`generate_mappings`).
+//!
+//! The Python original reshapes ranks as `(attn_dp, pp, cp, tp)` for
+//! attention and `(moe_dp, pp, ep, etp)` for MoE and derives groups via
+//! einops rearranges. This layout is PP-consistent only when
+//! `tp*cp == etp*ep` (the inner block below the `pp` axis must match);
+//! the production layout in [`super::ParallelMapping::folded`] places `pp`
+//! slowest instead, which is consistent for every legal configuration. This
+//! module exists for fidelity with the paper text and is validated against
+//! the appendix example `generate_mappings(64, 2, 2, 2, 2, 2)`.
+
+use std::collections::BTreeMap;
+
+use super::grid::Grid;
+use super::GroupSet;
+
+/// Port of Listing 1: returns (attention_groups, moe_groups).
+///
+/// Arguments mirror the Python signature:
+/// `generate_mappings(world_size, tp, cp, ep, etp, pp)`.
+pub fn generate_mappings_listing1(
+    world_size: usize,
+    tp: usize,
+    cp: usize,
+    ep: usize,
+    etp: usize,
+    pp: usize,
+) -> Result<(GroupSet, GroupSet), String> {
+    if world_size % (tp * cp * pp) != 0 {
+        return Err("world_size % (tp*cp*pp) != 0".into());
+    }
+    if world_size % (etp * ep * pp) != 0 {
+        return Err("world_size % (etp*ep*pp) != 0".into());
+    }
+    let attn_dp = world_size / tp / cp / pp;
+    let moe_dp = world_size / etp / ep / pp;
+
+    // attn_ranks = ranks.reshape(attn_dp, pp, cp, tp)
+    let attn = Grid::new(world_size, &[("DP", attn_dp), ("PP", pp), ("CP", cp), ("TP", tp)])?;
+    // moe_ranks = ranks.reshape(moe_dp, pp, ep, etp)
+    let moe = Grid::new(world_size, &[("EDP", moe_dp), ("PP", pp), ("EP", ep), ("ETP", etp)])?;
+
+    let mut a = BTreeMap::new();
+    for ax in ["TP", "CP", "PP", "DP"] {
+        a.insert(ax.to_string(), attn.groups(ax));
+    }
+    let mut m = BTreeMap::new();
+    for ax in ["ETP", "EP", "PP", "EDP"] {
+        m.insert(ax.to_string(), moe.groups(ax));
+    }
+    Ok((GroupSet { groups: a }, GroupSet { groups: m }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The appendix example: generate_mappings(64, 2, 2, 2, 2, 2).
+    #[test]
+    fn appendix_example_shapes() {
+        let (a, m) = generate_mappings_listing1(64, 2, 2, 2, 2, 2).unwrap();
+        assert_eq!(a.groups["TP"].len(), 32);
+        assert_eq!(a.groups["TP"][0], vec![0, 1]);
+        assert_eq!(a.groups["CP"].len(), 32);
+        assert_eq!(a.groups["CP"][0], vec![0, 2]);
+        assert_eq!(a.groups["PP"].len(), 32);
+        // pp stride = cp*tp = 4.
+        assert_eq!(a.groups["PP"][0], vec![0, 4]);
+        assert_eq!(a.groups["DP"].len(), 8);
+        // dp stride = pp*cp*tp = 8.
+        assert_eq!(a.groups["DP"][0], (0..64).step_by(8).collect::<Vec<_>>());
+
+        // MoE grid has identical extents here, so group shapes coincide.
+        assert_eq!(m.groups["ETP"][0], vec![0, 1]);
+        assert_eq!(m.groups["EP"][0], vec![0, 2]);
+        assert_eq!(m.groups["PP"][0], vec![0, 4]);
+    }
+
+    /// When tp*cp == etp*ep the listing layout's PP partitions agree.
+    #[test]
+    fn pp_consistent_when_inner_blocks_match() {
+        let (a, m) = generate_mappings_listing1(64, 2, 2, 4, 1, 2).unwrap();
+        let mut ap = a.groups["PP"].clone();
+        let mut mp = m.groups["PP"].clone();
+        ap.sort();
+        mp.sort();
+        assert_eq!(ap, mp);
+    }
+
+    /// When inner blocks differ (tp*cp != etp*ep) the listing layout's PP
+    /// partitions diverge — documenting why the production layout puts PP
+    /// slowest.
+    #[test]
+    fn pp_inconsistent_when_inner_blocks_differ() {
+        let (a, m) = generate_mappings_listing1(32, 2, 1, 8, 1, 2).unwrap();
+        let mut ap = a.groups["PP"].clone();
+        let mut mp = m.groups["PP"].clone();
+        ap.sort();
+        mp.sort();
+        assert_ne!(ap, mp);
+    }
+}

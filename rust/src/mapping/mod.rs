@@ -1,0 +1,428 @@
+//! Parallel-group generation: the paper's core mechanism (§3.2, Listing 1).
+//!
+//! With MoE Parallel Folding the attention layers use a 4-D grid
+//! `TP × CP × DP × PP` while the MoE layers use an *independent* grid
+//! `ETP × EP × EDP × PP`; the only consistency requirement is that both
+//! grids induce the same pipeline-parallel partition of ranks.
+//!
+//! Two layouts are provided:
+//!
+//! * [`ParallelMapping::folded`] — the production layout (Megatron-Core
+//!   order, `pp` slowest axis) which keeps PP partitions consistent for
+//!   *every* legal `(tp, cp)` vs `(etp, ep)` combination, including the
+//!   Table-3 optima where `tp·cp != etp·ep`.
+//! * [`generate_mappings_listing1`] — a faithful port of the paper's
+//!   appendix Listing 1 (grid order `(dp, pp, cp|ep, tp)`), which is only
+//!   PP-consistent when `tp·cp == etp·ep`; kept for fidelity and tested
+//!   against the appendix example.
+//!
+//! The legacy (pre-folding) MCore layout, where the EP group is a sub-group
+//! of attention DP and `etp == tp`, is [`ParallelMapping::legacy`]; the
+//! Figure-5/6 ablations compare group placements between the two.
+
+pub mod grid;
+pub mod listing1;
+
+pub use grid::Grid;
+pub use listing1::generate_mappings_listing1;
+
+use std::collections::BTreeMap;
+
+
+
+use crate::cluster::ClusterSpec;
+use crate::config::ParallelConfig;
+
+/// Named axes of the attention grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnAxis {
+    Tp,
+    Cp,
+    Dp,
+    Pp,
+}
+
+/// Named axes of the MoE grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MoeAxis {
+    Etp,
+    Ep,
+    Edp,
+    Pp,
+}
+
+/// A partition of `0..world` into equally-sized groups for one axis.
+pub type GroupPartition = Vec<Vec<usize>>;
+
+/// All process groups for one layer type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupSet {
+    /// axis name -> list of groups (each group = sorted global ranks).
+    pub groups: BTreeMap<String, GroupPartition>,
+}
+
+impl GroupSet {
+    /// The group on `axis` containing `rank`.
+    pub fn group_of(&self, axis: &str, rank: usize) -> Option<&[usize]> {
+        self.groups
+            .get(axis)?
+            .iter()
+            .find(|g| g.contains(&rank))
+            .map(|g| g.as_slice())
+    }
+
+    /// Index of `rank` within its group on `axis` (its "coordinate").
+    pub fn index_in_group(&self, axis: &str, rank: usize) -> Option<usize> {
+        self.group_of(axis, rank)?.iter().position(|&r| r == rank)
+    }
+}
+
+/// The complete dual mapping for one parallel configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelMapping {
+    pub config: ParallelConfig,
+    pub attention: GroupSet,
+    pub moe: GroupSet,
+    /// True if built by the legacy (coupled) constructor.
+    pub legacy: bool,
+}
+
+impl ParallelMapping {
+    /// Folded mapping (Megatron-Core axis order, `pp` slowest).
+    ///
+    /// Attention grid: `(pp, dp, cp, tp)` — `tp` fastest-varying so TP groups
+    /// are consecutive ranks (inside a node whenever `tp <= 8`).
+    /// MoE grid: `(pp, edp, ep, etp)` — `etp` fastest, then `ep`, so the
+    /// EP×ETP block *folds over* the same consecutive ranks the attention
+    /// TP×CP(×DP) block occupies. Both grids place `pp` slowest, so the PP
+    /// partition is `{r : r ≡ c (mod world/pp)}`-style slabs and always
+    /// consistent between the two grids.
+    pub fn folded(config: ParallelConfig) -> Result<Self, String> {
+        config.validate_basic()?;
+        let attn_grid = Grid::new(
+            config.world_size,
+            &[
+                ("PP", config.pp),
+                ("DP", config.dp()),
+                ("CP", config.cp),
+                ("TP", config.tp),
+            ],
+        )?;
+        let moe_grid = Grid::new(
+            config.world_size,
+            &[
+                ("PP", config.pp),
+                ("EDP", config.edp()),
+                ("EP", config.ep),
+                ("ETP", config.etp),
+            ],
+        )?;
+        let mapping = Self {
+            config,
+            attention: attn_grid.group_set(),
+            moe: moe_grid.group_set(),
+            legacy: false,
+        };
+        mapping.validate_pp_consistency()?;
+        Ok(mapping)
+    }
+
+    /// Legacy (pre-folding) MCore mapping: `etp` is forced equal to `tp`,
+    /// `cp` is fused into the token batch for MoE, and the EP group is a
+    /// sub-group of the *attention DP×CP* dimension: attention grid
+    /// `(pp, dp, cp, tp)`, MoE grid `(pp, edp', ep, cp, tp)` where the EP
+    /// group members stride by `cp·tp` ranks.
+    ///
+    /// This reproduces the pre-folding behaviour the ablations measure: with
+    /// `tp·cp >= 8` the EP group members land on *different nodes*, pushing
+    /// token All-to-All traffic onto InfiniBand (Figure 6).
+    pub fn legacy(config: ParallelConfig) -> Result<Self, String> {
+        if config.etp != config.tp {
+            return Err(format!(
+                "legacy MCore couples ETP to TP (got etp={} tp={})",
+                config.etp, config.tp
+            ));
+        }
+        if config.dp() % config.ep != 0 {
+            return Err(format!(
+                "legacy MCore requires ep | dp (ep={} dp={})",
+                config.ep,
+                config.dp()
+            ));
+        }
+        config.validate_basic()?;
+        let attn_grid = Grid::new(
+            config.world_size,
+            &[
+                ("PP", config.pp),
+                ("DP", config.dp()),
+                ("CP", config.cp),
+                ("TP", config.tp),
+            ],
+        )?;
+        // EP takes the innermost `ep` slots of the DP axis, *outside* the
+        // CP×TP block: members of one EP group stride by `cp·tp` ranks.
+        // This is exactly the Figure-6 pathology — with cp·tp ≥ 8 the EP
+        // All-to-All leaves the NVLink domain.
+        let moe_grid = Grid::new(
+            config.world_size,
+            &[
+                ("PP", config.pp),
+                ("EDP", config.dp() / config.ep),
+                ("EP", config.ep),
+                ("CPTP", config.cp * config.tp),
+            ],
+        )?;
+        // The MoE grid's "ETP" groups are the TP sub-blocks of CPTP, and
+        // "EDP" fuses the leftover DP with CP. Rebuild those two axes from a
+        // finer grid so group queries stay uniform.
+        let moe_fine = Grid::new(
+            config.world_size,
+            &[
+                ("PP", config.pp),
+                ("EDPO", config.dp() / config.ep),
+                ("EP", config.ep),
+                ("CP", config.cp),
+                ("ETP", config.tp),
+            ],
+        )?;
+        let mut moe_groups = moe_grid.group_set();
+        let fine = moe_fine.group_set();
+        moe_groups.groups.insert("ETP".into(), fine.groups["ETP"].clone());
+        // EDP for experts = outer DP remainder × CP (experts replicate over
+        // both), i.e. ranks sharing (pp, ep, etp) coordinates.
+        let edp = merged_axis_groups(&moe_fine, &["EDPO", "CP"]);
+        moe_groups.groups.insert("EDP".into(), edp);
+        moe_groups.groups.insert("EP".into(), fine.groups["EP"].clone());
+        let mapping = Self {
+            config,
+            attention: attn_grid.group_set(),
+            moe: moe_groups,
+            legacy: true,
+        };
+        mapping.validate_pp_consistency()?;
+        Ok(mapping)
+    }
+
+    /// The PP partitions of the two grids must be identical (paper §3.2:
+    /// "the number of PP groups and members of each PP group for the
+    /// Attention and MoE layer must be consistent").
+    pub fn validate_pp_consistency(&self) -> Result<(), String> {
+        let a = normalized(&self.attention.groups["PP"]);
+        let m = normalized(&self.moe.groups["PP"]);
+        if a == m {
+            Ok(())
+        } else {
+            Err("PP partitions differ between attention and MoE grids".into())
+        }
+    }
+
+    /// Summary of which groups fit inside one NVLink domain — the quantity
+    /// MoE Parallel Folding optimizes.
+    pub fn fold_report(&self, cluster: &ClusterSpec) -> FoldReport {
+        let span = |set: &GroupSet, axis: &str| -> usize {
+            set.groups[axis]
+                .iter()
+                .map(|g| cluster.nodes_spanned(g))
+                .max()
+                .unwrap_or(1)
+        };
+        FoldReport {
+            tp_nodes: span(&self.attention, "TP"),
+            cp_nodes: span(&self.attention, "CP"),
+            dp_nodes: span(&self.attention, "DP"),
+            ep_nodes: span(&self.moe, "EP"),
+            etp_nodes: span(&self.moe, "ETP"),
+            edp_nodes: span(&self.moe, "EDP"),
+        }
+    }
+
+    /// Every rank belongs to exactly one group per axis; group sizes match
+    /// the configured degrees. Used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let w = self.config.world_size;
+        let expect: &[(&GroupSet, &str, usize)] = &[
+            (&self.attention, "TP", self.config.tp),
+            (&self.attention, "CP", self.config.cp),
+            (&self.attention, "DP", self.config.dp()),
+            (&self.attention, "PP", self.config.pp),
+            (&self.moe, "EP", self.config.ep),
+            (&self.moe, "PP", self.config.pp),
+        ];
+        for (set, axis, size) in expect {
+            let part = &set.groups[*axis];
+            let mut seen = vec![false; w];
+            for g in part {
+                if g.len() != *size {
+                    return Err(format!("{axis} group size {} != {size}", g.len()));
+                }
+                for &r in g {
+                    if r >= w || seen[r] {
+                        return Err(format!("{axis}: rank {r} repeated/out of range"));
+                    }
+                    seen[r] = true;
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("{axis}: not a partition of 0..{w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Node-span summary per axis (max over groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldReport {
+    pub tp_nodes: usize,
+    pub cp_nodes: usize,
+    pub dp_nodes: usize,
+    pub ep_nodes: usize,
+    pub etp_nodes: usize,
+    pub edp_nodes: usize,
+}
+
+impl FoldReport {
+    /// True when all MoE model-parallel communication (EP + ETP) stays on
+    /// NVLink.
+    pub fn moe_comm_intra_node(&self) -> bool {
+        self.ep_nodes <= 1 && self.etp_nodes <= 1
+    }
+}
+
+/// Partition of ranks into groups that share coordinates on every axis of
+/// `grid` *except* the listed ones (the merged axes vary within a group).
+fn merged_axis_groups(grid: &Grid, merged: &[&str]) -> GroupPartition {
+    use std::collections::BTreeMap;
+    let merged_idx: Vec<usize> = merged
+        .iter()
+        .map(|m| grid.axes.iter().position(|(n, _)| n == m).expect("axis"))
+        .collect();
+    let mut buckets: BTreeMap<Vec<usize>, Vec<usize>> = BTreeMap::new();
+    for r in 0..grid.world {
+        let mut key = grid.coords(r);
+        for &i in &merged_idx {
+            key[i] = 0;
+        }
+        buckets.entry(key).or_default().push(r);
+    }
+    buckets.into_values().collect()
+}
+
+fn normalized(p: &GroupPartition) -> Vec<Vec<usize>> {
+    let mut v: Vec<Vec<usize>> = p
+        .iter()
+        .map(|g| {
+            let mut g = g.clone();
+            g.sort_unstable();
+            g
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+impl ParallelConfig {
+    /// Divisibility checks that don't need model information.
+    pub(crate) fn validate_basic(&self) -> Result<(), String> {
+        if self.world_size % (self.tp * self.cp * self.pp) != 0 {
+            return Err(format!(
+                "world {} % tp*cp*pp {} != 0",
+                self.world_size,
+                self.tp * self.cp * self.pp
+            ));
+        }
+        if self.world_size % (self.etp * self.ep * self.pp) != 0 {
+            return Err(format!(
+                "world {} % etp*ep*pp {} != 0",
+                self.world_size,
+                self.etp * self.ep * self.pp
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folded_paper_optimum_is_valid() {
+        // Table 3 Mixtral-8x22B folded optimum: 128 GPUs TP2 EP8 PP8 ETP1.
+        let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        let m = ParallelMapping::folded(cfg).unwrap();
+        m.check_invariants().unwrap();
+        // EP groups are 8 consecutive ranks -> inside one node.
+        let cluster = ClusterSpec::eos(128);
+        let rep = m.fold_report(&cluster);
+        assert_eq!(rep.ep_nodes, 1, "folded EP must fit in a node: {rep:?}");
+        assert!(rep.moe_comm_intra_node());
+    }
+
+    #[test]
+    fn legacy_ep_spans_nodes_when_tp_large() {
+        // Figure 6 scenario: attention TP8 -> legacy EP strides by 8 ranks,
+        // crossing node boundaries.
+        let cfg = ParallelConfig::new(128, 8, 1, 8, 8, 1);
+        let m = ParallelMapping::legacy(cfg).unwrap();
+        let cluster = ClusterSpec::eos(128);
+        let rep = m.fold_report(&cluster);
+        assert!(rep.ep_nodes > 1, "legacy EP should span nodes: {rep:?}");
+
+        // Folding the same degrees keeps EP in-node (ETP=1, EP=8 innermost).
+        let folded = ParallelMapping::folded(ParallelConfig::new(128, 8, 1, 8, 1, 1)).unwrap();
+        let repf = folded.fold_report(&cluster);
+        assert_eq!(repf.ep_nodes, 1, "{repf:?}");
+    }
+
+    #[test]
+    fn pp_partitions_always_consistent_in_folded_layout() {
+        for (w, tp, cp, ep, etp, pp) in [
+            (128, 2, 1, 8, 1, 8),
+            (64, 2, 2, 4, 1, 4),
+            (256, 8, 1, 8, 1, 16),
+            (64, 2, 2, 2, 2, 2),
+            (1024, 8, 8, 8, 1, 8),
+        ] {
+            let cfg = ParallelConfig::new(w, tp, cp, ep, etp, pp);
+            let m = ParallelMapping::folded(cfg).unwrap();
+            m.validate_pp_consistency().unwrap();
+            m.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn group_lookup() {
+        let cfg = ParallelConfig::new(16, 2, 2, 4, 1, 2);
+        let m = ParallelMapping::folded(cfg).unwrap();
+        for r in 0..16 {
+            let tpg = m.attention.group_of("TP", r).unwrap();
+            assert!(tpg.contains(&r));
+            assert_eq!(tpg.len(), 2);
+            let epg = m.moe.group_of("EP", r).unwrap();
+            assert_eq!(epg.len(), 4);
+        }
+        // TP groups are consecutive pairs.
+        assert_eq!(m.attention.group_of("TP", 0).unwrap(), &[0, 1]);
+        assert_eq!(m.attention.group_of("TP", 5).unwrap(), &[4, 5]);
+    }
+
+    #[test]
+    fn legacy_requires_coupling() {
+        let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8); // etp != tp
+        assert!(ParallelMapping::legacy(cfg).is_err());
+    }
+
+    #[test]
+    fn fold_report_cp_folding() {
+        // Figure 6: CP4 x EP4 = 16 > 8 spans nodes without folding, but the
+        // folded MoE grid can still keep EP (8 innermost ranks) in-node.
+        let cluster = ClusterSpec::eos(64);
+        let cfg = ParallelConfig::new(64, 1, 4, 8, 1, 1);
+        let folded = ParallelMapping::folded(cfg).unwrap();
+        let rep = folded.fold_report(&cluster);
+        assert_eq!(rep.ep_nodes, 1);
+        assert!(rep.cp_nodes >= 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! FLOP accounting for MoE transformers.
+
+use crate::config::ModelConfig;
+
+/// Per-token forward-FLOP breakdown at a given sequence length.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelFlops {
+    /// Attention GEMMs (QKV + output projection), all layers.
+    pub attn_gemm: f64,
+    /// Attention score/context FLOPs (the seq-dependent quadratic term).
+    pub attn_core: f64,
+    /// Routed-expert FFN FLOPs (top-k experts only), all MoE layers.
+    pub moe_ffn: f64,
+    /// Shared-expert + dense-layer FFN FLOPs.
+    pub dense_ffn: f64,
+    /// Router gating GEMMs.
+    pub router: f64,
+    /// Output-logit GEMM.
+    pub logits: f64,
+}
+
+impl ModelFlops {
+    /// Forward FLOPs per token.
+    pub fn per_token(model: &ModelConfig, seq_len: usize) -> Self {
+        let h = model.hidden_size as f64;
+        let l = model.num_layers as f64;
+        let lm = model.num_moe_layers() as f64;
+        let ld = model.num_dense_layers() as f64;
+        let kv_dim = (model.num_query_groups * model.head_dim()) as f64;
+        let s = seq_len as f64;
+
+        // GEMM flops = 2 * m * n * k; per token m=1.
+        let attn_gemm = l * 2.0 * h * (h + 2.0 * kv_dim + h);
+        // Causal attention: each token attends to ~s/2 keys on average; score
+        // (QK^T) + context (PV) each cost 2*h per key.
+        let attn_core = l * 2.0 * 2.0 * h * (s / 2.0);
+        let moe_ffn = lm * model.top_k as f64 * 3.0 * 2.0 * h * model.moe_ffn_hidden_size as f64;
+        let dense_ffn = ld * 3.0 * 2.0 * h * model.ffn_hidden_size as f64
+            + lm * 3.0 * 2.0 * h * model.shared_expert_ffn_hidden_size as f64;
+        let router = lm * 2.0 * h * model.num_experts as f64;
+        let logits = 2.0 * h * model.vocab_size as f64;
+        Self { attn_gemm, attn_core, moe_ffn, dense_ffn, router, logits }
+    }
+
+    /// Total forward FLOPs per token.
+    pub fn fwd_total(&self) -> f64 {
+        self.attn_gemm + self.attn_core + self.moe_ffn + self.dense_ffn + self.router + self.logits
+    }
+
+    /// "Model FLOPs" per token for MFU accounting (fwd + bwd = 3 × fwd).
+    pub fn model_flops_per_token(&self) -> f64 {
+        3.0 * self.fwd_total()
+    }
+
+    /// MFU given an achieved per-GPU throughput in tokens/s.
+    pub fn mfu(&self, tokens_per_sec_per_gpu: f64, peak_tflops: f64) -> f64 {
+        self.model_flops_per_token() * tokens_per_sec_per_gpu / (peak_tflops * 1e12)
+    }
+
+    /// Achieved model TFLOPS per GPU given step time and token count.
+    pub fn achieved_tflops(&self, tokens: usize, step_time_s: f64, num_gpus: usize) -> f64 {
+        self.model_flops_per_token() * tokens as f64 / step_time_s / num_gpus as f64 / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn mixtral_flops_match_active_params() {
+        let m = ModelConfig::mixtral_8x22b();
+        let f = ModelFlops::per_token(&m, 4096);
+        // At short-ish seq the GEMM terms should be ≈ 2 × active params.
+        let gemm_only = f.attn_gemm + f.moe_ffn + f.dense_ffn + f.router + f.logits;
+        let two_p = 2.0 * m.active_params() as f64;
+        let ratio = gemm_only / two_p;
+        assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn quadratic_term_grows_with_seq() {
+        let m = ModelConfig::mixtral_8x22b();
+        let f4k = ModelFlops::per_token(&m, 4096);
+        let f128k = ModelFlops::per_token(&m, 131072);
+        assert!((f128k.attn_core / f4k.attn_core - 32.0).abs() < 1e-6);
+        assert_eq!(f4k.moe_ffn, f128k.moe_ffn);
+    }
+
+    #[test]
+    fn fine_grained_same_order_flops() {
+        // G8T8 activates 8 experts of 1/8 size: same expert FLOPs as top-2
+        // of full size would be 2*16384 vs 8*2048 = times... top_k*ffn:
+        // 2*16384 = 32768 vs 8*2048 = 16384 -> G8T8 has *half* the MoE flops.
+        let base = ModelFlops::per_token(&ModelConfig::mixtral_8x22b(), 4096);
+        let g = ModelFlops::per_token(&ModelConfig::mixtral_8x22b_g8t8(), 4096);
+        assert!((g.moe_ffn / base.moe_ffn - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mfu_sanity() {
+        let m = ModelConfig::mixtral_8x22b();
+        let f = ModelFlops::per_token(&m, 4096);
+        // 49.3% MFU on H100 => tokens/s/GPU such that mfu() returns 0.493.
+        let flops_tok = f.model_flops_per_token();
+        let tps = 0.493 * 989.5e12 / flops_tok;
+        let mfu = f.mfu(tps, 989.5);
+        assert!((mfu - 0.493).abs() < 1e-9);
+    }
+}

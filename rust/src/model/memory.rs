@@ -1,0 +1,293 @@
+//! Per-GPU memory model under a parallel mapping.
+//!
+//! Reproduces the OOM pattern of Table 1/3 (FSDP and TP+EP+DP fail on
+//! Llama3-8x70B) and drives the auto-tuner's feasibility filter. Numbers are
+//! bytes per GPU at the training steady state (peak of fwd/bwd).
+
+use crate::config::{ModelConfig, ParallelConfig, TrainConfig, ZeroStage};
+
+/// Tunable constants of the memory model (calibrated once, documented in
+/// EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryKnobs {
+    /// Bytes per parameter for gradients (fp32 main grads).
+    pub grad_bytes: f64,
+    /// Bytes per parameter for optimizer state (fp32 master + Adam m, v).
+    pub optim_bytes: f64,
+    /// Activation bytes per token per layer, in units of hidden_size, for
+    /// the attention block (post-flash-attention era: no s^2 term).
+    pub attn_act_factor: f64,
+    /// Additional activation units per routed token (dispatch buffers,
+    /// expert intermediates) per active expert.
+    pub moe_act_factor: f64,
+    /// CUDA/NCCL context + fragmentation overhead (GiB).
+    pub framework_overhead_gib: f64,
+    /// FSDP transient: number of layer-units gathered simultaneously
+    /// (current + prefetch).
+    pub fsdp_prefetch_units: f64,
+    /// Usable fraction of HBM before the allocator thrashes.
+    pub usable_frac: f64,
+}
+
+impl Default for MemoryKnobs {
+    fn default() -> Self {
+        Self {
+            grad_bytes: 4.0,
+            optim_bytes: 12.0,
+            attn_act_factor: 22.0,
+            moe_act_factor: 10.0,
+            framework_overhead_gib: 6.0,
+            fsdp_prefetch_units: 2.0,
+            usable_frac: 0.94,
+        }
+    }
+}
+
+/// Memory estimate per GPU (bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryEstimate {
+    pub param_bytes: f64,
+    pub grad_bytes: f64,
+    pub optim_bytes: f64,
+    pub activation_bytes: f64,
+    pub transient_bytes: f64,
+    pub overhead_bytes: f64,
+}
+
+impl MemoryEstimate {
+    pub fn total(&self) -> f64 {
+        self.param_bytes
+            + self.grad_bytes
+            + self.optim_bytes
+            + self.activation_bytes
+            + self.transient_bytes
+            + self.overhead_bytes
+    }
+
+    pub fn total_gib(&self) -> f64 {
+        self.total() / (1u64 << 30) as f64
+    }
+
+    pub fn fits(&self, hbm_gib: f64, knobs: &MemoryKnobs) -> bool {
+        self.total_gib() <= hbm_gib * knobs.usable_frac
+    }
+}
+
+/// Memory model evaluator.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub knobs: MemoryKnobs,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        Self { knobs: MemoryKnobs::default() }
+    }
+}
+
+impl MemoryModel {
+    /// Estimate per-GPU memory for `model` trained under `parallel`/`train`
+    /// with the given ZeRO stage on the DP (and EDP, for experts) axis.
+    pub fn estimate(
+        &self,
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        train: &TrainConfig,
+        zero: ZeroStage,
+    ) -> MemoryEstimate {
+        let k = &self.knobs;
+        let pp = parallel.pp as f64;
+        let tp = parallel.tp as f64;
+        let cp = parallel.cp as f64;
+        let dp = parallel.dp() as f64;
+        let edp = parallel.edp() as f64;
+
+        // --- parameter placement ------------------------------------------
+        let expert_params_total = model.num_moe_layers() as u64
+            * model.num_experts as u64
+            * model.params_per_expert();
+        let non_expert_params_total = model.total_params() - expert_params_total;
+
+        // Non-expert params shard over TP and PP (CP replicates weights).
+        let non_expert_local = non_expert_params_total as f64 / (tp * pp);
+        // Expert params shard over EP, ETP and PP.
+        let expert_local = expert_params_total as f64
+            / (parallel.ep as f64 * parallel.etp as f64 * pp);
+
+        let (param_mult, transient) = match zero {
+            // ZeRO-3: persistent copy is 1/dp; transient working copy is
+            // `fsdp_prefetch_units` full layers (all experts of the layer).
+            ZeroStage::Zero3 => {
+                // PyTorch FSDP gathers whole flat layer units: the attention
+                // block plus *all locally-hosted experts* of the layer,
+                // un-sharded. Without EP that is every expert — the
+                // mechanism behind the FSDP OOM on Llama3-8x70B.
+                let layer_params = non_expert_params_total as f64 / model.num_layers as f64
+                    + (model.num_experts / parallel.ep).max(1) as f64
+                        * model.params_per_expert() as f64;
+                (
+                    1.0 / dp,
+                    k.fsdp_prefetch_units * layer_params * 2.0, // bf16 bytes
+                )
+            }
+            _ => (1.0, 0.0),
+        };
+        let param_bytes =
+            2.0 * (non_expert_local * param_mult + expert_local * param_mult_expert(zero, edp))
+                + 0.0;
+
+        // --- gradients + optimizer ----------------------------------------
+        // Gradients: ZeRO >= 2 shards them; Megatron distopt (ZeRO-1) keeps
+        // full main grads during accumulation.
+        let grad_shard = match zero {
+            ZeroStage::Zero3 => dp,
+            _ => 1.0,
+        };
+        // FSDP keeps sharded bf16 grads (2 B); Megatron keeps fp32 mains.
+        let grad_width = if zero == ZeroStage::Zero3 { 2.0 } else { k.grad_bytes };
+        let grad_bytes = grad_width
+            * (non_expert_local / grad_shard + expert_local / grad_shard_expert(zero, edp));
+
+        // Optimizer states shard over DP for ZeRO-1 and ZeRO-3.
+        let opt_shard = match zero {
+            ZeroStage::None => 1.0,
+            _ => dp,
+        };
+        let opt_shard_e = match zero {
+            ZeroStage::None => 1.0,
+            _ => edp,
+        };
+        let optim_bytes =
+            k.optim_bytes * (non_expert_local / opt_shard + expert_local / opt_shard_e)
+                // fp32 master weights accompany mixed-precision training.
+                + 4.0 * (non_expert_local / opt_shard + expert_local / opt_shard_e);
+
+        // --- activations ---------------------------------------------------
+        let h = model.hidden_size as f64;
+        let layers_local = model.num_layers as f64 / pp;
+        // 1F1B keeps up to `pp` microbatches alive on the first stage.
+        let inflight = if parallel.pp > 1 {
+            (parallel.pp as f64).min(train.num_microbatches(parallel.dp()) as f64)
+        } else {
+            1.0
+        };
+        let cf = match train.drop_policy {
+            crate::config::DropPolicy::Dropless => 1.3,
+            _ => train.capacity_factor,
+        };
+        let block_units = k.attn_act_factor + k.moe_act_factor * model.top_k as f64 * cf;
+        let activation_bytes = match zero {
+            // FSDP baseline (PyTorch FSDP + TP): no Megatron sequence
+            // parallelism — norms/residual/input activations (~12 units) are
+            // replicated across TP; only the block intermediates shard.
+            // This is what kills FSDP on Llama3-8x70B (Table 1 OOM).
+            ZeroStage::Zero3 => {
+                let tokens_cp = train.micro_batch_size as f64 * train.seq_len as f64 / cp;
+                tokens_cp
+                    * layers_local
+                    * 2.0
+                    * h
+                    * (8.0 + block_units / tp)
+                    * train.activation_retained_frac
+                    * inflight
+            }
+            // Megatron path: sequence parallelism shards everything by TP×CP.
+            _ => {
+                let tokens_local =
+                    train.micro_batch_size as f64 * train.seq_len as f64 / (tp * cp);
+                tokens_local
+                    * layers_local
+                    * 2.0
+                    * h
+                    * block_units
+                    * train.activation_retained_frac
+                    * inflight
+            }
+        };
+
+        MemoryEstimate {
+            param_bytes,
+            grad_bytes,
+            optim_bytes,
+            activation_bytes,
+            transient_bytes: transient,
+            overhead_bytes: k.framework_overhead_gib * (1u64 << 30) as f64,
+        }
+    }
+}
+
+fn param_mult_expert(zero: ZeroStage, edp: f64) -> f64 {
+    match zero {
+        ZeroStage::Zero3 => 1.0 / edp,
+        _ => 1.0,
+    }
+}
+
+fn grad_shard_expert(zero: ZeroStage, edp: f64) -> f64 {
+    match zero {
+        ZeroStage::Zero3 => edp,
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn cfg(world: usize, tp: usize, cp: usize, ep: usize, etp: usize, pp: usize) -> ParallelConfig {
+        ParallelConfig::new(world, tp, cp, ep, etp, pp)
+    }
+
+    #[test]
+    fn mcore_mixtral_fits() {
+        // Table 3: MCore Mixtral 8x22B on 128 GPUs TP2 EP4 PP8 fits in 80G.
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let est = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 8), &t, ZeroStage::Zero1);
+        assert!(est.fits(80.0, &mm.knobs), "total {:.1} GiB", est.total_gib());
+    }
+
+    #[test]
+    fn tp_ep_dp_llama3_ooms() {
+        // Table 1/3: TP8 EP8 (no PP) on 256 GPUs OOMs for Llama3-8x70B.
+        let m = ModelConfig::llama3_8x70b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let est = mm.estimate(&m, &cfg(256, 8, 1, 8, 8, 1), &t, ZeroStage::Zero1);
+        assert!(!est.fits(80.0, &mm.knobs), "total {:.1} GiB", est.total_gib());
+    }
+
+    #[test]
+    fn zero3_shards_optimizer() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let z1 = mm.estimate(&m, &cfg(128, 8, 1, 1, 8, 1), &t, ZeroStage::Zero1);
+        let z3 = mm.estimate(&m, &cfg(128, 8, 1, 1, 8, 1), &t, ZeroStage::Zero3);
+        assert!(z3.param_bytes < z1.param_bytes);
+        assert!(z3.grad_bytes < z1.grad_bytes);
+    }
+
+    #[test]
+    fn more_pp_less_memory() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let p1 = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 1), &t, ZeroStage::Zero1);
+        let p8 = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 8), &t, ZeroStage::Zero1);
+        assert!(p8.param_bytes < p1.param_bytes);
+    }
+
+    #[test]
+    fn dropless_needs_more_activation_memory() {
+        let m = ModelConfig::mixtral_8x22b_g8t8();
+        let mm = MemoryModel::default();
+        let mut t = TrainConfig::paper_default(4096, 256);
+        let drop = mm.estimate(&m, &cfg(128, 4, 1, 8, 1, 8), &t, ZeroStage::Zero1);
+        t.drop_policy = crate::config::DropPolicy::Dropless;
+        let dropless = mm.estimate(&m, &cfg(128, 4, 1, 8, 1, 8), &t, ZeroStage::Zero1);
+        assert!(dropless.activation_bytes > drop.activation_bytes);
+    }
+}

@@ -1,0 +1,13 @@
+//! Transformer/MoE arithmetic: FLOP counts, parameter placement under a
+//! parallel mapping, and activation-memory estimates.
+//!
+//! These are the quantities the performance model (and the MFU definition)
+//! are built on. Conventions follow Megatron-LM's reporting: "model FLOPs"
+//! per token = forward FLOPs × 3 (backward ≈ 2× forward), counting the
+//! attention quadratic term and only the *activated* experts.
+
+pub mod flops;
+pub mod memory;
+
+pub use flops::ModelFlops;
+pub use memory::MemoryModel;

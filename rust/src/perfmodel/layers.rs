@@ -1,0 +1,393 @@
+//! Per-layer timing: attention and MoE layer costs for one microbatch on
+//! one rank, including the communication placed by the parallel mapping.
+//!
+//! All times in microseconds, forward pass; backward is derived in
+//! `perfmodel::estimate` (2× GEMM compute, mirrored collectives).
+
+use crate::cluster::ClusterSpec;
+use crate::collectives::CommModel;
+use crate::config::{DropPolicy, ModelConfig, ParallelConfig, Precision, TrainConfig};
+use crate::mapping::ParallelMapping;
+
+use super::efficiency::{gemm_time_us, EffKnobs};
+
+/// Forward-pass time breakdown of one attention block (one layer, one
+/// microbatch, one rank).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AttnLayerTime {
+    pub gemm_us: f64,
+    pub core_us: f64,
+    /// Exposed TP (sequence-parallel) collective time.
+    pub tp_comm_us: f64,
+    /// Exposed CP (ring KV-exchange) time after overlap with the core.
+    pub cp_comm_us: f64,
+    /// Norms, residuals, rotary embedding, kernel-launch overhead.
+    pub other_us: f64,
+}
+
+impl AttnLayerTime {
+    pub fn total(&self) -> f64 {
+        self.gemm_us + self.core_us + self.tp_comm_us + self.cp_comm_us + self.other_us
+    }
+}
+
+/// Forward-pass time breakdown of one MoE block (layer, microbatch, rank).
+/// Mirrors the paper's Figure 5/6 latency breakdown categories.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MoeLayerTime {
+    /// Router gating + aux loss (+ full-sequence logit gather if enabled).
+    pub router_us: f64,
+    /// Token permute/unpermute (memory-bound reshuffles).
+    pub permute_us: f64,
+    /// All-to-All(-V) dispatch + combine over the EP group.
+    pub a2a_us: f64,
+    /// AllGather-V + ReduceScatter-V over the ETP group.
+    pub etp_comm_us: f64,
+    /// Expert FFN GEMMs (+ shared expert).
+    pub expert_gemm_us: f64,
+}
+
+impl MoeLayerTime {
+    pub fn total(&self) -> f64 {
+        self.router_us + self.permute_us + self.a2a_us + self.etp_comm_us + self.expert_gemm_us
+    }
+
+    pub fn comm(&self) -> f64 {
+        self.a2a_us + self.etp_comm_us
+    }
+}
+
+/// Everything needed to cost layers under one mapping.
+pub struct LayerCoster<'a> {
+    pub model: &'a ModelConfig,
+    pub parallel: &'a ParallelConfig,
+    pub train: &'a TrainConfig,
+    pub mapping: &'a ParallelMapping,
+    pub comm: &'a CommModel,
+    pub eff: EffKnobs,
+}
+
+impl<'a> LayerCoster<'a> {
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.comm.cluster
+    }
+
+    fn peak(&self) -> f64 {
+        self.cluster().gpu.peak_tflops(self.train.precision)
+    }
+
+    fn bf16_peak(&self) -> f64 {
+        self.cluster().gpu.peak_bf16_tflops
+    }
+
+    /// Local tokens per microbatch after the attention-side split (sequence
+    /// parallelism over TP plus CP sequence split).
+    pub fn tokens_local(&self) -> f64 {
+        self.train.micro_batch_size as f64 * self.train.seq_len as f64
+            / (self.parallel.tp as f64 * self.parallel.cp as f64)
+    }
+
+    /// Effective per-token expert multiplicity: top-k scaled by capacity
+    /// factor (drop) or the dropless imbalance allowance.
+    pub fn dispatch_multiplier(&self) -> f64 {
+        let k = self.model.top_k as f64;
+        match self.train.drop_policy {
+            DropPolicy::Dropless => k, // mean volume; imbalance handled in a2a_v
+            _ => k * self.train.capacity_factor,
+        }
+    }
+
+    fn dropless_imbalance(&self) -> f64 {
+        match self.train.drop_policy {
+            DropPolicy::Dropless => 1.30,
+            _ => 1.0,
+        }
+    }
+
+    /// Representative rank-0 group on an axis of the attention grid.
+    fn attn_group(&self, axis: &str) -> &[usize] {
+        self.mapping.attention.group_of(axis, 0).expect("axis")
+    }
+
+    fn moe_group(&self, axis: &str) -> &[usize] {
+        self.mapping.moe.group_of(axis, 0).expect("axis")
+    }
+
+    /// Cost of one attention block's forward.
+    pub fn attention_layer(&self) -> AttnLayerTime {
+        let m = self.model;
+        let t = self.train;
+        let h = m.hidden_size as f64;
+        let kv_dim = (m.num_query_groups * m.head_dim()) as f64;
+        let tokens = self.tokens_local();
+        let tp = self.parallel.tp as f64;
+        let cp = self.parallel.cp as f64;
+        let bytes = bytes_per_el(t.precision);
+
+        // QKV + O projection GEMMs. Sequence parallelism all-gathers the
+        // TP-split sequence before the block, so each rank runs GEMMs with
+        // M = tokens_mb / cp rows and 1/tp of the output columns:
+        // per-rank flops = tokens_local * full-layer per-token flops.
+        let gemm_flops = tokens * 2.0 * h * (h + 2.0 * kv_dim + h);
+        let gemm_us = gemm_time_us(
+            &self.eff,
+            gemm_flops,
+            tokens * tp,                    // M: CP-local sequence rows
+            (2.0 * h + 2.0 * kv_dim) / tp,  // N: TP-split columns
+            h,
+            self.peak(),
+            t.precision,
+        );
+
+        // Attention core (flash): quadratic term, causal, split over heads
+        // (TP) and sequence (CP).
+        let s = t.seq_len as f64;
+        let core_flops =
+            t.micro_batch_size as f64 * s * 2.0 * 2.0 * h * (s / 2.0) / (tp * cp);
+        // Flash-attention efficiency degrades with the KV chunk each ring
+        // step sees (s/cp): small chunks can't keep the tensor cores busy.
+        let chunk = s / cp;
+        let core_eff = self.eff.attn_core_eff * chunk / (chunk + 1024.0);
+        let core_us = core_flops / (self.bf16_peak() * 1e12 * core_eff) * 1e6;
+
+        // TP sequence-parallel collectives: AllGather activations before the
+        // block + ReduceScatter after (one pair per block).
+        let tp_group = self.attn_group("TP");
+        let act_bytes = tokens * h * bytes;
+        let tp_comm_us = if self.parallel.tp > 1 {
+            self.comm.all_gather(tp_group, act_bytes)
+                + self.comm.reduce_scatter(tp_group, act_bytes * tp)
+        } else {
+            0.0
+        };
+
+        // CP ring KV exchange, overlapped with the attention core.
+        let cp_comm_us = if self.parallel.cp > 1 {
+            let cp_group = self.attn_group("CP");
+            let kv_bytes = 2.0 * tokens * kv_dim * bytes * (cp - 1.0);
+            let ring_us = kv_bytes / (self.comm.cluster.group_bottleneck_bw(cp_group) * 1e9 * 0.8)
+                * 1e6
+                + (cp - 1.0) * self.comm.cluster.group_latency_us(cp_group);
+            (ring_us - 0.85 * core_us).max(0.05 * ring_us)
+        } else {
+            0.0
+        };
+
+        // Elementwise work (norms, residual, rotary) + launch overhead.
+        let other_us = self.eff.elementwise_passes * tokens * h * bytes
+            / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9)
+            * 1e6
+            + self.eff.fixed_layer_us;
+
+        AttnLayerTime { gemm_us, core_us, tp_comm_us, cp_comm_us, other_us }
+    }
+
+    /// Cost of one MoE block's forward. This is the Figure-5/6 breakdown.
+    pub fn moe_layer(&self) -> MoeLayerTime {
+        let m = self.model;
+        let t = self.train;
+        let h = m.hidden_size as f64;
+        let tokens = self.tokens_local();
+        let bytes = bytes_per_el(t.precision);
+        let disp = self.dispatch_multiplier(); // tokens*disp routed copies
+        let routed = tokens * disp;
+        let etp = self.parallel.etp as f64;
+        let ep_group = self.moe_group("EP");
+        let etp_group = self.moe_group("ETP");
+
+        // Router: gating GEMM + softmax/topk, memory-bound-ish; plus the
+        // full-sequence logit gather when that drop mode is selected.
+        let router_flops = tokens * 2.0 * h * m.num_experts as f64;
+        let mut router_us = router_flops / (self.bf16_peak() * 1e12 * 0.2) * 1e6
+            + self.eff.fixed_layer_us;
+        if t.drop_policy == DropPolicy::FullSequence {
+            // Gather logits over the TP×CP sub-sequence ranks.
+            let seq_group_len = self.parallel.tp * self.parallel.cp;
+            if seq_group_len > 1 {
+                let grp: Vec<usize> = (0..seq_group_len).collect();
+                router_us += self.comm.all_gather(&grp, tokens * m.num_experts as f64 * bytes);
+            }
+        }
+
+        // Permute + unpermute: 2 gather passes over routed activations.
+        let permute_bytes = 2.0 * routed * h * bytes * 2.0; // read+write
+        let permute_us = permute_bytes / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9) * 1e6 + 2.0;
+
+        // All-to-All-V dispatch + combine across the EP group.
+        let a2a_bytes = routed * h * bytes;
+        let a2a_us = if ep_group.len() > 1 {
+            2.0 * self.comm.all_to_all_v(ep_group, a2a_bytes, self.dropless_imbalance())
+        } else {
+            0.0
+        };
+
+        // ETP AllGather-V before expert GEMMs + ReduceScatter-V after.
+        let etp_comm_us = if etp_group.len() > 1 {
+            self.comm.all_gather(etp_group, a2a_bytes)
+                + self.comm.reduce_scatter(etp_group, a2a_bytes * etp)
+        } else {
+            0.0
+        };
+
+        // Expert FFN GEMMs. Per rank: `routed × etp` tokens (post-AG) through
+        // FFN width `moe_ffn / etp`; grouped by local experts so the GEMM M
+        // is tokens-per-expert.
+        let local_experts = (m.num_experts / self.parallel.ep).max(1) as f64;
+        let tokens_per_expert = routed * etp * self.parallel.ep as f64 / m.num_experts as f64;
+        let ffn_local = m.moe_ffn_hidden_size as f64 / etp;
+        let expert_flops = routed * etp * 3.0 * 2.0 * h * ffn_local;
+        let mut expert_gemm_us = gemm_time_us(
+            &self.eff,
+            expert_flops,
+            tokens_per_expert,
+            ffn_local,
+            h,
+            self.peak(),
+            t.precision,
+        );
+        // Grouped-GEMM launch overhead per local expert.
+        expert_gemm_us += local_experts * 1.5;
+
+        // Shared expert (dense path), computed on the attention shard.
+        if m.shared_expert_ffn_hidden_size > 0 {
+            let sh = m.shared_expert_ffn_hidden_size as f64 / self.parallel.tp as f64;
+            let flops = tokens * 3.0 * 2.0 * h * sh * self.parallel.tp as f64;
+            expert_gemm_us +=
+                gemm_time_us(&self.eff, flops, tokens, sh, h, self.peak(), t.precision);
+        }
+
+        MoeLayerTime { router_us, permute_us, a2a_us, etp_comm_us, expert_gemm_us }
+    }
+}
+
+pub fn bytes_per_el(p: Precision) -> f64 {
+    match p {
+        Precision::Bf16 => 2.0,
+        Precision::Fp8 => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::config::ModelConfig;
+
+    fn coster_parts(
+        model: ModelConfig,
+        cfg: ParallelConfig,
+        gpus: usize,
+    ) -> (ModelConfig, ParallelConfig, TrainConfig, ParallelMapping, CommModel) {
+        let train = TrainConfig::paper_default(4096, 256);
+        let mapping = ParallelMapping::folded(cfg).unwrap();
+        let comm = CommModel::new(ClusterSpec::eos(gpus));
+        (model, cfg, train, mapping, comm)
+    }
+
+    #[test]
+    fn moe_layer_ep_vs_etp_comm() {
+        // Figure 5 key finding: ETP introduces far more comm than EP at the
+        // same model-parallel product.
+        let model = ModelConfig::mixtral_8x22b();
+        let (m1, c1, t1, map1, comm1) =
+            coster_parts(model.clone(), ParallelConfig::new(64, 4, 1, 8, 1, 1), 64);
+        let ep8 = LayerCoster {
+            model: &m1,
+            parallel: &c1,
+            train: &t1,
+            mapping: &map1,
+            comm: &comm1,
+            eff: EffKnobs::default(),
+        }
+        .moe_layer();
+
+        let (m2, c2, t2, map2, comm2) =
+            coster_parts(model, ParallelConfig::new(64, 4, 1, 1, 8, 1), 64);
+        let etp8 = LayerCoster {
+            model: &m2,
+            parallel: &c2,
+            train: &t2,
+            mapping: &map2,
+            comm: &comm2,
+            eff: EffKnobs::default(),
+        }
+        .moe_layer();
+
+        assert!(
+            etp8.comm() > 1.5 * ep8.comm(),
+            "ETP comm {:.0}us should exceed EP comm {:.0}us",
+            etp8.comm(),
+            ep8.comm()
+        );
+    }
+
+    #[test]
+    fn fine_grained_more_comm_dominated() {
+        let coarse = ModelConfig::mixtral_8x22b();
+        let fine = ModelConfig::mixtral_8x22b_g8t8();
+        let cfg = ParallelConfig::new(128, 4, 1, 8, 1, 1);
+        let (m_c, c_c, t_c, map_c, comm_c) = coster_parts(coarse, cfg, 128);
+        let coarse_frac = LayerCoster {
+            model: &m_c, parallel: &c_c, train: &t_c, mapping: &map_c, comm: &comm_c,
+            eff: EffKnobs::default(),
+        }
+        .moe_layer();
+        let coarse_frac = coarse_frac.comm() / coarse_frac.total();
+        for (model, expect_comm_frac) in [(fine, (coarse_frac * 1.5).min(0.3))] {
+            let (m, c, t, map, comm) = coster_parts(model, cfg, 128);
+            let lt = LayerCoster {
+                model: &m,
+                parallel: &c,
+                train: &t,
+                mapping: &map,
+                comm: &comm,
+                eff: EffKnobs::default(),
+            }
+            .moe_layer();
+            let frac = lt.comm() / lt.total();
+            assert!(
+                frac >= expect_comm_frac,
+                "{}: comm frac {frac:.2} (expected >= {expect_comm_frac})",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn attention_tp_comm_nonzero() {
+        let model = ModelConfig::mixtral_8x22b();
+        let (m, c, t, map, comm) =
+            coster_parts(model, ParallelConfig::new(64, 4, 1, 8, 1, 1), 64);
+        let at = LayerCoster {
+            model: &m,
+            parallel: &c,
+            train: &t,
+            mapping: &map,
+            comm: &comm,
+            eff: EffKnobs::default(),
+        }
+        .attention_layer();
+        assert!(at.tp_comm_us > 0.0);
+        assert!(at.gemm_us > 0.0 && at.core_us > 0.0);
+        assert_eq!(at.cp_comm_us, 0.0);
+    }
+
+    #[test]
+    fn full_sequence_drop_costs_more_router() {
+        let model = ModelConfig::qwen2_57b_a14b();
+        let cfg = ParallelConfig::new(64, 4, 2, 8, 1, 1);
+        let (m, c, mut t, map, comm) = coster_parts(model, cfg, 64);
+        let sub = LayerCoster {
+            model: &m, parallel: &c, train: &t, mapping: &map, comm: &comm,
+            eff: EffKnobs::default(),
+        }
+        .moe_layer();
+        t.drop_policy = DropPolicy::FullSequence;
+        let full = LayerCoster {
+            model: &m, parallel: &c, train: &t, mapping: &map, comm: &comm,
+            eff: EffKnobs::default(),
+        }
+        .moe_layer();
+        assert!(full.router_us > sub.router_us);
+    }
+}

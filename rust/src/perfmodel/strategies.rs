@@ -1,0 +1,190 @@
+//! The five parallelism strategies compared in Table 1, and the candidate
+//! configuration space each one may legally search (used by `autotune`).
+
+use crate::config::{ModelConfig, ParallelConfig, ZeroStage};
+use crate::mapping::ParallelMapping;
+
+/// The strategies of the paper's evaluation (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// PyTorch-FSDP-style ZeRO-3 data parallelism (+ optional TP).
+    Fsdp,
+    /// FSDP with expert parallelism for the MoE weights.
+    FsdpEp,
+    /// Tensor + expert + data parallelism with ZeRO-1 (Singh et al.).
+    TpEpDp,
+    /// Megatron-Core 5-D parallelism, coupled mappings (ETP = TP, EP ⊂ DP).
+    MCore,
+    /// Megatron-Core with MoE Parallel Folding (this paper).
+    MCoreFolding,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Fsdp,
+        Strategy::FsdpEp,
+        Strategy::TpEpDp,
+        Strategy::MCore,
+        Strategy::MCoreFolding,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Fsdp => "FSDP",
+            Strategy::FsdpEp => "FSDP + EP",
+            Strategy::TpEpDp => "TP+EP+DP",
+            Strategy::MCore => "MCore",
+            Strategy::MCoreFolding => "MCore w/ Folding",
+        }
+    }
+
+    /// ZeRO stage the strategy runs on the DP/EDP axes.
+    pub fn zero_stage(&self) -> ZeroStage {
+        match self {
+            Strategy::Fsdp | Strategy::FsdpEp => ZeroStage::Zero3,
+            _ => ZeroStage::Zero1,
+        }
+    }
+
+    /// Whether MoE mapping is decoupled from attention (folding).
+    pub fn folded(&self) -> bool {
+        matches!(self, Strategy::MCoreFolding)
+    }
+
+    /// Is `cfg` a legal configuration for this strategy?
+    pub fn admits(&self, cfg: &ParallelConfig, model: &ModelConfig) -> bool {
+        if cfg.validate(model.num_experts, model.num_layers).is_err() {
+            return false;
+        }
+        match self {
+            // FSDP: pure ZeRO-3 (+TP to fit); no EP, no PP, no CP.
+            Strategy::Fsdp => {
+                cfg.ep == 1 && cfg.etp == cfg.tp && cfg.pp == 1 && cfg.cp == 1
+            }
+            // FSDP+EP: adds expert parallelism; still no PP.
+            Strategy::FsdpEp => {
+                cfg.etp == cfg.tp && cfg.pp == 1 && cfg.cp == 1 && cfg.dp() % cfg.ep == 0
+            }
+            // TP+EP+DP: no PP/CP; EP within DP; ETP coupled.
+            Strategy::TpEpDp => {
+                cfg.etp == cfg.tp && cfg.pp == 1 && cfg.cp == 1 && cfg.dp() % cfg.ep == 0
+            }
+            // MCore: full 5-D but coupled: ETP = TP and EP ⊂ DP.
+            Strategy::MCore => cfg.etp == cfg.tp && cfg.dp() % cfg.ep == 0,
+            // Folding: any PP-consistent combination.
+            Strategy::MCoreFolding => true,
+        }
+    }
+
+    /// Build the rank mapping this strategy uses for `cfg`.
+    pub fn mapping(&self, cfg: ParallelConfig) -> Result<ParallelMapping, String> {
+        if self.folded() {
+            ParallelMapping::folded(cfg)
+        } else {
+            // Coupled strategies use the legacy placement (EP strides over
+            // the fused DP×CP axis with step = tp).
+            ParallelMapping::legacy(cfg)
+        }
+    }
+
+    /// Candidate configurations for `model` on `gpus` GPUs (power-of-two
+    /// sweep, filtered by `admits`).
+    pub fn candidates(&self, model: &ModelConfig, gpus: usize) -> Vec<ParallelConfig> {
+        let mut out = Vec::new();
+        let pow2 = |max: usize| -> Vec<usize> {
+            let mut v = vec![1usize];
+            while *v.last().unwrap() < max {
+                v.push(v.last().unwrap() * 2);
+            }
+            v
+        };
+        let tps = pow2(8);
+        let cps = pow2(16);
+        let pps = pow2(16);
+        let eps: Vec<usize> = pow2(model.num_experts.max(1))
+            .into_iter()
+            .filter(|e| *e <= model.num_experts.max(1))
+            .collect();
+        let etps = pow2(8);
+        for &tp in &tps {
+            for &cp in &cps {
+                for &pp in &pps {
+                    if tp * cp * pp > gpus {
+                        continue;
+                    }
+                    if model.num_layers % pp != 0 {
+                        continue;
+                    }
+                    for &ep in &eps {
+                        for &etp in &etps {
+                            if etp * ep * pp > gpus {
+                                continue;
+                            }
+                            let cfg = ParallelConfig::new(gpus, tp, cp, ep, etp, pp);
+                            if self.admits(&cfg, model) && self.mapping(cfg).is_ok() {
+                                out.push(cfg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|c| (c.tp, c.cp, c.pp, c.ep, c.etp));
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::MCoreFolding.name(), "MCore w/ Folding");
+        assert_eq!(Strategy::ALL.len(), 5);
+    }
+
+    #[test]
+    fn fsdp_admits_only_dp_tp() {
+        let m = ModelConfig::mixtral_8x22b();
+        let ok = ParallelConfig::new(128, 8, 1, 1, 8, 1);
+        let bad = ParallelConfig::new(128, 2, 1, 8, 2, 1);
+        assert!(Strategy::Fsdp.admits(&ok, &m));
+        assert!(!Strategy::Fsdp.admits(&bad, &m));
+    }
+
+    #[test]
+    fn folding_admits_decoupled() {
+        let m = ModelConfig::mixtral_8x22b();
+        let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8); // etp != tp
+        assert!(Strategy::MCoreFolding.admits(&cfg, &m));
+        assert!(!Strategy::MCore.admits(&cfg, &m));
+    }
+
+    #[test]
+    fn candidate_spaces_nonempty_and_strictly_larger_with_folding() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mcore = Strategy::MCore.candidates(&m, 128);
+        let folded = Strategy::MCoreFolding.candidates(&m, 128);
+        assert!(!mcore.is_empty());
+        assert!(
+            folded.len() > mcore.len(),
+            "folding should expand the space: {} vs {}",
+            folded.len(),
+            mcore.len()
+        );
+        // every candidate validates
+        for c in folded.iter().chain(mcore.iter()) {
+            assert!(c.validate(m.num_experts, m.num_layers).is_ok(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn ep_bounded_by_num_experts() {
+        let m = ModelConfig::mixtral_8x22b(); // 8 experts
+        for c in Strategy::MCoreFolding.candidates(&m, 256) {
+            assert!(c.ep <= 8);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Parser for the line-based artifact manifest written by `aot.py`.
+//!
+//! Format:
+//! ```text
+//! meta e2e.num_params 155234560
+//! artifact e2e_train_step
+//! path e2e_train_step.hlo.txt
+//! in float32:64x512
+//! out float32:scalar
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, shape) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad tensor spec {s}"))?;
+        let dims = if shape == "scalar" {
+            vec![]
+        } else {
+            shape
+                .split('x')
+                .map(|d| d.parse().map_err(|_| anyhow!("bad dim in {s}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's I/O contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut current: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (kw, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("line {}: {line}", lineno + 1))?;
+            match kw {
+                "artifact" => {
+                    if let Some(a) = current.take() {
+                        m.artifacts.push(a);
+                    }
+                    current = Some(ArtifactSpec {
+                        name: rest.to_string(),
+                        path: String::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "path" => {
+                    current
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("path before artifact"))?
+                        .path = rest.to_string();
+                }
+                "in" => current
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("in before artifact"))?
+                    .inputs
+                    .push(TensorSpec::parse(rest)?),
+                "out" => current
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("out before artifact"))?
+                    .outputs
+                    .push(TensorSpec::parse(rest)?),
+                "meta" => {
+                    let (k, v) = rest
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow!("bad meta line: {line}"))?;
+                    m.meta.insert(k.to_string(), v.to_string());
+                }
+                _ => return Err(anyhow!("unknown keyword {kw} at line {}", lineno + 1)),
+            }
+        }
+        if let Some(a) = current.take() {
+            m.artifacts.push(a);
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+meta e2e.num_params 155234560
+meta e2e.batch 4
+artifact e2e_router
+path e2e_router.hlo.txt
+in float32:1024x512
+in float32:512x8
+out float32:1024x8
+artifact scalar_fn
+path s.hlo.txt
+in int32:4x64
+out float32:scalar
+";
+
+    #[test]
+    fn parses_artifacts_and_meta() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.meta["e2e.num_params"], "155234560");
+        let a = m.get("e2e_router").unwrap();
+        assert_eq!(a.path, "e2e_router.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![1024, 512]);
+        assert_eq!(a.outputs[0].dims, vec![1024, 8]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("scalar_fn").unwrap();
+        assert_eq!(a.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].elements(), 1);
+        assert_eq!(a.inputs[0].dtype, "int32");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line here").is_err());
+        assert!(TensorSpec::parse("f32").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        if let Ok(m) = Manifest::load("artifacts/manifest.txt") {
+            assert!(m.get("test_train_step").is_some());
+            assert!(m.meta.contains_key("test.num_params"));
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Functional in-process communicator: N rank threads exchanging real `f32`
+//! buffers through channels.
+//!
+//! This is the NCCL stand-in for numerical-correctness work: the token
+//! dispatcher (paper §3.3) and the distributed trainer run on it, and the
+//! appendix loss-equivalence experiment (Figures 7/8) compares folded
+//! multi-rank runs against single-rank references bit-for-bit (modulo f32
+//! reduction order, which we keep deterministic by always reducing in rank
+//! order).
+//!
+//! Collectives are implemented naively (leader gathers, computes, scatters)
+//! — correctness and determinism matter here, not wall-clock; the *cost* of
+//! collectives is modeled analytically in [`crate::collectives`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// A message between ranks: tagged payload.
+#[derive(Debug, Clone)]
+struct Msg {
+    src: usize,
+    data: Vec<f32>,
+}
+
+/// Per-rank inbox: the channel receiver plus a stash that preserves
+/// per-source FIFO order when messages are consumed out of arrival order
+/// (e.g. AllToAll-V receives in group order while peers race ahead).
+struct Inbox {
+    rx: Receiver<Msg>,
+    stash: std::collections::VecDeque<Msg>,
+}
+
+/// Shared mailbox fabric connecting `world` ranks.
+pub struct Fabric {
+    world: usize,
+    senders: Vec<Sender<Msg>>,
+    inboxes: Vec<Mutex<Inbox>>,
+    barrier: Arc<Barrier>,
+}
+
+impl Fabric {
+    pub fn new(world: usize) -> Arc<Self> {
+        let mut senders = Vec::with_capacity(world);
+        let mut inboxes = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(Mutex::new(Inbox { rx, stash: std::collections::VecDeque::new() }));
+        }
+        Arc::new(Self { world, senders, inboxes, barrier: Arc::new(Barrier::new(world)) })
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Handle for one rank.
+    pub fn communicator(self: &Arc<Self>, rank: usize) -> Communicator {
+        assert!(rank < self.world);
+        Communicator { fabric: Arc::clone(self), rank }
+    }
+
+    /// All rank communicators at once (for spawning workers).
+    pub fn communicators(self: &Arc<Self>) -> Vec<Communicator> {
+        (0..self.world).map(|r| self.communicator(r)).collect()
+    }
+}
+
+/// Per-rank endpoint. Collective calls must be entered by *every* member of
+/// `group` (a sorted list of ranks including `self.rank`).
+pub struct Communicator {
+    fabric: Arc<Fabric>,
+    rank: usize,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.fabric.world
+    }
+
+    fn send_to(&self, dst: usize, data: Vec<f32>) {
+        self.fabric.senders[dst]
+            .send(Msg { src: self.rank, data })
+            .expect("fabric send");
+    }
+
+    /// Receive the earliest message from a specific source. Messages from
+    /// other sources are stashed in arrival order, so per-source FIFO is
+    /// preserved even when a peer races ahead into its next collective.
+    fn recv_from(&self, src: usize) -> Vec<f32> {
+        let mut inbox = self.fabric.inboxes[self.rank].lock().unwrap();
+        // Earliest stashed message from `src` wins.
+        if let Some(pos) = inbox.stash.iter().position(|m| m.src == src) {
+            return inbox.stash.remove(pos).unwrap().data;
+        }
+        loop {
+            let m = inbox.rx.recv().expect("fabric recv");
+            if m.src == src {
+                return m.data;
+            }
+            inbox.stash.push_back(m);
+        }
+    }
+
+    /// Global barrier over the whole fabric.
+    pub fn barrier(&self) {
+        self.fabric.barrier.wait();
+    }
+
+    fn my_index(&self, group: &[usize]) -> usize {
+        group
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("rank must be a member of the group")
+    }
+
+    /// Point-to-point send.
+    pub fn send(&self, dst: usize, data: &[f32]) {
+        self.send_to(dst, data.to_vec());
+    }
+
+    /// Point-to-point receive.
+    pub fn recv(&self, src: usize) -> Vec<f32> {
+        self.recv_from(src)
+    }
+
+    /// AllGather-V: concatenation of every member's buffer, in group order.
+    pub fn all_gather_v(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        if group.len() <= 1 {
+            return local.to_vec();
+        }
+        let me = self.my_index(group);
+        // Everyone sends to the leader; leader broadcasts concatenation.
+        let leader = group[0];
+        if self.rank == leader {
+            let mut parts: Vec<Vec<f32>> = vec![Vec::new(); group.len()];
+            parts[0] = local.to_vec();
+            for (i, &src) in group.iter().enumerate().skip(1) {
+                parts[i] = self.recv_from(src);
+            }
+            let cat: Vec<f32> = parts.concat();
+            for &dst in &group[1..] {
+                self.send_to(dst, cat.clone());
+            }
+            cat
+        } else {
+            let _ = me;
+            self.send_to(leader, local.to_vec());
+            self.recv_from(leader)
+        }
+    }
+
+    /// AllReduce (sum), reducing in group-rank order for determinism.
+    pub fn all_reduce_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        if group.len() <= 1 {
+            return local.to_vec();
+        }
+        let leader = group[0];
+        if self.rank == leader {
+            let mut acc = local.to_vec();
+            for &src in &group[1..] {
+                let part = self.recv_from(src);
+                assert_eq!(part.len(), acc.len(), "allreduce length mismatch");
+                for (a, b) in acc.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            for &dst in &group[1..] {
+                self.send_to(dst, acc.clone());
+            }
+            acc
+        } else {
+            self.send_to(leader, local.to_vec());
+            self.recv_from(leader)
+        }
+    }
+
+    /// ReduceScatter (sum): every rank contributes `local` (length divisible
+    /// by group size), receives its reduced shard.
+    pub fn reduce_scatter_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        let n = group.len();
+        if n <= 1 {
+            return local.to_vec();
+        }
+        assert_eq!(local.len() % n, 0, "reduce_scatter length must divide");
+        let reduced = self.all_reduce_sum(group, local);
+        let shard = reduced.len() / n;
+        let me = self.my_index(group);
+        reduced[me * shard..(me + 1) * shard].to_vec()
+    }
+
+    /// AllToAll-V: `sends[i]` goes to group member `i`; returns the buffers
+    /// received from each member, in group order.
+    pub fn all_to_all_v(&self, group: &[usize], sends: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        assert_eq!(sends.len(), group.len(), "one send buffer per group member");
+        let me = self.my_index(group);
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); group.len()];
+        // Self-exchange without the fabric.
+        out[me] = sends[me].clone();
+        // Deterministic pairwise exchange: for each round r, exchange with
+        // partner (me ^ r) when valid — but groups may be non-power-of-two,
+        // so use simple ordered push/pull: everyone sends everything first
+        // (channels are buffered), then receives.
+        for (i, &dst) in group.iter().enumerate() {
+            if i != me {
+                self.send_to(dst, sends[i].clone());
+            }
+        }
+        for (i, &src) in group.iter().enumerate() {
+            if i != me {
+                out[i] = self.recv_from(src);
+            }
+        }
+        out
+    }
+
+    /// Broadcast from `root` (a global rank in `group`).
+    pub fn broadcast(&self, group: &[usize], root: usize, data: &[f32]) -> Vec<f32> {
+        if group.len() <= 1 {
+            return data.to_vec();
+        }
+        if self.rank == root {
+            for &dst in group {
+                if dst != root {
+                    self.send_to(dst, data.to_vec());
+                }
+            }
+            data.to_vec()
+        } else {
+            self.recv_from(root)
+        }
+    }
+}
+
+/// Run `f(rank, comm)` on `world` threads, one per rank; returns the outputs
+/// in rank order. Panics in any rank propagate.
+pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Communicator) -> T + Sync,
+{
+    let fabric = Fabric::new(world);
+    let mut out: Vec<Option<T>> = (0..world).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (rank, slot) in out.iter_mut().enumerate() {
+            let comm = fabric.communicator(rank);
+            let f = &f;
+            handles.push(s.spawn(move || {
+                *slot = Some(f(rank, comm));
+            }));
+        }
+        for h in handles {
+            h.join().expect("rank thread panicked");
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_gather_v_concatenates_in_order() {
+        let outs = run_ranks(4, |rank, comm| {
+            let local = vec![rank as f32; rank + 1]; // variable lengths
+            comm.all_gather_v(&[0, 1, 2, 3], &local)
+        });
+        let expect = vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0];
+        for o in outs {
+            assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let outs = run_ranks(4, |rank, comm| {
+            comm.all_reduce_sum(&[0, 1, 2, 3], &[rank as f32, 1.0])
+        });
+        for o in outs {
+            assert_eq!(o, vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn subgroup_collectives() {
+        // Two disjoint groups of 2 run independently.
+        let outs = run_ranks(4, |rank, comm| {
+            let group: Vec<usize> = if rank < 2 { vec![0, 1] } else { vec![2, 3] };
+            comm.all_reduce_sum(&group, &[1.0])
+        });
+        assert_eq!(outs, vec![vec![2.0]; 4]);
+    }
+
+    #[test]
+    fn reduce_scatter_shards() {
+        let outs = run_ranks(2, |_, comm| {
+            comm.reduce_scatter_sum(&[0, 1], &[1.0, 2.0, 3.0, 4.0])
+        });
+        assert_eq!(outs[0], vec![2.0, 4.0]);
+        assert_eq!(outs[1], vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn all_to_all_v_exchanges() {
+        let outs = run_ranks(3, |rank, comm| {
+            // rank r sends [r*10 + i] to member i.
+            let sends: Vec<Vec<f32>> =
+                (0..3).map(|i| vec![(rank * 10 + i) as f32]).collect();
+            comm.all_to_all_v(&[0, 1, 2], sends)
+        });
+        // rank 0 receives [0] from self, [10] from 1, [20] from 2.
+        assert_eq!(outs[0], vec![vec![0.0], vec![10.0], vec![20.0]]);
+        assert_eq!(outs[1], vec![vec![1.0], vec![11.0], vec![21.0]]);
+        assert_eq!(outs[2], vec![vec![2.0], vec![12.0], vec![22.0]]);
+    }
+
+    #[test]
+    fn all_to_all_v_variable_sizes() {
+        let outs = run_ranks(2, |rank, comm| {
+            let sends = if rank == 0 {
+                vec![vec![], vec![1.0, 2.0, 3.0]]
+            } else {
+                vec![vec![9.0], vec![]]
+            };
+            comm.all_to_all_v(&[0, 1], sends)
+        });
+        assert_eq!(outs[0], vec![Vec::<f32>::new(), vec![9.0]]);
+        assert_eq!(outs[1], vec![vec![1.0, 2.0, 3.0], Vec::<f32>::new()]);
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let outs = run_ranks(3, |_, comm| comm.broadcast(&[0, 1, 2], 1, &[7.0, 8.0]));
+        assert_eq!(outs, vec![vec![7.0, 8.0]; 3]);
+    }
+
+    #[test]
+    fn p2p_send_recv() {
+        let outs = run_ranks(2, |rank, comm| {
+            if rank == 0 {
+                comm.send(1, &[3.5]);
+                vec![]
+            } else {
+                comm.recv(0)
+            }
+        });
+        assert_eq!(outs[1], vec![3.5]);
+    }
+
+    #[test]
+    fn concurrent_disjoint_a2a() {
+        // Simulates EP groups folded inside a larger world: {0,2} and {1,3}.
+        let outs = run_ranks(4, |rank, comm| {
+            let group = if rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            let sends: Vec<Vec<f32>> = (0..2).map(|i| vec![(rank * 2 + i) as f32]).collect();
+            comm.all_to_all_v(&group, sends)
+        });
+        assert_eq!(outs[0], vec![vec![0.0], vec![4.0]]);
+        assert_eq!(outs[2], vec![vec![1.0], vec![5.0]]);
+    }
+}

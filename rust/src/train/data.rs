@@ -1,0 +1,109 @@
+//! Synthetic training corpus: a first-order Markov token stream with a
+//! Zipfian unigram prior.
+//!
+//! The transition structure makes next-token prediction *learnable* (loss
+//! drops well below the unigram entropy), which is what the e2e driver needs
+//! to show a meaningful loss curve without shipping a dataset.
+
+use crate::util::Rng;
+
+/// Markov corpus generator.
+pub struct SyntheticCorpus {
+    vocab: usize,
+    /// Per-state successor table: `branch` choices per token.
+    successors: Vec<Vec<u32>>,
+    rng: Rng,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let branch = 4usize;
+        // Zipfian successor selection: low token ids are common targets.
+        let successors = (0..vocab)
+            .map(|_| {
+                (0..branch)
+                    .map(|_| {
+                        let u = rng.next_f64();
+                        // Inverse-CDF of a truncated Zipf-ish distribution.
+                        let z = ((vocab as f64).powf(u) - 1.0).max(0.0);
+                        (z as u32).min(vocab as u32 - 1)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { vocab, successors, rng: Rng::seed_from_u64(seed ^ 0x5EED) }
+    }
+
+    /// Sample a [batch, seq+1] id matrix; caller splits into inputs/targets.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let mut state = self.rng.next_below(self.vocab) as u32;
+            for _ in 0..=seq {
+                out.push(state as i32);
+                let succ = &self.successors[state as usize];
+                state = succ[self.rng.next_below(succ.len())];
+            }
+        }
+        out
+    }
+
+    /// Split a `[batch, seq+1]` buffer into (inputs, targets), both
+    /// `[batch, seq]`.
+    pub fn split(ids: &[i32], batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut inputs = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let row = &ids[b * (seq + 1)..(b + 1) * (seq + 1)];
+            inputs.extend_from_slice(&row[..seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+        (inputs, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_in_vocab() {
+        let mut c = SyntheticCorpus::new(256, 1);
+        let ids = c.batch(4, 32);
+        assert_eq!(ids.len(), 4 * 33);
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+    }
+
+    #[test]
+    fn split_shapes_and_shift() {
+        let mut c = SyntheticCorpus::new(64, 2);
+        let ids = c.batch(2, 8);
+        let (inp, tgt) = SyntheticCorpus::split(&ids, 2, 8);
+        assert_eq!(inp.len(), 16);
+        assert_eq!(tgt.len(), 16);
+        // targets are inputs shifted by one within each row.
+        assert_eq!(inp[1], tgt[0]);
+        assert_eq!(inp[9], tgt[8]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = SyntheticCorpus::new(128, 7).batch(2, 16);
+        let b = SyntheticCorpus::new(128, 7).batch(2, 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn markov_structure_is_predictable() {
+        // Each state has at most 4 successors => conditional entropy is far
+        // below the unigram entropy: check successor diversity is bounded.
+        let c = SyntheticCorpus::new(512, 3);
+        for s in c.successors.iter().take(32) {
+            let mut u: Vec<u32> = s.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert!(u.len() <= 4);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal dense f32 math used by the functional dispatcher/trainer paths
+//! (reference expert FFNs, router gating). Row-major layout throughout.
+
+/// C[m×n] = A[m×k] · B[k×n].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C = A · B^T where B is [n×k].
+pub fn matmul_bt(a: &[f32], b_t: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b_t.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            let ar = &a[i * k..(i + 1) * k];
+            let br = &b_t[j * k..(j + 1) * k];
+            for (x, y) in ar.iter().zip(br) {
+                acc += x * y;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// SiLU activation x * sigmoid(x).
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Row-wise softmax over an [n × e] matrix, in place.
+pub fn softmax_rows(x: &mut [f32], n: usize, e: usize) {
+    for i in 0..n {
+        let row = &mut x[i * e..(i + 1) * e];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// A SwiGLU expert FFN: y = W_down( silu(W_gate x) ⊙ (W_up x) ).
+/// Weights are row-major: w_gate/w_up are [h × f], w_down is [f × h].
+#[derive(Debug, Clone)]
+pub struct SwigluExpert {
+    pub h: usize,
+    pub f: usize,
+    pub w_gate: Vec<f32>,
+    pub w_up: Vec<f32>,
+    pub w_down: Vec<f32>,
+}
+
+impl SwigluExpert {
+    /// Deterministic pseudo-random init.
+    pub fn init(h: usize, f: usize, rng: &mut crate::util::Rng) -> Self {
+        let std_in = (1.0 / h as f32).sqrt();
+        let std_out = (1.0 / f as f32).sqrt();
+        let mut w_gate = vec![0.0; h * f];
+        let mut w_up = vec![0.0; h * f];
+        let mut w_down = vec![0.0; f * h];
+        rng.fill_normal(&mut w_gate, std_in);
+        rng.fill_normal(&mut w_up, std_in);
+        rng.fill_normal(&mut w_down, std_out);
+        Self { h, f, w_gate, w_up, w_down }
+    }
+
+    /// Forward over `n` tokens [n × h] -> [n × h].
+    pub fn forward(&self, tokens: &[f32]) -> Vec<f32> {
+        let n = tokens.len() / self.h;
+        let g = matmul(tokens, &self.w_gate, n, self.h, self.f);
+        let u = matmul(tokens, &self.w_up, n, self.h, self.f);
+        let mut a = vec![0.0f32; n * self.f];
+        for i in 0..a.len() {
+            a[i] = silu(g[i]) * u[i];
+        }
+        matmul(&a, &self.w_down, n, self.f, self.h)
+    }
+
+    /// Column shard of this expert for ETP: ranks split the FFN dimension.
+    /// Summing the shard outputs over the ETP group reproduces `forward`.
+    pub fn shard(&self, etp: usize, idx: usize) -> SwigluExpert {
+        assert_eq!(self.f % etp, 0);
+        let fs = self.f / etp;
+        let mut w_gate = vec![0.0; self.h * fs];
+        let mut w_up = vec![0.0; self.h * fs];
+        for r in 0..self.h {
+            let src = &self.w_gate[r * self.f + idx * fs..r * self.f + (idx + 1) * fs];
+            w_gate[r * fs..(r + 1) * fs].copy_from_slice(src);
+            let src = &self.w_up[r * self.f + idx * fs..r * self.f + (idx + 1) * fs];
+            w_up[r * fs..(r + 1) * fs].copy_from_slice(src);
+        }
+        let w_down = self.w_down[idx * fs * self.h..(idx + 1) * fs * self.h].to_vec();
+        SwigluExpert { h: self.h, f: fs, w_gate, w_up, w_down }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] x [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut a = vec![0.0; 3 * 4];
+        let mut b = vec![0.0; 4 * 5];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        // B^T is [5x4]
+        let mut bt = vec![0.0; 5 * 4];
+        for i in 0..4 {
+            for j in 0..5 {
+                bt[j * 4 + i] = b[i * 5 + j];
+            }
+        }
+        let c1 = matmul(&a, &b, 3, 4, 5);
+        let c2 = matmul_bt(&a, &bt, 3, 4, 5);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for i in 0..2 {
+            let s: f32 = x[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn expert_shards_sum_to_full() {
+        let mut rng = Rng::seed_from_u64(7);
+        let e = SwigluExpert::init(8, 16, &mut rng);
+        let mut tokens = vec![0.0; 3 * 8];
+        rng.fill_normal(&mut tokens, 1.0);
+        let full = e.forward(&tokens);
+        for etp in [2usize, 4] {
+            let mut sum = vec![0.0f32; full.len()];
+            for idx in 0..etp {
+                let part = e.shard(etp, idx).forward(&tokens);
+                for (s, p) in sum.iter_mut().zip(&part) {
+                    *s += p;
+                }
+            }
+            for (a, b) in full.iter().zip(&sum) {
+                assert!((a - b).abs() < 1e-4, "etp={etp}: {a} vs {b}");
+            }
+        }
+    }
+}

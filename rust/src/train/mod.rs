@@ -1,0 +1,11 @@
+//! End-to-end distributed training: dense math helpers, Adam optimizer,
+//! synthetic data, and the multi-rank trainer that executes AOT-compiled
+//! JAX/Pallas artifacts through the PJRT runtime.
+
+pub mod data;
+pub mod math;
+pub mod optimizer;
+pub mod trainer;
+
+pub use optimizer::Adam;
+pub use trainer::{train, TrainerConfig, TrainReport};

@@ -1,0 +1,124 @@
+//! Adam optimizer over flat f32 parameter tensors (the Rust side of the
+//! training loop: the AOT train-step artifact returns gradients, Rust owns
+//! the optimizer state and update — mirroring Megatron's distributed
+//! optimizer split).
+
+/// Adam with bias correction (no weight decay by default).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, shapes: &[usize]) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            step: 0,
+            m: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+            v: shapes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    /// Apply one update step in place. `params[i].len()` must match the
+    /// shapes given at construction.
+    pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let b1t = 1.0 - self.beta1.powi(self.step as i32);
+        let b2t = 1.0 - self.beta2.powi(self.step as i32);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                let gi = g[i] + self.weight_decay * p[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = m[i] / b1t;
+                let vhat = v[i] / b2t;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    /// Global gradient-norm clipping; returns the pre-clip norm.
+    pub fn clip_grads(grads: &mut [Vec<f32>], max_norm: f32) -> f32 {
+        let norm: f32 = grads
+            .iter()
+            .map(|g| g.iter().map(|x| x * x).sum::<f32>())
+            .sum::<f32>()
+            .sqrt();
+        if norm > max_norm && norm > 0.0 {
+            let scale = max_norm / norm;
+            for g in grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+        }
+        norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = Σ (x - 3)^2, gradient 2(x-3).
+        let mut params = vec![vec![0.0f32; 4]];
+        let mut opt = Adam::new(0.1, &[4]);
+        for _ in 0..200 {
+            let grads = vec![params[0].iter().map(|x| 2.0 * (x - 3.0)).collect()];
+            opt.update(&mut params, &grads);
+        }
+        for x in &params[0] {
+            assert!((x - 3.0).abs() < 0.05, "{x}");
+        }
+    }
+
+    #[test]
+    fn clip_scales_to_max_norm() {
+        let mut grads = vec![vec![3.0f32, 4.0]];
+        let pre = Adam::clip_grads(&mut grads, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post: f32 = grads[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((post - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_when_small() {
+        let mut grads = vec![vec![0.1f32, 0.1]];
+        Adam::clip_grads(&mut grads, 1.0);
+        assert_eq!(grads[0], vec![0.1, 0.1]);
+    }
+
+    #[test]
+    fn deterministic_updates() {
+        let mut p1 = vec![vec![1.0f32; 8]];
+        let mut p2 = p1.clone();
+        let mut o1 = Adam::new(0.01, &[8]);
+        let mut o2 = Adam::new(0.01, &[8]);
+        let g = vec![vec![0.5f32; 8]];
+        for _ in 0..10 {
+            o1.update(&mut p1, &g);
+            o2.update(&mut p2, &g);
+        }
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,223 @@
+//! The end-to-end trainer: Rust coordinator executing the AOT train-step
+//! artifact via PJRT, with data-parallel ranks over the functional
+//! communicator, gradient all-reduce, clipping and Adam — Python is never
+//! on the step path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{InputBuf, InputRef, Runtime};
+use crate::simcomm::run_ranks;
+use crate::util::Rng;
+
+use super::data::SyntheticCorpus;
+use super::optimizer::Adam;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Artifact preset name ("test", "e2e").
+    pub preset: String,
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Data-parallel ranks (threads). Gradients are mean-all-reduced.
+    pub dp: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub clip_norm: f32,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self {
+            preset: "test".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 20,
+            lr: 1e-3,
+            dp: 1,
+            seed: 42,
+            log_every: 10,
+            clip_norm: 1.0,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub wall_seconds: f64,
+    pub tokens_per_second: f64,
+    pub num_params: usize,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+}
+
+impl TrainReport {
+    pub fn loss_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (step, loss) in &self.losses {
+            s.push_str(&format!("{step},{loss}\n"));
+        }
+        s
+    }
+}
+
+/// Initialize parameters from the manifest's input specs (rank-based
+/// heuristic: vectors → ones, matrices/tensors → scaled normal).
+pub fn init_params_from_spec(
+    specs: &[crate::runtime::TensorSpec],
+    n_tensors: usize,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<Vec<usize>>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut params = Vec::with_capacity(n_tensors);
+    let mut dims = Vec::with_capacity(n_tensors);
+    for spec in specs.iter().take(n_tensors) {
+        let n = spec.elements();
+        let d = spec.dims.clone();
+        let mut buf = vec![0.0f32; n];
+        match d.len() {
+            0 | 1 => buf.fill(1.0), // norm weights
+            2 => {
+                let fan = d[0].min(d[1]) as f32;
+                rng.fill_normal(&mut buf, (1.0 / fan).sqrt());
+            }
+            _ => {
+                let fan = d[d.len() - 2] as f32;
+                rng.fill_normal(&mut buf, (1.0 / fan).sqrt());
+            }
+        }
+        params.push(buf);
+        dims.push(d);
+    }
+    (params, dims)
+}
+
+/// Run data-parallel training. `cfg.dp` rank threads each execute the
+/// train-step artifact on their own microbatch; gradients are averaged over
+/// the DP group (deterministic rank-ordered reduction); every rank applies
+/// the identical Adam update, so parameters never diverge.
+pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+    let runtime = Arc::new(Runtime::cpu(&cfg.artifacts_dir)?);
+    let step_name = format!("{}_train_step", cfg.preset);
+    let exe = runtime.load(&step_name)?;
+    let spec = exe
+        .spec
+        .clone()
+        .ok_or_else(|| anyhow!("no manifest entry for {step_name}"))?;
+    let n_tensors = runtime
+        .meta_usize(&format!("{}.num_param_tensors", cfg.preset))
+        .ok_or_else(|| anyhow!("missing num_param_tensors meta"))?;
+    let num_params = runtime
+        .meta_usize(&format!("{}.num_params", cfg.preset))
+        .unwrap_or(0);
+    let batch = runtime
+        .meta_usize(&format!("{}.batch", cfg.preset))
+        .ok_or_else(|| anyhow!("missing batch meta"))?;
+    let seq = runtime
+        .meta_usize(&format!("{}.seq", cfg.preset))
+        .ok_or_else(|| anyhow!("missing seq meta"))?;
+    let vocab = runtime
+        .meta_usize(&format!("{}.vocab", cfg.preset))
+        .ok_or_else(|| anyhow!("missing vocab meta"))?;
+
+    let (init_params, param_dims) = init_params_from_spec(&spec.inputs, n_tensors, cfg.seed);
+    let shapes: Vec<usize> = init_params.iter().map(|p| p.len()).collect();
+
+    let t0 = Instant::now();
+    let world = cfg.dp.max(1);
+    let cfg2 = cfg.clone();
+    let runtime2 = runtime.clone();
+
+    // Each rank runs the identical loop; rank 0's log is the report.
+    let reports = run_ranks(world, move |rank, comm| -> Result<Vec<(usize, f32)>> {
+        let exe = runtime2.load(&step_name)?;
+        let group: Vec<usize> = (0..world).collect();
+        let mut params = init_params.clone();
+        let mut opt = Adam::new(cfg2.lr, &shapes);
+        let mut corpus =
+            SyntheticCorpus::new(vocab, cfg2.seed.wrapping_add(1000 + rank as u64));
+        let mut losses = Vec::new();
+
+        for step in 0..cfg2.steps {
+            let ids = corpus.batch(batch, seq);
+            let (inputs, targets) = SyntheticCorpus::split(&ids, batch, seq);
+
+            // Borrowed views: no param clone per step (perf pass §Perf).
+            let io_dims = [batch, seq];
+            let mut bufs: Vec<InputRef> = params
+                .iter()
+                .zip(&param_dims)
+                .map(|(p, d)| InputRef::F32(p, d))
+                .collect();
+            bufs.push(InputRef::I32(&inputs, &io_dims));
+            bufs.push(InputRef::I32(&targets, &io_dims));
+
+            let outs = exe.run_f32_refs(&bufs)?;
+            let mut loss = outs[0][0];
+            let mut grads: Vec<Vec<f32>> = outs[1..].to_vec();
+
+            if world > 1 {
+                // Average gradients (and the logged loss) over DP ranks.
+                for g in grads.iter_mut() {
+                    let summed = comm.all_reduce_sum(&group, g);
+                    *g = summed;
+                    for x in g.iter_mut() {
+                        *x /= world as f32;
+                    }
+                }
+                loss = comm.all_reduce_sum(&group, &[loss])[0] / world as f32;
+            }
+
+            Adam::clip_grads(&mut grads, cfg2.clip_norm);
+            opt.update(&mut params, &grads);
+            losses.push((step, loss));
+            if rank == 0 && (step % cfg2.log_every == 0 || step + 1 == cfg2.steps) {
+                eprintln!("step {step:>5}  loss {loss:.4}");
+            }
+        }
+        Ok(losses)
+    });
+
+    let losses = reports
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("no rank output"))??;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens = cfg.steps * batch * seq * world;
+    Ok(TrainReport {
+        initial_loss: losses.first().map(|x| x.1).unwrap_or(f32::NAN),
+        final_loss: losses.last().map(|x| x.1).unwrap_or(f32::NAN),
+        losses,
+        wall_seconds: wall,
+        tokens_per_second: tokens as f64 / wall,
+        num_params,
+    })
+}
+
+/// Evaluate the eval-loss artifact on held-out synthetic data with the given
+/// parameters (used by the loss-equivalence example).
+pub fn eval_loss(
+    runtime: &Runtime,
+    preset: &str,
+    params: &[Vec<f32>],
+    param_dims: &[Vec<usize>],
+    inputs: Vec<i32>,
+    targets: Vec<i32>,
+    batch: usize,
+    seq: usize,
+) -> Result<f32> {
+    let exe = runtime.load(&format!("{preset}_eval_loss"))?;
+    let mut bufs: Vec<InputBuf> = params
+        .iter()
+        .zip(param_dims)
+        .map(|(p, d)| InputBuf::f32(p.clone(), d))
+        .collect();
+    bufs.push(InputBuf::i32(inputs, &[batch, seq]));
+    bufs.push(InputBuf::i32(targets, &[batch, seq]));
+    Ok(exe.run_f32(&bufs)?[0][0])
+}

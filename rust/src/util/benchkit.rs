@@ -1,0 +1,179 @@
+//! Minimal criterion-style benchmark harness.
+//!
+//! The offline environment cannot resolve the `criterion` crate, so the
+//! `cargo bench` targets (one per paper table/figure) use this in-crate
+//! harness instead: warmup, timed iterations, median / mean / MAD / p95
+//! reporting, and a CSV sink for EXPERIMENTS.md. Interface is deliberately
+//! criterion-like (`Bencher::iter`).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Statistics over one benchmark's samples (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub p95_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut s: Vec<f64>, iters: u64) -> Self {
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len().max(1);
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let median = s[n / 2];
+        let mut dev: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = dev[n / 2];
+        let p95 = s[(n as f64 * 0.95) as usize % n];
+        Self {
+            name: name.to_string(),
+            samples: s,
+            mean_ns: mean,
+            median_ns: median,
+            mad_ns: mad,
+            p95_ns: p95,
+            iters_per_sample: iters,
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} time: [{} ± {}]  p95: {}  ({} iters/sample)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            fmt_ns(self.p95_ns),
+            self.iters_per_sample
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+/// Benchmark runner: collects samples until `target_time` is spent, after a
+/// short warmup.
+pub struct Harness {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_samples: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            target_time: Duration::from_secs(2),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Harness {
+    pub fn new() -> Self {
+        // CLI conventions: `cargo bench -- --quick` shortens runs.
+        let quick = std::env::args().any(|a| a == "--quick");
+        let mut h = Self::default();
+        if quick {
+            h.warmup = Duration::from_millis(50);
+            h.target_time = Duration::from_millis(300);
+            h.min_samples = 5;
+        }
+        h
+    }
+
+    /// Benchmark `f`, auto-calibrating iterations per sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Warmup + calibration.
+        let w0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        // Aim for ~50 samples within target_time.
+        let iters = ((self.target_time.as_nanos() as f64 / 50.0 / per_iter).floor() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.target_time || samples.len() < self.min_samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / iters as f64);
+            if samples.len() >= 500 {
+                break;
+            }
+        }
+        let stats = Stats::from_samples(name, samples, iters);
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV (name, median_ns, mean_ns, mad_ns, p95_ns).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::from("name,median_ns,mean_ns,mad_ns,p95_ns\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{:.1},{:.1},{:.1},{:.1}\n",
+                r.name, r.median_ns, r.mean_ns, r.mad_ns, r.p95_ns
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_stats() {
+        let mut h = Harness {
+            warmup: Duration::from_millis(10),
+            target_time: Duration::from_millis(50),
+            min_samples: 3,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        h.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let s = &h.results[0];
+        assert!(s.median_ns >= 0.0);
+        assert!(s.samples.len() >= 3);
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! In-crate replacements for crates unavailable in the offline environment:
+//! PRNG ([`rng`]), benchmark harness ([`benchkit`]), CLI parsing ([`cli`]),
+//! property-test scaffolding ([`prop`]).
+
+pub mod benchkit;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

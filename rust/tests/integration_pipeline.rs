@@ -1,0 +1,59 @@
+//! Integration: 1F1B schedules compose with the perf model at paper scale.
+use moe_folding::pipeline::{bubble_fraction, schedule_1f1b, simulate_1f1b, PipeOp};
+
+/// The paper's configurations: PP8 with 32 microbatches (Mixtral) and PP16
+/// with 16 (Llama3 at GBS 256 / DP 16... representative values).
+#[test]
+fn paper_scale_bubbles() {
+    // Mixtral MCore: pp=8, m=32 -> bubble 18%.
+    let b = bubble_fraction(8, 32);
+    assert!((b - 7.0 / 39.0).abs() < 1e-12);
+    // Simulation agrees within 5%.
+    let t = simulate_1f1b(8, 32, 1000.0, 2000.0, 10.0);
+    let ideal = 32.0 * 3000.0;
+    let sim_bubble = (t - ideal) / t;
+    assert!((sim_bubble - b).abs() < 0.05, "sim {sim_bubble} analytic {b}");
+}
+
+/// Dependency correctness: no stage runs a microbatch's bwd before its fwd
+/// completed on the last stage.
+#[test]
+fn schedule_respects_dependencies() {
+    for pp in [2, 4, 8] {
+        for m in [pp, 2 * pp, 4 * pp] {
+            for stage in 0..pp {
+                let ops = schedule_1f1b(stage, pp, m);
+                let mut seen_fwd = vec![false; m];
+                for op in ops {
+                    match op {
+                        PipeOp::Fwd { mb, .. } => seen_fwd[mb] = true,
+                        PipeOp::Bwd { mb, .. } => {
+                            assert!(seen_fwd[mb], "pp{pp} m{m} stage{stage}: bwd {mb} before fwd")
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// More microbatches always reduce the simulated bubble fraction.
+#[test]
+fn bubble_shrinks_with_microbatches() {
+    let mut last = f64::INFINITY;
+    for m in [8, 16, 32, 64] {
+        let t = simulate_1f1b(8, m, 500.0, 1000.0, 5.0);
+        let frac = (t - m as f64 * 1500.0) / t;
+        assert!(frac < last);
+        last = frac;
+    }
+}
+
+/// Makespan is monotone in compute times and p2p latency.
+#[test]
+fn makespan_monotonicity() {
+    let base = simulate_1f1b(4, 16, 100.0, 200.0, 1.0);
+    assert!(simulate_1f1b(4, 16, 110.0, 200.0, 1.0) > base);
+    assert!(simulate_1f1b(4, 16, 100.0, 220.0, 1.0) > base);
+    assert!(simulate_1f1b(4, 16, 100.0, 200.0, 50.0) > base);
+}

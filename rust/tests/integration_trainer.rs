@@ -1,0 +1,44 @@
+//! Integration: the end-to-end trainer over PJRT artifacts (requires
+//! `make artifacts`; skips when absent).
+use moe_folding::train::{train, TrainerConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn loss_decreases_on_test_preset() {
+    if !have_artifacts() { return; }
+    let cfg = TrainerConfig { preset: "test".into(), steps: 15, ..Default::default() };
+    let r = train(&cfg).unwrap();
+    assert!(r.final_loss < r.initial_loss, "{} -> {}", r.initial_loss, r.final_loss);
+    assert!(r.losses.iter().all(|(_, l)| l.is_finite()));
+    assert!(r.num_params > 100_000);
+}
+
+#[test]
+fn training_is_deterministic() {
+    if !have_artifacts() { return; }
+    let cfg = TrainerConfig { preset: "test".into(), steps: 5, ..Default::default() };
+    let a = train(&cfg).unwrap();
+    let b = train(&cfg).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+#[test]
+fn dp2_matches_dp2_and_learns() {
+    if !have_artifacts() { return; }
+    let cfg = TrainerConfig { preset: "test".into(), steps: 8, dp: 2, ..Default::default() };
+    let a = train(&cfg).unwrap();
+    let b = train(&cfg).unwrap();
+    assert_eq!(a.losses, b.losses, "DP training must be deterministic");
+    assert!(a.final_loss < a.initial_loss);
+}
+
+#[test]
+fn different_seeds_different_curves() {
+    if !have_artifacts() { return; }
+    let a = train(&TrainerConfig { preset: "test".into(), steps: 4, seed: 1, ..Default::default() }).unwrap();
+    let b = train(&TrainerConfig { preset: "test".into(), steps: 4, seed: 2, ..Default::default() }).unwrap();
+    assert_ne!(a.losses, b.losses);
+}

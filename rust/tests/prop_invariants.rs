@@ -1,0 +1,166 @@
+//! Property tests (in-crate `util::prop` scaffold — no proptest offline):
+//! invariants of the mapping, dispatcher, collectives, and pipeline.
+use moe_folding::cluster::ClusterSpec;
+use moe_folding::collectives::CommModel;
+use moe_folding::config::ParallelConfig;
+use moe_folding::dispatcher::{Assignment, Permutation};
+use moe_folding::mapping::ParallelMapping;
+use moe_folding::pipeline::{bubble_fraction, simulate_1f1b};
+use moe_folding::util::prop::{draw, forall};
+use moe_folding::util::Rng;
+
+/// Random legal folded configs: every axis partitions the world exactly and
+/// PP stays consistent between attention and MoE grids.
+#[test]
+fn prop_folded_mapping_partitions() {
+    forall(
+        "folded mapping invariants",
+        60,
+        |rng: &mut Rng| {
+            let tp = draw::pow2_upto(rng, 8);
+            let cp = draw::pow2_upto(rng, 4);
+            let pp = draw::pow2_upto(rng, 4);
+            let ep = draw::pow2_upto(rng, 8);
+            let etp = draw::pow2_upto(rng, 4);
+            let dp = draw::pow2_upto(rng, 4);
+            // world must be divisible by both inner products.
+            let attn = tp * cp * pp * dp;
+            let moe = etp * ep * pp;
+            let world = attn * moe / gcd(attn, moe);
+            let world = world.min(1 << 12);
+            (world, tp, cp, ep, etp, pp)
+        },
+        |&(world, tp, cp, ep, etp, pp)| {
+            let cfg = ParallelConfig::new(world, tp, cp, ep, etp, pp);
+            if cfg.validate_ok() {
+                let m = ParallelMapping::folded(cfg).map_err(|e| e)?;
+                m.check_invariants()?;
+                m.validate_pp_consistency()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+trait ValidateOk {
+    fn validate_ok(&self) -> bool;
+}
+impl ValidateOk for ParallelConfig {
+    fn validate_ok(&self) -> bool {
+        self.world_size % (self.tp * self.cp * self.pp) == 0
+            && self.world_size % (self.etp * self.ep * self.pp) == 0
+    }
+}
+
+/// Permute/unpermute roundtrip: with probs summing to 1 per token and an
+/// identity expert, output == input for every random routing.
+#[test]
+fn prop_permutation_roundtrip() {
+    forall(
+        "permutation roundtrip",
+        100,
+        |rng: &mut Rng| {
+            let n = draw::in_range(rng, 1, 64);
+            let e = draw::in_range(rng, 1, 16);
+            let h = draw::in_range(rng, 1, 8);
+            let mut assignments = Vec::new();
+            for t in 0..n {
+                // two copies with probs 0.4/0.6
+                assignments.push(Assignment {
+                    token: t,
+                    expert: rng.next_below(e),
+                    prob: 0.4,
+                    kept: true,
+                });
+                assignments.push(Assignment {
+                    token: t,
+                    expert: rng.next_below(e),
+                    prob: 0.6,
+                    kept: true,
+                });
+            }
+            let mut tokens = vec![0.0f32; n * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            (n, e, h, assignments, tokens)
+        },
+        |(n, e, h, assignments, tokens)| {
+            let p = Permutation::from_assignments(assignments, *e);
+            if p.total() != assignments.len() {
+                return Err(format!("lost copies: {} vs {}", p.total(), assignments.len()));
+            }
+            let permuted = p.permute(tokens, *h, assignments);
+            let restored = p.unpermute_accumulate(&permuted, *h, assignments, *n);
+            for (a, b) in tokens.iter().zip(&restored) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Collective cost model: monotone in bytes and never cheaper across nodes
+/// than within a node for the same shape.
+#[test]
+fn prop_collective_monotonicity() {
+    let comm = CommModel::new(ClusterSpec::eos(64));
+    forall(
+        "collective monotonicity",
+        80,
+        |rng: &mut Rng| {
+            let n = draw::pow2_upto(rng, 8).max(2);
+            let bytes = 1e4 * (1 << rng.next_below(12)) as f64;
+            (n, bytes)
+        },
+        |&(n, bytes)| {
+            let intra: Vec<usize> = (0..n).collect();
+            let inter: Vec<usize> = (0..n).map(|i| i * 8).collect();
+            for f in [CommModel::all_reduce, CommModel::all_gather, CommModel::all_to_all] {
+                let t1 = f(&comm, &intra, bytes);
+                let t2 = f(&comm, &intra, 2.0 * bytes);
+                if t2 < t1 {
+                    return Err(format!("not monotone in bytes: {t1} {t2}"));
+                }
+                let t3 = f(&comm, &inter, bytes);
+                if t3 < t1 {
+                    return Err(format!("inter {t3} cheaper than intra {t1}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// 1F1B simulation: bubble fraction within [analytic, analytic + 10%] for
+/// random (pp, m, f, b).
+#[test]
+fn prop_pipeline_bubble_bounds() {
+    forall(
+        "1f1b bubble bounds",
+        60,
+        |rng: &mut Rng| {
+            let pp = draw::pow2_upto(rng, 16).max(2);
+            let m = pp * draw::in_range(rng, 1, 8);
+            let f = 50.0 + rng.next_f64() * 500.0;
+            (pp, m, f, 2.0 * f)
+        },
+        |&(pp, m, f, b)| {
+            let t = simulate_1f1b(pp, m, f, b, 0.0);
+            let ideal = m as f64 * (f + b);
+            if t < ideal {
+                return Err(format!("makespan {t} below ideal {ideal}"));
+            }
+            let frac = (t - ideal) / t;
+            let analytic = bubble_fraction(pp, m);
+            if frac > analytic + 0.10 {
+                return Err(format!("bubble {frac:.3} far above analytic {analytic:.3}"));
+            }
+            Ok(())
+        },
+    );
+}
