@@ -1,11 +1,18 @@
 //! Hot-path micro-benchmarks for the L3 coordinator (EXPERIMENTS.md §Perf):
 //! routing, permutation, the full functional dispatch over 4 simulated
-//! ranks, and the perf-model estimator (the autotuner's inner loop).
+//! ranks, the perf-model estimator (the autotuner's inner loop), and the
+//! collectives engine — naive-leader oracle vs the fast algorithm suite at
+//! world sizes 8/16/32, plus the zero-allocation scratch-reuse dispatch
+//! path (pool hit/miss counters printed at the end).
+use std::sync::Mutex;
+
 use moe_folding::config::DropPolicy;
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
-use moe_folding::dispatcher::{DistributedMoeLayer, Permutation, Router, RouterConfig};
+use moe_folding::dispatcher::{
+    DispatchScratch, DistributedMoeLayer, Permutation, Router, RouterConfig,
+};
 use moe_folding::perfmodel::{PerfModel, Strategy};
-use moe_folding::simcomm::run_ranks;
+use moe_folding::simcomm::{run_ranks, run_ranks_on, AlgoSelection, Fabric};
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::util::benchkit::{black_box, Harness};
 use moe_folding::util::Rng;
@@ -57,22 +64,82 @@ fn main() {
     );
     let mut small_tokens = vec![0.0f32; 4 * 128 * 64];
     rng.fill_normal(&mut small_tokens, 1.0);
+    let build_layer = |rank: usize| DistributedMoeLayer {
+        router: small_router.clone(),
+        local_experts: experts[rank * 2..(rank + 1) * 2].to_vec(),
+        ep_group: vec![0, 1, 2, 3],
+        etp_group: vec![rank],
+        ep_index: rank,
+        num_experts: e,
+        seq_group: None,
+    };
     h.bench("dispatch/ep4_128tok_per_rank", || {
         let outs = run_ranks(4, |rank, comm| {
-            let layer = DistributedMoeLayer {
-                router: small_router.clone(),
-                local_experts: experts[rank * 2..(rank + 1) * 2].to_vec(),
-                ep_group: vec![0, 1, 2, 3],
-                etp_group: vec![rank],
-                ep_index: rank,
-                num_experts: e,
-                seq_group: None,
-            };
+            let layer = build_layer(rank);
             let mine = small_tokens[rank * 128 * 64..(rank + 1) * 128 * 64].to_vec();
             layer.forward(&comm, &mine).0
         });
         black_box(outs);
     });
+
+    // Scratch-reuse variant: persistent fabric (shared buffer pool) +
+    // per-rank DispatchScratch. Steady state performs zero payload
+    // allocations in the collective calls — see the pool counters printed
+    // below (misses stop growing after warmup).
+    let fabric = Fabric::new(4);
+    let layers: Vec<DistributedMoeLayer> = (0..4).map(build_layer).collect();
+    let scratches: Vec<Mutex<DispatchScratch>> =
+        (0..4).map(|_| Mutex::new(DispatchScratch::default())).collect();
+    h.bench("dispatch/ep4_128tok_scratch_reuse", || {
+        let outs = run_ranks_on(&fabric, |rank, comm| {
+            let mut scratch = scratches[rank].lock().unwrap();
+            let mine = &small_tokens[rank * 128 * 64..(rank + 1) * 128 * 64];
+            layers[rank].forward_with_scratch(&comm, mine, &mut scratch).0
+        });
+        black_box(outs);
+    });
+    let (hits, misses) = fabric.pool_stats();
+    println!(
+        "dispatch/ep4_128tok_scratch_reuse: pool hits {hits}, misses {misses} \
+         ({:.4} misses/hit — warmup only; steady state allocates nothing)",
+        misses as f64 / hits.max(1) as f64
+    );
+
+    // Collectives engine: naive-leader oracle vs fast suite. The leader
+    // serializes all traffic (and all reduction arithmetic) through one
+    // rank; the ring/pairwise algorithms spread it across every link.
+    println!("\n# collectives: naive-leader oracle vs ring/pairwise suite");
+    for &world in &[8usize, 16, 32] {
+        let group: Vec<usize> = (0..world).collect();
+        let elems = 1 << 14; // 64 KiB per rank
+        let per_peer = (1 << 15) / world;
+        for (label, algos) in
+            [("naive", AlgoSelection::naive()), ("fast", AlgoSelection::fast())]
+        {
+            let fabric = Fabric::new_with(world, algos);
+            let base: Vec<f32> = (0..elems).map(|i| (i % 97) as f32).collect();
+            h.bench(&format!("allreduce/world{world}/{label}"), || {
+                let outs = run_ranks_on(&fabric, |rank, comm| {
+                    let mut buf = base.clone();
+                    buf[0] += rank as f32;
+                    comm.all_reduce_sum_into(&group, &mut buf);
+                    buf[0]
+                });
+                black_box(outs);
+            });
+            h.bench(&format!("alltoallv/world{world}/{label}"), || {
+                let outs = run_ranks_on(&fabric, |rank, comm| {
+                    let sends: Vec<Vec<f32>> = (0..world)
+                        .map(|p| vec![(rank * world + p) as f32; per_peer])
+                        .collect();
+                    let mut out = Vec::new();
+                    comm.all_to_all_v_into(&group, &sends, &mut out);
+                    out.len()
+                });
+                black_box(outs);
+            });
+        }
+    }
 
     // Perf-model estimator throughput (autotune inner loop).
     let pm = PerfModel::default();

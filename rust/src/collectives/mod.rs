@@ -11,8 +11,17 @@
 //!   convention: AllGather input bytes, ReduceScatter input bytes / n, …
 //!   is normalized per primitive below).
 //! * returned times are in **microseconds**.
+//!
+//! The default methods price the **same algorithm suite the functional
+//! simulator executes** ([`crate::simcomm::AlgoSelection::fast`]): ring
+//! all-reduce/all-gather, recursive-halving/pairwise reduce-scatter,
+//! pairwise all-to-all. The `*_with` variants take an explicit
+//! [`CollectiveAlgo`] so the naive leader oracle can be priced too — its
+//! cost model is a single serialized link at the leader, which is exactly
+//! why `simcomm`'s differential benchmarks show it losing at world ≥ 16.
 
 use crate::cluster::ClusterSpec;
+use crate::simcomm::CollectiveAlgo;
 
 /// How a group's members spread over nodes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -162,6 +171,103 @@ impl CommModel {
         // tree broadcast ~ allgather of bytes/n chunks; approximate with AG.
         self.all_gather(group, bytes / group.len().max(1) as f64)
     }
+
+    // ---- algorithm-explicit costs (same names simcomm executes) --------
+
+    /// The link the naive leader serializes on.
+    fn leader_bw(&self, s: GroupShape) -> f64 {
+        if s.single_node() {
+            self.nv_bw()
+        } else {
+            self.ib_bw()
+        }
+    }
+
+    /// AllReduce under an explicit algorithm. `Ring` (and the other
+    /// distributed algorithms) cost the default hierarchical ring model;
+    /// `NaiveLeader` pays `(n−1)` serialized receives plus `(n−1)`
+    /// serialized sends of the full buffer on the leader's single link.
+    pub fn all_reduce_with(&self, algo: CollectiveAlgo, group: &[usize], bytes: f64) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        match algo {
+            CollectiveAlgo::NaiveLeader => {
+                let t = 2.0 * (s.n as f64 - 1.0) * bytes / self.leader_bw(s);
+                t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
+            }
+            _ => self.all_reduce(group, bytes),
+        }
+    }
+
+    /// AllGather under an explicit algorithm (leader: `(n−1)` receives of
+    /// `bytes` + `(n−1)` sends of the `n·bytes` concatenation).
+    pub fn all_gather_with(
+        &self,
+        algo: CollectiveAlgo,
+        group: &[usize],
+        bytes_per_rank: f64,
+    ) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        match algo {
+            CollectiveAlgo::NaiveLeader => {
+                let n = s.n as f64;
+                let t = ((n - 1.0) * bytes_per_rank + (n - 1.0) * n * bytes_per_rank)
+                    / self.leader_bw(s);
+                t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
+            }
+            _ => self.all_gather(group, bytes_per_rank),
+        }
+    }
+
+    /// ReduceScatter under an explicit algorithm (leader: `(n−1)` receives
+    /// of the full buffer + `(n−1)` shard sends).
+    pub fn reduce_scatter_with(
+        &self,
+        algo: CollectiveAlgo,
+        group: &[usize],
+        bytes_total_per_rank: f64,
+    ) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        match algo {
+            CollectiveAlgo::NaiveLeader => {
+                let n = s.n as f64;
+                let t = ((n - 1.0) * bytes_total_per_rank
+                    + (n - 1.0) * bytes_total_per_rank / n)
+                    / self.leader_bw(s);
+                t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
+            }
+            _ => self.reduce_scatter(group, bytes_total_per_rank),
+        }
+    }
+
+    /// AllToAll under an explicit algorithm (leader relays every buffer:
+    /// `(n−1)·bytes` in and `(n−1)·bytes` out through one link).
+    pub fn all_to_all_with(
+        &self,
+        algo: CollectiveAlgo,
+        group: &[usize],
+        bytes_per_rank: f64,
+    ) -> f64 {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return 0.0;
+        }
+        match algo {
+            CollectiveAlgo::NaiveLeader => {
+                let t = 2.0 * (s.n as f64 - 1.0) * bytes_per_rank / self.leader_bw(s);
+                t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
+            }
+            _ => self.all_to_all(group, bytes_per_rank),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,5 +335,51 @@ mod tests {
         let t_nv = m.p2p(0, 1, 1e8);
         let t_ib = m.p2p(0, 8, 1e8);
         assert!(t_ib > 5.0 * t_nv);
+    }
+
+    /// The naive-leader oracle is priced strictly worse than the
+    /// distributed algorithms once groups grow — mirroring the measured
+    /// behaviour of the functional simulator's algorithms.
+    #[test]
+    fn naive_leader_loses_at_scale() {
+        let m = model(8);
+        let g: Vec<usize> = (0..8).collect();
+        let bytes = 1e8;
+        for (naive, fast) in [
+            (
+                m.all_reduce_with(CollectiveAlgo::NaiveLeader, &g, bytes),
+                m.all_reduce_with(CollectiveAlgo::Ring, &g, bytes),
+            ),
+            (
+                m.all_gather_with(CollectiveAlgo::NaiveLeader, &g, bytes),
+                m.all_gather_with(CollectiveAlgo::Ring, &g, bytes),
+            ),
+            (
+                m.reduce_scatter_with(CollectiveAlgo::NaiveLeader, &g, bytes),
+                m.reduce_scatter_with(CollectiveAlgo::RecursiveHalving, &g, bytes),
+            ),
+            (
+                m.all_to_all_with(CollectiveAlgo::NaiveLeader, &g, bytes),
+                m.all_to_all_with(CollectiveAlgo::PairwiseExchange, &g, bytes),
+            ),
+        ] {
+            assert!(naive > 2.0 * fast, "naive {naive:.1}us vs fast {fast:.1}us");
+        }
+    }
+
+    /// Explicit-algorithm costs with the fast suite equal the default
+    /// methods — the model and the simulator name the same algorithms.
+    #[test]
+    fn fast_suite_matches_default_methods() {
+        let m = model(64);
+        let g: Vec<usize> = (0..16).collect();
+        let suite = crate::simcomm::AlgoSelection::fast();
+        assert_eq!(m.all_reduce_with(suite.all_reduce, &g, 3e7), m.all_reduce(&g, 3e7));
+        assert_eq!(m.all_gather_with(suite.all_gather, &g, 3e7), m.all_gather(&g, 3e7));
+        assert_eq!(
+            m.reduce_scatter_with(suite.reduce_scatter, &g, 3e7),
+            m.reduce_scatter(&g, 3e7)
+        );
+        assert_eq!(m.all_to_all_with(suite.all_to_all, &g, 3e7), m.all_to_all(&g, 3e7));
     }
 }

@@ -10,7 +10,7 @@ pub mod workflow;
 
 pub use permute::Permutation;
 pub use router::{Assignment, RouteDecision, Router, RouterConfig};
-pub use workflow::{reference_moe_forward, DispatchStats, DistributedMoeLayer};
+pub use workflow::{reference_moe_forward, DispatchScratch, DispatchStats, DistributedMoeLayer};
 
 #[cfg(test)]
 mod tests {

@@ -13,6 +13,14 @@
 //!
 //! Dropped tokens contribute zero (the transformer's residual path carries
 //! them), exactly like Megatron-Core's `capacity_factor` behaviour.
+//!
+//! The communication steps run on whichever collective algorithms the
+//! communicator selects ([`crate::simcomm::AlgoSelection`]); because every
+//! algorithm reduces in rank order, the layer output is bit-identical
+//! across selections. The hot path ([`DistributedMoeLayer::forward_with_scratch`])
+//! stages all communication through a caller-owned [`DispatchScratch`], so
+//! in steady state the collective calls perform **zero payload
+//! allocations** (fabric pool + reused staging buffers).
 
 use crate::config::DropPolicy;
 use crate::simcomm::Communicator;
@@ -30,6 +38,35 @@ pub struct DispatchStats {
     pub etp_rs_bytes: usize,
     pub tokens_routed: usize,
     pub tokens_dropped: usize,
+}
+
+/// Reusable staging buffers for the dispatch hot path. Construct once per
+/// rank (e.g. per training loop) and pass to
+/// [`DistributedMoeLayer::forward_with_scratch`]; every buffer keeps its
+/// capacity between calls, so steady-state dispatch performs no per-call
+/// buffer allocation in the communication steps.
+#[derive(Default)]
+pub struct DispatchScratch {
+    /// Per-EP-peer send staging (counts header + token rows).
+    sends: Vec<Vec<f32>>,
+    /// Per-EP-peer dispatch receive buffers.
+    recvs: Vec<Vec<f32>>,
+    /// Per-local-expert input rows regrouped from all peers.
+    per_expert: Vec<Vec<f32>>,
+    /// Per-local-expert outputs after the ETP combine.
+    expert_outputs: Vec<Vec<f32>>,
+    /// Per-EP-peer combine send staging.
+    returns: Vec<Vec<f32>>,
+    /// Per-EP-peer combine receive buffers.
+    combined: Vec<Vec<f32>>,
+    /// ETP row-count exchange buffer.
+    lens: Vec<f32>,
+    /// ETP element counts derived from `lens`.
+    counts: Vec<usize>,
+    /// ETP gathered token rows.
+    gathered: Vec<f32>,
+    /// Expert-sorted combine output rows.
+    expert_sorted: Vec<f32>,
 }
 
 /// One rank's slice of a distributed MoE layer.
@@ -57,7 +94,7 @@ impl DistributedMoeLayer {
     }
 
     /// Which EP-group index owns `expert`.
-    fn owner_of(&self, expert: usize) -> usize {
+    pub fn owner_of(&self, expert: usize) -> usize {
         expert / self.experts_per_rank()
     }
 
@@ -104,8 +141,22 @@ impl DistributedMoeLayer {
 
     /// Full forward of the MoE layer for this rank's `tokens` [n × h].
     /// Returns (outputs [n × h], stats). Must be called collectively by all
-    /// ranks of the EP×ETP block.
+    /// ranks of the EP×ETP block. Convenience wrapper that builds a fresh
+    /// [`DispatchScratch`]; loops should hold their own and call
+    /// [`Self::forward_with_scratch`].
     pub fn forward(&self, comm: &Communicator, tokens: &[f32]) -> (Vec<f32>, DispatchStats) {
+        let mut scratch = DispatchScratch::default();
+        self.forward_with_scratch(comm, tokens, &mut scratch)
+    }
+
+    /// [`Self::forward`] with caller-owned staging buffers — the zero
+    /// per-call-allocation hot path.
+    pub fn forward_with_scratch(
+        &self,
+        comm: &Communicator,
+        tokens: &[f32],
+        scratch: &mut DispatchScratch,
+    ) -> (Vec<f32>, DispatchStats) {
         let h = self.router.config.hidden;
         let n_local = tokens.len() / h;
         let ep = self.ep_group.len();
@@ -121,7 +172,8 @@ impl DistributedMoeLayer {
 
         // 3. All-to-All-V dispatch. Send buffer for EP peer p:
         //    [counts for p's epr experts..., token rows...].
-        let mut sends: Vec<Vec<f32>> = Vec::with_capacity(ep);
+        scratch.sends.truncate(ep);
+        scratch.sends.resize_with(ep, Vec::new);
         for p in 0..ep {
             let first = p * epr;
             let start_off = if first == 0 { 0 } else { perm.offsets[first] };
@@ -130,23 +182,27 @@ impl DistributedMoeLayer {
             } else {
                 perm.total()
             };
-            let mut buf = Vec::with_capacity(epr + (end_off - start_off) * h);
+            let buf = &mut scratch.sends[p];
+            buf.clear();
             for le in 0..epr {
                 buf.push(perm.counts[first + le] as f32);
             }
             buf.extend_from_slice(&permuted[start_off * h..end_off * h]);
             stats.a2a_send_bytes += buf.len() * 4;
-            sends.push(buf);
         }
-        let received = comm.all_to_all_v(&self.ep_group, sends);
+        comm.all_to_all_v_into(&self.ep_group, &scratch.sends, &mut scratch.recvs);
 
         // Parse: per peer, counts per local expert + rows grouped by expert.
         // Regroup into per-local-expert buffers, preserving peer order so
         // the return path can undo the layout.
-        let mut per_expert: Vec<Vec<f32>> = vec![Vec::new(); epr];
+        scratch.per_expert.truncate(epr);
+        scratch.per_expert.resize_with(epr, Vec::new);
+        for buf in scratch.per_expert.iter_mut() {
+            buf.clear();
+        }
         // counts_from[p][le] = rows peer p sent for local expert le.
         let mut counts_from = vec![vec![0usize; epr]; ep];
-        for (p, buf) in received.iter().enumerate() {
+        for (p, buf) in scratch.recvs.iter().enumerate() {
             stats.a2a_recv_bytes += buf.len() * 4;
             let mut off = epr;
             for le in 0..epr {
@@ -154,68 +210,72 @@ impl DistributedMoeLayer {
             }
             for le in 0..epr {
                 let rows = counts_from[p][le];
-                per_expert[le].extend_from_slice(&buf[off..off + rows * h]);
+                scratch.per_expert[le].extend_from_slice(&buf[off..off + rows * h]);
                 off += rows * h;
             }
         }
 
         // 4-6. ETP: AllGather-V tokens, compute the FFN shard, then
-        // ReduceScatter-V (implemented as deterministic AllReduce + slice).
+        // ReduceScatter-V back to each member's rows.
         let etp = self.etp_group.len();
-        let mut expert_outputs: Vec<Vec<f32>> = Vec::with_capacity(epr);
-        for (le, mine) in per_expert.iter().enumerate() {
-            let (gathered, my_offset, my_len) = if etp > 1 {
+        scratch.expert_outputs.truncate(epr);
+        scratch.expert_outputs.resize_with(epr, Vec::new);
+        for le in 0..epr {
+            let mine = &scratch.per_expert[le];
+            if etp > 1 {
                 // Exchange lengths first (AllGather-V of [len]).
-                let lens = comm.all_gather_v(&self.etp_group, &[mine.len() as f32]);
-                let gathered = comm.all_gather_v(&self.etp_group, mine);
-                stats.etp_ag_bytes += gathered.len() * 4;
-                let my_idx =
-                    self.etp_group.iter().position(|&r| r == comm.rank()).unwrap();
-                let my_offset: usize =
-                    lens[..my_idx].iter().map(|&l| l as usize).sum();
-                (gathered, my_offset, mine.len())
+                comm.all_gather_v_into(&self.etp_group, &[mine.len() as f32], &mut scratch.lens);
+                comm.all_gather_v_into(&self.etp_group, mine, &mut scratch.gathered);
+                stats.etp_ag_bytes += scratch.gathered.len() * 4;
+                let partial = self.local_experts[le].forward(&scratch.gathered);
+                scratch.counts.clear();
+                scratch.counts.extend(scratch.lens.iter().map(|&l| l as usize));
+                comm.reduce_scatter_v_into(
+                    &self.etp_group,
+                    &partial,
+                    &scratch.counts,
+                    &mut scratch.expert_outputs[le],
+                );
+                stats.etp_rs_bytes += scratch.expert_outputs[le].len() * 4;
             } else {
-                (mine.clone(), 0, mine.len())
-            };
-            let partial = self.local_experts[le].forward(&gathered);
-            let full = if etp > 1 {
-                let reduced = comm.all_reduce_sum(&self.etp_group, &partial);
-                stats.etp_rs_bytes += reduced.len() * 4 / etp;
-                reduced[my_offset..my_offset + my_len].to_vec()
-            } else {
-                partial
-            };
-            expert_outputs.push(full);
+                scratch.expert_outputs[le] = self.local_experts[le].forward(mine);
+            }
         }
 
         // 7. All-to-All-V combine: send each peer's rows back in the same
         // per-peer-per-expert layout it used.
-        let mut returns: Vec<Vec<f32>> = vec![Vec::new(); ep];
+        scratch.returns.truncate(ep);
+        scratch.returns.resize_with(ep, Vec::new);
+        for buf in scratch.returns.iter_mut() {
+            buf.clear();
+        }
         let mut cursor = vec![0usize; epr];
         for p in 0..ep {
             for le in 0..epr {
                 let rows = counts_from[p][le];
                 let start = cursor[le];
-                returns[p].extend_from_slice(&expert_outputs[le][start * h..(start + rows) * h]);
+                scratch.returns[p]
+                    .extend_from_slice(&scratch.expert_outputs[le][start * h..(start + rows) * h]);
                 cursor[le] += rows;
             }
         }
-        let combined = comm.all_to_all_v(&self.ep_group, returns);
+        comm.all_to_all_v_into(&self.ep_group, &scratch.returns, &mut scratch.combined);
 
         // Reassemble into the original permuted order: peer p returned rows
         // for the experts it owns, in expert order — which is exactly the
         // contiguous segment we sent it.
-        let mut expert_sorted_out = vec![0.0f32; perm.total() * h];
-        for (p, buf) in combined.iter().enumerate() {
+        scratch.expert_sorted.clear();
+        scratch.expert_sorted.resize(perm.total() * h, 0.0);
+        for (p, buf) in scratch.combined.iter().enumerate() {
             let first = p * epr;
             let start_off = if first == 0 { 0 } else { perm.offsets[first] };
-            expert_sorted_out[start_off * h..start_off * h + buf.len()]
+            scratch.expert_sorted[start_off * h..start_off * h + buf.len()]
                 .copy_from_slice(buf);
         }
 
         // 8. Un-permute with gate weighting.
         let out = perm.unpermute_accumulate(
-            &expert_sorted_out,
+            &scratch.expert_sorted,
             h,
             &decision.assignments,
             n_local,

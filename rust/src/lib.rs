@@ -18,8 +18,9 @@
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the MoE hot
 //!   spot (grouped expert FFN, router top-k, token permute).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See the top-level `README.md` for the architecture overview, quickstart,
+//! the collectives-engine invariants, and the offline-build policy
+//! (no external crates; see [`util`] for the in-crate stand-ins).
 
 pub mod autotune;
 pub mod cluster;

@@ -61,7 +61,7 @@ fn model_arg(args: &Args, default: &str) -> ModelConfig {
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> moe_folding::util::error::Result<()> {
     let args = Args::parse();
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         usage()
@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 ParallelMapping::folded(cfg)
             }
-            .map_err(|e| anyhow::anyhow!(e))?;
+            .map_err(|e| moe_folding::anyhow!(e))?;
             println!("# {} ({})", cfg.tag(), if mapping.legacy { "legacy" } else { "folded" });
             for (name, set) in
                 [("attention", &mapping.attention), ("moe", &mapping.moe)]
@@ -166,6 +166,7 @@ fn main() -> anyhow::Result<()> {
                 seed: args.get_usize("seed", 42) as u64,
                 log_every: args.get_usize("log-every", 10),
                 clip_norm: args.get_f64("clip", 1.0) as f32,
+                ..TrainerConfig::default()
             };
             let report = train(&cfg)?;
             println!(

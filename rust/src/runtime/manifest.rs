@@ -12,7 +12,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 /// Shape + dtype of one tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -8,13 +8,21 @@
 
 pub mod manifest;
 
+// The PJRT bindings are not resolvable offline; the runtime compiles against
+// an API-identical stub whose client constructor fails gracefully. To enable
+// the real backend, vendor the xla bindings and replace this declaration
+// with `use ::xla;` (see runtime/xla_stub.rs and README.md §PJRT runtime).
+#[path = "xla_stub.rs"]
+mod xla;
+
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 /// A loaded, compiled artifact.
 pub struct Executable {

@@ -1,0 +1,622 @@
+//! Collective algorithm implementations for [`Communicator`].
+//!
+//! Every algorithm here upholds the module-level determinism invariant:
+//! sums are folded in **ascending group-index order**, bit-for-bit equal to
+//! the [`CollectiveAlgo::NaiveLeader`] oracle. See `simcomm` module docs for
+//! the rationale and the algorithm catalogue.
+//!
+//! Payload framing note: variable-length primitives (all-gather-v,
+//! broadcast) circulate lengths as `f32` control messages, exact for
+//! buffers under 2²⁴ elements — far beyond anything the functional
+//! simulator moves.
+
+use super::{CollectiveAlgo, Communicator};
+
+impl Communicator {
+    // =====================================================================
+    // AllGather-V
+    // =====================================================================
+
+    /// AllGather-V: concatenation of every member's buffer, in group order.
+    pub fn all_gather_v(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.all_gather_v_into(group, local, &mut out);
+        out
+    }
+
+    /// [`Self::all_gather_v`] into a reusable output buffer.
+    pub fn all_gather_v_into(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        if group.len() <= 1 {
+            out.clear();
+            out.extend_from_slice(local);
+            return;
+        }
+        match self.algos().all_gather {
+            CollectiveAlgo::NaiveLeader => self.naive_all_gather_v(group, local, out),
+            _ => self.ring_all_gather_v(group, local, out),
+        }
+    }
+
+    /// Oracle: everyone sends to the leader; leader broadcasts the
+    /// concatenation.
+    fn naive_all_gather_v(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        let leader = group[0];
+        if self.rank() == leader {
+            out.clear();
+            out.extend_from_slice(local);
+            for &src in &group[1..] {
+                let buf = self.recv_take(src);
+                out.extend_from_slice(&buf);
+                self.release(buf);
+            }
+            for &dst in &group[1..] {
+                self.send_slice(dst, out);
+            }
+        } else {
+            self.send_slice(leader, local);
+            self.recv_into_vec(leader, out);
+        }
+    }
+
+    /// Ring: a length pass then a data pass; each segment travels n−1 hops
+    /// around the ring, every link carrying disjoint traffic concurrently.
+    fn ring_all_gather_v(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let next = group[(me + 1) % n];
+        let prev = group[(me + n - 1) % n];
+
+        // Pass 1: circulate segment lengths.
+        let mut lens = vec![0usize; n];
+        lens[me] = local.len();
+        self.send_slice(next, &[local.len() as f32]);
+        for s in 1..n {
+            let idx = (me + n - s) % n;
+            let buf = self.recv_take(prev);
+            lens[idx] = buf[0] as usize;
+            if s < n - 1 {
+                self.send_vec(next, buf);
+            } else {
+                self.release(buf);
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + lens[i];
+        }
+        out.clear();
+        out.resize(offsets[n], 0.0);
+        out[offsets[me]..offsets[me] + local.len()].copy_from_slice(local);
+
+        // Pass 2: circulate segment data, writing at the known offsets.
+        self.send_slice(next, local);
+        for s in 1..n {
+            let idx = (me + n - s) % n;
+            let buf = self.recv_take(prev);
+            debug_assert_eq!(buf.len(), lens[idx], "ring all-gather framing");
+            out[offsets[idx]..offsets[idx] + buf.len()].copy_from_slice(&buf);
+            if s < n - 1 {
+                self.send_vec(next, buf);
+            } else {
+                self.release(buf);
+            }
+        }
+    }
+
+    // =====================================================================
+    // AllReduce (sum)
+    // =====================================================================
+
+    /// AllReduce (sum), reducing in group-index order for determinism.
+    pub fn all_reduce_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        let mut out = local.to_vec();
+        self.all_reduce_sum_into(group, &mut out);
+        out
+    }
+
+    /// In-place AllReduce (sum): `buf` holds this rank's contribution on
+    /// entry and the rank-order sum on exit. Zero payload allocations in
+    /// steady state (pool-backed chunks).
+    pub fn all_reduce_sum_into(&self, group: &[usize], buf: &mut [f32]) {
+        if group.len() <= 1 {
+            return;
+        }
+        match self.algos().all_reduce {
+            CollectiveAlgo::NaiveLeader => self.naive_all_reduce_into(group, buf),
+            _ => self.chain_all_reduce_into(group, buf),
+        }
+    }
+
+    /// Oracle: leader folds contributions in group order, then scatters the
+    /// full result.
+    fn naive_all_reduce_into(&self, group: &[usize], buf: &mut [f32]) {
+        let leader = group[0];
+        if self.rank() == leader {
+            for &src in &group[1..] {
+                let part = self.recv_take(src);
+                assert_eq!(part.len(), buf.len(), "allreduce length mismatch");
+                for (a, b) in buf.iter_mut().zip(&part) {
+                    *a += *b;
+                }
+                self.release(part);
+            }
+            for &dst in &group[1..] {
+                self.send_slice(dst, buf);
+            }
+        } else {
+            self.send_slice(leader, buf);
+            let full = self.recv_take(leader);
+            buf.copy_from_slice(&full);
+            self.release(full);
+        }
+    }
+
+    /// Ring: chunk-pipelined chain reduce `0 → 1 → … → n−1` (each chunk's
+    /// partial sum grows strictly in ascending rank order — the classic
+    /// rotating-chunk ring is rejected because it breaks that invariant),
+    /// followed by a chunk-pipelined ring broadcast `n−1 → 0 → … → n−2`.
+    /// Per-link volume is ~2× the buffer, like a bandwidth-optimal ring,
+    /// and all links run concurrently — no leader bottleneck.
+    fn chain_all_reduce_into(&self, group: &[usize], buf: &mut [f32]) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let len = buf.len();
+        let chunks = n.min(len.max(1));
+        let bounds = |c: usize| (c * len / chunks, (c + 1) * len / chunks);
+
+        // Phase 1: pipelined chain reduce.
+        if me == 0 {
+            for c in 0..chunks {
+                let (lo, hi) = bounds(c);
+                self.send_slice(group[1], &buf[lo..hi]);
+            }
+        } else {
+            let prev = group[me - 1];
+            for c in 0..chunks {
+                let (lo, hi) = bounds(c);
+                let mut part = self.recv_take(prev);
+                debug_assert_eq!(part.len(), hi - lo, "chain reduce framing");
+                // part = Σ ranks 0..me; adding mine keeps the left fold.
+                for (p, x) in part.iter_mut().zip(&buf[lo..hi]) {
+                    *p += *x;
+                }
+                if me < n - 1 {
+                    self.send_vec(group[me + 1], part);
+                } else {
+                    buf[lo..hi].copy_from_slice(&part);
+                    self.release(part);
+                }
+            }
+        }
+
+        // Phase 2: pipelined ring broadcast of the finished chunks, rooted
+        // at the chain's end (group index n−1).
+        self.ring_chain_broadcast(group, n - 1, buf);
+    }
+
+    /// Chunk-pipelined ring broadcast where every member already knows the
+    /// buffer length: the member at group index `root_idx` sends its `buf`
+    /// around the ring; the member just before it terminates the chain.
+    /// Shared by the all-reduce distribution phase and [`Self::broadcast`].
+    fn ring_chain_broadcast(&self, group: &[usize], root_idx: usize, buf: &mut [f32]) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let chain_pos = (me + n - root_idx) % n;
+        let next = group[(me + 1) % n];
+        let prev = group[(me + n - 1) % n];
+        let is_last = chain_pos == n - 1;
+        let len = buf.len();
+        let chunks = n.min(len.max(1));
+        let bounds = |c: usize| (c * len / chunks, (c + 1) * len / chunks);
+        if chain_pos == 0 {
+            for c in 0..chunks {
+                let (lo, hi) = bounds(c);
+                self.send_slice(next, &buf[lo..hi]);
+            }
+        } else {
+            for c in 0..chunks {
+                let (lo, hi) = bounds(c);
+                let part = self.recv_take(prev);
+                debug_assert_eq!(part.len(), hi - lo, "ring broadcast framing");
+                buf[lo..hi].copy_from_slice(&part);
+                if !is_last {
+                    self.send_vec(next, part);
+                } else {
+                    self.release(part);
+                }
+            }
+        }
+    }
+
+    // =====================================================================
+    // ReduceScatter (sum)
+    // =====================================================================
+
+    /// ReduceScatter (sum): every rank contributes `local` (length divisible
+    /// by group size), receives its reduced shard.
+    pub fn reduce_scatter_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.reduce_scatter_sum_into(group, local, &mut out);
+        out
+    }
+
+    /// [`Self::reduce_scatter_sum`] into a reusable output buffer.
+    pub fn reduce_scatter_sum_into(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        let n = group.len();
+        if n <= 1 {
+            out.clear();
+            out.extend_from_slice(local);
+            return;
+        }
+        assert_eq!(local.len() % n, 0, "reduce_scatter length must divide");
+        let shard = local.len() / n;
+        let counts = vec![shard; n];
+        match self.algos().reduce_scatter {
+            CollectiveAlgo::NaiveLeader => self.naive_reduce_scatter_v(group, local, &counts, out),
+            CollectiveAlgo::RecursiveHalving if n.is_power_of_two() => {
+                self.halving_reduce_scatter(group, local, out)
+            }
+            // Recursive halving needs a power-of-two group; everything else
+            // (and the explicit Pairwise/Ring selections) uses the direct
+            // pairwise exchange.
+            _ => self.pairwise_reduce_scatter_v(group, local, &counts, out),
+        }
+    }
+
+    /// ReduceScatter-V (sum): `counts[i]` elements of `local` belong to
+    /// group member `i` (`Σ counts == local.len()`, identical on every
+    /// member); returns this rank's reduced segment. This is the
+    /// dispatcher's ETP combine primitive.
+    pub fn reduce_scatter_v(&self, group: &[usize], local: &[f32], counts: &[usize]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.reduce_scatter_v_into(group, local, counts, &mut out);
+        out
+    }
+
+    /// [`Self::reduce_scatter_v`] into a reusable output buffer.
+    pub fn reduce_scatter_v_into(
+        &self,
+        group: &[usize],
+        local: &[f32],
+        counts: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        let n = group.len();
+        assert_eq!(counts.len(), n, "one count per group member");
+        debug_assert_eq!(counts.iter().sum::<usize>(), local.len(), "counts must cover local");
+        if n <= 1 {
+            out.clear();
+            out.extend_from_slice(local);
+            return;
+        }
+        match self.algos().reduce_scatter {
+            CollectiveAlgo::NaiveLeader => self.naive_reduce_scatter_v(group, local, counts, out),
+            // Variable shards break the halving size symmetry; pairwise
+            // exchange is the variable-count workhorse for every fast suite.
+            _ => self.pairwise_reduce_scatter_v(group, local, counts, out),
+        }
+    }
+
+    /// Oracle: leader folds the full buffers in group order, then scatters
+    /// each member's segment.
+    fn naive_reduce_scatter_v(
+        &self,
+        group: &[usize],
+        local: &[f32],
+        counts: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let leader = group[0];
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + counts[i];
+        }
+        if self.rank() == leader {
+            let mut acc = self.take_buf(local.len());
+            acc.extend_from_slice(local);
+            for &src in &group[1..] {
+                let part = self.recv_take(src);
+                assert_eq!(part.len(), acc.len(), "reduce_scatter length mismatch");
+                for (a, b) in acc.iter_mut().zip(&part) {
+                    *a += *b;
+                }
+                self.release(part);
+            }
+            for (i, &dst) in group.iter().enumerate().skip(1) {
+                self.send_slice(dst, &acc[offsets[i]..offsets[i + 1]]);
+            }
+            out.clear();
+            out.extend_from_slice(&acc[offsets[0]..offsets[1]]);
+            self.release(acc);
+        } else {
+            self.send_slice(leader, local);
+            self.recv_into_vec(leader, out);
+            debug_assert_eq!(out.len(), counts[me]);
+        }
+    }
+
+    /// Direct pairwise exchange: round `r` sends member `(me+r) mod n` its
+    /// segment; contributions for my segment are folded in ascending group
+    /// order (mine spliced in at position `me`), preserving the invariant.
+    fn pairwise_reduce_scatter_v(
+        &self,
+        group: &[usize],
+        local: &[f32],
+        counts: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + counts[i];
+        }
+        for r in 1..n {
+            let di = (me + r) % n;
+            self.send_slice(group[di], &local[offsets[di]..offsets[di + 1]]);
+        }
+        out.clear();
+        out.resize(counts[me], 0.0);
+        let my_seg = &local[offsets[me]..offsets[me + 1]];
+        for i in 0..n {
+            if i == me {
+                if i == 0 {
+                    out.copy_from_slice(my_seg);
+                } else {
+                    for (o, x) in out.iter_mut().zip(my_seg) {
+                        *o += *x;
+                    }
+                }
+            } else {
+                let part = self.recv_take(group[i]);
+                debug_assert_eq!(part.len(), counts[me], "reduce_scatter_v framing");
+                if i == 0 {
+                    out.copy_from_slice(&part);
+                } else {
+                    for (o, x) in out.iter_mut().zip(&part) {
+                        *o += *x;
+                    }
+                }
+                self.release(part);
+            }
+        }
+    }
+
+    /// Recursive halving with **deferred summation** (power-of-two groups):
+    /// log₂(n) rounds, each exchanging half the remaining range with the
+    /// partner `me ⊕ half`. Contributions travel unreduced (each round moves
+    /// the same `len/2` elements a classic halving round would), and the
+    /// shard owner folds all n contributions in ascending rank order at the
+    /// end — eager halving would sum in tree order and break bit-exactness.
+    fn halving_reduce_scatter(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        let n = group.len();
+        debug_assert!(n.is_power_of_two());
+        let me = self.my_index(group);
+        let shard = local.len() / n;
+
+        // Contributions held, sorted by source group-index; each covers the
+        // current shard range [lo, hi).
+        let mut lo = 0usize;
+        let mut hi = n;
+        let mut sources: Vec<usize> = vec![me];
+        let mut held: Vec<Vec<f32>> = {
+            let mut b = self.take_buf(local.len());
+            b.extend_from_slice(local);
+            vec![b]
+        };
+
+        while hi - lo > 1 {
+            let m = hi - lo;
+            let half = m / 2;
+            // [lo, hi) is always aligned to m, so the partner is me ⊕ half.
+            let keep_low = (me - lo) < half;
+            let partner_idx = me ^ half;
+            let send_elems = half * shard;
+
+            // Send the half the partner's subgroup owns, contributions
+            // concatenated in my sorted-source order.
+            let mut sbuf = self.take_buf(sources.len() * send_elems);
+            for b in &held {
+                let slice = if keep_low { &b[send_elems..] } else { &b[..send_elems] };
+                sbuf.extend_from_slice(slice);
+            }
+            self.send_vec(group[partner_idx], sbuf);
+
+            // Keep my half of each held contribution.
+            for b in held.iter_mut() {
+                if keep_low {
+                    b.truncate(send_elems);
+                } else {
+                    b.drain(..send_elems);
+                }
+            }
+
+            // Receive the partner's block: its sources are mine ⊕ half, and
+            // its concatenation order is by *its* sorted source values.
+            let rbuf = self.recv_take(group[partner_idx]);
+            debug_assert_eq!(rbuf.len(), sources.len() * send_elems, "halving framing");
+            let mut psources: Vec<usize> = sources.iter().map(|&s| s ^ half).collect();
+            psources.sort_unstable();
+            let mut merged: Vec<(usize, Vec<f32>)> =
+                Vec::with_capacity(sources.len() + psources.len());
+            for (s, b) in sources.drain(..).zip(held.drain(..)) {
+                merged.push((s, b));
+            }
+            for (i, &ps) in psources.iter().enumerate() {
+                let mut b = self.take_buf(send_elems);
+                b.extend_from_slice(&rbuf[i * send_elems..(i + 1) * send_elems]);
+                merged.push((ps, b));
+            }
+            self.release(rbuf);
+            merged.sort_by_key(|(s, _)| *s);
+            for (s, b) in merged {
+                sources.push(s);
+                held.push(b);
+            }
+
+            if keep_low {
+                hi = lo + half;
+            } else {
+                lo += half;
+            }
+        }
+        debug_assert_eq!(lo, me, "halving recursion must land on my shard");
+        debug_assert_eq!(sources.len(), n);
+
+        // Fold all contributions in ascending rank order.
+        out.clear();
+        out.resize(shard, 0.0);
+        for (i, b) in held.iter().enumerate() {
+            debug_assert_eq!(b.len(), shard);
+            if i == 0 {
+                out.copy_from_slice(b);
+            } else {
+                for (o, x) in out.iter_mut().zip(b) {
+                    *o += *x;
+                }
+            }
+        }
+        for b in held {
+            self.release(b);
+        }
+    }
+
+    // =====================================================================
+    // AllToAll-V
+    // =====================================================================
+
+    /// AllToAll-V: `sends[i]` goes to group member `i`; returns the buffers
+    /// received from each member, in group order.
+    pub fn all_to_all_v(&self, group: &[usize], sends: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        self.all_to_all_v_into(group, &sends, &mut out);
+        out
+    }
+
+    /// [`Self::all_to_all_v`] into reusable per-peer output buffers
+    /// (`out` is resized to the group size; inner buffers keep capacity).
+    pub fn all_to_all_v_into(&self, group: &[usize], sends: &[Vec<f32>], out: &mut Vec<Vec<f32>>) {
+        let n = group.len();
+        assert_eq!(sends.len(), n, "one send buffer per group member");
+        out.truncate(n);
+        out.resize_with(n, Vec::new);
+        match self.algos().all_to_all {
+            CollectiveAlgo::NaiveLeader => self.naive_all_to_all_v(group, sends, out),
+            _ => self.pairwise_all_to_all_v(group, sends, out),
+        }
+    }
+
+    /// Oracle: every buffer (including self-destined ones) is relayed
+    /// through the leader, which serializes the entire exchange.
+    fn naive_all_to_all_v(&self, group: &[usize], sends: &[Vec<f32>], out: &mut [Vec<f32>]) {
+        let n = group.len();
+        let leader = group[0];
+        for dst_buf in sends {
+            self.send_slice(leader, dst_buf);
+        }
+        if self.rank() == leader {
+            // blocks[src][dst], collected in source order.
+            let mut blocks: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut per_dst = Vec::with_capacity(n);
+                for _ in 0..n {
+                    per_dst.push(self.recv_take(group[i]));
+                }
+                blocks.push(per_dst);
+            }
+            for (j, &dst) in group.iter().enumerate() {
+                for src_blocks in blocks.iter_mut() {
+                    let b = std::mem::take(&mut src_blocks[j]);
+                    self.send_vec(dst, b);
+                }
+            }
+        }
+        for slot in out.iter_mut() {
+            self.recv_into_vec(leader, slot);
+        }
+    }
+
+    /// Deterministic pairwise rounds: round `r` sends to `(me+r) mod n` and
+    /// receives from `(me−r) mod n` — the schedule every link is busy on
+    /// simultaneously.
+    fn pairwise_all_to_all_v(&self, group: &[usize], sends: &[Vec<f32>], out: &mut [Vec<f32>]) {
+        let n = group.len();
+        let me = self.my_index(group);
+        out[me].clear();
+        out[me].extend_from_slice(&sends[me]);
+        for r in 1..n {
+            let di = (me + r) % n;
+            self.send_slice(group[di], &sends[di]);
+        }
+        for r in 1..n {
+            let si = (me + n - r) % n;
+            self.recv_into_vec(group[si], &mut out[si]);
+        }
+    }
+
+    // =====================================================================
+    // Broadcast
+    // =====================================================================
+
+    /// Broadcast from `root` (a global rank in `group`).
+    pub fn broadcast(&self, group: &[usize], root: usize, data: &[f32]) -> Vec<f32> {
+        let mut out = data.to_vec();
+        self.broadcast_into(group, root, &mut out);
+        out
+    }
+
+    /// [`Self::broadcast`] into a reusable buffer (`buf` holds the payload
+    /// on the root; other ranks have it overwritten/resized).
+    pub fn broadcast_into(&self, group: &[usize], root: usize, buf: &mut Vec<f32>) {
+        if group.len() <= 1 {
+            return;
+        }
+        match self.algos().broadcast {
+            CollectiveAlgo::NaiveLeader => self.naive_broadcast_into(group, root, buf),
+            _ => self.ring_broadcast_into(group, root, buf),
+        }
+    }
+
+    /// Oracle: root sends the full payload to every member, serially.
+    fn naive_broadcast_into(&self, group: &[usize], root: usize, buf: &mut Vec<f32>) {
+        debug_assert!(group.contains(&root), "root must be in group");
+        if self.rank() == root {
+            for &dst in group {
+                if dst != root {
+                    self.send_slice(dst, buf);
+                }
+            }
+        } else {
+            self.recv_into_vec(root, buf);
+        }
+    }
+
+    /// Ring: a length message down the chain so non-roots can size their
+    /// buffers, then the shared chunk-pipelined chain broadcast.
+    fn ring_broadcast_into(&self, group: &[usize], root: usize, buf: &mut Vec<f32>) {
+        let n = group.len();
+        let me = self.my_index(group);
+        let root_idx = group.iter().position(|&r| r == root).expect("root must be in group");
+        let chain_pos = (me + n - root_idx) % n;
+        let next = group[(me + 1) % n];
+        let prev = group[(me + n - 1) % n];
+        let is_last = chain_pos == n - 1;
+
+        if chain_pos == 0 {
+            self.send_slice(next, &[buf.len() as f32]);
+        } else {
+            let lbuf = self.recv_take(prev);
+            let len = lbuf[0] as usize;
+            if !is_last {
+                self.send_vec(next, lbuf);
+            } else {
+                self.release(lbuf);
+            }
+            buf.clear();
+            buf.resize(len, 0.0);
+        }
+        self.ring_chain_broadcast(group, root_idx, buf);
+    }
+}

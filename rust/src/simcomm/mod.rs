@@ -1,76 +1,310 @@
 //! Functional in-process communicator: N rank threads exchanging real `f32`
-//! buffers through channels.
+//! buffers through per-rank mailboxes — the NCCL stand-in for
+//! numerical-correctness work. The token dispatcher (paper §3.3) and the
+//! distributed trainer run on it, and the appendix loss-equivalence
+//! experiment (Figures 7/8) compares folded multi-rank runs against
+//! single-rank references bit-for-bit.
 //!
-//! This is the NCCL stand-in for numerical-correctness work: the token
-//! dispatcher (paper §3.3) and the distributed trainer run on it, and the
-//! appendix loss-equivalence experiment (Figures 7/8) compares folded
-//! multi-rank runs against single-rank references bit-for-bit (modulo f32
-//! reduction order, which we keep deterministic by always reducing in rank
-//! order).
+//! # Collective algorithms
 //!
-//! Collectives are implemented naively (leader gathers, computes, scatters)
-//! — correctness and determinism matter here, not wall-clock; the *cost* of
-//! collectives is modeled analytically in [`crate::collectives`].
+//! Every collective is implemented by *algorithmically real* communication
+//! patterns selected via [`CollectiveAlgo`] / [`AlgoSelection`], mirroring
+//! the algorithm families the analytic cost model
+//! ([`crate::collectives::CommModel`]) prices:
+//!
+//! * [`CollectiveAlgo::NaiveLeader`] — leader gathers, computes, scatters.
+//!   Serializes all traffic through one rank; kept as the **oracle** the
+//!   differential suite (`tests/collectives_equivalence.rs`) checks every
+//!   other algorithm against, bit-for-bit.
+//! * [`CollectiveAlgo::Ring`] — chunk-pipelined ring/chain. Used for
+//!   all-reduce (pipelined chain reduce in ascending rank order + pipelined
+//!   ring broadcast), all-gather (segments circulate the ring), and
+//!   broadcast (pipelined chain from the root).
+//! * [`CollectiveAlgo::RecursiveHalving`] — log₂(n)-step halving exchange
+//!   for reduce-scatter on power-of-two groups (falls back to
+//!   [`CollectiveAlgo::PairwiseExchange`] otherwise). Summation is
+//!   *deferred*: contributions travel unreduced and the shard owner folds
+//!   them in rank order, so determinism is preserved.
+//! * [`CollectiveAlgo::PairwiseExchange`] — n−1 deterministic rounds of
+//!   direct exchange; the all-to-all(-v) workhorse and the variable-shard
+//!   reduce-scatter used by the dispatcher's ETP combine.
+//!
+//! # Determinism invariant (load-bearing)
+//!
+//! **Every algorithm reduces in ascending group-index order**: for each
+//! element, the produced sum is exactly `((x₀ + x₁) + x₂) + …` over the
+//! group members — the same fold the naive leader performs. Algorithms that
+//! cannot preserve this order for free (classic rotating-chunk ring
+//! all-reduce, eager recursive halving) are implemented as order-preserving
+//! variants (chain-pipelined reduce, deferred-summation halving) instead.
+//! This is what lets the loss-equivalence experiments and the differential
+//! suite compare algorithms **bit-for-bit**, not just within a tolerance.
+//!
+//! # Buffer pool
+//!
+//! Message payloads are pooled per rank ([`Fabric::pool_stats`]): once a
+//! workload reaches steady state, collective calls perform **zero payload
+//! allocations** — buffers cycle between rank pools and mailboxes. The
+//! `*_into` variants additionally reuse caller-owned output buffers, which
+//! is what the dispatcher hot path uses (`dispatcher/workflow.rs`).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Mutex};
+mod algos;
 
-/// A message between ranks: tagged payload.
-#[derive(Debug, Clone)]
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+/// Which algorithm a collective primitive runs. See module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Leader gathers, computes, scatters — the correctness oracle.
+    NaiveLeader,
+    /// Chunk-pipelined ring/chain (all-reduce, all-gather, broadcast).
+    Ring,
+    /// log₂(n) halving exchange with deferred rank-order summation
+    /// (reduce-scatter; power-of-two groups, else pairwise fallback).
+    RecursiveHalving,
+    /// n−1 deterministic direct-exchange rounds (all-to-all, reduce-scatter).
+    PairwiseExchange,
+}
+
+impl CollectiveAlgo {
+    /// Stable name used in bench labels and the analytic cost model.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveAlgo::NaiveLeader => "naive-leader",
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::RecursiveHalving => "recursive-halving",
+            CollectiveAlgo::PairwiseExchange => "pairwise",
+        }
+    }
+}
+
+/// Per-primitive algorithm selection for a fabric/communicator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlgoSelection {
+    pub all_reduce: CollectiveAlgo,
+    pub all_gather: CollectiveAlgo,
+    pub reduce_scatter: CollectiveAlgo,
+    pub all_to_all: CollectiveAlgo,
+    pub broadcast: CollectiveAlgo,
+}
+
+impl AlgoSelection {
+    /// The leader-based oracle for every primitive.
+    pub fn naive() -> Self {
+        Self {
+            all_reduce: CollectiveAlgo::NaiveLeader,
+            all_gather: CollectiveAlgo::NaiveLeader,
+            reduce_scatter: CollectiveAlgo::NaiveLeader,
+            all_to_all: CollectiveAlgo::NaiveLeader,
+            broadcast: CollectiveAlgo::NaiveLeader,
+        }
+    }
+
+    /// The production suite: ring all-reduce/all-gather/broadcast,
+    /// recursive-halving reduce-scatter, pairwise all-to-all.
+    pub fn fast() -> Self {
+        Self {
+            all_reduce: CollectiveAlgo::Ring,
+            all_gather: CollectiveAlgo::Ring,
+            reduce_scatter: CollectiveAlgo::RecursiveHalving,
+            all_to_all: CollectiveAlgo::PairwiseExchange,
+            broadcast: CollectiveAlgo::Ring,
+        }
+    }
+}
+
+impl Default for AlgoSelection {
+    fn default() -> Self {
+        Self::fast()
+    }
+}
+
+/// A message between ranks: tagged payload (pool-backed).
+#[derive(Debug)]
 struct Msg {
     src: usize,
     data: Vec<f32>,
 }
 
-/// Per-rank inbox: the channel receiver plus a stash that preserves
-/// per-source FIFO order when messages are consumed out of arrival order
-/// (e.g. AllToAll-V receives in group order while peers race ahead).
-struct Inbox {
-    rx: Receiver<Msg>,
-    stash: std::collections::VecDeque<Msg>,
+/// Per-rank inbox: one deque guarded by a mutex/condvar pair. Receiving by
+/// source scans front-to-back, so per-source FIFO order is preserved even
+/// when a peer races ahead into its next collective. Steady state performs
+/// no allocation: the deque's capacity persists.
+struct Mailbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, msg: Msg) {
+        self.q.lock().unwrap().push_back(msg);
+        self.cv.notify_all();
+    }
+
+    /// Earliest message from `src` (blocking).
+    fn take_from(&self, src: usize) -> Vec<f32> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|m| m.src == src) {
+                return q.remove(pos).unwrap().data;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Per-rank free list of payload buffers. Buffers migrate between ranks
+/// (sender takes from its own pool, receiver releases into its own), but
+/// collectives move symmetric volume per call, so populations stabilize.
+struct Pool {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+/// Cap on buffers retained per rank pool (excess is dropped on release).
+const POOL_MAX: usize = 128;
+
+impl Pool {
+    fn new() -> Self {
+        Self { free: Mutex::new(Vec::new()) }
+    }
 }
 
 /// Shared mailbox fabric connecting `world` ranks.
 pub struct Fabric {
     world: usize,
-    senders: Vec<Sender<Msg>>,
-    inboxes: Vec<Mutex<Inbox>>,
+    mailboxes: Vec<Mailbox>,
+    pools: Vec<Pool>,
     barrier: Arc<Barrier>,
+    algos: AlgoSelection,
+    pool_hits: AtomicUsize,
+    pool_misses: AtomicUsize,
 }
 
 impl Fabric {
+    /// Fabric with the default (fast) algorithm suite.
     pub fn new(world: usize) -> Arc<Self> {
-        let mut senders = Vec::with_capacity(world);
-        let mut inboxes = Vec::with_capacity(world);
-        for _ in 0..world {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            inboxes.push(Mutex::new(Inbox { rx, stash: std::collections::VecDeque::new() }));
-        }
-        Arc::new(Self { world, senders, inboxes, barrier: Arc::new(Barrier::new(world)) })
+        Self::new_with(world, AlgoSelection::default())
+    }
+
+    /// Fabric with an explicit algorithm selection.
+    pub fn new_with(world: usize, algos: AlgoSelection) -> Arc<Self> {
+        let mailboxes = (0..world).map(|_| Mailbox::new()).collect();
+        let pools = (0..world).map(|_| Pool::new()).collect();
+        Arc::new(Self {
+            world,
+            mailboxes,
+            pools,
+            barrier: Arc::new(Barrier::new(world)),
+            algos,
+            pool_hits: AtomicUsize::new(0),
+            pool_misses: AtomicUsize::new(0),
+        })
     }
 
     pub fn world(&self) -> usize {
         self.world
     }
 
+    /// The fabric-wide algorithm selection.
+    pub fn algos(&self) -> AlgoSelection {
+        self.algos
+    }
+
+    /// `(hits, misses)` of the payload buffer pool. A workload is in steady
+    /// state when `misses` stops growing — from then on collective calls
+    /// allocate no payload buffers.
+    pub fn pool_stats(&self) -> (usize, usize) {
+        (
+            self.pool_hits.load(Ordering::Relaxed),
+            self.pool_misses.load(Ordering::Relaxed),
+        )
+    }
+
     /// Handle for one rank.
     pub fn communicator(self: &Arc<Self>, rank: usize) -> Communicator {
         assert!(rank < self.world);
-        Communicator { fabric: Arc::clone(self), rank }
+        Communicator { fabric: Arc::clone(self), rank, algos: self.algos }
     }
 
     /// All rank communicators at once (for spawning workers).
     pub fn communicators(self: &Arc<Self>) -> Vec<Communicator> {
         (0..self.world).map(|r| self.communicator(r)).collect()
     }
+
+    /// Take a pooled buffer with at least `cap` capacity. The caller's own
+    /// pool is tried first; on a miss, peer pools are scanned (buffers
+    /// migrate rank→rank inside messages, so global conservation — not
+    /// per-rank balance — is what guarantees steady-state reuse). Only when
+    /// no pool anywhere holds a fitting buffer does a real allocation
+    /// happen, counted in [`Fabric::pool_stats`].
+    fn take(&self, rank: usize, cap: usize) -> Vec<f32> {
+        if cap == 0 {
+            return Vec::new(); // zero-capacity vecs never allocate
+        }
+        for k in 0..self.world {
+            let r = (rank + k) % self.world;
+            let mut free = self.pools[r].free.lock().unwrap();
+            // Best fit: the smallest buffer that is large enough, so small
+            // requests don't waste big buffers (which would delay the
+            // steady-state plateau).
+            let best = (0..free.len())
+                .filter(|&i| free[i].capacity() >= cap)
+                .min_by_key(|&i| free[i].capacity());
+            if let Some(pos) = best {
+                let mut b = free.swap_remove(pos);
+                drop(free);
+                self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                return b;
+            }
+        }
+        // Reuse the largest retained allocation in the own pool (growing
+        // it) before minting a new one; both count as a miss (a real
+        // allocation happens).
+        let mut free = self.pools[rank].free.lock().unwrap();
+        let reuse = (0..free.len()).max_by_key(|&i| free[i].capacity());
+        let out = match reuse {
+            Some(i) => {
+                let mut b = free.swap_remove(i);
+                drop(free);
+                b.clear();
+                b.reserve(cap);
+                b
+            }
+            None => {
+                drop(free);
+                Vec::with_capacity(cap)
+            }
+        };
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Return a buffer to `rank`'s pool.
+    fn give(&self, rank: usize, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut free = self.pools[rank].free.lock().unwrap();
+        if free.len() < POOL_MAX {
+            free.push(buf);
+        }
+    }
 }
 
 /// Per-rank endpoint. Collective calls must be entered by *every* member of
-/// `group` (a sorted list of ranks including `self.rank`).
+/// `group` (a sorted list of global ranks including `self.rank()`).
 pub struct Communicator {
     fabric: Arc<Fabric>,
     rank: usize,
+    algos: AlgoSelection,
 }
 
 impl Communicator {
@@ -82,28 +316,16 @@ impl Communicator {
         self.fabric.world
     }
 
-    fn send_to(&self, dst: usize, data: Vec<f32>) {
-        self.fabric.senders[dst]
-            .send(Msg { src: self.rank, data })
-            .expect("fabric send");
+    /// The algorithm selection this communicator dispatches on.
+    pub fn algos(&self) -> AlgoSelection {
+        self.algos
     }
 
-    /// Receive the earliest message from a specific source. Messages from
-    /// other sources are stashed in arrival order, so per-source FIFO is
-    /// preserved even when a peer races ahead into its next collective.
-    fn recv_from(&self, src: usize) -> Vec<f32> {
-        let mut inbox = self.fabric.inboxes[self.rank].lock().unwrap();
-        // Earliest stashed message from `src` wins.
-        if let Some(pos) = inbox.stash.iter().position(|m| m.src == src) {
-            return inbox.stash.remove(pos).unwrap().data;
-        }
-        loop {
-            let m = inbox.rx.recv().expect("fabric recv");
-            if m.src == src {
-                return m.data;
-            }
-            inbox.stash.push_back(m);
-        }
+    /// Same endpoint with a different algorithm selection (used by the
+    /// differential tests to pit algorithms against the oracle on one
+    /// fabric).
+    pub fn with_algos(&self, algos: AlgoSelection) -> Communicator {
+        Communicator { fabric: Arc::clone(&self.fabric), rank: self.rank, algos }
     }
 
     /// Global barrier over the whole fabric.
@@ -111,139 +333,104 @@ impl Communicator {
         self.fabric.barrier.wait();
     }
 
-    fn my_index(&self, group: &[usize]) -> usize {
+    // ---- internal transport -------------------------------------------
+
+    /// Take a pooled scratch buffer (returned via [`Self::release`] or
+    /// moved into a message).
+    pub(crate) fn take_buf(&self, cap: usize) -> Vec<f32> {
+        self.fabric.take(self.rank, cap)
+    }
+
+    /// Return a pooled buffer to this rank's pool.
+    pub(crate) fn release(&self, buf: Vec<f32>) {
+        self.fabric.give(self.rank, buf);
+    }
+
+    /// Move an owned (pooled) buffer to `dst` as a message.
+    pub(crate) fn send_vec(&self, dst: usize, data: Vec<f32>) {
+        self.fabric.mailboxes[dst].push(Msg { src: self.rank, data });
+    }
+
+    /// Copy `data` into a pooled buffer and send it to `dst`.
+    pub(crate) fn send_slice(&self, dst: usize, data: &[f32]) {
+        let mut buf = self.take_buf(data.len());
+        buf.extend_from_slice(data);
+        self.send_vec(dst, buf);
+    }
+
+    /// Receive the earliest message from `src`, taking ownership of the
+    /// pooled payload (pair with [`Self::release`] or forward it).
+    pub(crate) fn recv_take(&self, src: usize) -> Vec<f32> {
+        self.fabric.mailboxes[self.rank].take_from(src)
+    }
+
+    /// Receive from `src` into a caller buffer (cleared first); the pooled
+    /// payload is recycled.
+    pub(crate) fn recv_into_vec(&self, src: usize, out: &mut Vec<f32>) {
+        let buf = self.recv_take(src);
+        out.clear();
+        out.extend_from_slice(&buf);
+        self.release(buf);
+    }
+
+    /// This rank's index within `group`.
+    pub(crate) fn my_index(&self, group: &[usize]) -> usize {
         group
             .iter()
             .position(|&r| r == self.rank)
             .expect("rank must be a member of the group")
     }
 
+    // ---- point-to-point ------------------------------------------------
+
     /// Point-to-point send.
     pub fn send(&self, dst: usize, data: &[f32]) {
-        self.send_to(dst, data.to_vec());
+        self.send_slice(dst, data);
     }
 
-    /// Point-to-point receive.
+    /// Point-to-point receive. Hands the message buffer to the caller
+    /// directly (no copy); the pool mints a replacement on a later send.
+    /// Use [`Self::recv_into`] to keep the buffer cycling instead.
     pub fn recv(&self, src: usize) -> Vec<f32> {
-        self.recv_from(src)
+        self.recv_take(src)
     }
 
-    /// AllGather-V: concatenation of every member's buffer, in group order.
-    pub fn all_gather_v(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
-        if group.len() <= 1 {
-            return local.to_vec();
-        }
-        let me = self.my_index(group);
-        // Everyone sends to the leader; leader broadcasts concatenation.
-        let leader = group[0];
-        if self.rank == leader {
-            let mut parts: Vec<Vec<f32>> = vec![Vec::new(); group.len()];
-            parts[0] = local.to_vec();
-            for (i, &src) in group.iter().enumerate().skip(1) {
-                parts[i] = self.recv_from(src);
-            }
-            let cat: Vec<f32> = parts.concat();
-            for &dst in &group[1..] {
-                self.send_to(dst, cat.clone());
-            }
-            cat
-        } else {
-            let _ = me;
-            self.send_to(leader, local.to_vec());
-            self.recv_from(leader)
-        }
-    }
-
-    /// AllReduce (sum), reducing in group-rank order for determinism.
-    pub fn all_reduce_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
-        if group.len() <= 1 {
-            return local.to_vec();
-        }
-        let leader = group[0];
-        if self.rank == leader {
-            let mut acc = local.to_vec();
-            for &src in &group[1..] {
-                let part = self.recv_from(src);
-                assert_eq!(part.len(), acc.len(), "allreduce length mismatch");
-                for (a, b) in acc.iter_mut().zip(&part) {
-                    *a += b;
-                }
-            }
-            for &dst in &group[1..] {
-                self.send_to(dst, acc.clone());
-            }
-            acc
-        } else {
-            self.send_to(leader, local.to_vec());
-            self.recv_from(leader)
-        }
-    }
-
-    /// ReduceScatter (sum): every rank contributes `local` (length divisible
-    /// by group size), receives its reduced shard.
-    pub fn reduce_scatter_sum(&self, group: &[usize], local: &[f32]) -> Vec<f32> {
-        let n = group.len();
-        if n <= 1 {
-            return local.to_vec();
-        }
-        assert_eq!(local.len() % n, 0, "reduce_scatter length must divide");
-        let reduced = self.all_reduce_sum(group, local);
-        let shard = reduced.len() / n;
-        let me = self.my_index(group);
-        reduced[me * shard..(me + 1) * shard].to_vec()
-    }
-
-    /// AllToAll-V: `sends[i]` goes to group member `i`; returns the buffers
-    /// received from each member, in group order.
-    pub fn all_to_all_v(&self, group: &[usize], sends: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
-        assert_eq!(sends.len(), group.len(), "one send buffer per group member");
-        let me = self.my_index(group);
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); group.len()];
-        // Self-exchange without the fabric.
-        out[me] = sends[me].clone();
-        // Deterministic pairwise exchange: for each round r, exchange with
-        // partner (me ^ r) when valid — but groups may be non-power-of-two,
-        // so use simple ordered push/pull: everyone sends everything first
-        // (channels are buffered), then receives.
-        for (i, &dst) in group.iter().enumerate() {
-            if i != me {
-                self.send_to(dst, sends[i].clone());
-            }
-        }
-        for (i, &src) in group.iter().enumerate() {
-            if i != me {
-                out[i] = self.recv_from(src);
-            }
-        }
-        out
-    }
-
-    /// Broadcast from `root` (a global rank in `group`).
-    pub fn broadcast(&self, group: &[usize], root: usize, data: &[f32]) -> Vec<f32> {
-        if group.len() <= 1 {
-            return data.to_vec();
-        }
-        if self.rank == root {
-            for &dst in group {
-                if dst != root {
-                    self.send_to(dst, data.to_vec());
-                }
-            }
-            data.to_vec()
-        } else {
-            self.recv_from(root)
-        }
+    /// Point-to-point receive into a reusable buffer.
+    pub fn recv_into(&self, src: usize, out: &mut Vec<f32>) {
+        self.recv_into_vec(src, out);
     }
 }
 
-/// Run `f(rank, comm)` on `world` threads, one per rank; returns the outputs
-/// in rank order. Panics in any rank propagate.
+/// Run `f(rank, comm)` on `world` threads, one per rank, with the default
+/// (fast) algorithm suite; returns the outputs in rank order. Panics in any
+/// rank propagate.
 pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, Communicator) -> T + Sync,
 {
-    let fabric = Fabric::new(world);
+    run_ranks_with(world, AlgoSelection::default(), f)
+}
+
+/// [`run_ranks`] with an explicit algorithm selection.
+pub fn run_ranks_with<T, F>(world: usize, algos: AlgoSelection, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Communicator) -> T + Sync,
+{
+    let fabric = Fabric::new_with(world, algos);
+    run_ranks_on(&fabric, f)
+}
+
+/// Run one collective program over an existing fabric (reusing its buffer
+/// pool across calls — this is what keeps repeated dispatch steps
+/// allocation-free). The fabric must be idle (no messages in flight).
+pub fn run_ranks_on<T, F>(fabric: &Arc<Fabric>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Communicator) -> T + Sync,
+{
+    let world = fabric.world();
     let mut out: Vec<Option<T>> = (0..world).map(|_| None).collect();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
@@ -265,79 +452,153 @@ where
 mod tests {
     use super::*;
 
+    fn both_suites() -> [AlgoSelection; 2] {
+        [AlgoSelection::naive(), AlgoSelection::fast()]
+    }
+
     #[test]
     fn all_gather_v_concatenates_in_order() {
-        let outs = run_ranks(4, |rank, comm| {
-            let local = vec![rank as f32; rank + 1]; // variable lengths
-            comm.all_gather_v(&[0, 1, 2, 3], &local)
-        });
-        let expect = vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0];
-        for o in outs {
-            assert_eq!(o, expect);
+        for algos in both_suites() {
+            let outs = run_ranks_with(4, algos, |rank, comm| {
+                let local = vec![rank as f32; rank + 1]; // variable lengths
+                comm.all_gather_v(&[0, 1, 2, 3], &local)
+            });
+            let expect = vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0];
+            for o in outs {
+                assert_eq!(o, expect);
+            }
         }
     }
 
     #[test]
     fn all_reduce_sums() {
-        let outs = run_ranks(4, |rank, comm| {
-            comm.all_reduce_sum(&[0, 1, 2, 3], &[rank as f32, 1.0])
-        });
-        for o in outs {
-            assert_eq!(o, vec![6.0, 4.0]);
+        for algos in both_suites() {
+            let outs = run_ranks_with(4, algos, |rank, comm| {
+                comm.all_reduce_sum(&[0, 1, 2, 3], &[rank as f32, 1.0])
+            });
+            for o in outs {
+                assert_eq!(o, vec![6.0, 4.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_large_buffer_chunking() {
+        // Exercises the pipelined chain with chunk boundaries that don't
+        // divide evenly.
+        let n = 1037usize;
+        for algos in both_suites() {
+            let outs = run_ranks_with(5, algos, |rank, comm| {
+                let local: Vec<f32> = (0..n).map(|i| (rank * n + i) as f32).collect();
+                comm.all_reduce_sum(&[0, 1, 2, 3, 4], &local)
+            });
+            for o in &outs {
+                for (i, v) in o.iter().enumerate() {
+                    let expect: f32 = (0..5).map(|r| (r * n + i) as f32).sum();
+                    assert_eq!(*v, expect, "idx {i}");
+                }
+            }
         }
     }
 
     #[test]
     fn subgroup_collectives() {
         // Two disjoint groups of 2 run independently.
-        let outs = run_ranks(4, |rank, comm| {
-            let group: Vec<usize> = if rank < 2 { vec![0, 1] } else { vec![2, 3] };
-            comm.all_reduce_sum(&group, &[1.0])
-        });
-        assert_eq!(outs, vec![vec![2.0]; 4]);
+        for algos in both_suites() {
+            let outs = run_ranks_with(4, algos, |rank, comm| {
+                let group: Vec<usize> = if rank < 2 { vec![0, 1] } else { vec![2, 3] };
+                comm.all_reduce_sum(&group, &[1.0])
+            });
+            assert_eq!(outs, vec![vec![2.0]; 4]);
+        }
     }
 
     #[test]
     fn reduce_scatter_shards() {
-        let outs = run_ranks(2, |_, comm| {
-            comm.reduce_scatter_sum(&[0, 1], &[1.0, 2.0, 3.0, 4.0])
+        for algos in both_suites() {
+            let outs = run_ranks_with(2, algos, |_, comm| {
+                comm.reduce_scatter_sum(&[0, 1], &[1.0, 2.0, 3.0, 4.0])
+            });
+            assert_eq!(outs[0], vec![2.0, 4.0]);
+            assert_eq!(outs[1], vec![6.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_non_power_of_two_falls_back() {
+        // 3-rank group: recursive halving must fall back to pairwise.
+        let outs = run_ranks_with(3, AlgoSelection::fast(), |rank, comm| {
+            let local: Vec<f32> = (0..6).map(|i| (rank * 6 + i) as f32).collect();
+            comm.reduce_scatter_sum(&[0, 1, 2], &local)
         });
-        assert_eq!(outs[0], vec![2.0, 4.0]);
-        assert_eq!(outs[1], vec![6.0, 8.0]);
+        for (me, o) in outs.iter().enumerate() {
+            for (j, v) in o.iter().enumerate() {
+                let i = me * 2 + j;
+                let expect: f32 = (0..3).map(|r| (r * 6 + i) as f32).sum();
+                assert_eq!(*v, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_v_variable_shards() {
+        for algos in both_suites() {
+            let counts = [1usize, 3, 2];
+            let outs = run_ranks_with(3, algos, |rank, comm| {
+                let local: Vec<f32> = (0..6).map(|i| (rank * 6 + i) as f32).collect();
+                comm.reduce_scatter_v(&[0, 1, 2], &local, &counts)
+            });
+            let offsets = [0usize, 1, 4];
+            for (me, o) in outs.iter().enumerate() {
+                assert_eq!(o.len(), counts[me]);
+                for (j, v) in o.iter().enumerate() {
+                    let i = offsets[me] + j;
+                    let expect: f32 = (0..3).map(|r| (r * 6 + i) as f32).sum();
+                    assert_eq!(*v, expect);
+                }
+            }
+        }
     }
 
     #[test]
     fn all_to_all_v_exchanges() {
-        let outs = run_ranks(3, |rank, comm| {
-            // rank r sends [r*10 + i] to member i.
-            let sends: Vec<Vec<f32>> =
-                (0..3).map(|i| vec![(rank * 10 + i) as f32]).collect();
-            comm.all_to_all_v(&[0, 1, 2], sends)
-        });
-        // rank 0 receives [0] from self, [10] from 1, [20] from 2.
-        assert_eq!(outs[0], vec![vec![0.0], vec![10.0], vec![20.0]]);
-        assert_eq!(outs[1], vec![vec![1.0], vec![11.0], vec![21.0]]);
-        assert_eq!(outs[2], vec![vec![2.0], vec![12.0], vec![22.0]]);
+        for algos in both_suites() {
+            let outs = run_ranks_with(3, algos, |rank, comm| {
+                // rank r sends [r*10 + i] to member i.
+                let sends: Vec<Vec<f32>> =
+                    (0..3).map(|i| vec![(rank * 10 + i) as f32]).collect();
+                comm.all_to_all_v(&[0, 1, 2], sends)
+            });
+            // rank 0 receives [0] from self, [10] from 1, [20] from 2.
+            assert_eq!(outs[0], vec![vec![0.0], vec![10.0], vec![20.0]]);
+            assert_eq!(outs[1], vec![vec![1.0], vec![11.0], vec![21.0]]);
+            assert_eq!(outs[2], vec![vec![2.0], vec![12.0], vec![22.0]]);
+        }
     }
 
     #[test]
     fn all_to_all_v_variable_sizes() {
-        let outs = run_ranks(2, |rank, comm| {
-            let sends = if rank == 0 {
-                vec![vec![], vec![1.0, 2.0, 3.0]]
-            } else {
-                vec![vec![9.0], vec![]]
-            };
-            comm.all_to_all_v(&[0, 1], sends)
-        });
-        assert_eq!(outs[0], vec![Vec::<f32>::new(), vec![9.0]]);
-        assert_eq!(outs[1], vec![vec![1.0, 2.0, 3.0], Vec::<f32>::new()]);
+        for algos in both_suites() {
+            let outs = run_ranks_with(2, algos, |rank, comm| {
+                let sends = if rank == 0 {
+                    vec![vec![], vec![1.0, 2.0, 3.0]]
+                } else {
+                    vec![vec![9.0], vec![]]
+                };
+                comm.all_to_all_v(&[0, 1], sends)
+            });
+            assert_eq!(outs[0], vec![Vec::<f32>::new(), vec![9.0]]);
+            assert_eq!(outs[1], vec![vec![1.0, 2.0, 3.0], Vec::<f32>::new()]);
+        }
     }
 
     #[test]
     fn broadcast_from_root() {
-        let outs = run_ranks(3, |_, comm| comm.broadcast(&[0, 1, 2], 1, &[7.0, 8.0]));
-        assert_eq!(outs, vec![vec![7.0, 8.0]; 3]);
+        for algos in both_suites() {
+            let outs =
+                run_ranks_with(3, algos, |_, comm| comm.broadcast(&[0, 1, 2], 1, &[7.0, 8.0]));
+            assert_eq!(outs, vec![vec![7.0, 8.0]; 3]);
+        }
     }
 
     #[test]
@@ -356,12 +617,100 @@ mod tests {
     #[test]
     fn concurrent_disjoint_a2a() {
         // Simulates EP groups folded inside a larger world: {0,2} and {1,3}.
-        let outs = run_ranks(4, |rank, comm| {
-            let group = if rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
-            let sends: Vec<Vec<f32>> = (0..2).map(|i| vec![(rank * 2 + i) as f32]).collect();
-            comm.all_to_all_v(&group, sends)
+        for algos in both_suites() {
+            let outs = run_ranks_with(4, algos, |rank, comm| {
+                let group = if rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+                let sends: Vec<Vec<f32>> =
+                    (0..2).map(|i| vec![(rank * 2 + i) as f32]).collect();
+                comm.all_to_all_v(&group, sends)
+            });
+            assert_eq!(outs[0], vec![vec![0.0], vec![4.0]]);
+            assert_eq!(outs[2], vec![vec![1.0], vec![5.0]]);
+        }
+    }
+
+    #[test]
+    fn non_contiguous_group_ring() {
+        // Group {0, 2, 5} inside a 6-rank world; other ranks idle.
+        let outs = run_ranks(6, |rank, comm| {
+            let group = [0usize, 2, 5];
+            if group.contains(&rank) {
+                comm.all_reduce_sum(&group, &[rank as f32, 1.0])
+            } else {
+                vec![]
+            }
         });
-        assert_eq!(outs[0], vec![vec![0.0], vec![4.0]]);
-        assert_eq!(outs[2], vec![vec![1.0], vec![5.0]]);
+        for r in [0usize, 2, 5] {
+            assert_eq!(outs[r], vec![7.0, 3.0]);
+        }
+    }
+
+    /// The determinism invariant, observable: the fast suite produces sums
+    /// bit-for-bit identical to the naive leader's rank-order fold even
+    /// when addition order changes the f32 result.
+    #[test]
+    fn rank_order_reduction_is_bit_exact() {
+        // (1e8 + 1) + (-1e8) = 0.0 in f32 (the 1 is absorbed); any other
+        // association yields 1.0.
+        let vals = [1e8f32, 1.0, -1e8];
+        let expect = ((vals[0] + vals[1]) + vals[2]).to_bits();
+        for algos in both_suites() {
+            let outs = run_ranks_with(3, algos, |rank, comm| {
+                comm.all_reduce_sum(&[0, 1, 2], &[vals[rank]])
+            });
+            for o in outs {
+                assert_eq!(o[0].to_bits(), expect, "algos {algos:?}");
+            }
+        }
+    }
+
+    /// Steady state performs zero payload allocations: pool misses plateau
+    /// after warmup while hits keep climbing.
+    #[test]
+    fn steady_state_collectives_allocate_nothing() {
+        let fabric = Fabric::new(4);
+        let group = [0usize, 1, 2, 3];
+        let step = |fabric: &Arc<Fabric>| {
+            run_ranks_on(fabric, |rank, comm| {
+                let mut buf: Vec<f32> = (0..257).map(|i| (rank + i) as f32).collect();
+                comm.all_reduce_sum_into(&group, &mut buf);
+                let sends: Vec<Vec<f32>> =
+                    (0..4).map(|i| vec![(rank * 4 + i) as f32; 33]).collect();
+                let mut recvs: Vec<Vec<f32>> = Vec::new();
+                comm.all_to_all_v_into(&group, &sends, &mut recvs);
+                let mut gathered = Vec::new();
+                comm.all_gather_v_into(&group, &buf[..7 + rank], &mut gathered);
+                gathered[0]
+            });
+        };
+        // Warm up until the pool plateaus (three consecutive steps minting
+        // nothing). The exact mint count depends on thread interleaving, so
+        // a fixed warmup length would flake on loaded machines.
+        let mut last_misses = fabric.pool_stats().1;
+        let mut stable = 0usize;
+        for _ in 0..200 {
+            step(&fabric);
+            let misses = fabric.pool_stats().1;
+            if misses == last_misses {
+                stable += 1;
+                if stable >= 3 {
+                    break;
+                }
+            } else {
+                stable = 0;
+                last_misses = misses;
+            }
+        }
+        assert!(stable >= 3, "pool never reached steady state");
+        let (_, misses_warm) = fabric.pool_stats();
+        for _ in 0..8 {
+            step(&fabric);
+        }
+        let (hits_after, misses_after) = fabric.pool_stats();
+        assert_eq!(
+            misses_warm, misses_after,
+            "steady-state collective calls must not allocate payload buffers"
+        );
+        assert!(hits_after > 0);
     }
 }

@@ -6,10 +6,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::runtime::{InputBuf, InputRef, Runtime};
-use crate::simcomm::run_ranks;
+use crate::simcomm::{run_ranks_with, AlgoSelection};
+use crate::util::error::Result;
 use crate::util::Rng;
 
 use super::data::SyntheticCorpus;
@@ -28,6 +28,10 @@ pub struct TrainerConfig {
     pub seed: u64,
     pub log_every: usize,
     pub clip_norm: f32,
+    /// Collective algorithms for the gradient all-reduce (ring by default;
+    /// `AlgoSelection::naive()` reproduces the leader-based oracle bit-for-bit
+    /// — every algorithm reduces in rank order, see [`crate::simcomm`]).
+    pub algos: AlgoSelection,
 }
 
 impl Default for TrainerConfig {
@@ -41,6 +45,7 @@ impl Default for TrainerConfig {
             seed: 42,
             log_every: 10,
             clip_norm: 1.0,
+            algos: AlgoSelection::fast(),
         }
     }
 }
@@ -134,7 +139,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     let runtime2 = runtime.clone();
 
     // Each rank runs the identical loop; rank 0's log is the report.
-    let reports = run_ranks(world, move |rank, comm| -> Result<Vec<(usize, f32)>> {
+    let algos = cfg.algos;
+    let reports = run_ranks_with(world, algos, move |rank, comm| -> Result<Vec<(usize, f32)>> {
         let exe = runtime2.load(&step_name)?;
         let group: Vec<usize> = (0..world).collect();
         let mut params = init_params.clone();
@@ -162,15 +168,18 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             let mut grads: Vec<Vec<f32>> = outs[1..].to_vec();
 
             if world > 1 {
-                // Average gradients (and the logged loss) over DP ranks.
+                // Average gradients (and the logged loss) over DP ranks —
+                // in place, so steady-state steps allocate no gradient
+                // buffers (the fabric's pooled scratch carries the chunks).
                 for g in grads.iter_mut() {
-                    let summed = comm.all_reduce_sum(&group, g);
-                    *g = summed;
+                    comm.all_reduce_sum_into(&group, g);
                     for x in g.iter_mut() {
                         *x /= world as f32;
                     }
                 }
-                loss = comm.all_reduce_sum(&group, &[loss])[0] / world as f32;
+                let mut l = [loss];
+                comm.all_reduce_sum_into(&group, &mut l);
+                loss = l[0] / world as f32;
             }
 
             Adam::clip_grads(&mut grads, cfg2.clip_norm);

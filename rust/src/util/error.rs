@@ -1,0 +1,99 @@
+//! Minimal `anyhow`-compatible error shim.
+//!
+//! The offline build cannot resolve the `anyhow` crate, so the handful of
+//! fallible subsystems (runtime, trainer, CLI) use this instead. The
+//! call-site surface matches the subset of `anyhow` the crate used:
+//! `Result<T>`, the [`crate::anyhow!`] macro (format-string or expression
+//! forms), and `?`-conversion from any `std::error::Error`.
+
+use std::fmt;
+
+/// A boxed, message-carrying error. Context chains are flattened into the
+/// message at construction time (no backtrace support offline).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// The flattened message.
+    pub fn to_string_lossy(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?`-conversion from any standard error (io, parse, …). `Error` itself
+// deliberately does not implement `std::error::Error`, exactly like
+// `anyhow::Error`, so this blanket impl cannot overlap `From<Error>`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e.to_string())
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::anyhow!`: a format string with args, or any single
+/// displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_and_expr_forms() {
+        let a = anyhow!("bad dim {} in {}", 3, "spec");
+        assert_eq!(format!("{a}"), "bad dim 3 in spec");
+        let b = anyhow!("plain");
+        assert_eq!(format!("{b:?}"), "plain");
+        let msg = String::from("owned");
+        let c = anyhow!(msg);
+        assert_eq!(format!("{c}"), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+
+        fn parse() -> Result<usize> {
+            Ok("12x".parse::<usize>()?)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let ok: Result<Vec<usize>> = ["1", "2"].iter().map(|s| Ok(s.len())).collect();
+        assert_eq!(ok.unwrap(), vec![1, 1]);
+    }
+}

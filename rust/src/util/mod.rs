@@ -1,9 +1,10 @@
 //! In-crate replacements for crates unavailable in the offline environment:
 //! PRNG ([`rng`]), benchmark harness ([`benchkit`]), CLI parsing ([`cli`]),
-//! property-test scaffolding ([`prop`]).
+//! property-test scaffolding ([`prop`]), error handling ([`error`]).
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod prop;
 pub mod rng;
 

@@ -2,8 +2,8 @@
 //! invariants of the mapping, dispatcher, collectives, and pipeline.
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::collectives::CommModel;
-use moe_folding::config::ParallelConfig;
-use moe_folding::dispatcher::{Assignment, Permutation};
+use moe_folding::config::{DropPolicy, ParallelConfig};
+use moe_folding::dispatcher::{Assignment, Permutation, Router, RouterConfig};
 use moe_folding::mapping::ParallelMapping;
 use moe_folding::pipeline::{bubble_fraction, simulate_1f1b};
 use moe_folding::util::prop::{draw, forall};
@@ -98,6 +98,128 @@ fn prop_permutation_roundtrip() {
                 if (a - b).abs() > 1e-5 {
                     return Err(format!("{a} vs {b}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Permutation round-trip in the presence of dropped copies: exactly one
+/// kept copy per token with prob 1.0 (plus random dropped extras) makes
+/// permute∘unpermute the identity **bit-for-bit**, and the plan must cover
+/// exactly the kept assignment indices.
+#[test]
+fn prop_permutation_roundtrip_with_drops() {
+    forall(
+        "permutation roundtrip with drops",
+        80,
+        |rng: &mut Rng| {
+            let n = draw::in_range(rng, 1, 48);
+            let e = draw::in_range(rng, 1, 12);
+            let h = draw::in_range(rng, 1, 6);
+            let mut assignments = Vec::new();
+            for t in 0..n {
+                assignments.push(Assignment {
+                    token: t,
+                    expert: rng.next_below(e),
+                    prob: 1.0,
+                    kept: true,
+                });
+                if rng.next_below(2) == 0 {
+                    // Dropped copies must not contribute to the plan.
+                    assignments.push(Assignment {
+                        token: t,
+                        expert: rng.next_below(e),
+                        prob: 0.7,
+                        kept: false,
+                    });
+                }
+            }
+            let mut tokens = vec![0.0f32; n * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            (n, e, h, assignments, tokens)
+        },
+        |(n, e, h, assignments, tokens)| {
+            let p = Permutation::from_assignments(assignments, *e);
+            let kept: Vec<usize> = assignments
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.kept)
+                .map(|(i, _)| i)
+                .collect();
+            if p.total() != kept.len() {
+                return Err(format!("plan covers {} copies, kept {}", p.total(), kept.len()));
+            }
+            let mut order = p.order.clone();
+            order.sort_unstable();
+            if order != kept {
+                return Err("order is not a permutation of the kept copies".into());
+            }
+            let permuted = p.permute(tokens, *h, assignments);
+            let restored = p.unpermute_accumulate(&permuted, *h, assignments, *n);
+            for (i, (a, b)) in tokens.iter().zip(&restored).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("idx {i}: {a} vs {b} (not bit-identical)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Router capacity invariants under both dropping scopes:
+/// `tokens_routed + tokens_dropped == n·top_k`, per-expert load ≤ derived
+/// capacity, and `expert_load` sums to the kept count.
+#[test]
+fn prop_router_capacity_invariants() {
+    forall(
+        "router capacity invariants",
+        60,
+        |rng: &mut Rng| {
+            let e = draw::pow2_upto(rng, 16).max(2);
+            let k = draw::in_range(rng, 1, e.min(4));
+            let n = draw::in_range(rng, 1, 96);
+            let cf = 0.5 + rng.next_f64() * 2.0;
+            let policy = if rng.next_below(2) == 0 {
+                DropPolicy::SubSequence
+            } else {
+                DropPolicy::FullSequence
+            };
+            let seed = rng.next_u64();
+            (e, k, n, cf, policy, seed)
+        },
+        |&(e, k, n, cf, policy, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let router = Router::init(
+                RouterConfig {
+                    hidden: 16,
+                    num_experts: e,
+                    top_k: k,
+                    capacity_factor: cf,
+                    drop_policy: policy,
+                    capacity_override: None,
+                },
+                &mut rng,
+            );
+            let mut tokens = vec![0.0f32; n * 16];
+            rng.fill_normal(&mut tokens, 1.0);
+            let d = router.route(&tokens);
+            if d.assignments.len() != n * k {
+                return Err(format!("{} assignments, expected {}", d.assignments.len(), n * k));
+            }
+            let kept = d.assignments.iter().filter(|a| a.kept).count();
+            let dropped = d.assignments.len() - kept;
+            if kept + dropped != n * k {
+                return Err(format!("conservation: {kept} + {dropped} != {}", n * k));
+            }
+            let capacity = ((cf * n as f64 * k as f64 / e as f64).ceil() as usize).max(1);
+            for (ex, &load) in d.expert_load.iter().enumerate() {
+                if load > capacity {
+                    return Err(format!("expert {ex}: load {load} > capacity {capacity}"));
+                }
+            }
+            if d.expert_load.iter().sum::<usize>() != kept {
+                return Err("expert_load sum != kept copies".into());
             }
             Ok(())
         },
