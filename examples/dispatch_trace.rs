@@ -7,8 +7,9 @@
 
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::collectives::CommModel;
-use moe_folding::config::DropPolicy;
+use moe_folding::config::{DropPolicy, ParallelConfig};
 use moe_folding::dispatcher::{DistributedMoeLayer, Router, RouterConfig};
+use moe_folding::mapping::RuntimeTopology;
 use moe_folding::simcomm::run_ranks;
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::util::cli::Args;
@@ -43,23 +44,12 @@ fn main() {
     let mut tokens = vec![0.0f32; world * n * h];
     rng.fill_normal(&mut tokens, 1.0);
 
+    // Groups from the folded runtime topology (MoE grid etp-fastest).
+    let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, ep, etp, 1))
+        .expect("valid folded config");
     let stats = run_ranks(world, |rank, comm| {
-        let ep_idx = rank / etp;
-        let etp_idx = rank % etp;
-        let layer = DistributedMoeLayer {
-            router: router.clone(),
-            local_experts: (0..e / ep)
-                .map(|le| {
-                    let g = ep_idx * (e / ep) + le;
-                    if etp > 1 { experts[g].shard(etp, etp_idx) } else { experts[g].clone() }
-                })
-                .collect(),
-            ep_group: (0..ep).map(|i| i * etp + etp_idx).collect(),
-            etp_group: (0..etp).map(|i| ep_idx * etp + i).collect(),
-            ep_index: ep_idx,
-            num_experts: e,
-            seq_group: None,
-        };
+        let layer =
+            DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts);
         let mine = tokens[rank * n * h..(rank + 1) * n * h].to_vec();
         layer.forward(&comm, &mine).1
     });

@@ -14,10 +14,11 @@
 //!
 //! Run: `make artifacts && cargo run --release --example loss_equivalence`
 
-use moe_folding::config::DropPolicy;
+use moe_folding::config::{DropPolicy, ParallelConfig};
 use moe_folding::dispatcher::{
     reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
 };
+use moe_folding::mapping::RuntimeTopology;
 use moe_folding::simcomm::run_ranks;
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::train::{train, TrainerConfig};
@@ -48,20 +49,13 @@ fn dispatcher_equivalence() {
     let mut tokens = vec![0.0f32; world * n_per_rank * H];
     rng.fill_normal(&mut tokens, 1.0);
 
+    // EP/ETP groups from the folded runtime topology — the same source of
+    // truth the trainer and pipeline use.
+    let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, ep, etp, 1))
+        .expect("valid folded config");
     let outs = run_ranks(world, |rank, comm| {
-        let ep_idx = rank / etp;
-        let etp_idx = rank % etp;
-        let layer = DistributedMoeLayer {
-            router: router.clone(),
-            local_experts: (0..E / ep)
-                .map(|le| experts[ep_idx * (E / ep) + le].shard(etp, etp_idx))
-                .collect(),
-            ep_group: (0..ep).map(|i| i * etp + etp_idx).collect(),
-            etp_group: (0..etp).map(|i| ep_idx * etp + i).collect(),
-            ep_index: ep_idx,
-            num_experts: E,
-            seq_group: None,
-        };
+        let layer =
+            DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts);
         let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
         layer.forward(&comm, &mine).0
     });

@@ -11,6 +11,7 @@ use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::dispatcher::{
     DispatchScratch, DistributedMoeLayer, Permutation, Router, RouterConfig,
 };
+use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{PerfModel, Strategy};
 use moe_folding::simcomm::{run_ranks, run_ranks_on, AlgoSelection, Fabric};
 use moe_folding::train::math::SwigluExpert;
@@ -64,14 +65,11 @@ fn main() {
     );
     let mut small_tokens = vec![0.0f32; 4 * 128 * 64];
     rng.fill_normal(&mut small_tokens, 1.0);
-    let build_layer = |rank: usize| DistributedMoeLayer {
-        router: small_router.clone(),
-        local_experts: experts[rank * 2..(rank + 1) * 2].to_vec(),
-        ep_group: vec![0, 1, 2, 3],
-        etp_group: vec![rank],
-        ep_index: rank,
-        num_experts: e,
-        seq_group: None,
+    // EP4 groups come from the folded runtime topology, like the executed
+    // path everywhere else.
+    let topo = RuntimeTopology::folded(ParallelConfig::new(4, 1, 1, 4, 1, 1)).unwrap();
+    let build_layer = |rank: usize| {
+        DistributedMoeLayer::from_topology(topo.view(rank), small_router.clone(), &experts)
     };
     h.bench("dispatch/ep4_128tok_per_rank", || {
         let outs = run_ranks(4, |rank, comm| {
@@ -104,6 +102,29 @@ fn main() {
          ({:.4} misses/hit — warmup only; steady state allocates nothing)",
         misses as f64 / hits.max(1) as f64
     );
+
+    // A genuinely *folded* configuration (TP2 attention vs ETP1·EP4 MoE on
+    // 8 ranks, tp·cp != etp·ep — inexpressible pre-folding): two EP blocks
+    // dispatch concurrently inside one world, groups from the topology.
+    let ftopo = RuntimeTopology::folded(ParallelConfig::new(8, 2, 1, 4, 1, 1)).unwrap();
+    let ffabric = Fabric::new(8);
+    let flayers: Vec<DistributedMoeLayer> = (0..8)
+        .map(|r| {
+            DistributedMoeLayer::from_topology(ftopo.view(r), small_router.clone(), &experts)
+        })
+        .collect();
+    let fscratches: Vec<Mutex<DispatchScratch>> =
+        (0..8).map(|_| Mutex::new(DispatchScratch::default())).collect();
+    let mut folded_tokens = vec![0.0f32; 8 * 64 * 64];
+    rng.fill_normal(&mut folded_tokens, 1.0);
+    h.bench("dispatch/folded_tp2_ep4_world8_64tok", || {
+        let outs = run_ranks_on(&ffabric, |rank, comm| {
+            let mut scratch = fscratches[rank].lock().unwrap();
+            let mine = &folded_tokens[rank * 64 * 64..(rank + 1) * 64 * 64];
+            flayers[rank].forward_with_scratch(&comm, mine, &mut scratch).0
+        });
+        black_box(outs);
+    });
 
     // Collectives engine: naive-leader oracle vs fast suite. The leader
     // serializes all traffic (and all reduction arithmetic) through one

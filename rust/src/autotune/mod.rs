@@ -101,11 +101,17 @@ pub struct Constraints {
 
 impl Constraints {
     pub fn admits(&self, c: &ParallelConfig) -> bool {
-        self.tp.map_or(true, |v| c.tp == v)
-            && self.cp.map_or(true, |v| c.cp == v)
-            && self.ep.map_or(true, |v| c.ep == v)
-            && self.etp.map_or(true, |v| c.etp == v)
-            && self.pp.map_or(true, |v| c.pp == v)
+        fn pinned(dim: Option<usize>, actual: usize) -> bool {
+            match dim {
+                Some(v) => actual == v,
+                None => true,
+            }
+        }
+        pinned(self.tp, c.tp)
+            && pinned(self.cp, c.cp)
+            && pinned(self.ep, c.ep)
+            && pinned(self.etp, c.etp)
+            && pinned(self.pp, c.pp)
     }
 }
 

@@ -15,7 +15,8 @@ pub use workflow::{reference_moe_forward, DispatchScratch, DispatchStats, Distri
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DropPolicy;
+    use crate::config::{DropPolicy, ParallelConfig};
+    use crate::mapping::RuntimeTopology;
     use crate::simcomm::run_ranks;
     use crate::train::math::SwigluExpert;
     use crate::util::Rng;
@@ -52,7 +53,9 @@ mod tests {
     }
 
     /// Core equivalence: distributed forward over (ep, etp) == single-rank
-    /// reference, for every parallel decomposition of 4 ranks.
+    /// reference, for every parallel decomposition of 4 ranks. Every rank's
+    /// EP/ETP groups come from the folded runtime topology (MoE grid
+    /// `(pp, edp, ep, etp)`, etp fastest), not hand-rolled arithmetic.
     fn check_equivalence(ep: usize, etp: usize, policy: DropPolicy) {
         let world = ep * etp;
         let n_per_rank = 12;
@@ -60,33 +63,11 @@ mod tests {
         let experts = build_experts(200);
         let all_tokens = tokens(n_per_rank * world, 300);
 
-        // Rank layout: grid (ep, etp), etp fastest — EP group = ranks with
-        // the same etp coordinate; ETP group = consecutive ranks.
+        let topo =
+            RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, ep, etp, 1)).unwrap();
         let outs = run_ranks(world, |rank, comm| {
-            let ep_idx = rank / etp;
-            let etp_idx = rank % etp;
-            let ep_group: Vec<usize> = (0..ep).map(|i| i * etp + etp_idx).collect();
-            let etp_group: Vec<usize> = (0..etp).map(|i| ep_idx * etp + i).collect();
-            let epr = E / ep;
-            let local_experts: Vec<SwigluExpert> = (0..epr)
-                .map(|le| {
-                    let global = ep_idx * epr + le;
-                    if etp > 1 {
-                        experts[global].shard(etp, etp_idx)
-                    } else {
-                        experts[global].clone()
-                    }
-                })
-                .collect();
-            let layer = DistributedMoeLayer {
-                router: router.clone(),
-                local_experts,
-                ep_group,
-                etp_group,
-                ep_index: ep_idx,
-                num_experts: E,
-                seq_group: None,
-            };
+            let layer =
+                DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts);
             let my_tokens =
                 all_tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
             layer.forward(&comm, &my_tokens).0
@@ -179,17 +160,13 @@ mod tests {
         // Reference: full-batch scope.
         let reference = reference_moe_forward(&router, &experts, &all_tokens, None);
 
+        // TP2 attention on 2 ranks makes the topology's sequence block
+        // {0, 1}, which is also the EP2 group of the MoE grid.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(2, 2, 1, 2, 1, 1)).unwrap();
         let outs = run_ranks(2, |rank, comm| {
-            let epr = E / 2;
-            let layer = DistributedMoeLayer {
-                router: router.clone(),
-                local_experts: experts[rank * epr..(rank + 1) * epr].to_vec(),
-                ep_group: vec![0, 1],
-                etp_group: vec![rank],
-                ep_index: rank,
-                num_experts: E,
-                seq_group: Some(vec![0, 1]),
-            };
+            let layer =
+                DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts);
+            assert_eq!(layer.seq_group.as_deref(), Some(&[0usize, 1][..]));
             let mine = all_tokens[rank * 8 * H..(rank + 1) * 8 * H].to_vec();
             layer.forward(&comm, &mine).0
         });

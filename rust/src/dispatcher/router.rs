@@ -115,9 +115,10 @@ impl Router {
         logits
     }
 
-    /// Top-k selection with deterministic tie-break (lower expert id wins).
-    /// K rounds of (argmax, mask) — no allocation, no sort; k is 1-8 in
-    /// every MoE of interest, so this beats sorting E entries per token.
+    /// Top-k selection with deterministic, NaN-safe tie-break (lower expert
+    /// id wins; see [`argmax_untaken`]). K rounds of (argmax, mask) — no
+    /// allocation, no sort; k is 1-8 in every MoE of interest, so this beats
+    /// sorting E entries per token.
     pub fn topk(&self, probs: &[f32], n: usize) -> Vec<Assignment> {
         let e = self.config.num_experts;
         let k = self.config.top_k.min(e);
@@ -127,16 +128,17 @@ impl Router {
             let row = &probs[t * e..(t + 1) * e];
             taken.iter_mut().for_each(|x| *x = false);
             for _ in 0..k {
-                let mut best = usize::MAX;
-                let mut best_p = f32::NEG_INFINITY;
-                for (j, (&p, &tk)) in row.iter().zip(taken.iter()).enumerate() {
-                    if !tk && p > best_p {
-                        best = j;
-                        best_p = p;
-                    }
-                }
+                let best = argmax_untaken(row, &taken);
+                let p = row[best];
                 taken[best] = true;
-                out.push(Assignment { token: t, expert: best, prob: best_p, kept: true });
+                out.push(Assignment {
+                    token: t,
+                    expert: best,
+                    // A non-finite gate (all-NaN row fallback) contributes
+                    // nothing to the combine instead of poisoning it.
+                    prob: if p.is_finite() { p } else { 0.0 },
+                    kept: true,
+                });
             }
         }
         out
@@ -169,6 +171,33 @@ impl Router {
         }
     }
 
+    /// Switch-style auxiliary load-balancing loss over gate `probs`
+    /// (`[n × E]`): `E · Σ_e f_e · P_e`, with `f_e` the fraction of tokens
+    /// whose top-1 expert is `e` and `P_e` the mean gate probability of `e`.
+    ///
+    /// The top-1 statistic shares [`argmax_untaken`] with [`Self::topk`], so
+    /// `f_top1` counts exactly the expert dispatch would pick — identical
+    /// tie-breaks, no panic on NaN gates. Callers with a gathered
+    /// full-sequence tensor (full-sequence drop scope) get bit-identical
+    /// values on every rank, since the fold order depends only on `probs`.
+    pub fn aux_loss(&self, probs: &[f32], n: usize) -> f32 {
+        let e = self.config.num_experts;
+        let mut p_mean = vec![0.0f32; e];
+        for t in 0..n {
+            for (i, pm) in p_mean.iter_mut().enumerate() {
+                *pm += probs[t * e + i] / n.max(1) as f32;
+            }
+        }
+        let mut f_top1 = vec![0.0f32; e];
+        let unmasked = vec![false; e];
+        for t in 0..n {
+            let row = &probs[t * e..(t + 1) * e];
+            let top = argmax_untaken(row, &unmasked);
+            f_top1[top] += 1.0 / n.max(1) as f32;
+        }
+        e as f32 * f_top1.iter().zip(&p_mean).map(|(f, p)| f * p).sum::<f32>()
+    }
+
     /// Full routing pipeline on a local chunk of tokens.
     pub fn route(&self, tokens: &[f32]) -> RouteDecision {
         let n = tokens.len() / self.config.hidden;
@@ -182,25 +211,37 @@ impl Router {
                 expert_load[a.expert] += 1;
             }
         }
-        // Switch aux loss: E * Σ_e f_e · P_e, with f_e the fraction of
-        // tokens whose top-1 is e and P_e the mean gate prob of e.
-        let mut p_mean = vec![0.0f32; e];
-        for t in 0..n {
-            for (i, pm) in p_mean.iter_mut().enumerate() {
-                *pm += probs[t * e + i] / n.max(1) as f32;
-            }
-        }
-        let mut f_top1 = vec![0.0f32; e];
-        for t in 0..n {
-            let row = &probs[t * e..(t + 1) * e];
-            let top = (0..e)
-                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap().then(b.cmp(&a)))
-                .unwrap();
-            f_top1[top] += 1.0 / n.max(1) as f32;
-        }
-        let aux_loss =
-            e as f32 * f_top1.iter().zip(&p_mean).map(|(f, p)| f * p).sum::<f32>();
+        let aux_loss = self.aux_loss(&probs, n);
         RouteDecision { assignments, num_tokens: n, expert_load, aux_loss }
+    }
+}
+
+/// Deterministic, NaN-safe argmax shared by [`Router::topk`] and the aux
+/// loss's top-1 statistic ([`Router::aux_loss`]): the highest comparable
+/// (non-NaN) probability wins, exact ties break to the **lower** expert id,
+/// and a row whose remaining entries are all NaN falls back to the lowest
+/// unmasked index, so selection is total and never panics. A single helper
+/// guarantees the two call sites can never disagree on tied or NaN gates
+/// (which would skew `f_top1` against the actually-dispatched expert).
+fn argmax_untaken(row: &[f32], taken: &[bool]) -> usize {
+    let mut best = usize::MAX;
+    let mut best_p = f32::NEG_INFINITY;
+    for (j, (&p, &tk)) in row.iter().zip(taken.iter()).enumerate() {
+        if tk || p.is_nan() {
+            continue;
+        }
+        if best == usize::MAX || p > best_p {
+            best = j;
+            best_p = p;
+        }
+    }
+    if best != usize::MAX {
+        best
+    } else {
+        taken
+            .iter()
+            .position(|&t| !t)
+            .expect("argmax_untaken: no unmasked entry (k > num_experts?)")
     }
 }
 
@@ -287,6 +328,62 @@ mod tests {
         let r = Router::new(config, vec![0.0; 16 * 4]); // zero weight => uniform
         let d = r.route(&tokens(256, 16, 10));
         assert!((d.aux_loss - 1.0).abs() < 0.05, "aux {}", d.aux_loss);
+    }
+
+    /// Regression (ISSUE 2): exactly-tied gate probabilities must break to
+    /// the lower expert id in *both* top-k dispatch and the aux-loss top-1
+    /// statistic — they share one helper, so `f_top1` counts the expert
+    /// that was actually dispatched.
+    #[test]
+    fn tied_gates_break_to_lower_expert_in_topk_and_aux() {
+        // Zero gating weight => every expert exactly tied at 1/E.
+        let r = Router::new(cfg(8, 2, 1.0, DropPolicy::Dropless), vec![0.0; 16 * 8]);
+        let d = r.route(&tokens(16, 16, 3));
+        for t in 0..16 {
+            assert_eq!(d.assignments[t * 2].expert, 0, "token {t} top-1");
+            assert_eq!(d.assignments[t * 2 + 1].expert, 1, "token {t} top-2");
+        }
+        // With ties resolved consistently, f_top1 = [1, 0, ...] and
+        // P_e = 1/8, so aux = 8 * 1 * (1/8) = 1 exactly (up to the mean's
+        // accumulation rounding).
+        assert!((d.aux_loss - 1.0).abs() < 1e-5, "aux {}", d.aux_loss);
+    }
+
+    /// Regression (ISSUE 2): NaN gate logits used to panic in the aux-loss
+    /// argmax (`partial_cmp().unwrap()`) and to index out of bounds in
+    /// `topk`. Selection must be total and deterministic instead.
+    #[test]
+    fn nan_gates_select_deterministically_without_panic() {
+        let mut rng = Rng::seed_from_u64(21);
+        let r = Router::init(cfg(8, 2, 1.0, DropPolicy::SubSequence), &mut rng);
+        let mut t = tokens(8, 16, 22);
+        // Token 0's features are NaN -> its whole gate row is NaN.
+        for x in t[0..16].iter_mut() {
+            *x = f32::NAN;
+        }
+        let d = r.route(&t);
+        assert_eq!(d.assignments.len(), 16);
+        // All-NaN row: fallback picks the lowest expert ids, zero weight.
+        assert_eq!(d.assignments[0].expert, 0);
+        assert_eq!(d.assignments[1].expert, 1);
+        assert_eq!(d.assignments[0].prob, 0.0);
+        assert_eq!(d.assignments[1].prob, 0.0);
+        // Healthy tokens are routed normally with finite gates.
+        assert!(d.assignments[2..].iter().all(|a| a.prob.is_finite()));
+        // The aux statistics still *contain* the NaN probabilities (real
+        // training would surface the NaN loss), but selection never panics.
+        assert!(d.aux_loss.is_nan());
+    }
+
+    /// A partially-NaN row skips the NaN entries rather than letting them
+    /// win or aborting the scan.
+    #[test]
+    fn partial_nan_row_selects_best_finite_gate() {
+        let r = Router::new(cfg(4, 1, 1.0, DropPolicy::Dropless), vec![0.0; 16 * 4]);
+        let probs = [0.3f32, f32::NAN, 0.5, 0.1];
+        let a = r.topk(&probs, 1);
+        assert_eq!(a[0].expert, 2);
+        assert_eq!(a[0].prob, 0.5);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 //! allocations** (fabric pool + reused staging buffers).
 
 use crate::config::DropPolicy;
+use crate::mapping::RankView;
 use crate::simcomm::Communicator;
 use crate::train::math::SwigluExpert;
 
@@ -38,6 +39,11 @@ pub struct DispatchStats {
     pub etp_rs_bytes: usize,
     pub tokens_routed: usize,
     pub tokens_dropped: usize,
+    /// Auxiliary load-balancing loss of this forward's routing decision.
+    /// Under full-sequence dropping it is computed from the *gathered*
+    /// full-sequence statistics, so every rank of the sequence group
+    /// reports the bit-identical value.
+    pub aux_loss: f32,
 }
 
 /// Reusable staging buffers for the dispatch hot path. Construct once per
@@ -89,6 +95,53 @@ pub struct DistributedMoeLayer {
 }
 
 impl DistributedMoeLayer {
+    /// Build this rank's layer slice from a runtime-topology view
+    /// ([`crate::mapping::RuntimeTopology`]): the EP All-to-All group, the
+    /// ETP AllGather/ReduceScatter group, and the sequence-drop scope all
+    /// come from the mapping instead of ad-hoc rank arithmetic, and this
+    /// rank's expert shards are cut from `global_experts` by its (EP, ETP)
+    /// coordinates.
+    pub fn from_topology(
+        view: &RankView,
+        router: Router,
+        global_experts: &[SwigluExpert],
+    ) -> Self {
+        let ep = view.ep_group.len();
+        let etp = view.etp_group.len();
+        let num_experts = router.config.num_experts;
+        assert_eq!(
+            global_experts.len(),
+            num_experts,
+            "one global expert per router expert"
+        );
+        assert_eq!(num_experts % ep, 0, "num_experts must divide over EP");
+        let epr = num_experts / ep;
+        let local_experts: Vec<SwigluExpert> = (0..epr)
+            .map(|le| {
+                let global = view.ep_index * epr + le;
+                if etp > 1 {
+                    global_experts[global].shard(etp, view.etp_index)
+                } else {
+                    global_experts[global].clone()
+                }
+            })
+            .collect();
+        let seq_group = if view.seq_group.len() > 1 {
+            Some(view.seq_group.clone())
+        } else {
+            None
+        };
+        Self {
+            router,
+            local_experts,
+            ep_group: view.ep_group.clone(),
+            etp_group: view.etp_group.clone(),
+            ep_index: view.ep_index,
+            num_experts,
+            seq_group,
+        }
+    }
+
     pub fn experts_per_rank(&self) -> usize {
         self.num_experts / self.ep_group.len()
     }
@@ -105,25 +158,36 @@ impl DistributedMoeLayer {
         match (&self.seq_group, self.router.config.drop_policy) {
             (Some(group), DropPolicy::FullSequence) if group.len() > 1 => {
                 // Gather gate probabilities across the sequence group so the
-                // capacity decision sees the whole sequence.
+                // capacity decision sees the whole sequence. Ranks may hold
+                // *uneven* chunks (non-divisible sequence lengths), so this
+                // rank's slice offset is derived from the gathered per-rank
+                // token counts — never from `my_idx * n_local`.
                 let probs_local = self.router.gate_probs(tokens);
+                let counts = comm.all_gather_v(group, &[n_local as f32]);
                 let gathered = comm.all_gather_v(group, &probs_local);
                 let e = self.router.config.num_experts;
                 let n_total = gathered.len() / e;
+                debug_assert_eq!(
+                    counts.iter().map(|&c| c as usize).sum::<usize>(),
+                    n_total,
+                    "gathered counts must cover the sequence"
+                );
                 let mut assignments = self.router.topk(&gathered, n_total);
                 self.router.apply_capacity(&mut assignments, n_total);
-                // Slice out this rank's tokens (group members hold equal
-                // chunks in group order).
+                // Aux loss from the full-sequence statistics: every rank
+                // folds the same gathered tensor, so the value is
+                // bit-identical (replica-consistent) across the group —
+                // never the local chunk's statistics.
+                let aux_loss = self.router.aux_loss(&gathered, n_total);
                 let my_idx = group.iter().position(|&r| r == comm.rank()).unwrap();
-                let offset = my_idx * n_local;
+                let offset: usize = counts[..my_idx].iter().map(|&c| c as usize).sum();
                 let k = self.router.config.top_k.min(e);
-                let mut local: Vec<Assignment> = assignments
-                    [offset * k..(offset + n_local) * k]
+                let local: Vec<Assignment> = assignments[offset * k..(offset + n_local) * k]
                     .iter()
                     .map(|a| Assignment { token: a.token - offset, ..*a })
                     .collect();
                 let mut expert_load = vec![0usize; e];
-                for a in local.iter_mut() {
+                for a in &local {
                     if a.kept {
                         expert_load[a.expert] += 1;
                     }
@@ -132,7 +196,7 @@ impl DistributedMoeLayer {
                     assignments: local,
                     num_tokens: n_local,
                     expert_load,
-                    aux_loss: 0.0,
+                    aux_loss,
                 }
             }
             _ => self.router.route(tokens),
@@ -167,6 +231,7 @@ impl DistributedMoeLayer {
         let decision = self.route(comm, tokens);
         stats.tokens_routed = decision.assignments.iter().filter(|a| a.kept).count();
         stats.tokens_dropped = decision.assignments.len() - stats.tokens_routed;
+        stats.aux_loss = decision.aux_loss;
         let perm = Permutation::from_assignments(&decision.assignments, self.num_experts);
         let permuted = perm.permute(tokens, h, &decision.assignments);
 

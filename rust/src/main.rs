@@ -12,7 +12,7 @@ use moe_folding::autotune::Constraints;
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::coordinator;
-use moe_folding::mapping::ParallelMapping;
+use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::perfmodel::{PerfModel, Strategy};
 use moe_folding::train::{train, TrainerConfig};
 use moe_folding::util::cli::Args;
@@ -25,7 +25,7 @@ USAGE: moe-folding <command> [options]
 
 COMMANDS:
   plan      --model <name> --gpus <n> [--strategy <s>] [--tp N --cp N --ep N --etp N --pp N]
-  mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy]
+  mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
   fig5      [--model <name>] [--ep-etp 8|16]
   fig6      [--model <name>]
@@ -127,6 +127,18 @@ fn main() -> moe_folding::util::error::Result<()> {
             }
             let cluster = ClusterSpec::eos(gpus);
             println!("fold report: {:?}", mapping.fold_report(&cluster));
+            // `--rank R`: the runtime-topology view one rank executes with
+            // (the groups the dispatcher/trainer/pipeline actually use).
+            if let Some(r) = args.get("rank") {
+                let rank: usize = r.parse().map_err(|_| moe_folding::anyhow!("bad --rank"))?;
+                if rank >= gpus {
+                    return Err(moe_folding::anyhow!("--rank {rank} out of range (gpus {gpus})"));
+                }
+                let topo = RuntimeTopology::from_mapping(mapping)
+                    .map_err(|e| moe_folding::anyhow!(e))?;
+                println!("\n# runtime topology view");
+                println!("{}", topo.view(rank).summary());
+            }
         }
         "table1" => print!("{}", coordinator::table1(&pm).markdown()),
         "table2" => print!("{}", coordinator::table2(&pm).markdown()),

@@ -22,9 +22,11 @@
 
 pub mod grid;
 pub mod listing1;
+pub mod runtime;
 
 pub use grid::Grid;
 pub use listing1::generate_mappings_listing1;
+pub use runtime::{RankView, RuntimeTopology};
 
 use std::collections::BTreeMap;
 
@@ -246,7 +248,9 @@ impl ParallelMapping {
             (&self.attention, "CP", self.config.cp),
             (&self.attention, "DP", self.config.dp()),
             (&self.attention, "PP", self.config.pp),
+            (&self.moe, "ETP", self.config.etp),
             (&self.moe, "EP", self.config.ep),
+            (&self.moe, "EDP", self.config.edp()),
             (&self.moe, "PP", self.config.pp),
         ];
         for (set, axis, size) in expect {

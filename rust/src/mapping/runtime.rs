@@ -1,0 +1,337 @@
+//! The **runtime topology** layer: per-rank group views, materialized from a
+//! [`ParallelMapping`], that the *executed* path consumes.
+//!
+//! [`ParallelMapping::folded`] / [`ParallelMapping::legacy`] define every
+//! process group of the dual `TP×CP×DP×PP` / `ETP×EP×EDP×PP` layout (paper
+//! §3.2, Listing 1), but a group *partition* is the planner's view of the
+//! world. The pieces that actually run collectives — the token dispatcher
+//! ([`crate::dispatcher::DistributedMoeLayer`]), the trainer's gradient
+//! synchronization ([`crate::train::GradSync`]), and the functional pipeline
+//! ([`crate::pipeline::execute_1f1b_mapped`]) — each need *this rank's*
+//! groups. [`RuntimeTopology`] bridges the two: it validates the mapping
+//! (axis partitions tile the world, attention and MoE PP partitions agree)
+//! and materializes one [`RankView`] per rank with every group membership
+//! and coordinate resolved, so no executed component hand-rolls rank
+//! arithmetic again.
+//!
+//! # Worked example (Table 3, Mixtral-8x22B folded optimum)
+//!
+//! `TP2 · CP1 · EP8 · ETP1 · PP8` on 128 GPUs (`DP8`, `EDP2`). For rank 5:
+//!
+//! * attention: TP group `[4, 5]`, DP group `[1, 3, 5, 7, 9, 11, 13, 15]`,
+//!   PP group `[5, 21, 37, …, 117]` (stage 0 of 8);
+//! * MoE: EP group `[0..8]` (eight *consecutive* ranks — one NVLink
+//!   domain, the folding win), ETP group `[5]`, EDP group `[5, 13]`;
+//! * sequence-drop scope: `[4, 5]` (the TP×CP block holding one sequence).
+//!
+//! Under the legacy (coupled) layout the same degrees are not even
+//! expressible (`etp != tp`); the closest coupled config places EP group
+//! members `tp` ranks apart, pushing token All-to-All onto InfiniBand.
+//! `moe-folding mapping --gpus 128 --tp 2 --ep 8 --pp 8 --rank 5` prints
+//! this view from the CLI.
+
+use std::collections::BTreeMap;
+
+use crate::config::ParallelConfig;
+
+use super::{GroupSet, ParallelMapping};
+
+/// One rank's complete view of the dual topology: group membership (sorted
+/// global ranks) and this rank's coordinate on every axis of both grids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankView {
+    pub rank: usize,
+    /// Attention tensor-parallel group and this rank's position in it.
+    pub tp_group: Vec<usize>,
+    pub tp_index: usize,
+    /// Attention context-parallel group.
+    pub cp_group: Vec<usize>,
+    pub cp_index: usize,
+    /// Attention data-parallel group (gradient all-reduce for attention
+    /// parameters).
+    pub dp_group: Vec<usize>,
+    pub dp_index: usize,
+    /// Pipeline group in **stage order** (`pp_group[pp_stage] == rank`);
+    /// identical partition for the attention and MoE grids by construction.
+    pub pp_group: Vec<usize>,
+    pub pp_stage: usize,
+    /// MoE expert-tensor-parallel group (AllGather-V / ReduceScatter-V).
+    pub etp_group: Vec<usize>,
+    pub etp_index: usize,
+    /// MoE expert-parallel group (token All-to-All-V); `ep_index` selects
+    /// which contiguous slice of global experts this rank hosts.
+    pub ep_group: Vec<usize>,
+    pub ep_index: usize,
+    /// MoE expert-data-parallel group (gradient all-reduce for expert
+    /// parameters) — **not** the attention DP group whenever `dp != edp`.
+    pub edp_group: Vec<usize>,
+    pub edp_index: usize,
+    /// The attention TP×CP block that jointly holds one full sequence —
+    /// the gather scope for full-sequence token dropping (paper §3.3).
+    pub seq_group: Vec<usize>,
+}
+
+impl RankView {
+    /// Human-readable one-rank summary (CLI `mapping --rank N`, docs).
+    pub fn summary(&self) -> String {
+        format!(
+            "rank {r}\n  attention: TP {tp:?}[{tpi}]  CP {cp:?}[{cpi}]  DP {dp:?}[{dpi}]\n  \
+             moe:       ETP {etp:?}[{etpi}]  EP {ep:?}[{epi}]  EDP {edp:?}[{edpi}]\n  \
+             pipeline:  stage {st}/{nst} of {ppg:?}\n  \
+             seq-drop scope: {seq:?}",
+            r = self.rank,
+            tp = self.tp_group,
+            tpi = self.tp_index,
+            cp = self.cp_group,
+            cpi = self.cp_index,
+            dp = self.dp_group,
+            dpi = self.dp_index,
+            etp = self.etp_group,
+            etpi = self.etp_index,
+            ep = self.ep_group,
+            epi = self.ep_index,
+            edp = self.edp_group,
+            edpi = self.edp_index,
+            st = self.pp_stage,
+            nst = self.pp_group.len(),
+            ppg = self.pp_group,
+            seq = self.seq_group,
+        )
+    }
+}
+
+/// The executed-path topology: a validated [`ParallelMapping`] plus the
+/// materialized per-rank views. This is the single source of truth for
+/// every group the simulator runs a collective over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeTopology {
+    pub mapping: ParallelMapping,
+    views: Vec<RankView>,
+}
+
+/// `rank -> (group id, position within the group)` for one axis. Fails if
+/// the axis is missing or its groups do not cover `0..world` exactly once.
+fn axis_index(
+    set: &GroupSet,
+    axis: &str,
+    world: usize,
+) -> Result<Vec<(usize, usize)>, String> {
+    let part = set
+        .groups
+        .get(axis)
+        .ok_or_else(|| format!("mapping is missing axis {axis}"))?;
+    let mut out = vec![(usize::MAX, usize::MAX); world];
+    for (gid, g) in part.iter().enumerate() {
+        for (pos, &r) in g.iter().enumerate() {
+            if r >= world {
+                return Err(format!("axis {axis}: rank {r} out of range"));
+            }
+            if out[r].0 != usize::MAX {
+                return Err(format!("axis {axis}: rank {r} in two groups"));
+            }
+            out[r] = (gid, pos);
+        }
+    }
+    if let Some(r) = out.iter().position(|&(g, _)| g == usize::MAX) {
+        return Err(format!("axis {axis}: rank {r} in no group"));
+    }
+    Ok(out)
+}
+
+impl RuntimeTopology {
+    /// Topology of the folded (production) layout.
+    pub fn folded(config: ParallelConfig) -> Result<Self, String> {
+        Self::from_mapping(ParallelMapping::folded(config)?)
+    }
+
+    /// Topology of the legacy (coupled) layout.
+    pub fn legacy(config: ParallelConfig) -> Result<Self, String> {
+        Self::from_mapping(ParallelMapping::legacy(config)?)
+    }
+
+    /// Materialize per-rank views from an existing mapping, re-validating
+    /// the invariants the executed path relies on (each axis partitions
+    /// `0..world` into equal groups; attention and MoE PP partitions agree;
+    /// every sequence block has exactly `tp·cp` ranks).
+    pub fn from_mapping(mapping: ParallelMapping) -> Result<Self, String> {
+        mapping.check_invariants()?;
+        mapping.validate_pp_consistency()?;
+        let cfg = mapping.config;
+        let world = cfg.world_size;
+        let att = &mapping.attention;
+        let moe = &mapping.moe;
+
+        let tp = axis_index(att, "TP", world)?;
+        let cp = axis_index(att, "CP", world)?;
+        let dp = axis_index(att, "DP", world)?;
+        let pp = axis_index(att, "PP", world)?;
+        let etp = axis_index(moe, "ETP", world)?;
+        let ep = axis_index(moe, "EP", world)?;
+        let edp = axis_index(moe, "EDP", world)?;
+
+        // Sequence blocks: ranks sharing the (pp, dp) attention coordinates
+        // jointly hold one full sequence across their TP×CP block. Group
+        // members are stored in ascending coordinate order, so positions
+        // are coordinates and the (pp, dp) pair identifies the block.
+        let mut blocks: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for r in 0..world {
+            blocks.entry((pp[r].1, dp[r].1)).or_default().push(r);
+        }
+        for (key, b) in &blocks {
+            if b.len() != cfg.tp * cfg.cp {
+                return Err(format!(
+                    "sequence block {key:?} has {} ranks, expected tp*cp = {}",
+                    b.len(),
+                    cfg.tp * cfg.cp
+                ));
+            }
+        }
+
+        let mut views = Vec::with_capacity(world);
+        for r in 0..world {
+            let view = RankView {
+                rank: r,
+                tp_group: att.groups["TP"][tp[r].0].clone(),
+                tp_index: tp[r].1,
+                cp_group: att.groups["CP"][cp[r].0].clone(),
+                cp_index: cp[r].1,
+                dp_group: att.groups["DP"][dp[r].0].clone(),
+                dp_index: dp[r].1,
+                pp_group: att.groups["PP"][pp[r].0].clone(),
+                pp_stage: pp[r].1,
+                etp_group: moe.groups["ETP"][etp[r].0].clone(),
+                etp_index: etp[r].1,
+                ep_group: moe.groups["EP"][ep[r].0].clone(),
+                ep_index: ep[r].1,
+                edp_group: moe.groups["EDP"][edp[r].0].clone(),
+                edp_index: edp[r].1,
+                seq_group: blocks[&(pp[r].1, dp[r].1)].clone(),
+            };
+            if view.pp_group[view.pp_stage] != r {
+                return Err(format!(
+                    "rank {r}: PP group {:?} not in stage order",
+                    view.pp_group
+                ));
+            }
+            views.push(view);
+        }
+        Ok(Self { mapping, views })
+    }
+
+    pub fn world(&self) -> usize {
+        self.mapping.config.world_size
+    }
+
+    pub fn config(&self) -> &ParallelConfig {
+        &self.mapping.config
+    }
+
+    /// True when built from the legacy (coupled) constructor.
+    pub fn is_legacy(&self) -> bool {
+        self.mapping.legacy
+    }
+
+    /// This rank's view of every group it belongs to.
+    pub fn view(&self, rank: usize) -> &RankView {
+        &self.views[rank]
+    }
+
+    pub fn views(&self) -> &[RankView] {
+        &self.views
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folded_views_match_grid_layout() {
+        // World 16, TP2·CP2·DP4·PP1 attention vs ETP1·EP4·EDP4 MoE.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(16, 2, 2, 4, 1, 1)).unwrap();
+        for r in 0..16 {
+            let v = topo.view(r);
+            assert_eq!(v.rank, r);
+            // TP groups are consecutive pairs; EP groups consecutive fours.
+            assert_eq!(v.tp_group, vec![r - r % 2, r - r % 2 + 1]);
+            assert_eq!(v.tp_index, r % 2);
+            let ep_base = r - r % 4;
+            assert_eq!(v.ep_group, (ep_base..ep_base + 4).collect::<Vec<_>>());
+            assert_eq!(v.ep_index, r % 4);
+            // Sequence block = TP×CP block of 4 consecutive ranks.
+            let blk = r - r % 4;
+            assert_eq!(v.seq_group, (blk..blk + 4).collect::<Vec<_>>());
+            // Membership + index coherence on every axis.
+            assert_eq!(v.dp_group[v.dp_index], r);
+            assert_eq!(v.edp_group[v.edp_index], r);
+            assert_eq!(v.etp_group[v.etp_index], r);
+            assert_eq!(v.pp_group[v.pp_stage], r);
+            assert_eq!(v.cp_group[v.cp_index], r);
+        }
+    }
+
+    #[test]
+    fn folded_dp_and_edp_groups_differ_when_degrees_do() {
+        // TP2 attention vs ETP1·EP4 MoE on 8 ranks: dp=4, edp=2.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(8, 2, 1, 4, 1, 1)).unwrap();
+        assert_eq!(topo.config().dp(), 4);
+        assert_eq!(topo.config().edp(), 2);
+        for r in 0..8 {
+            let v = topo.view(r);
+            let want_dp: Vec<usize> = (0..4).map(|i| r % 2 + 2 * i).collect();
+            let want_edp = vec![r % 4, r % 4 + 4];
+            assert_eq!(v.dp_group, want_dp, "rank {r}");
+            assert_eq!(v.edp_group, want_edp, "rank {r}");
+            assert_ne!(v.dp_group, v.edp_group);
+        }
+    }
+
+    #[test]
+    fn table3_mixtral_optimum_rank5_worked_example() {
+        // The module-doc example: TP2·EP8·ETP1·PP8 on 128 GPUs.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(128, 2, 1, 8, 1, 8)).unwrap();
+        let v = topo.view(5);
+        assert_eq!(v.tp_group, vec![4, 5]);
+        assert_eq!(v.ep_group, (0..8).collect::<Vec<_>>());
+        assert_eq!(v.etp_group, vec![5]);
+        assert_eq!(v.edp_group, vec![5, 13]);
+        assert_eq!(v.seq_group, vec![4, 5]);
+        assert_eq!(v.pp_stage, 0);
+        assert_eq!(v.pp_group.len(), 8);
+        // EP stays inside one stage: all EP peers share the PP coordinate.
+        for &peer in &v.ep_group {
+            assert_eq!(topo.view(peer).pp_stage, v.pp_stage);
+        }
+        let s = v.summary();
+        assert!(s.contains("EP [0, 1, 2, 3, 4, 5, 6, 7]"));
+    }
+
+    #[test]
+    fn legacy_topology_couples_etp_to_tp() {
+        let topo = RuntimeTopology::legacy(ParallelConfig::new(16, 2, 1, 4, 2, 1)).unwrap();
+        assert!(topo.is_legacy());
+        for r in 0..16 {
+            let v = topo.view(r);
+            // Legacy ETP groups are exactly the attention TP groups.
+            assert_eq!(v.etp_group, v.tp_group, "rank {r}");
+            // Legacy EP members stride by tp·cp ranks.
+            let diffs: Vec<usize> =
+                v.ep_group.windows(2).map(|w| w[1] - w[0]).collect();
+            assert!(diffs.iter().all(|&d| d == 2), "rank {r}: {diffs:?}");
+        }
+    }
+
+    #[test]
+    fn pp_groups_are_stage_ordered_with_pp_gt_1() {
+        let topo = RuntimeTopology::folded(ParallelConfig::new(16, 2, 1, 2, 1, 4)).unwrap();
+        for r in 0..16 {
+            let v = topo.view(r);
+            assert_eq!(v.pp_group.len(), 4);
+            assert_eq!(v.pp_group[v.pp_stage], r);
+            // Stage order == ascending pp coordinate == ascending rank here.
+            let mut sorted = v.pp_group.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, v.pp_group);
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //!    that the schedule's send/recv pattern is deadlock-free and delivers
 //!    the right microbatch to the right stage.
 
+use crate::mapping::RuntimeTopology;
 use crate::simcomm::Communicator;
 
 /// One unit of pipeline work on a stage.
@@ -226,9 +227,31 @@ where
     }
 }
 
+/// [`execute_1f1b`] with the stage group taken from a runtime topology:
+/// the calling rank's PP group (attention and MoE PP partitions are
+/// validated identical), in stage order. This is how folded configurations
+/// run the pipeline — the stage group is *never* re-derived from rank
+/// arithmetic.
+pub fn execute_1f1b_mapped<Fw, Bw>(
+    comm: &Communicator,
+    topo: &RuntimeTopology,
+    m: usize,
+    inputs: &[Vec<f32>],
+    fwd: Fw,
+    bwd: Bw,
+) -> PipelineRunResult
+where
+    Fw: FnMut(usize, &[f32]) -> Vec<f32>,
+    Bw: FnMut(usize, &[f32]) -> Vec<f32>,
+{
+    let view = topo.view(comm.rank());
+    execute_1f1b(comm, &view.pp_group, m, inputs, fwd, bwd)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ParallelConfig;
     use crate::simcomm::run_ranks;
 
     #[test]
@@ -346,6 +369,43 @@ mod tests {
         }
         // Non-terminal stages report nothing.
         assert!(outs[1].outputs.is_empty() && outs[1].input_grads.is_empty());
+    }
+
+    /// Stage groups from a folded mapping: TP2·PP2 on 8 ranks puts pipeline
+    /// neighbours 4 ranks apart ({r, r+4}), and every rank's stage index is
+    /// its position in the mapping's PP group — not its rank id.
+    #[test]
+    fn execute_1f1b_stage_groups_from_folded_mapping() {
+        let topo = RuntimeTopology::folded(ParallelConfig::new(8, 2, 1, 2, 1, 2)).unwrap();
+        let m = 4;
+        let width = 3;
+        let inputs: Vec<Vec<f32>> = (0..m).map(|mb| vec![mb as f32; width]).collect();
+        let outs = run_ranks(8, |_rank, comm| {
+            execute_1f1b_mapped(
+                &comm,
+                &topo,
+                m,
+                &inputs,
+                |_mb, x| x.iter().map(|v| v + 1.0).collect(),
+                |_mb, g| g.to_vec(),
+            )
+        });
+        for r in 0..8 {
+            let view = topo.view(r);
+            assert_eq!(view.pp_group, vec![r % 4, r % 4 + 4]);
+            if view.pp_stage == 1 {
+                // Last stage: two stages each add 1.0.
+                for mb in 0..m {
+                    assert_eq!(outs[r].outputs[mb], vec![mb as f32 + 2.0; width]);
+                }
+                assert!(outs[r].input_grads.is_empty());
+            } else {
+                assert!(outs[r].outputs.is_empty());
+                for mb in 0..m {
+                    assert_eq!(outs[r].input_grads[mb], vec![mb as f32 + 2.0; width]);
+                }
+            }
+        }
     }
 
     /// Single-stage degenerate case: outputs and input grads both come back.

@@ -5,7 +5,9 @@
 pub mod data;
 pub mod math;
 pub mod optimizer;
+pub mod sync;
 pub mod trainer;
 
 pub use optimizer::Adam;
+pub use sync::{GradSync, ParamClass};
 pub use trainer::{train, TrainerConfig, TrainReport};

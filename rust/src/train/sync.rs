@@ -1,0 +1,135 @@
+//! Gradient synchronization groups under MoE Parallel Folding.
+//!
+//! With folded mappings the attention and MoE grids have *different*
+//! data-parallel axes: attention parameters replicate over the attention DP
+//! group (`world / (tp·cp·pp)` ranks) while expert parameters replicate over
+//! the expert-data-parallel (EDP) group (`world / (etp·ep·pp)` ranks) —
+//! Megatron-Core's `get_data_parallel_group()` vs
+//! `get_expert_data_parallel_group()` split. A single undifferentiated
+//! all-reduce over the world is **wrong** whenever `dp != edp`: it would
+//! average expert gradients with ranks that hold *other* experts' shards
+//! and attention gradients with model-parallel peers.
+//!
+//! [`GradSync`] carries one rank's two reduction groups (taken from a
+//! [`RuntimeTopology`] view, never hand-rolled) and applies the mean
+//! all-reduce per [`ParamClass`].
+
+use crate::mapping::RuntimeTopology;
+use crate::simcomm::Communicator;
+
+/// Which replication axis a parameter tensor synchronizes over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamClass {
+    /// Attention / dense parameters: all-reduce over the attention DP group.
+    Attention,
+    /// Expert (MoE) parameters: all-reduce over the EDP group.
+    Expert,
+}
+
+/// One rank's gradient-reduction groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradSync {
+    dp_group: Vec<usize>,
+    edp_group: Vec<usize>,
+}
+
+impl GradSync {
+    /// Undifferentiated data parallelism: both classes reduce over the flat
+    /// `0..world` group (the pre-folding trainer behaviour, and exactly
+    /// right when `tp = cp = etp = ep = pp = 1`).
+    pub fn flat(world: usize) -> Self {
+        let group: Vec<usize> = (0..world).collect();
+        Self { dp_group: group.clone(), edp_group: group }
+    }
+
+    /// Groups for `rank` from a runtime topology: attention params reduce
+    /// over the rank's attention-DP group, expert params over its EDP group.
+    pub fn from_topology(topo: &RuntimeTopology, rank: usize) -> Self {
+        let view = topo.view(rank);
+        Self {
+            dp_group: view.dp_group.clone(),
+            edp_group: view.edp_group.clone(),
+        }
+    }
+
+    /// The reduction group for a parameter class.
+    pub fn group_for(&self, class: ParamClass) -> &[usize] {
+        match class {
+            ParamClass::Attention => &self.dp_group,
+            ParamClass::Expert => &self.edp_group,
+        }
+    }
+
+    /// Mean all-reduce of `grad` over the class's group, in place. A
+    /// singleton group is a no-op (no replication on that axis).
+    pub fn reduce_mean(&self, comm: &Communicator, class: ParamClass, grad: &mut [f32]) {
+        let group = self.group_for(class);
+        if group.len() <= 1 {
+            return;
+        }
+        comm.all_reduce_sum_into(group, grad);
+        let n = group.len() as f32;
+        for x in grad.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelConfig;
+    use crate::simcomm::run_ranks;
+
+    /// The folded dp≠edp case: attention grads average over the DP group,
+    /// expert grads over the EDP group — and neither equals the flat world
+    /// mean the pre-folding trainer produced.
+    #[test]
+    fn per_class_groups_differ_under_folding() {
+        // TP2 attention vs ETP1·EP4 MoE on 8 ranks: dp = 4, edp = 2.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(8, 2, 1, 4, 1, 1)).unwrap();
+        let outs = run_ranks(8, |rank, comm| {
+            let sync = GradSync::from_topology(&topo, rank);
+            let mut attn = vec![rank as f32; 3];
+            let mut expert = vec![100.0 + rank as f32; 3];
+            sync.reduce_mean(&comm, ParamClass::Attention, &mut attn);
+            sync.reduce_mean(&comm, ParamClass::Expert, &mut expert);
+            (attn[0], expert[0])
+        });
+        for (r, &(attn, expert)) in outs.iter().enumerate() {
+            // DP group {r%2, r%2+2, r%2+4, r%2+6} -> mean = r%2 + 3.
+            assert_eq!(attn, (r % 2) as f32 + 3.0, "rank {r} attention");
+            // EDP group {r%4, r%4+4} -> mean = 100 + r%4 + 2.
+            assert_eq!(expert, 100.0 + (r % 4) as f32 + 2.0, "rank {r} expert");
+            // Both differ from the undifferentiated world means (3.5, 103.5).
+            assert_ne!(attn, 3.5);
+            assert_ne!(expert, 103.5);
+        }
+    }
+
+    #[test]
+    fn flat_sync_reduces_both_classes_over_world() {
+        let outs = run_ranks(4, |rank, comm| {
+            let sync = GradSync::flat(4);
+            let mut g = vec![rank as f32];
+            sync.reduce_mean(&comm, ParamClass::Attention, &mut g);
+            let mut e = vec![rank as f32];
+            sync.reduce_mean(&comm, ParamClass::Expert, &mut e);
+            (g[0], e[0])
+        });
+        assert!(outs.iter().all(|&(a, e)| a == 1.5 && e == 1.5));
+    }
+
+    #[test]
+    fn singleton_group_is_noop() {
+        // pp = world: dp = edp = 1 on every rank.
+        let topo = RuntimeTopology::folded(ParallelConfig::new(2, 1, 1, 1, 1, 2)).unwrap();
+        let outs = run_ranks(2, |rank, comm| {
+            let sync = GradSync::from_topology(&topo, rank);
+            let mut g = vec![rank as f32];
+            sync.reduce_mean(&comm, ParamClass::Attention, &mut g);
+            g[0]
+        });
+        assert_eq!(outs, vec![0.0, 1.0]);
+    }
+}

@@ -2,11 +2,21 @@
 //! artifact via PJRT, with data-parallel ranks over the functional
 //! communicator, gradient all-reduce, clipping and Adam — Python is never
 //! on the step path.
+//!
+//! Gradient synchronization is **per parameter class**
+//! ([`super::GradSync`]): with a folded [`ParallelConfig`] attached
+//! ([`TrainerConfig::parallel`]), attention parameters all-reduce over the
+//! rank's attention-DP group and expert parameters over its EDP group —
+//! the Megatron-Core data-parallel vs expert-data-parallel split that a
+//! single flat all-reduce gets wrong whenever `dp != edp`. Without a
+//! topology the trainer degenerates to flat DP over `cfg.dp` ranks.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::anyhow;
+use crate::config::ParallelConfig;
+use crate::mapping::RuntimeTopology;
 use crate::runtime::{InputBuf, InputRef, Runtime};
 use crate::simcomm::{run_ranks_with, AlgoSelection};
 use crate::util::error::Result;
@@ -14,6 +24,7 @@ use crate::util::Rng;
 
 use super::data::SyntheticCorpus;
 use super::optimizer::Adam;
+use super::sync::{GradSync, ParamClass};
 
 /// Trainer configuration.
 #[derive(Debug, Clone)]
@@ -32,6 +43,16 @@ pub struct TrainerConfig {
     /// `AlgoSelection::naive()` reproduces the leader-based oracle bit-for-bit
     /// — every algorithm reduces in rank order, see [`crate::simcomm`]).
     pub algos: AlgoSelection,
+    /// Optional folded parallel topology. When set, `world_size` rank
+    /// threads run (ignoring `dp`), ranks sharing an attention-DP
+    /// coordinate consume the same data (model-parallel peers replicate
+    /// their microbatch), and gradients reduce per parameter class over the
+    /// topology's DP/EDP groups. `None` keeps the flat-DP behaviour.
+    pub parallel: Option<ParallelConfig>,
+    /// Indices (into the artifact's parameter tensors) holding expert
+    /// weights — these reduce over EDP instead of attention-DP. Only
+    /// meaningful together with `parallel`.
+    pub expert_param_indices: Vec<usize>,
 }
 
 impl Default for TrainerConfig {
@@ -46,6 +67,8 @@ impl Default for TrainerConfig {
             log_every: 10,
             clip_norm: 1.0,
             algos: AlgoSelection::fast(),
+            parallel: None,
+            expert_param_indices: Vec::new(),
         }
     }
 }
@@ -134,7 +157,14 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     let shapes: Vec<usize> = init_params.iter().map(|p| p.len()).collect();
 
     let t0 = Instant::now();
-    let world = cfg.dp.max(1);
+    let topo = match cfg.parallel {
+        Some(p) => Some(RuntimeTopology::folded(p).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    let world = topo
+        .as_ref()
+        .map(|t| t.world())
+        .unwrap_or(cfg.dp.max(1));
     let cfg2 = cfg.clone();
     let runtime2 = runtime.clone();
 
@@ -142,11 +172,19 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     let algos = cfg.algos;
     let reports = run_ranks_with(world, algos, move |rank, comm| -> Result<Vec<(usize, f32)>> {
         let exe = runtime2.load(&step_name)?;
-        let group: Vec<usize> = (0..world).collect();
+        // Reduction groups per parameter class: topology DP/EDP groups
+        // under folding, the flat world group otherwise.
+        let sync = match &topo {
+            Some(t) => GradSync::from_topology(t, rank),
+            None => GradSync::flat(world),
+        };
+        // Model-parallel peers (same attention-DP coordinate) replicate
+        // their microbatch stream; distinct DP replicas draw distinct data.
+        let data_replica = topo.as_ref().map(|t| t.view(rank).dp_index).unwrap_or(rank);
         let mut params = init_params.clone();
         let mut opt = Adam::new(cfg2.lr, &shapes);
         let mut corpus =
-            SyntheticCorpus::new(vocab, cfg2.seed.wrapping_add(1000 + rank as u64));
+            SyntheticCorpus::new(vocab, cfg2.seed.wrapping_add(1000 + data_replica as u64));
         let mut losses = Vec::new();
 
         for step in 0..cfg2.steps {
@@ -168,18 +206,26 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             let mut grads: Vec<Vec<f32>> = outs[1..].to_vec();
 
             if world > 1 {
-                // Average gradients (and the logged loss) over DP ranks —
-                // in place, so steady-state steps allocate no gradient
-                // buffers (the fabric's pooled scratch carries the chunks).
-                for g in grads.iter_mut() {
-                    comm.all_reduce_sum_into(&group, g);
-                    for x in g.iter_mut() {
-                        *x /= world as f32;
-                    }
+                // Average gradients per parameter class — attention params
+                // over the attention-DP group, expert params over EDP — in
+                // place, so steady-state steps allocate no gradient buffers
+                // (the fabric's pooled scratch carries the chunks).
+                for (i, g) in grads.iter_mut().enumerate() {
+                    let class = if cfg2.expert_param_indices.contains(&i) {
+                        ParamClass::Expert
+                    } else {
+                        ParamClass::Attention
+                    };
+                    sync.reduce_mean(&comm, class, g);
                 }
-                let mut l = [loss];
-                comm.all_reduce_sum_into(&group, &mut l);
-                loss = l[0] / world as f32;
+                // The logged loss averages over this rank's DP group (the
+                // whole world in the flat case).
+                let dp_group = sync.group_for(ParamClass::Attention);
+                if dp_group.len() > 1 {
+                    let mut l = [loss];
+                    comm.all_reduce_sum_into(dp_group, &mut l);
+                    loss = l[0] / dp_group.len() as f32;
+                }
             }
 
             Adam::clip_grads(&mut grads, cfg2.clip_norm);

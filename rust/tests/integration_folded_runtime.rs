@@ -1,0 +1,337 @@
+//! Integration: folded configurations *execute* end-to-end on simcomm.
+//!
+//! The tentpole of ISSUE 2: `ParallelMapping::{folded,legacy}` — via the
+//! runtime topology layer (`mapping::runtime`) — is the single source of
+//! truth for every group the simulator runs, so configurations with
+//! `tp·cp != etp·ep` (inexpressible before MoE Parallel Folding) actually
+//! *run*, not just price analytically:
+//!
+//! 1. a folded config and its legacy-expressible counterpart produce
+//!    **bit-identical** losses on the same token stream;
+//! 2. gradient synchronization splits per parameter class (attention-DP vs
+//!    EDP groups), which a flat all-reduce gets wrong whenever `dp != edp`;
+//! 3. the Table-3 folded optima and the autotuner's analytic winners are
+//!    executable on simcomm at full world size without panics.
+
+use moe_folding::autotune;
+use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::dispatcher::{
+    reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
+};
+use moe_folding::mapping::RuntimeTopology;
+use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::pipeline::execute_1f1b_mapped;
+use moe_folding::simcomm::run_ranks;
+use moe_folding::train::math::SwigluExpert;
+use moe_folding::train::{GradSync, ParamClass};
+use moe_folding::util::Rng;
+
+const H: usize = 16;
+const FF: usize = 32;
+
+fn build_router(num_experts: usize, top_k: usize, policy: DropPolicy, seed: u64) -> Router {
+    let mut rng = Rng::seed_from_u64(seed);
+    Router::init(
+        RouterConfig {
+            hidden: H,
+            num_experts,
+            top_k,
+            capacity_factor: 1.0,
+            drop_policy: policy,
+            capacity_override: None,
+        },
+        &mut rng,
+    )
+}
+
+fn build_experts(num_experts: usize, seed: u64) -> Vec<SwigluExpert> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..num_experts).map(|_| SwigluExpert::init(H, FF, &mut rng)).collect()
+}
+
+/// Run `steps` MoE forwards over `topo`, one token chunk per rank per step
+/// drawn from the shared `stream`, and return per-rank (outputs, losses).
+/// The "loss" is the full-world mean of the per-rank output sums — a
+/// deterministic rank-order fold, so layouts that compute the same math
+/// produce the same bits.
+fn run_stream(
+    topo: &RuntimeTopology,
+    router: &Router,
+    experts: &[SwigluExpert],
+    stream: &[Vec<f32>],
+    n_per_rank: usize,
+) -> Vec<(Vec<Vec<f32>>, Vec<f32>)> {
+    let world = topo.world();
+    run_ranks(world, |rank, comm| {
+        let layer =
+            DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), experts);
+        let all: Vec<usize> = (0..world).collect();
+        let mut outs = Vec::new();
+        let mut losses = Vec::new();
+        for step_tokens in stream {
+            let mine =
+                step_tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+            let (out, _) = layer.forward(&comm, &mine);
+            let local: f32 = out.iter().sum();
+            let l = comm.all_reduce_sum(&all, &[local]);
+            losses.push(l[0] / world as f32);
+            outs.push(out);
+        }
+        (outs, losses)
+    })
+}
+
+/// Tentpole differential: a folded config with `tp·cp != etp·ep`
+/// (TP2·CP1 attention vs ETP1·EP4 MoE on 8 ranks — inexpressible in the
+/// coupled legacy scheme) must produce bit-identical per-rank outputs and
+/// losses to a legacy-expressible counterpart (TP1·ETP1·EP2) on the same
+/// token stream: the MoE math is layout-invariant, only the groups differ.
+#[test]
+fn folded_config_matches_legacy_counterpart_bit_for_bit() {
+    let folded_cfg = ParallelConfig::new(8, 2, 1, 4, 1, 1);
+    assert_ne!(folded_cfg.attn_inner(), folded_cfg.moe_inner());
+    assert!(!folded_cfg.is_legacy_expressible());
+    let legacy_cfg = ParallelConfig::new(8, 1, 1, 2, 1, 1);
+    assert!(legacy_cfg.is_legacy_expressible());
+
+    let folded = RuntimeTopology::folded(folded_cfg).unwrap();
+    let legacy = RuntimeTopology::legacy(legacy_cfg).unwrap();
+    // The two layouts really do execute different EP groups.
+    assert_eq!(folded.view(0).ep_group.len(), 4);
+    assert_eq!(legacy.view(0).ep_group.len(), 2);
+
+    for policy in [DropPolicy::Dropless, DropPolicy::SubSequence] {
+        let router = build_router(8, 2, policy, 100);
+        let experts = build_experts(8, 200);
+        let n_per_rank = 12;
+        let mut rng = Rng::seed_from_u64(300);
+        let stream: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut t = vec![0.0f32; 8 * n_per_rank * H];
+                rng.fill_normal(&mut t, 1.0);
+                t
+            })
+            .collect();
+
+        let f = run_stream(&folded, &router, &experts, &stream, n_per_rank);
+        let l = run_stream(&legacy, &router, &experts, &stream, n_per_rank);
+        for rank in 0..8 {
+            for step in 0..stream.len() {
+                assert_eq!(
+                    f[rank].1[step].to_bits(),
+                    l[rank].1[step].to_bits(),
+                    "{policy:?} rank {rank} step {step}: loss {} vs {}",
+                    f[rank].1[step],
+                    l[rank].1[step]
+                );
+                let (fo, lo) = (&f[rank].0[step], &l[rank].0[step]);
+                assert_eq!(fo.len(), lo.len());
+                for (i, (a, b)) in fo.iter().zip(lo).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{policy:?} rank {rank} step {step} idx {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The trainer's per-class gradient reduction under folding: attention
+/// gradients average over the attention-DP group (4 ranks here), expert
+/// gradients over the EDP group (2 ranks) — with param classes resolved the
+/// same way `train::trainer` resolves `expert_param_indices`.
+#[test]
+fn gradient_sync_splits_attention_dp_from_edp() {
+    let topo = RuntimeTopology::folded(ParallelConfig::new(8, 2, 1, 4, 1, 1)).unwrap();
+    assert_eq!(topo.config().dp(), 4);
+    assert_eq!(topo.config().edp(), 2);
+    let expert_param_indices = [2usize];
+
+    let outs = run_ranks(8, |rank, comm| {
+        let sync = GradSync::from_topology(&topo, rank);
+        // Three "parameter tensors": 0/1 attention-class, 2 expert-class.
+        let mut grads: Vec<Vec<f32>> = vec![
+            vec![rank as f32; 4],
+            vec![10.0 + rank as f32; 4],
+            vec![100.0 + rank as f32; 4],
+        ];
+        for (i, g) in grads.iter_mut().enumerate() {
+            let class = if expert_param_indices.contains(&i) {
+                ParamClass::Expert
+            } else {
+                ParamClass::Attention
+            };
+            sync.reduce_mean(&comm, class, g);
+        }
+        (grads[0][0], grads[1][0], grads[2][0])
+    });
+
+    for (r, &(a0, a1, e)) in outs.iter().enumerate() {
+        // Attention DP group {r%2, r%2+2, r%2+4, r%2+6} -> mean r%2 + 3.
+        assert_eq!(a0, (r % 2) as f32 + 3.0, "rank {r}");
+        assert_eq!(a1, 10.0 + (r % 2) as f32 + 3.0, "rank {r}");
+        // Expert EDP group {r%4, r%4+4} -> mean 100 + r%4 + 2.
+        assert_eq!(e, 100.0 + (r % 4) as f32 + 2.0, "rank {r}");
+        // A flat world all-reduce would have produced 3.5 / 13.5 / 103.5.
+        assert_ne!(a0, 3.5);
+        assert_ne!(e, 103.5);
+    }
+}
+
+/// Execute one full simulated step of `topo` at full world size: MoE
+/// dispatch from topology groups, 1F1B over the mapping's PP partition,
+/// and a closing world-wide reduction. Asserts finite outputs and agreeing
+/// global losses — the "runs without panics" bar for analytic winners.
+fn execute_end_to_end(topo: &RuntimeTopology, num_experts: usize) {
+    let world = topo.world();
+    let top_k = 2.min(num_experts);
+    let router = build_router(num_experts, top_k, DropPolicy::Dropless, 4242);
+    let experts = build_experts(num_experts, 4243);
+    let n_per_rank = 2;
+    let mut rng = Rng::seed_from_u64(4244);
+    let mut tokens = vec![0.0f32; world * n_per_rank * H];
+    rng.fill_normal(&mut tokens, 1.0);
+    let m = 2;
+    let width = 4;
+    let inputs: Vec<Vec<f32>> = (0..m).map(|mb| vec![mb as f32; width]).collect();
+
+    let losses = run_ranks(world, |rank, comm| {
+        let view = topo.view(rank);
+        let layer =
+            DistributedMoeLayer::from_topology(view, router.clone(), &experts);
+        let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+        let (out, stats) = layer.forward(&comm, &mine);
+        assert_eq!(out.len(), n_per_rank * H);
+        assert!(out.iter().all(|v| v.is_finite()), "rank {rank} non-finite output");
+        assert_eq!(stats.tokens_routed, n_per_rank * top_k);
+
+        // Pipeline hand-off over the mapping's PP partition.
+        let pipe = execute_1f1b_mapped(
+            &comm,
+            topo,
+            m,
+            &inputs,
+            |_mb, x| x.iter().map(|v| v + 1.0).collect(),
+            |_mb, g| g.to_vec(),
+        );
+        let pp = view.pp_group.len();
+        if view.pp_stage == pp - 1 {
+            for (mb, o) in pipe.outputs.iter().enumerate() {
+                assert_eq!(o, &vec![mb as f32 + pp as f32; width], "rank {rank} mb {mb}");
+            }
+        }
+
+        let all: Vec<usize> = (0..world).collect();
+        let local: f32 = out.iter().sum();
+        comm.all_reduce_sum(&all, &[local])[0]
+    });
+    for w in losses.windows(2) {
+        assert_eq!(w[0].to_bits(), w[1].to_bits(), "global loss must agree on all ranks");
+    }
+}
+
+/// Every Table-3 folded optimum executes end-to-end on simcomm at its full
+/// world size (128/64/128/256 ranks).
+#[test]
+fn table3_folded_optima_execute_on_simcomm() {
+    for (w, tp, cp, ep, etp, pp) in [
+        (128, 2, 1, 8, 1, 8),  // Mixtral-8x22B
+        (64, 2, 1, 4, 1, 4),   // Qwen2-57B-A14B
+        (128, 4, 1, 8, 1, 8),  // Mixtral-8x22B-G8T8
+        (256, 8, 1, 8, 1, 16), // Llama3-8x70B
+    ] {
+        let cfg = ParallelConfig::new(w, tp, cp, ep, etp, pp);
+        let topo = RuntimeTopology::folded(cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        execute_end_to_end(&topo, 8);
+    }
+}
+
+/// The autotuner's analytic winner for every Table-3 (model, GPUs) case is
+/// executable: the mapping the performance model priced is the mapping the
+/// simulator runs.
+#[test]
+fn autotune_winners_execute_on_simcomm() {
+    let pm = PerfModel::default();
+    let train = TrainConfig::paper_default(4096, 256);
+    let mut executed = 0usize;
+    for (model, gpus) in [
+        (ModelConfig::mixtral_8x22b(), 128),
+        (ModelConfig::qwen2_57b_a14b(), 64),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128),
+        (ModelConfig::llama3_8x70b(), 256),
+    ] {
+        let r = autotune::tune(&pm, &model, gpus, &train, Strategy::MCoreFolding);
+        let Some(best) = r.best else {
+            // No feasible (non-OOM) estimate -> nothing to execute. Only
+            // Mixtral's feasibility is pinned by the perf-model tests.
+            assert_ne!(
+                model.name, "Mixtral-8x22B",
+                "Mixtral@128 must have a feasible folded winner"
+            );
+            eprintln!("{} @ {gpus}: all folded candidates OOM, skipping", model.name);
+            continue;
+        };
+        let topo = RuntimeTopology::folded(best.config)
+            .unwrap_or_else(|e| panic!("{} winner {}: {e}", model.name, best.config.tag()));
+        execute_end_to_end(&topo, model.num_experts);
+        executed += 1;
+    }
+    assert!(executed >= 1, "no analytic winner was executable");
+}
+
+/// Full-sequence dropping with a *non-divisible* sequence split (5 + 3
+/// tokens): slice offsets must come from the gathered per-rank counts, and
+/// the result must match the single-rank full-scope reference bit-for-bit.
+/// Regression for the `my_idx * n_local` misalignment (ISSUE 2).
+#[test]
+fn full_sequence_drop_handles_uneven_splits() {
+    let router = build_router(8, 2, DropPolicy::FullSequence, 7);
+    let experts = build_experts(8, 8);
+    let n_total = 8;
+    let split = [5usize, 3];
+    let mut rng = Rng::seed_from_u64(9);
+    let mut all_tokens = vec![0.0f32; n_total * H];
+    rng.fill_normal(&mut all_tokens, 1.0);
+
+    let reference = reference_moe_forward(&router, &experts, &all_tokens, None);
+    let expect_aux = router.route(&all_tokens).aux_loss;
+
+    let outs = run_ranks(2, |rank, comm| {
+        let epr = 8 / 2;
+        let layer = DistributedMoeLayer {
+            router: router.clone(),
+            local_experts: experts[rank * epr..(rank + 1) * epr].to_vec(),
+            ep_group: vec![0, 1],
+            etp_group: vec![rank],
+            ep_index: rank,
+            num_experts: 8,
+            seq_group: Some(vec![0, 1]),
+        };
+        let offset: usize = split[..rank].iter().sum();
+        let mine = all_tokens[offset * H..(offset + split[rank]) * H].to_vec();
+        layer.forward(&comm, &mine)
+    });
+
+    let distributed: Vec<f32> = outs.iter().flat_map(|(o, _)| o.clone()).collect();
+    assert_eq!(distributed.len(), reference.len());
+    for (i, (a, b)) in distributed.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "idx {i}: {a} vs {b} (uneven full-sequence split must be exact)"
+        );
+    }
+    // The aux loss is computed from full-sequence statistics: bit-identical
+    // across ranks and to the single-rank reference (ISSUE 2 satellite).
+    for (rank, (_, stats)) in outs.iter().enumerate() {
+        assert_eq!(
+            stats.aux_loss.to_bits(),
+            expect_aux.to_bits(),
+            "rank {rank}: aux {} vs reference {expect_aux}",
+            stats.aux_loss
+        );
+    }
+}

@@ -1,5 +1,6 @@
 //! Integration: the end-to-end trainer over PJRT artifacts (requires
 //! `make artifacts`; skips when absent).
+use moe_folding::config::ParallelConfig;
 use moe_folding::train::{train, TrainerConfig};
 
 fn have_artifacts() -> bool {
@@ -33,6 +34,41 @@ fn dp2_matches_dp2_and_learns() {
     let b = train(&cfg).unwrap();
     assert_eq!(a.losses, b.losses, "DP training must be deterministic");
     assert!(a.final_loss < a.initial_loss);
+}
+
+/// A degenerate folded topology (tp=cp=ep=pp=1, world = dp) must reproduce
+/// the flat-DP trainer bit-for-bit: its DP and EDP groups are both the full
+/// world, and data replicas coincide with ranks.
+#[test]
+fn degenerate_parallel_topology_matches_flat_dp() {
+    if !have_artifacts() { return; }
+    let flat = TrainerConfig { preset: "test".into(), steps: 6, dp: 2, ..Default::default() };
+    let folded = TrainerConfig {
+        parallel: Some(ParallelConfig::new(2, 1, 1, 1, 1, 1)),
+        ..flat.clone()
+    };
+    let a = train(&flat).unwrap();
+    let b = train(&folded).unwrap();
+    assert_eq!(a.losses, b.losses, "degenerate topology must equal flat DP");
+}
+
+/// A genuinely folded topology (TP2 attention vs ETP1·EP2 MoE on 4 ranks,
+/// dp = edp = 2) trains deterministically with per-class gradient reduction
+/// over the topology's DP/EDP groups.
+#[test]
+fn folded_parallel_trainer_is_deterministic() {
+    if !have_artifacts() { return; }
+    let cfg = TrainerConfig {
+        preset: "test".into(),
+        steps: 6,
+        parallel: Some(ParallelConfig::new(4, 2, 1, 2, 1, 1)),
+        expert_param_indices: vec![1],
+        ..Default::default()
+    };
+    let a = train(&cfg).unwrap();
+    let b = train(&cfg).unwrap();
+    assert_eq!(a.losses, b.losses);
+    assert!(a.losses.iter().all(|(_, l)| l.is_finite()));
 }
 
 #[test]

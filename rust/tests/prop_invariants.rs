@@ -4,7 +4,7 @@ use moe_folding::cluster::ClusterSpec;
 use moe_folding::collectives::CommModel;
 use moe_folding::config::{DropPolicy, ParallelConfig};
 use moe_folding::dispatcher::{Assignment, Permutation, Router, RouterConfig};
-use moe_folding::mapping::ParallelMapping;
+use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::pipeline::{bubble_fraction, simulate_1f1b};
 use moe_folding::util::prop::{draw, forall};
 use moe_folding::util::Rng;
@@ -33,13 +33,64 @@ fn prop_folded_mapping_partitions() {
         |&(world, tp, cp, ep, etp, pp)| {
             let cfg = ParallelConfig::new(world, tp, cp, ep, etp, pp);
             if cfg.validate_ok() {
-                let m = ParallelMapping::folded(cfg).map_err(|e| e)?;
+                let m = ParallelMapping::folded(cfg)?;
                 m.check_invariants()?;
                 m.validate_pp_consistency()?;
             }
             Ok(())
         },
     );
+}
+
+/// Exhaustive (not sampled): for **every** legal `(tp, cp, etp, ep, pp)`
+/// combination at worlds 8/16/32, the folded mapping's axis partitions each
+/// tile `0..world` exactly — disjoint, covering, equal-sized, including the
+/// MoE-side ETP/EDP axes — and the attention and MoE PP partitions
+/// coincide. This is the invariant the runtime topology layer
+/// (`mapping::runtime`) builds per-rank views on, so the same sweep also
+/// materializes a `RuntimeTopology` for each combination (its constructor
+/// re-validates group membership, stage ordering, and sequence blocks).
+#[test]
+fn prop_folded_tiles_every_legal_combo_at_worlds_8_16_32() {
+    for world in [8usize, 16, 32] {
+        let divisors: Vec<usize> = (1..=world).filter(|d| world % d == 0).collect();
+        let mut checked = 0usize;
+        for &tp in &divisors {
+            for &cp in &divisors {
+                for &pp in &divisors {
+                    if world % (tp * cp * pp) != 0 {
+                        continue;
+                    }
+                    for &ep in &divisors {
+                        for &etp in &divisors {
+                            if world % (etp * ep * pp) != 0 {
+                                continue;
+                            }
+                            let cfg = ParallelConfig::new(world, tp, cp, ep, etp, pp);
+                            let m = ParallelMapping::folded(cfg)
+                                .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+                            m.check_invariants()
+                                .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+                            m.validate_pp_consistency()
+                                .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+                            let topo = RuntimeTopology::from_mapping(m)
+                                .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+                            // Spot-check view coherence on every rank.
+                            for v in topo.views() {
+                                assert_eq!(v.ep_group[v.ep_index], v.rank);
+                                assert_eq!(v.dp_group[v.dp_index], v.rank);
+                                assert_eq!(v.edp_group[v.edp_index], v.rank);
+                                assert_eq!(v.pp_group[v.pp_stage], v.rank);
+                                assert!(v.seq_group.contains(&v.rank));
+                            }
+                            checked += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(checked > 50, "world {world}: only {checked} legal combos swept");
+    }
 }
 
 fn gcd(a: usize, b: usize) -> usize {
