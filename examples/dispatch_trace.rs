@@ -36,6 +36,7 @@ fn main() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     );

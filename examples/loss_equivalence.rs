@@ -41,6 +41,7 @@ fn dispatcher_equivalence() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::Dropless,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     );

@@ -30,6 +30,7 @@ fn main() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     );
@@ -60,6 +61,7 @@ fn main() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     );

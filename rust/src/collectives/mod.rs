@@ -1,278 +1,24 @@
 //! Analytic cost models for the collectives the MoE training stack issues.
 //!
-//! Hierarchical α–β models: a collective over a rank group is costed by how
-//! its traffic maps onto the two-tier fabric (NVLink within a node,
-//! InfiniBand across nodes). This is the mechanism that makes MoE Parallel
-//! Folding measurable — the same All-to-All volume is ~9× cheaper when the
-//! EP group folds into one NVLink domain.
-//!
-//! Conventions:
-//! * `bytes` is the payload *per participating rank* (the natural NCCL
-//!   convention: AllGather input bytes, ReduceScatter input bytes / n, …
-//!   is normalized per primitive below).
-//! * returned times are in **microseconds**.
-//!
-//! The default methods price the **same algorithm suite the functional
-//! simulator executes** ([`crate::simcomm::AlgoSelection::fast`]): ring
-//! all-reduce/all-gather, recursive-halving/pairwise reduce-scatter,
-//! pairwise all-to-all. The `*_with` variants take an explicit
-//! [`CollectiveAlgo`] so the naive leader oracle can be priced too — its
-//! cost model is a single serialized link at the leader, which is exactly
-//! why `simcomm`'s differential benchmarks show it losing at world ≥ 16.
+//! The pricing itself lives in the [`cost`] module: [`CommCost`] is the
+//! shared cost-primitive layer consumed by both the analytic estimator
+//! ([`crate::perfmodel`]) and the functional simulator's virtual clock
+//! ([`crate::simcomm::Fabric::new_clocked`]), so the two timing consumers
+//! can never drift. [`CommModel`] is kept as an alias for the analytic call
+//! sites that predate the split.
 
-use crate::cluster::ClusterSpec;
-use crate::simcomm::CollectiveAlgo;
+pub mod cost;
 
-/// How a group's members spread over nodes.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct GroupShape {
-    /// total ranks in the group
-    pub n: usize,
-    /// distinct nodes spanned
-    pub nodes: usize,
-    /// ranks of this group living on one node (n / nodes for the regular
-    /// layouts produced by `mapping`)
-    pub local: usize,
-}
+pub use cost::{CommCost, CommPrimitive, GroupShape};
 
-impl GroupShape {
-    pub fn of(cluster: &ClusterSpec, group: &[usize]) -> Self {
-        let n = group.len().max(1);
-        let nodes = cluster.nodes_spanned(group).max(1);
-        Self { n, nodes, local: (n / nodes).max(1) }
-    }
-
-    pub fn single_node(&self) -> bool {
-        self.nodes <= 1
-    }
-}
-
-/// Collective cost model over a cluster.
-#[derive(Debug, Clone)]
-pub struct CommModel {
-    pub cluster: ClusterSpec,
-    /// Efficiency factor on NVLink algorithms (protocol overheads), ~0.8.
-    pub nvlink_eff: f64,
-    /// Efficiency factor on IB algorithms, ~0.85.
-    pub ib_eff: f64,
-}
-
-impl CommModel {
-    pub fn new(cluster: ClusterSpec) -> Self {
-        Self { cluster, nvlink_eff: 0.80, ib_eff: 0.85 }
-    }
-
-    fn nv_bw(&self) -> f64 {
-        self.cluster.nvlink_bw_gbs * 1e9 * self.nvlink_eff // B/s
-    }
-
-    fn ib_bw(&self) -> f64 {
-        self.cluster.ib_bw_gbs * 1e9 * self.ib_eff
-    }
-
-    fn lat(&self, shape: GroupShape) -> f64 {
-        if shape.single_node() {
-            self.cluster.nvlink_latency_us
-        } else {
-            self.cluster.ib_latency_us
-        }
-    }
-
-    /// Ring AllReduce of `bytes` per rank.
-    pub fn all_reduce(&self, group: &[usize], bytes: f64) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        if s.single_node() {
-            let t = 2.0 * (s.n as f64 - 1.0) / s.n as f64 * bytes / self.nv_bw();
-            return t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s);
-        }
-        // Hierarchical: intra-node reduce-scatter + inter-node all-reduce of
-        // the shard + intra-node all-gather.
-        let intra = 2.0 * (s.local as f64 - 1.0) / s.local as f64 * bytes / self.nv_bw();
-        let inter =
-            2.0 * (s.nodes as f64 - 1.0) / s.nodes as f64 * (bytes / s.local as f64) / self.ib_bw();
-        (intra + inter) * 1e6 + 2.0 * (s.n as f64) * self.cluster.ib_latency_us
-    }
-
-    /// AllGather: each rank contributes `bytes`, receives `n*bytes`.
-    pub fn all_gather(&self, group: &[usize], bytes_per_rank: f64) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        let total = bytes_per_rank * s.n as f64;
-        if s.single_node() {
-            let t = (s.n as f64 - 1.0) / s.n as f64 * total / self.nv_bw();
-            return t * 1e6 + (s.n as f64 - 1.0) * self.lat(s);
-        }
-        let intra = (s.local as f64 - 1.0) / s.local as f64 * total / self.nv_bw();
-        let inter = (s.nodes as f64 - 1.0) / s.nodes as f64 * total / self.ib_bw();
-        (intra + inter) * 1e6 + (s.n as f64) * self.cluster.ib_latency_us
-    }
-
-    /// ReduceScatter of a `bytes_total_per_rank` input buffer held by every
-    /// rank (each receives a reduced 1/n shard). Dual of AllGather — same
-    /// α–β cost with the shard as the per-rank contribution.
-    pub fn reduce_scatter(&self, group: &[usize], bytes_total_per_rank: f64) -> f64 {
-        let n = GroupShape::of(&self.cluster, group).n.max(1) as f64;
-        self.all_gather(group, bytes_total_per_rank / n)
-    }
-
-    /// AllToAll of `bytes_per_rank` total payload held by each rank
-    /// (each rank sends `bytes_per_rank / n` to every peer).
-    ///
-    /// On a single node the NVSwitch gives full bisection: time ≈
-    /// `bytes * (n-1)/n / nvlink`. Across nodes, the fraction of traffic
-    /// leaving the node (`(nodes-1)/nodes` of it) is squeezed through the
-    /// per-GPU NIC.
-    pub fn all_to_all(&self, group: &[usize], bytes_per_rank: f64) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        let frac_remote = (s.n - s.local) as f64 / s.n as f64; // peers off-node
-        let frac_local = (s.local as f64 - 1.0) / s.n as f64;
-        let t_local = bytes_per_rank * frac_local / self.nv_bw();
-        let t_remote = bytes_per_rank * frac_remote / self.ib_bw();
-        // NVSwitch traffic and NIC traffic proceed concurrently; the slower
-        // path dominates, plus per-peer launch latency.
-        let bw_time = t_local.max(t_remote) * 1e6;
-        let lat = if s.single_node() {
-            self.cluster.nvlink_latency_us * (s.n as f64 - 1.0).min(8.0)
-        } else {
-            self.cluster.ib_latency_us * (s.nodes as f64).min(16.0)
-        };
-        bw_time + lat
-    }
-
-    /// Variable AllToAll — costed like AllToAll with an imbalance factor:
-    /// the busiest rank carries `imbalance`× the mean payload.
-    pub fn all_to_all_v(&self, group: &[usize], mean_bytes_per_rank: f64, imbalance: f64) -> f64 {
-        self.all_to_all(group, mean_bytes_per_rank * imbalance.max(1.0))
-    }
-
-    /// Point-to-point send of `bytes` between two specific ranks.
-    pub fn p2p(&self, a: usize, b: usize, bytes: f64) -> f64 {
-        if a == b {
-            return 0.0;
-        }
-        let (bw, lat) = if self.cluster.node_of(a) == self.cluster.node_of(b) {
-            (self.nv_bw(), self.cluster.nvlink_latency_us)
-        } else {
-            (self.ib_bw(), self.cluster.ib_latency_us)
-        };
-        bytes / bw * 1e6 + lat
-    }
-
-    /// Broadcast from the group leader.
-    pub fn broadcast(&self, group: &[usize], bytes: f64) -> f64 {
-        // tree broadcast ~ allgather of bytes/n chunks; approximate with AG.
-        self.all_gather(group, bytes / group.len().max(1) as f64)
-    }
-
-    // ---- algorithm-explicit costs (same names simcomm executes) --------
-
-    /// The link the naive leader serializes on.
-    fn leader_bw(&self, s: GroupShape) -> f64 {
-        if s.single_node() {
-            self.nv_bw()
-        } else {
-            self.ib_bw()
-        }
-    }
-
-    /// AllReduce under an explicit algorithm. `Ring` (and the other
-    /// distributed algorithms) cost the default hierarchical ring model;
-    /// `NaiveLeader` pays `(n−1)` serialized receives plus `(n−1)`
-    /// serialized sends of the full buffer on the leader's single link.
-    pub fn all_reduce_with(&self, algo: CollectiveAlgo, group: &[usize], bytes: f64) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        match algo {
-            CollectiveAlgo::NaiveLeader => {
-                let t = 2.0 * (s.n as f64 - 1.0) * bytes / self.leader_bw(s);
-                t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
-            }
-            _ => self.all_reduce(group, bytes),
-        }
-    }
-
-    /// AllGather under an explicit algorithm (leader: `(n−1)` receives of
-    /// `bytes` + `(n−1)` sends of the `n·bytes` concatenation).
-    pub fn all_gather_with(
-        &self,
-        algo: CollectiveAlgo,
-        group: &[usize],
-        bytes_per_rank: f64,
-    ) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        match algo {
-            CollectiveAlgo::NaiveLeader => {
-                let n = s.n as f64;
-                let t = ((n - 1.0) * bytes_per_rank + (n - 1.0) * n * bytes_per_rank)
-                    / self.leader_bw(s);
-                t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
-            }
-            _ => self.all_gather(group, bytes_per_rank),
-        }
-    }
-
-    /// ReduceScatter under an explicit algorithm (leader: `(n−1)` receives
-    /// of the full buffer + `(n−1)` shard sends).
-    pub fn reduce_scatter_with(
-        &self,
-        algo: CollectiveAlgo,
-        group: &[usize],
-        bytes_total_per_rank: f64,
-    ) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        match algo {
-            CollectiveAlgo::NaiveLeader => {
-                let n = s.n as f64;
-                let t = ((n - 1.0) * bytes_total_per_rank
-                    + (n - 1.0) * bytes_total_per_rank / n)
-                    / self.leader_bw(s);
-                t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
-            }
-            _ => self.reduce_scatter(group, bytes_total_per_rank),
-        }
-    }
-
-    /// AllToAll under an explicit algorithm (leader relays every buffer:
-    /// `(n−1)·bytes` in and `(n−1)·bytes` out through one link).
-    pub fn all_to_all_with(
-        &self,
-        algo: CollectiveAlgo,
-        group: &[usize],
-        bytes_per_rank: f64,
-    ) -> f64 {
-        let s = GroupShape::of(&self.cluster, group);
-        if s.n <= 1 {
-            return 0.0;
-        }
-        match algo {
-            CollectiveAlgo::NaiveLeader => {
-                let t = 2.0 * (s.n as f64 - 1.0) * bytes_per_rank / self.leader_bw(s);
-                t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
-            }
-            _ => self.all_to_all(group, bytes_per_rank),
-        }
-    }
-}
+/// Historical name of the analytic cost model; same type as [`CommCost`].
+pub type CommModel = CommCost;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::simcomm::CollectiveAlgo;
 
     fn model(gpus: usize) -> CommModel {
         CommModel::new(ClusterSpec::eos(gpus))
@@ -381,5 +127,23 @@ mod tests {
             m.reduce_scatter(&g, 3e7)
         );
         assert_eq!(m.all_to_all_with(suite.all_to_all, &g, 3e7), m.all_to_all(&g, 3e7));
+    }
+
+    /// `price` dispatches to the same per-primitive methods the analytic
+    /// model calls — the virtual clock charges identical numbers.
+    #[test]
+    fn price_matches_named_primitives() {
+        let m = model(64);
+        let g: Vec<usize> = (0..16).collect();
+        let algo = CollectiveAlgo::Ring;
+        for (prim, want) in [
+            (CommPrimitive::AllReduce, m.all_reduce_with(algo, &g, 5e6)),
+            (CommPrimitive::AllGather, m.all_gather_with(algo, &g, 5e6)),
+            (CommPrimitive::ReduceScatter, m.reduce_scatter_with(algo, &g, 5e6)),
+            (CommPrimitive::AllToAll, m.all_to_all_with(algo, &g, 5e6)),
+            (CommPrimitive::Broadcast, m.broadcast_with(algo, &g, 5e6)),
+        ] {
+            assert_eq!(m.price(prim, algo, &g, 5e6), want, "{prim:?}");
+        }
     }
 }

@@ -6,9 +6,16 @@
 //! [`crate::train`] (execution).
 
 use crate::autotune::{self, Constraints, TuneResult};
-use crate::config::{ModelConfig, ParallelConfig, Precision, TrainConfig};
+use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::collectives::CommCost;
+use crate::config::{DropPolicy, ModelConfig, ParallelConfig, Precision, TrainConfig};
+use crate::dispatcher::{DistributedMoeLayer, MoePhaseCost, Router, RouterConfig};
+use crate::mapping::RuntimeTopology;
 use crate::metrics::{pct, Table};
 use crate::perfmodel::{PerfModel, Strategy};
+use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+use crate::train::math::SwigluExpert;
+use crate::util::Rng;
 
 /// Table 1: MFU of all five strategies over the paper's four models.
 pub fn table1(pm: &PerfModel) -> Table {
@@ -174,12 +181,10 @@ pub fn context_scaling(pm: &PerfModel, model: &ModelConfig) -> Table {
     t
 }
 
-/// Figure 5: MoE layer latency breakdown across (EP, ETP) mappings with the
-/// attention side fixed at TP=4, CP=1.
-pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Table {
-    let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
-                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)", "Folded"]);
-    let train = TrainConfig::paper_default(4096, 256);
+/// The `(ep, etp)` mappings the Figure-5 ablations sweep for a fixed
+/// `ep·etp` product — shared by the analytic and executed breakdowns so
+/// the two tables always cover the same mappings.
+fn fig5_combos(model: &ModelConfig, ep_etp: usize) -> Vec<(usize, usize)> {
     let mut combos = Vec::new();
     let mut ep = 1;
     while ep <= ep_etp {
@@ -189,7 +194,16 @@ pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Tab
         }
         ep *= 2;
     }
-    for (ep, etp) in combos {
+    combos
+}
+
+/// Figure 5: MoE layer latency breakdown across (EP, ETP) mappings with the
+/// attention side fixed at TP=4, CP=1.
+pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Table {
+    let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
+                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)", "Folded"]);
+    let train = TrainConfig::paper_default(4096, 256);
+    for (ep, etp) in fig5_combos(model, ep_etp) {
         // Attention fixed: TP4, CP1 — folding decouples the MoE grid.
         let cfg = ParallelConfig::new(128, 4, 1, ep, etp, 1);
         let folded_needed = etp != 4; // not expressible in the coupled scheme
@@ -210,6 +224,88 @@ pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Tab
                 folded.to_string(),
             ]);
         }
+    }
+    t
+}
+
+/// The **executed** counterpart of [`fig5_breakdown`]: instead of pricing
+/// the MoE layer analytically, run the real token dispatcher over a
+/// clocked `ep·etp`-rank fabric and read the per-phase times off rank 0's
+/// trace. The functional payload is a scaled-down stand-in
+/// (`hidden = 64`), but communication is billed at model scale
+/// (`set_bill_scale`) and compute is charged from the model's FLOPs
+/// ([`MoePhaseCost::from_model`]) — so routing imbalance, per-peer bin
+/// skew, and the EP-vs-ETP comm asymmetry are *measured*, not assumed.
+pub fn fig5_breakdown_executed(
+    model: &ModelConfig,
+    ep_etp: usize,
+    tokens_per_rank: usize,
+) -> Table {
+    let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
+                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)"]);
+    let h_sim = 64usize;
+    let ff_sim = 128usize;
+    for (ep, etp) in fig5_combos(model, ep_etp) {
+        let world = ep * etp;
+        let Ok(topo) = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, ep, etp, 1))
+        else {
+            continue;
+        };
+        let mut rng = Rng::seed_from_u64(4242);
+        let router = Router::init(
+            RouterConfig {
+                hidden: h_sim,
+                num_experts: model.num_experts,
+                top_k: model.top_k,
+                capacity_factor: 1.0,
+                drop_policy: DropPolicy::Dropless,
+                capacity_override: None,
+                pad_to_capacity: false,
+            },
+            &mut rng,
+        );
+        let experts: Vec<SwigluExpert> = (0..model.num_experts)
+            .map(|_| SwigluExpert::init(h_sim, ff_sim, &mut rng))
+            .collect();
+        let pc = MoePhaseCost::from_model(model, etp, &GpuSpec::h100());
+        let mut tokens = vec![0.0f32; world * tokens_per_rank * h_sim];
+        rng.fill_normal(&mut tokens, 1.0);
+        let fabric = Fabric::new_clocked(
+            world,
+            AlgoSelection::fast(),
+            CommCost::new(ClusterSpec::eos(world)),
+        );
+        let bill = model.hidden_size as f64 / h_sim as f64;
+        run_ranks_on(&fabric, |rank, comm| {
+            comm.set_bill_scale(bill);
+            let layer =
+                DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts)
+                    .with_phase_cost(pc);
+            let mine = tokens
+                [rank * tokens_per_rank * h_sim..(rank + 1) * tokens_per_rank * h_sim]
+                .to_vec();
+            layer.forward(&comm, &mine);
+        });
+        let trace = fabric.take_trace();
+        let sum_for = |names: &[&str]| -> f64 {
+            trace
+                .iter()
+                .filter(|e| e.rank == 0 && names.contains(&e.name.as_str()))
+                .map(|e| e.dur_us)
+                .sum()
+        };
+        let router_permute = sum_for(&["moe/router", "moe/permute", "moe/unpermute"]);
+        let a2a = sum_for(&["moe/a2a_dispatch", "moe/a2a_combine"]);
+        let etp_comm = sum_for(&["moe/etp"]);
+        let expert = sum_for(&["moe/expert"]);
+        t.row(&[
+            format!("EP{ep}xETP{etp}"),
+            format!("{router_permute:.0}"),
+            format!("{a2a:.0}"),
+            format!("{etp_comm:.0}"),
+            format!("{expert:.0}"),
+            format!("{:.0}", router_permute + a2a + etp_comm + expert),
+        ]);
     }
     t
 }
@@ -277,6 +373,24 @@ mod tests {
         let folded: f64 = cp8.iter().find(|r| r[2] == "folded*").unwrap()[3].parse().unwrap();
         let legacy: f64 = cp8.iter().find(|r| r[2] == "legacy").unwrap()[3].parse().unwrap();
         assert!(legacy > 1.5 * folded, "legacy {legacy} vs folded {folded}");
+    }
+
+    /// Executed fig5: phase times are measured from the trace — the
+    /// EP-only mapping has zero ETP time, the ETP-only mapping has zero
+    /// A2A, and both carry model-scale expert compute.
+    #[test]
+    fn fig5_executed_measures_phase_asymmetry() {
+        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64);
+        assert!(t.rows.len() >= 3, "{} rows", t.rows.len());
+        let row_ep = t.rows.iter().find(|r| r[0] == "EP8xETP1").unwrap();
+        assert_eq!(row_ep[3], "0", "EP-only mapping has no ETP comm");
+        assert!(row_ep[2].parse::<f64>().unwrap() > 0.0, "a2a measured");
+        let row_etp = t.rows.iter().find(|r| r[0] == "EP1xETP8").unwrap();
+        assert_eq!(row_etp[2], "0", "ETP-only mapping has no a2a");
+        assert!(row_etp[3].parse::<f64>().unwrap() > 0.0, "etp comm measured");
+        for r in &t.rows {
+            assert!(r[4].parse::<f64>().unwrap() > 0.0, "{}: expert compute", r[0]);
+        }
     }
 
     #[test]

@@ -10,7 +10,9 @@ pub mod workflow;
 
 pub use permute::Permutation;
 pub use router::{Assignment, RouteDecision, Router, RouterConfig};
-pub use workflow::{reference_moe_forward, DispatchScratch, DispatchStats, DistributedMoeLayer};
+pub use workflow::{
+    reference_moe_forward, DispatchScratch, DispatchStats, DistributedMoeLayer, MoePhaseCost,
+};
 
 #[cfg(test)]
 mod tests {
@@ -26,6 +28,15 @@ mod tests {
     const E: usize = 8;
 
     fn build_router(top_k: usize, policy: DropPolicy, seed: u64) -> Router {
+        build_router_padded(top_k, policy, seed, false)
+    }
+
+    fn build_router_padded(
+        top_k: usize,
+        policy: DropPolicy,
+        seed: u64,
+        pad_to_capacity: bool,
+    ) -> Router {
         let mut rng = Rng::seed_from_u64(seed);
         Router::init(
             RouterConfig {
@@ -35,6 +46,7 @@ mod tests {
                 capacity_factor: 1.0,
                 drop_policy: policy,
                 capacity_override: None,
+                pad_to_capacity,
             },
             &mut rng,
         )
@@ -138,6 +150,7 @@ mod tests {
                 ep_index: rank,
                 num_experts: E,
                 seq_group: None,
+                phase_cost: None,
             };
             layer.forward(&comm, &tokens(8, 40 + rank as u64)).1
         });
@@ -176,6 +189,85 @@ mod tests {
         }
     }
 
+    /// Pad-to-capacity (drop **with** padding): the dispatch a2a carries a
+    /// constant per-expert bin of `capacity` rows, the outputs are
+    /// bit-identical to the unpadded drop mode (padding is volume, not
+    /// math), and the padded volume is exactly what the static-shape
+    /// accounting predicts.
+    #[test]
+    fn pad_to_capacity_constant_volume_bit_identical() {
+        let n_per_rank = 16;
+        let experts = build_experts(501);
+        let all_tokens = tokens(n_per_rank * 4, 502);
+        let topo =
+            RuntimeTopology::folded(ParallelConfig::new(4, 1, 1, 4, 1, 1)).unwrap();
+        let run = |pad: bool| {
+            run_ranks(4, |rank, comm| {
+                let router = build_router_padded(2, DropPolicy::SubSequence, 500, pad);
+                let layer = DistributedMoeLayer::from_topology(
+                    topo.view(rank),
+                    router,
+                    &experts,
+                );
+                let mine =
+                    all_tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+                layer.forward(&comm, &mine)
+            })
+        };
+        let plain = run(false);
+        let padded = run(true);
+        let router = build_router_padded(2, DropPolicy::SubSequence, 500, true);
+        let capacity = router.capacity_for(n_per_rank);
+        let epr = E / 4;
+        for rank in 0..4 {
+            let (po, ps) = (&padded[rank].0, padded[rank].1);
+            let (uo, us) = (&plain[rank].0, plain[rank].1);
+            assert_eq!(po.len(), uo.len());
+            for (i, (a, b)) in po.iter().zip(uo).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank} idx {i}: {a} vs {b}");
+            }
+            // Static volume: 4 peers × (epr counts + epr·capacity·H rows).
+            assert_eq!(ps.a2a_send_bytes, 4 * (epr + epr * capacity * H) * 4);
+            assert_eq!(
+                ps.tokens_padded,
+                E * capacity - ps.tokens_routed,
+                "rank {rank}: every bin padded to capacity"
+            );
+            assert!(ps.tokens_padded > 0, "rank {rank}: random gates must underfill");
+            assert_eq!(us.tokens_routed, ps.tokens_routed);
+        }
+    }
+
+    /// Padding composes with ETP sharding and full-sequence dropping.
+    #[test]
+    fn pad_to_capacity_with_etp_matches_unpadded() {
+        let n_per_rank = 8;
+        let experts = build_experts(601);
+        let all_tokens = tokens(n_per_rank * 4, 602);
+        let topo =
+            RuntimeTopology::folded(ParallelConfig::new(4, 1, 1, 2, 2, 1)).unwrap();
+        let run = |pad: bool| {
+            run_ranks(4, |rank, comm| {
+                let router = build_router_padded(2, DropPolicy::SubSequence, 600, pad);
+                let layer = DistributedMoeLayer::from_topology(
+                    topo.view(rank),
+                    router,
+                    &experts,
+                );
+                let mine =
+                    all_tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+                layer.forward(&comm, &mine).0
+            })
+        };
+        let plain = run(false);
+        let padded = run(true);
+        for (rank, (a, b)) in padded.iter().zip(&plain).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {rank} idx {i}");
+            }
+        }
+    }
+
     #[test]
     fn dropping_caps_tokens_routed() {
         let router = build_router(2, DropPolicy::SubSequence, 11);
@@ -190,6 +282,7 @@ mod tests {
                 ep_index: rank,
                 num_experts: E,
                 seq_group: None,
+                phase_cost: None,
             };
             layer.forward(&comm, &tokens(32, 13 + rank as u64)).1
         });

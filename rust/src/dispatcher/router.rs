@@ -15,6 +15,12 @@ pub struct RouterConfig {
     /// Absolute per-expert capacity override (e.g. to match an AOT
     /// artifact's static bin size exactly). `None` derives from CF.
     pub capacity_override: Option<usize>,
+    /// Pad every expert's dispatched bin with zero rows up to the capacity
+    /// (the paper's "drop **with** padding" mode: static shapes, constant
+    /// All-to-All volume). Ignored in dropless mode. The padded forward is
+    /// bit-identical to the unpadded drop mode — only communication volume
+    /// changes ([`crate::dispatcher::DispatchStats::tokens_padded`]).
+    pub pad_to_capacity: bool,
 }
 
 /// One routed token-copy: which expert, with what gate weight, and whether
@@ -37,6 +43,11 @@ pub struct RouteDecision {
     pub expert_load: Vec<usize>,
     /// Switch-style auxiliary load-balancing loss.
     pub aux_loss: f32,
+    /// Per-expert capacity this decision was dropped against (0 in
+    /// dropless mode — no capacity applied). The dispatcher's
+    /// pad-to-capacity mode pads every expert bin to exactly this many
+    /// rows.
+    pub capacity: usize,
 }
 
 impl RouteDecision {
@@ -144,21 +155,29 @@ impl Router {
         out
     }
 
+    /// The per-expert capacity for a `scope_tokens`-token drop scope:
+    /// `ceil(cf · scope · k / E)`, or the absolute override.
+    pub fn capacity_for(&self, scope_tokens: usize) -> usize {
+        let e = self.config.num_experts;
+        let k = self.config.top_k.min(e);
+        self.config.capacity_override.unwrap_or_else(|| {
+            ((self.config.capacity_factor * scope_tokens as f64 * k as f64 / e as f64).ceil()
+                as usize)
+                .max(1)
+        })
+    }
+
     /// Apply capacity-factor dropping in place. `scope_tokens` is the number
     /// of tokens over which capacity is computed (the local sub-sequence for
     /// SubSequence mode; the full sequence for FullSequence mode — in that
-    /// case assignments from all ranks must be passed jointly).
-    pub fn apply_capacity(&self, assignments: &mut [Assignment], scope_tokens: usize) {
+    /// case assignments from all ranks must be passed jointly). Returns the
+    /// capacity applied (0 in dropless mode).
+    pub fn apply_capacity(&self, assignments: &mut [Assignment], scope_tokens: usize) -> usize {
         if self.config.drop_policy == DropPolicy::Dropless {
-            return;
+            return 0;
         }
         let e = self.config.num_experts;
-        let k = self.config.top_k.min(e);
-        let capacity = self.config.capacity_override.unwrap_or_else(|| {
-            ((self.config.capacity_factor * scope_tokens as f64 * k as f64 / e as f64)
-                .ceil() as usize)
-                .max(1)
-        });
+        let capacity = self.capacity_for(scope_tokens);
         let mut load = vec![0usize; e];
         // Position-based dropping: earlier tokens win (Switch-style).
         for a in assignments.iter_mut() {
@@ -169,6 +188,7 @@ impl Router {
                 a.kept = false;
             }
         }
+        capacity
     }
 
     /// Switch-style auxiliary load-balancing loss over gate `probs`
@@ -203,7 +223,7 @@ impl Router {
         let n = tokens.len() / self.config.hidden;
         let probs = self.gate_probs(tokens);
         let mut assignments = self.topk(&probs, n);
-        self.apply_capacity(&mut assignments, n);
+        let capacity = self.apply_capacity(&mut assignments, n);
         let e = self.config.num_experts;
         let mut expert_load = vec![0usize; e];
         for a in &assignments {
@@ -212,7 +232,7 @@ impl Router {
             }
         }
         let aux_loss = self.aux_loss(&probs, n);
-        RouteDecision { assignments, num_tokens: n, expert_load, aux_loss }
+        RouteDecision { assignments, num_tokens: n, expert_load, aux_loss, capacity }
     }
 }
 
@@ -258,6 +278,7 @@ mod tests {
             capacity_factor: cf,
             drop_policy: policy,
             capacity_override: None,
+            pad_to_capacity: false,
         }
     }
 
@@ -384,6 +405,19 @@ mod tests {
         let a = r.topk(&probs, 1);
         assert_eq!(a[0].expert, 2);
         assert_eq!(a[0].prob, 0.5);
+    }
+
+    /// The decision carries the capacity it was dropped against (the
+    /// dispatcher's pad-to-capacity mode pads bins to exactly this).
+    #[test]
+    fn route_reports_capacity_applied() {
+        let mut rng = Rng::seed_from_u64(30);
+        let r = Router::init(cfg(4, 2, 1.5, DropPolicy::SubSequence), &mut rng);
+        let d = r.route(&tokens(32, 16, 31));
+        assert_eq!(d.capacity, r.capacity_for(32));
+        assert_eq!(d.capacity, (1.5f64 * 32.0 * 2.0 / 4.0).ceil() as usize);
+        let r2 = Router::init(cfg(4, 2, 1.5, DropPolicy::Dropless), &mut rng);
+        assert_eq!(r2.route(&tokens(8, 16, 32)).capacity, 0);
     }
 
     #[test]

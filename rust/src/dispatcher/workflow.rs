@@ -22,8 +22,10 @@
 //! in steady state the collective calls perform **zero payload
 //! allocations** (fabric pool + reused staging buffers).
 
-use crate::config::DropPolicy;
+use crate::cluster::GpuSpec;
+use crate::config::{DropPolicy, ModelConfig};
 use crate::mapping::RankView;
+use crate::model::flops::ModelFlops;
 use crate::simcomm::Communicator;
 use crate::train::math::SwigluExpert;
 
@@ -39,11 +41,49 @@ pub struct DispatchStats {
     pub etp_rs_bytes: usize,
     pub tokens_routed: usize,
     pub tokens_dropped: usize,
+    /// Zero rows added to the dispatch All-to-All by pad-to-capacity mode
+    /// ([`crate::dispatcher::RouterConfig::pad_to_capacity`]); 0 otherwise.
+    pub tokens_padded: usize,
     /// Auxiliary load-balancing loss of this forward's routing decision.
     /// Under full-sequence dropping it is computed from the *gathered*
     /// full-sequence statistics, so every rank of the sequence group
     /// reports the bit-identical value.
     pub aux_loss: f32,
+}
+
+/// Per-unit compute charges for the virtual clock's MoE phase tags
+/// (µs per token/copy). Built from the model's FLOP accounting
+/// ([`crate::model::flops::ModelFlops`]) so the executed timeline charges
+/// the *model-scale* compute even when the functional payload is a
+/// scaled-down stand-in. Attach with
+/// [`DistributedMoeLayer::with_phase_cost`]; without it, clocked forwards
+/// record communication time only.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoePhaseCost {
+    /// Router gating, µs per local token.
+    pub router_us_per_token: f64,
+    /// One permute *or* unpermute pass, µs per routed copy.
+    pub permute_us_per_copy: f64,
+    /// Expert FFN shard, µs per computed row (post-ETP-gather).
+    pub expert_us_per_copy: f64,
+}
+
+impl MoePhaseCost {
+    /// Charges for `model`'s MoE layer with the expert FFN sharded `etp`
+    /// ways, on `gpu` (BF16; efficiency factors mirror the analytic layer
+    /// coster's router/expert operating points).
+    pub fn from_model(model: &ModelConfig, etp: usize, gpu: &GpuSpec) -> Self {
+        let peak = gpu.peak_bf16_tflops * 1e12;
+        let hbm = gpu.hbm_bw_gbs * 1e9;
+        let router_us_per_token =
+            ModelFlops::router_flops_per_token(model) / (peak * 0.2) * 1e6;
+        // One gather pass: read + write of an h-wide bf16 row.
+        let permute_us_per_copy =
+            2.0 * 2.0 * model.hidden_size as f64 / hbm * 1e6;
+        let expert_us_per_copy =
+            ModelFlops::expert_flops_per_copy(model) / etp.max(1) as f64 / (peak * 0.5) * 1e6;
+        Self { router_us_per_token, permute_us_per_copy, expert_us_per_copy }
+    }
 }
 
 /// Reusable staging buffers for the dispatch hot path. Construct once per
@@ -92,6 +132,9 @@ pub struct DistributedMoeLayer {
     /// Optional sequence group for full-sequence dropping (global ranks that
     /// together hold one full sequence). `None` => sub-sequence scope.
     pub seq_group: Option<Vec<usize>>,
+    /// Optional per-phase compute charges for the virtual clock; `None`
+    /// leaves clocked forwards with communication time only.
+    pub phase_cost: Option<MoePhaseCost>,
 }
 
 impl DistributedMoeLayer {
@@ -139,7 +182,14 @@ impl DistributedMoeLayer {
             ep_index: view.ep_index,
             num_experts,
             seq_group,
+            phase_cost: None,
         }
+    }
+
+    /// Attach per-phase compute charges for clocked execution.
+    pub fn with_phase_cost(mut self, pc: MoePhaseCost) -> Self {
+        self.phase_cost = Some(pc);
+        self
     }
 
     pub fn experts_per_rank(&self) -> usize {
@@ -173,7 +223,7 @@ impl DistributedMoeLayer {
                     "gathered counts must cover the sequence"
                 );
                 let mut assignments = self.router.topk(&gathered, n_total);
-                self.router.apply_capacity(&mut assignments, n_total);
+                let capacity = self.router.apply_capacity(&mut assignments, n_total);
                 // Aux loss from the full-sequence statistics: every rank
                 // folds the same gathered tensor, so the value is
                 // bit-identical (replica-consistent) across the group —
@@ -197,6 +247,7 @@ impl DistributedMoeLayer {
                     num_tokens: n_local,
                     expert_load,
                     aux_loss,
+                    capacity,
                 }
             }
             _ => self.router.route(tokens),
@@ -228,60 +279,97 @@ impl DistributedMoeLayer {
         let mut stats = DispatchStats::default();
 
         // 1-2. Route + permute into expert-sorted order.
+        comm.set_phase("moe/router");
         let decision = self.route(comm, tokens);
+        if let Some(pc) = self.phase_cost {
+            comm.advance("moe/router", pc.router_us_per_token * n_local as f64);
+        }
         stats.tokens_routed = decision.assignments.iter().filter(|a| a.kept).count();
         stats.tokens_dropped = decision.assignments.len() - stats.tokens_routed;
         stats.aux_loss = decision.aux_loss;
         let perm = Permutation::from_assignments(&decision.assignments, self.num_experts);
         let permuted = perm.permute(tokens, h, &decision.assignments);
+        if let Some(pc) = self.phase_cost {
+            comm.advance("moe/permute", pc.permute_us_per_copy * perm.total() as f64);
+        }
+
+        // Pad-to-capacity: every expert bin in the dispatch is padded with
+        // zero rows up to this rank's capacity (static shapes / constant
+        // a2a volume — the paper's "drop with padding"). 0 disables.
+        let pad = if self.router.config.pad_to_capacity {
+            decision.capacity
+        } else {
+            0
+        };
 
         // 3. All-to-All-V dispatch. Send buffer for EP peer p:
-        //    [counts for p's epr experts..., token rows...].
+        //    [counts for p's epr experts..., token rows...] — rows padded
+        //    per expert to `pad` when padding is on.
+        comm.set_phase("moe/a2a_dispatch");
         scratch.sends.truncate(ep);
         scratch.sends.resize_with(ep, Vec::new);
         for p in 0..ep {
             let first = p * epr;
-            let start_off = if first == 0 { 0 } else { perm.offsets[first] };
-            let end_off = if first + epr < self.num_experts {
-                perm.offsets[first + epr]
-            } else {
-                perm.total()
-            };
             let buf = &mut scratch.sends[p];
             buf.clear();
             for le in 0..epr {
                 buf.push(perm.counts[first + le] as f32);
             }
-            buf.extend_from_slice(&permuted[start_off * h..end_off * h]);
+            if pad == 0 {
+                let start_off = if first == 0 { 0 } else { perm.offsets[first] };
+                let end_off = if first + epr < self.num_experts {
+                    perm.offsets[first + epr]
+                } else {
+                    perm.total()
+                };
+                buf.extend_from_slice(&permuted[start_off * h..end_off * h]);
+            } else {
+                for le in 0..epr {
+                    let e = first + le;
+                    let rows = perm.counts[e];
+                    debug_assert!(rows <= pad, "capacity must bound the bin");
+                    let s = perm.offsets[e];
+                    buf.extend_from_slice(&permuted[s * h..(s + rows) * h]);
+                    buf.resize(buf.len() + (pad - rows) * h, 0.0);
+                    stats.tokens_padded += pad - rows;
+                }
+            }
             stats.a2a_send_bytes += buf.len() * 4;
         }
         comm.all_to_all_v_into(&self.ep_group, &scratch.sends, &mut scratch.recvs);
 
         // Parse: per peer, counts per local expert + rows grouped by expert.
         // Regroup into per-local-expert buffers, preserving peer order so
-        // the return path can undo the layout.
+        // the return path can undo the layout. Only real rows feed the
+        // experts — padding is communication volume, not compute.
         scratch.per_expert.truncate(epr);
         scratch.per_expert.resize_with(epr, Vec::new);
         for buf in scratch.per_expert.iter_mut() {
             buf.clear();
         }
-        // counts_from[p][le] = rows peer p sent for local expert le.
+        // counts_from[p][le] = rows peer p sent for local expert le;
+        // pad_from[p] = peer p's per-expert bin stride (its capacity).
         let mut counts_from = vec![vec![0usize; epr]; ep];
+        let mut pad_from = vec![0usize; ep];
         for (p, buf) in scratch.recvs.iter().enumerate() {
             stats.a2a_recv_bytes += buf.len() * 4;
             let mut off = epr;
             for le in 0..epr {
                 counts_from[p][le] = buf[le] as usize;
             }
+            // Capacities may differ per peer (uneven local token counts);
+            // the stride is recovered from the buffer length itself.
+            pad_from[p] = if pad == 0 { 0 } else { (buf.len() - epr) / (epr * h) };
             for le in 0..epr {
                 let rows = counts_from[p][le];
                 scratch.per_expert[le].extend_from_slice(&buf[off..off + rows * h]);
-                off += rows * h;
+                off += if pad == 0 { rows * h } else { pad_from[p] * h };
             }
         }
 
         // 4-6. ETP: AllGather-V tokens, compute the FFN shard, then
         // ReduceScatter-V back to each member's rows.
+        comm.set_phase("moe/etp");
         let etp = self.etp_group.len();
         scratch.expert_outputs.truncate(epr);
         scratch.expert_outputs.resize_with(epr, Vec::new);
@@ -293,6 +381,10 @@ impl DistributedMoeLayer {
                 comm.all_gather_v_into(&self.etp_group, mine, &mut scratch.gathered);
                 stats.etp_ag_bytes += scratch.gathered.len() * 4;
                 let partial = self.local_experts[le].forward(&scratch.gathered);
+                if let Some(pc) = self.phase_cost {
+                    let rows = scratch.gathered.len() / h;
+                    comm.advance("moe/expert", pc.expert_us_per_copy * rows as f64);
+                }
                 scratch.counts.clear();
                 scratch.counts.extend(scratch.lens.iter().map(|&l| l as usize));
                 comm.reduce_scatter_v_into(
@@ -304,11 +396,16 @@ impl DistributedMoeLayer {
                 stats.etp_rs_bytes += scratch.expert_outputs[le].len() * 4;
             } else {
                 scratch.expert_outputs[le] = self.local_experts[le].forward(mine);
+                if let Some(pc) = self.phase_cost {
+                    let rows = mine.len() / h;
+                    comm.advance("moe/expert", pc.expert_us_per_copy * rows as f64);
+                }
             }
         }
 
         // 7. All-to-All-V combine: send each peer's rows back in the same
-        // per-peer-per-expert layout it used.
+        // per-peer-per-expert layout it used (including its padding).
+        comm.set_phase("moe/a2a_combine");
         scratch.returns.truncate(ep);
         scratch.returns.resize_with(ep, Vec::new);
         for buf in scratch.returns.iter_mut() {
@@ -322,20 +419,35 @@ impl DistributedMoeLayer {
                 scratch.returns[p]
                     .extend_from_slice(&scratch.expert_outputs[le][start * h..(start + rows) * h]);
                 cursor[le] += rows;
+                if pad != 0 {
+                    let r = &mut scratch.returns[p];
+                    r.resize(r.len() + (pad_from[p] - rows) * h, 0.0);
+                }
             }
         }
         comm.all_to_all_v_into(&self.ep_group, &scratch.returns, &mut scratch.combined);
+        comm.clear_phase();
 
         // Reassemble into the original permuted order: peer p returned rows
         // for the experts it owns, in expert order — which is exactly the
-        // contiguous segment we sent it.
+        // contiguous segment we sent it (stride `pad` when padding is on).
         scratch.expert_sorted.clear();
         scratch.expert_sorted.resize(perm.total() * h, 0.0);
         for (p, buf) in scratch.combined.iter().enumerate() {
             let first = p * epr;
-            let start_off = if first == 0 { 0 } else { perm.offsets[first] };
-            scratch.expert_sorted[start_off * h..start_off * h + buf.len()]
-                .copy_from_slice(buf);
+            if pad == 0 {
+                let start_off = if first == 0 { 0 } else { perm.offsets[first] };
+                scratch.expert_sorted[start_off * h..start_off * h + buf.len()]
+                    .copy_from_slice(buf);
+            } else {
+                for le in 0..epr {
+                    let e = first + le;
+                    let rows = perm.counts[e];
+                    let dst = perm.offsets[e];
+                    scratch.expert_sorted[dst * h..(dst + rows) * h]
+                        .copy_from_slice(&buf[le * pad * h..le * pad * h + rows * h]);
+                }
+            }
         }
 
         // 8. Un-permute with gate weighting.
@@ -345,6 +457,9 @@ impl DistributedMoeLayer {
             &decision.assignments,
             n_local,
         );
+        if let Some(pc) = self.phase_cost {
+            comm.advance("moe/unpermute", pc.permute_us_per_copy * perm.total() as f64);
+        }
         (out, stats)
     }
 }

@@ -8,12 +8,13 @@
 //!   train      run the end-to-end trainer on AOT artifacts
 //!   artifacts  list artifacts in the manifest
 
-use moe_folding::autotune::Constraints;
+use moe_folding::autotune::{self, Constraints};
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::coordinator;
 use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
-use moe_folding::perfmodel::{PerfModel, Strategy};
+use moe_folding::perfmodel::{execute_step_traced, PerfModel, Strategy};
+use moe_folding::simcomm::chrome_trace_json;
 use moe_folding::train::{train, TrainerConfig};
 use moe_folding::util::cli::Args;
 
@@ -25,11 +26,18 @@ USAGE: moe-folding <command> [options]
 
 COMMANDS:
   plan      --model <name> --gpus <n> [--strategy <s>] [--tp N --cp N --ep N --etp N --pp N]
+            [--executed [--top K]]   re-rank the analytic top-K by executing
+                                     each step on the clocked simulator
+  timeline  --model <name> --gpus <n> --tp N --cp N --ep N --etp N --pp N
+            [--strategy <s>] [--seq N] [--gbs N] [--out trace.json]
+            execute one step on the clocked simulator and dump a
+            chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev)
   mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
-  fig5      [--model <name>] [--ep-etp 8|16]
+  fig5      [--model <name>] [--ep-etp 8|16] [--executed [--tokens N]]
   fig6      [--model <name>]
   train     [--preset test|e2e] [--steps N] [--dp N] [--lr F] [--artifacts DIR]
+            [--clocked [--compute-us F]]   measured-in-sim step time
   artifacts [--dir DIR]
 
 MODELS: mixtral-8x22b, llama3-8x70b, qwen2-57b-a14b, mixtral-8x22b-g8t8, tiny
@@ -99,6 +107,53 @@ fn main() -> moe_folding::util::error::Result<()> {
             if r.feasible.is_empty() {
                 println!("no feasible configuration (all OOM)");
             }
+            if args.flag("executed") {
+                let k = args.get_usize("top", 5).min(8);
+                let ex = autotune::tune_executed(&pm, &model, gpus, &train_cfg, strategy, k);
+                println!(
+                    "\n# executed re-rank (top {k} analytic candidates, clocked simulator){}",
+                    if ex.rank_changed { " — ORDER CHANGED" } else { "" }
+                );
+                for c in &ex.candidates {
+                    println!(
+                        "{}   (analytic {:8.1} ms)",
+                        c.executed.summary(),
+                        c.analytic.step_ms
+                    );
+                }
+            }
+        }
+        "timeline" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            let gpus = args.get_usize("gpus", 128);
+            let cfg = ParallelConfig::new(
+                gpus,
+                args.get_usize("tp", 2),
+                args.get_usize("cp", 1),
+                args.get_usize("ep", 8),
+                args.get_usize("etp", 1),
+                args.get_usize("pp", 8),
+            );
+            let strategy = parse_strategy(args.get_or("strategy", "folding"));
+            let train_cfg = TrainConfig::paper_default(
+                args.get_usize("seq", model.seq_len),
+                args.get_usize("gbs", 256),
+            );
+            let (est, trace) =
+                execute_step_traced(&pm, &model, cfg, &train_cfg, strategy)
+                    .map_err(|e| moe_folding::anyhow!(e))?;
+            println!("{}", est.summary());
+            let analytic = pm
+                .estimate(&model, cfg, &train_cfg, strategy)
+                .map_err(|e| moe_folding::anyhow!(e))?;
+            println!("analytic reference: {}", analytic.summary());
+            let out = args.get_or("out", "timeline_trace.json");
+            std::fs::write(out, chrome_trace_json(&trace))?;
+            println!(
+                "wrote {out} ({} events over {} ranks) — open at chrome://tracing",
+                trace.len(),
+                gpus
+            );
         }
         "mapping" => {
             let gpus = args.get_usize("gpus", 16);
@@ -162,7 +217,15 @@ fn main() -> moe_folding::util::error::Result<()> {
         "fig5" => {
             let model = model_arg(&args, "mixtral-8x22b");
             let ep_etp = args.get_usize("ep-etp", 8);
-            print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
+            if args.flag("executed") {
+                let tokens = args.get_usize("tokens", 256);
+                print!(
+                    "{}",
+                    coordinator::fig5_breakdown_executed(&model, ep_etp, tokens).markdown()
+                );
+            } else {
+                print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
+            }
         }
         "fig6" => {
             let model = model_arg(&args, "mixtral-8x22b");
@@ -178,6 +241,8 @@ fn main() -> moe_folding::util::error::Result<()> {
                 seed: args.get_usize("seed", 42) as u64,
                 log_every: args.get_usize("log-every", 10),
                 clip_norm: args.get_f64("clip", 1.0) as f32,
+                clocked: args.flag("clocked"),
+                compute_us_per_step: args.get_f64("compute-us", 0.0),
                 ..TrainerConfig::default()
             };
             let report = train(&cfg)?;
@@ -191,6 +256,15 @@ fn main() -> moe_folding::util::error::Result<()> {
                 report.tokens_per_second,
                 report.wall_seconds
             );
+            if let Some(us) = report.sim_step_us {
+                match report.sim_mfu {
+                    Some(mfu) => println!(
+                        "measured-in-sim: {us:.1} µs/step, MFU {:.1}%",
+                        mfu * 100.0
+                    ),
+                    None => println!("measured-in-sim: {us:.1} µs/step"),
+                }
+            }
             if let Some(path) = args.get("loss-csv") {
                 std::fs::write(path, report.loss_csv())?;
                 println!("wrote {path}");

@@ -61,6 +61,18 @@ impl ModelFlops {
     pub fn achieved_tflops(&self, tokens: usize, step_time_s: f64, num_gpus: usize) -> f64 {
         self.model_flops_per_token() * tokens as f64 / step_time_s / num_gpus as f64 / 1e12
     }
+
+    /// Router gating FLOPs for one token of one MoE layer (the per-layer
+    /// share of `router`). Used by the executed dispatcher's phase charges.
+    pub fn router_flops_per_token(model: &ModelConfig) -> f64 {
+        2.0 * model.hidden_size as f64 * model.num_experts as f64
+    }
+
+    /// Expert FFN FLOPs for one routed token **copy** through one expert's
+    /// full width (divide by ETP for a width shard): the three SwiGLU GEMMs.
+    pub fn expert_flops_per_copy(model: &ModelConfig) -> f64 {
+        3.0 * 2.0 * model.hidden_size as f64 * model.moe_ffn_hidden_size as f64
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,8 @@
 //! buffers under 2²⁴ elements — far beyond anything the functional
 //! simulator moves.
 
+use crate::collectives::CommPrimitive;
+
 use super::{CollectiveAlgo, Communicator};
 
 impl Communicator {
@@ -35,6 +37,7 @@ impl Communicator {
             CollectiveAlgo::NaiveLeader => self.naive_all_gather_v(group, local, out),
             _ => self.ring_all_gather_v(group, local, out),
         }
+        self.clock_collective(CommPrimitive::AllGather, group, local.len() as f64);
     }
 
     /// Oracle: everyone sends to the leader; leader broadcasts the
@@ -125,6 +128,7 @@ impl Communicator {
             CollectiveAlgo::NaiveLeader => self.naive_all_reduce_into(group, buf),
             _ => self.chain_all_reduce_into(group, buf),
         }
+        self.clock_collective(CommPrimitive::AllReduce, group, buf.len() as f64);
     }
 
     /// Oracle: leader folds contributions in group order, then scatters the
@@ -261,6 +265,7 @@ impl Communicator {
             // pairwise exchange.
             _ => self.pairwise_reduce_scatter_v(group, local, &counts, out),
         }
+        self.clock_collective(CommPrimitive::ReduceScatter, group, local.len() as f64);
     }
 
     /// ReduceScatter-V (sum): `counts[i]` elements of `local` belong to
@@ -295,6 +300,7 @@ impl Communicator {
             // exchange is the variable-count workhorse for every fast suite.
             _ => self.pairwise_reduce_scatter_v(group, local, counts, out),
         }
+        self.clock_collective(CommPrimitive::ReduceScatter, group, local.len() as f64);
     }
 
     /// Oracle: leader folds the full buffers in group order, then scatters
@@ -506,6 +512,8 @@ impl Communicator {
             CollectiveAlgo::NaiveLeader => self.naive_all_to_all_v(group, sends, out),
             _ => self.pairwise_all_to_all_v(group, sends, out),
         }
+        let total: usize = sends.iter().map(|s| s.len()).sum();
+        self.clock_collective(CommPrimitive::AllToAll, group, total as f64);
     }
 
     /// Oracle: every buffer (including self-destined ones) is relayed
@@ -577,6 +585,7 @@ impl Communicator {
             CollectiveAlgo::NaiveLeader => self.naive_broadcast_into(group, root, buf),
             _ => self.ring_broadcast_into(group, root, buf),
         }
+        self.clock_collective(CommPrimitive::Broadcast, group, buf.len() as f64);
     }
 
     /// Oracle: root sends the full payload to every member, serially.

@@ -1,0 +1,215 @@
+//! The virtual clock of the functional simulator.
+//!
+//! A clocked [`super::Fabric`] carries one [`SimClock`]: per-rank simulated
+//! time (microseconds) plus a per-rank trace-event log. Time advances in
+//! exactly two ways:
+//!
+//! * **compute** — [`super::Communicator::advance`] charges a labelled span
+//!   to the calling rank;
+//! * **communication** — every collective and point-to-point transfer
+//!   charges the *same* [`CommCost`] primitive the analytic performance
+//!   model prices (`collectives::cost`), after synchronizing the group on
+//!   `max(entry times)`. One cost implementation means the executed clock
+//!   and the analytic estimate can never drift on the price of a
+//!   collective.
+//!
+//! Collective semantics: a collective entered by every group member at
+//! times `t_i` exits on every member at `max_i(t_i) + cost`, where `cost`
+//! comes from [`CommCost::price`] for the algorithm the communicator
+//! actually ran. The max is established by a tiny leader exchange of
+//! timestamps *after* the payload phase — control traffic that never
+//! touches payload math, so clocked execution is bit-identical to
+//! unclocked execution.
+//!
+//! The event log serializes to the Chrome trace-event format
+//! ([`chrome_trace_json`]): load the file at `chrome://tracing` or
+//! <https://ui.perfetto.dev> — one row per rank, compute and communication
+//! spans color-coded by category, gaps = waiting (pipeline bubbles).
+
+use std::sync::Mutex;
+
+use crate::collectives::CommCost;
+
+/// One timed span on one rank's simulated timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Global rank the span belongs to (chrome-trace `tid`).
+    pub rank: usize,
+    /// Phase label (e.g. `moe/a2a_dispatch`, `fwd`, `optimizer`).
+    pub name: String,
+    /// Category: `compute`, `comm`, or `p2p`.
+    pub cat: &'static str,
+    /// Start time, simulated microseconds.
+    pub ts_us: f64,
+    /// Duration, simulated microseconds.
+    pub dur_us: f64,
+}
+
+/// Per-rank simulated time + trace log. Owned by a clocked fabric.
+pub(crate) struct SimClock {
+    pub(crate) cost: CommCost,
+    times: Vec<Mutex<f64>>,
+    events: Vec<Mutex<Vec<TraceEvent>>>,
+}
+
+impl SimClock {
+    pub(crate) fn new(world: usize, cost: CommCost) -> Self {
+        Self {
+            cost,
+            times: (0..world).map(|_| Mutex::new(0.0)).collect(),
+            events: (0..world).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Current simulated time of `rank`.
+    pub(crate) fn now(&self, rank: usize) -> f64 {
+        *self.times[rank].lock().unwrap()
+    }
+
+    /// Set `rank`'s clock (collective exit, p2p arrival).
+    pub(crate) fn set(&self, rank: usize, t: f64) {
+        *self.times[rank].lock().unwrap() = t;
+    }
+
+    /// Charge `us` of local work to `rank`; returns the span start.
+    pub(crate) fn advance(&self, rank: usize, us: f64) -> f64 {
+        let mut t = self.times[rank].lock().unwrap();
+        let start = *t;
+        *t += us.max(0.0);
+        start
+    }
+
+    /// Append a span to `rank`'s trace.
+    pub(crate) fn record(&self, rank: usize, name: &str, cat: &'static str, ts: f64, dur: f64) {
+        self.events[rank].lock().unwrap().push(TraceEvent {
+            rank,
+            name: name.to_string(),
+            cat,
+            ts_us: ts,
+            dur_us: dur,
+        });
+    }
+
+    /// Snapshot of every rank's simulated time.
+    pub(crate) fn times(&self) -> Vec<f64> {
+        self.times.iter().map(|t| *t.lock().unwrap()).collect()
+    }
+
+    /// Drain all recorded events, ordered by (rank, start time).
+    pub(crate) fn take_events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for e in &self.events {
+            out.append(&mut e.lock().unwrap());
+        }
+        out.sort_by(|a, b| {
+            (a.rank, a.ts_us)
+                .partial_cmp(&(b.rank, b.ts_us))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+
+    /// Reset every rank's clock to zero (events are kept).
+    pub(crate) fn reset(&self) {
+        for t in &self.times {
+            *t.lock().unwrap() = 0.0;
+        }
+    }
+}
+
+/// Split an `f64` into two `f32`s that sum back to ~48-bit precision.
+/// Timestamps and byte counts ride the `f32` message fabric this way —
+/// plain arithmetic, no bit-pattern tricks (NaN payloads would be fragile).
+pub(crate) fn split_f64(x: f64) -> [f32; 2] {
+    let hi = x as f32;
+    let lo = (x - hi as f64) as f32;
+    [hi, lo]
+}
+
+/// Inverse of [`split_f64`].
+pub(crate) fn join_f64(hi: f32, lo: f32) -> f64 {
+    hi as f64 + lo as f64
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize trace events to Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` object form). Timestamps are microseconds —
+/// the native unit of both the trace format and the simulated clock.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    for (i, e) in events.iter().enumerate() {
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3}}}",
+            json_escape(&e.name),
+            e.cat,
+            e.rank,
+            e.ts_us,
+            e.dur_us
+        ));
+        if i + 1 < events.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_join_roundtrip_precision() {
+        for x in [0.0, 1.0, 1e6 + 0.125, 9.87654321e8, 4.0e12] {
+            let [hi, lo] = split_f64(x);
+            let back = join_f64(hi, lo);
+            assert!(
+                (back - x).abs() <= x.abs() * 1e-12 + 1e-9,
+                "{x} -> {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let events = vec![
+            TraceEvent {
+                rank: 0,
+                name: "fwd".into(),
+                cat: "compute",
+                ts_us: 0.0,
+                dur_us: 10.0,
+            },
+            TraceEvent {
+                rank: 1,
+                name: "moe/a2a \"x\"".into(),
+                cat: "comm",
+                ts_us: 10.0,
+                dur_us: 2.5,
+            },
+        ];
+        let j = chrome_trace_json(&events);
+        assert!(j.starts_with("{\"displayTimeUnit\""));
+        assert!(j.contains("\"traceEvents\":["));
+        assert!(j.contains("\"tid\":1"));
+        assert!(j.contains("\\\"x\\\""));
+        assert!(j.trim_end().ends_with("]}"));
+        // Exactly one JSON object per event line.
+        assert_eq!(j.matches("\"ph\":\"X\"").count(), 2);
+    }
+}

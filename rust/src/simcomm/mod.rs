@@ -47,12 +47,33 @@
 //! allocations** — buffers cycle between rank pools and mailboxes. The
 //! `*_into` variants additionally reuse caller-owned output buffers, which
 //! is what the dispatcher hot path uses (`dispatcher/workflow.rs`).
+//!
+//! # Virtual clock (event-clocked execution)
+//!
+//! A fabric built with [`Fabric::new_clocked`] carries per-rank **simulated
+//! time**: every collective and point-to-point transfer advances the clock
+//! using the *same* [`CommCost`] primitives the analytic performance model
+//! prices, and [`Communicator::advance`] charges labelled compute spans.
+//! A collective entered at times `t_i` exits every member at
+//! `max_i(t_i) + cost`; a p2p message sent at `t_s` becomes available to
+//! the receiver at `t_s + p2p_cost`. Clock bookkeeping rides separate
+//! control messages and never touches payload math, so clocked runs are
+//! **bit-identical** to unclocked runs (enforced by
+//! `tests/clocked_timing.rs`). Spans are logged per rank and export as a
+//! chrome trace ([`Fabric::take_trace`] + [`chrome_trace_json`]).
 
 mod algos;
+mod clock;
 
+pub use clock::{chrome_trace_json, TraceEvent};
+
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+use clock::SimClock;
+use crate::collectives::{CommCost, CommPrimitive};
 
 /// Which algorithm a collective primitive runs. See module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -121,10 +142,17 @@ impl Default for AlgoSelection {
     }
 }
 
-/// A message between ranks: tagged payload (pool-backed).
+/// A message between ranks: tagged payload (pool-backed) plus the clock
+/// metadata the receiver needs to price the transfer.
 #[derive(Debug)]
 struct Msg {
     src: usize,
+    /// Sender's simulated time when the message was posted (0 unclocked).
+    sent_at: f64,
+    /// Bytes billed to the clock for the transfer (defaults to the real
+    /// payload size; [`Communicator::send_billed`] overrides it so skeleton
+    /// executors can move tiny stand-in payloads billed at model scale).
+    billed_bytes: f64,
     data: Vec<f32>,
 }
 
@@ -148,11 +176,11 @@ impl Mailbox {
     }
 
     /// Earliest message from `src` (blocking).
-    fn take_from(&self, src: usize) -> Vec<f32> {
+    fn take_from(&self, src: usize) -> Msg {
         let mut q = self.q.lock().unwrap();
         loop {
             if let Some(pos) = q.iter().position(|m| m.src == src) {
-                return q.remove(pos).unwrap().data;
+                return q.remove(pos).unwrap();
             }
             q = self.cv.wait(q).unwrap();
         }
@@ -184,6 +212,9 @@ pub struct Fabric {
     algos: AlgoSelection,
     pool_hits: AtomicUsize,
     pool_misses: AtomicUsize,
+    /// Virtual clock (None on plain fabrics — zero overhead, no extra
+    /// control messages).
+    clock: Option<SimClock>,
 }
 
 impl Fabric {
@@ -194,6 +225,17 @@ impl Fabric {
 
     /// Fabric with an explicit algorithm selection.
     pub fn new_with(world: usize, algos: AlgoSelection) -> Arc<Self> {
+        Self::build(world, algos, None)
+    }
+
+    /// Clocked fabric: collectives, p2p transfers and
+    /// [`Communicator::advance`] charges move per-rank simulated time priced
+    /// by `cost` — the same [`CommCost`] the analytic model uses.
+    pub fn new_clocked(world: usize, algos: AlgoSelection, cost: CommCost) -> Arc<Self> {
+        Self::build(world, algos, Some(SimClock::new(world, cost)))
+    }
+
+    fn build(world: usize, algos: AlgoSelection, clock: Option<SimClock>) -> Arc<Self> {
         let mailboxes = (0..world).map(|_| Mailbox::new()).collect();
         let pools = (0..world).map(|_| Pool::new()).collect();
         Arc::new(Self {
@@ -204,11 +246,41 @@ impl Fabric {
             algos,
             pool_hits: AtomicUsize::new(0),
             pool_misses: AtomicUsize::new(0),
+            clock,
         })
     }
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// True when this fabric advances a virtual clock.
+    pub fn clocked(&self) -> bool {
+        self.clock.is_some()
+    }
+
+    /// Per-rank simulated times (µs); empty on unclocked fabrics.
+    pub fn sim_times_us(&self) -> Vec<f64> {
+        self.clock.as_ref().map(|c| c.times()).unwrap_or_default()
+    }
+
+    /// Maximum simulated time across ranks (the makespan so far).
+    pub fn max_sim_time_us(&self) -> f64 {
+        self.sim_times_us().into_iter().fold(0.0, f64::max)
+    }
+
+    /// Drain the recorded trace events (ordered by rank, then start time).
+    /// Serialize with [`chrome_trace_json`].
+    pub fn take_trace(&self) -> Vec<TraceEvent> {
+        self.clock.as_ref().map(|c| c.take_events()).unwrap_or_default()
+    }
+
+    /// Reset every rank's simulated clock to zero (trace is kept). The
+    /// fabric must be idle.
+    pub fn reset_clock(&self) {
+        if let Some(c) = &self.clock {
+            c.reset();
+        }
     }
 
     /// The fabric-wide algorithm selection.
@@ -229,7 +301,13 @@ impl Fabric {
     /// Handle for one rank.
     pub fn communicator(self: &Arc<Self>, rank: usize) -> Communicator {
         assert!(rank < self.world);
-        Communicator { fabric: Arc::clone(self), rank, algos: self.algos }
+        Communicator {
+            fabric: Arc::clone(self),
+            rank,
+            algos: self.algos,
+            phase: RefCell::new(String::new()),
+            bill_scale: Cell::new(1.0),
+        }
     }
 
     /// All rank communicators at once (for spawning workers).
@@ -305,6 +383,12 @@ pub struct Communicator {
     fabric: Arc<Fabric>,
     rank: usize,
     algos: AlgoSelection,
+    /// Current phase label; clocked collectives record their trace span
+    /// under it (see [`Self::set_phase`]).
+    phase: RefCell<String>,
+    /// Multiplier applied to real payload bytes when billing the clock —
+    /// lets scaled-down functional runs charge model-scale volumes.
+    bill_scale: Cell<f64>,
 }
 
 impl Communicator {
@@ -325,7 +409,13 @@ impl Communicator {
     /// differential tests to pit algorithms against the oracle on one
     /// fabric).
     pub fn with_algos(&self, algos: AlgoSelection) -> Communicator {
-        Communicator { fabric: Arc::clone(&self.fabric), rank: self.rank, algos }
+        Communicator {
+            fabric: Arc::clone(&self.fabric),
+            rank: self.rank,
+            algos,
+            phase: RefCell::new(String::new()),
+            bill_scale: Cell::new(self.bill_scale.get()),
+        }
     }
 
     /// Global barrier over the whole fabric.
@@ -348,7 +438,17 @@ impl Communicator {
 
     /// Move an owned (pooled) buffer to `dst` as a message.
     pub(crate) fn send_vec(&self, dst: usize, data: Vec<f32>) {
-        self.fabric.mailboxes[dst].push(Msg { src: self.rank, data });
+        let billed = data.len() as f64 * 4.0;
+        self.push_msg(dst, data, billed);
+    }
+
+    /// Post a message with an explicit billed volume.
+    fn push_msg(&self, dst: usize, data: Vec<f32>, billed_bytes: f64) {
+        let sent_at = match &self.fabric.clock {
+            Some(c) => c.now(self.rank),
+            None => 0.0,
+        };
+        self.fabric.mailboxes[dst].push(Msg { src: self.rank, sent_at, billed_bytes, data });
     }
 
     /// Copy `data` into a pooled buffer and send it to `dst`.
@@ -358,10 +458,17 @@ impl Communicator {
         self.send_vec(dst, buf);
     }
 
-    /// Receive the earliest message from `src`, taking ownership of the
-    /// pooled payload (pair with [`Self::release`] or forward it).
-    pub(crate) fn recv_take(&self, src: usize) -> Vec<f32> {
+    /// Receive the earliest message from `src` with its clock metadata.
+    fn take_msg(&self, src: usize) -> Msg {
         self.fabric.mailboxes[self.rank].take_from(src)
+    }
+
+    /// Receive the earliest message from `src`, taking ownership of the
+    /// pooled payload (pair with [`Self::release`] or forward it). Internal
+    /// transport: does **not** touch the clock — collective algorithms
+    /// account time once per collective, not per hop.
+    pub(crate) fn recv_take(&self, src: usize) -> Vec<f32> {
+        self.take_msg(src).data
     }
 
     /// Receive from `src` into a caller buffer (cleared first); the pooled
@@ -383,21 +490,227 @@ impl Communicator {
 
     // ---- point-to-point ------------------------------------------------
 
-    /// Point-to-point send.
+    /// Point-to-point send (asynchronous: the sender's clock does not
+    /// advance; the receiver pays the transfer, priced from `sent_at`).
     pub fn send(&self, dst: usize, data: &[f32]) {
         self.send_slice(dst, data);
+    }
+
+    /// [`Self::send`] with an explicit billed volume: the clock prices the
+    /// transfer as `billed_bytes` regardless of the real payload size. This
+    /// is how the executed step estimator moves tiny stand-in activations
+    /// billed at model scale.
+    pub fn send_billed(&self, dst: usize, data: &[f32], billed_bytes: f64) {
+        let mut buf = self.take_buf(data.len());
+        buf.extend_from_slice(data);
+        self.push_msg(dst, buf, billed_bytes);
     }
 
     /// Point-to-point receive. Hands the message buffer to the caller
     /// directly (no copy); the pool mints a replacement on a later send.
     /// Use [`Self::recv_into`] to keep the buffer cycling instead.
     pub fn recv(&self, src: usize) -> Vec<f32> {
-        self.recv_take(src)
+        let msg = self.take_msg(src);
+        self.clock_p2p(&msg);
+        msg.data
     }
 
     /// Point-to-point receive into a reusable buffer.
     pub fn recv_into(&self, src: usize, out: &mut Vec<f32>) {
-        self.recv_into_vec(src, out);
+        let msg = self.take_msg(src);
+        self.clock_p2p(&msg);
+        out.clear();
+        out.extend_from_slice(&msg.data);
+        self.release(msg.data);
+    }
+
+    /// Advance the receiver clock to the message's arrival time
+    /// (`sent_at + p2p cost`), recording the exposed wait.
+    fn clock_p2p(&self, msg: &Msg) {
+        let Some(clock) = &self.fabric.clock else {
+            return;
+        };
+        let cost = clock.cost.p2p(msg.src, self.rank, msg.billed_bytes);
+        let entry = clock.now(self.rank);
+        let arrival = (msg.sent_at + cost).max(entry);
+        if arrival > entry {
+            clock.set(self.rank, arrival);
+            clock.record(
+                self.rank,
+                &format!("recv<-{}", msg.src),
+                "p2p",
+                entry,
+                arrival - entry,
+            );
+        }
+    }
+
+    // ---- virtual clock -------------------------------------------------
+
+    /// True when this communicator's fabric advances a virtual clock.
+    pub fn clocked(&self) -> bool {
+        self.fabric.clock.is_some()
+    }
+
+    /// This rank's simulated time in microseconds (0 on plain fabrics).
+    pub fn now_us(&self) -> f64 {
+        match &self.fabric.clock {
+            Some(c) => c.now(self.rank),
+            None => 0.0,
+        }
+    }
+
+    /// Charge `us` microseconds of local compute under `label`. No-op on
+    /// unclocked fabrics.
+    pub fn advance(&self, label: &str, us: f64) {
+        if let Some(clock) = &self.fabric.clock {
+            if us > 0.0 {
+                let start = clock.advance(self.rank, us);
+                clock.record(self.rank, label, "compute", start, us);
+            }
+        }
+    }
+
+    /// Set the phase label under which subsequent auto-charged collectives
+    /// record their trace spans (e.g. `moe/a2a_dispatch`). Cleared with
+    /// [`Self::clear_phase`]; when empty, spans use the primitive name.
+    pub fn set_phase(&self, label: &str) {
+        let mut p = self.phase.borrow_mut();
+        p.clear();
+        p.push_str(label);
+    }
+
+    /// Clear the phase label.
+    pub fn clear_phase(&self) {
+        self.phase.borrow_mut().clear();
+    }
+
+    /// Multiply real payload bytes by `scale` when billing auto-charged
+    /// collectives (scaled-down functional runs billing model-scale
+    /// volumes). Does not affect [`Self::charge_collective`] or p2p.
+    pub fn set_bill_scale(&self, scale: f64) {
+        self.bill_scale.set(scale.max(0.0));
+    }
+
+    /// Executed collective with **virtual volume**: synchronizes the group
+    /// on `max(entry times)` (a real cross-thread rendezvous — ordering and
+    /// deadlock semantics of a collective) and advances every member's
+    /// clock by the [`CommCost`] price of `prim` at `my_bytes` per rank.
+    /// Must be entered by every member of `group`. No payload moves. No-op
+    /// on unclocked fabrics.
+    pub fn charge_collective(
+        &self,
+        label: &str,
+        prim: CommPrimitive,
+        group: &[usize],
+        my_bytes: f64,
+    ) {
+        if self.fabric.clock.is_none() || group.len() <= 1 {
+            return;
+        }
+        self.finish_collective(Some(label), prim, group, my_bytes);
+    }
+
+    /// Clock accounting for a collective that just moved real payloads:
+    /// called at the end of every public collective in `algos.rs` with this
+    /// rank's payload element count.
+    pub(crate) fn clock_collective(&self, prim: CommPrimitive, group: &[usize], my_elems: f64) {
+        if self.fabric.clock.is_none() || group.len() <= 1 {
+            return;
+        }
+        let my_bytes = my_elems * 4.0 * self.bill_scale.get();
+        self.finish_collective(None, prim, group, my_bytes);
+    }
+
+    /// Shared tail: timestamp sync + price + record.
+    fn finish_collective(
+        &self,
+        label: Option<&str>,
+        prim: CommPrimitive,
+        group: &[usize],
+        my_bytes: f64,
+    ) {
+        let clock = self.fabric.clock.as_ref().expect("clocked fabric");
+        let (t_max, sum, max) = self.clock_sync(group, my_bytes);
+        // Uniform primitives price the mean contribution; AllToAll(-V) and
+        // Broadcast pace on the busiest/root payload — matching the
+        // analytic model's `all_to_all_v(mean, imbalance)` convention.
+        let bytes = match prim {
+            CommPrimitive::AllToAll | CommPrimitive::Broadcast => max,
+            _ => sum / group.len() as f64,
+        };
+        let algo = match prim {
+            CommPrimitive::AllReduce => self.algos.all_reduce,
+            CommPrimitive::AllGather => self.algos.all_gather,
+            CommPrimitive::ReduceScatter => self.algos.reduce_scatter,
+            CommPrimitive::AllToAll => self.algos.all_to_all,
+            CommPrimitive::Broadcast => self.algos.broadcast,
+        };
+        let cost = clock.cost.price(prim, algo, group, bytes);
+        clock.set(self.rank, t_max + cost);
+        let name: String = match label {
+            Some(l) => l.to_string(),
+            None => {
+                let phase = self.phase.borrow();
+                if phase.is_empty() {
+                    prim.name().to_string()
+                } else {
+                    phase.clone()
+                }
+            }
+        };
+        clock.record(self.rank, &name, "comm", t_max, cost);
+    }
+
+    /// Group rendezvous for the clock: leader folds `(entry time, value)`
+    /// pairs in group order and replies `(max time, sum value, max value)`.
+    /// Control traffic only — payloads are untouched.
+    fn clock_sync(&self, group: &[usize], my_val: f64) -> (f64, f64, f64) {
+        let clock = self.fabric.clock.as_ref().expect("clocked fabric");
+        let t = clock.now(self.rank);
+        if group.len() <= 1 {
+            return (t, my_val, my_val);
+        }
+        let me = self.my_index(group);
+        let leader = group[0];
+        if me == 0 {
+            let mut t_max = t;
+            let mut sum = my_val;
+            let mut max = my_val;
+            for &src in &group[1..] {
+                let m = self.recv_take(src);
+                let pt = clock::join_f64(m[0], m[1]);
+                let pv = clock::join_f64(m[2], m[3]);
+                self.release(m);
+                if pt > t_max {
+                    t_max = pt;
+                }
+                sum += pv;
+                if pv > max {
+                    max = pv;
+                }
+            }
+            let th = clock::split_f64(t_max);
+            let sh = clock::split_f64(sum);
+            let mh = clock::split_f64(max);
+            let reply = [th[0], th[1], sh[0], sh[1], mh[0], mh[1]];
+            for &dst in &group[1..] {
+                self.send_slice(dst, &reply);
+            }
+            (t_max, sum, max)
+        } else {
+            let th = clock::split_f64(t);
+            let vh = clock::split_f64(my_val);
+            self.send_slice(leader, &[th[0], th[1], vh[0], vh[1]]);
+            let m = self.recv_take(leader);
+            let out = (
+                clock::join_f64(m[0], m[1]),
+                clock::join_f64(m[2], m[3]),
+                clock::join_f64(m[4], m[5]),
+            );
+            self.release(m);
+            out
+        }
     }
 }
 
@@ -661,6 +974,85 @@ mod tests {
             for o in outs {
                 assert_eq!(o[0].to_bits(), expect, "algos {algos:?}");
             }
+        }
+    }
+
+    /// A clocked collective exits every member at `max(entry) + cost`,
+    /// with the cost priced by the same `CommCost` the analytic model uses.
+    #[test]
+    fn clocked_collective_exits_at_group_max_plus_cost() {
+        use crate::cluster::ClusterSpec;
+        let group = [0usize, 1, 2, 3];
+        let elems = 1024usize;
+        let cost = CommCost::new(ClusterSpec::eos(4));
+        let expect_cost = cost.all_reduce(&group, elems as f64 * 4.0);
+        let fabric = Fabric::new_clocked(4, AlgoSelection::fast(), cost);
+        let outs = run_ranks_on(&fabric, |rank, comm| {
+            // Skewed entry: rank r has done 10·r µs of local work.
+            comm.advance("local", 10.0 * rank as f64);
+            let out = comm.all_reduce_sum(&group, &vec![rank as f32; elems]);
+            (out[0], comm.now_us())
+        });
+        let t_max_entry = 30.0;
+        for (rank, &(sum, t)) in outs.iter().enumerate() {
+            assert_eq!(sum, 6.0, "payload must be unperturbed");
+            assert!(
+                (t - (t_max_entry + expect_cost)).abs() < 1e-6,
+                "rank {rank}: clock {t} vs {}",
+                t_max_entry + expect_cost
+            );
+        }
+        // The trace recorded one compute span per busy rank + one comm span
+        // per rank.
+        let trace = fabric.take_trace();
+        assert_eq!(trace.iter().filter(|e| e.cat == "comm").count(), 4);
+        assert_eq!(trace.iter().filter(|e| e.cat == "compute").count(), 3);
+    }
+
+    /// P2p transfers are clocked on the receiver: arrival = sent_at + cost,
+    /// with `send_billed` overriding the billed volume.
+    #[test]
+    fn clocked_p2p_prices_billed_volume() {
+        use crate::cluster::ClusterSpec;
+        let cost = CommCost::new(ClusterSpec::eos(2));
+        let expect = cost.p2p(0, 1, 1e6);
+        let fabric = Fabric::new_clocked(2, AlgoSelection::fast(), cost);
+        let outs = run_ranks_on(&fabric, |rank, comm| {
+            if rank == 0 {
+                comm.advance("work", 50.0);
+                comm.send_billed(1, &[1.0, 2.0], 1e6);
+                comm.now_us()
+            } else {
+                let x = comm.recv(0);
+                assert_eq!(x, vec![1.0, 2.0]);
+                comm.now_us()
+            }
+        });
+        assert_eq!(outs[0], 50.0, "send is asynchronous");
+        assert!(
+            (outs[1] - (50.0 + expect)).abs() < 1e-6,
+            "receiver {} vs {}",
+            outs[1],
+            50.0 + expect
+        );
+    }
+
+    /// `charge_collective` synchronizes the group and advances by the
+    /// priced cost without moving payload.
+    #[test]
+    fn charge_collective_virtual_volume() {
+        use crate::cluster::ClusterSpec;
+        use crate::collectives::CommPrimitive;
+        let group = [0usize, 1, 2, 3];
+        let cost = CommCost::new(ClusterSpec::eos(4));
+        let expect = cost.all_to_all(&group, 2e6);
+        let fabric = Fabric::new_clocked(4, AlgoSelection::fast(), cost);
+        let outs = run_ranks_on(&fabric, |_rank, comm| {
+            comm.charge_collective("a2a", CommPrimitive::AllToAll, &group, 2e6);
+            comm.now_us()
+        });
+        for t in outs {
+            assert!((t - expect).abs() < 1e-6, "{t} vs {expect}");
         }
     }
 

@@ -15,10 +15,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::anyhow;
+use crate::cluster::ClusterSpec;
+use crate::collectives::CommCost;
 use crate::config::ParallelConfig;
 use crate::mapping::RuntimeTopology;
 use crate::runtime::{InputBuf, InputRef, Runtime};
-use crate::simcomm::{run_ranks_with, AlgoSelection};
+use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
 use crate::util::error::Result;
 use crate::util::Rng;
 
@@ -53,6 +55,16 @@ pub struct TrainerConfig {
     /// weights — these reduce over EDP instead of attention-DP. Only
     /// meaningful together with `parallel`.
     pub expert_param_indices: Vec<usize>,
+    /// Run on a **clocked** fabric: gradient collectives advance per-rank
+    /// simulated time (priced by the shared `CommCost`), and the report
+    /// carries a measured-in-sim step time next to the wall-clock numbers.
+    /// The clock never perturbs payloads — losses are bit-identical.
+    pub clocked: bool,
+    /// Simulated compute charged per rank per step, µs (the artifact's
+    /// model-scale fwd+bwd time; 0 = comm-only clock).
+    pub compute_us_per_step: f64,
+    /// Model FLOPs per token for the measured-in-sim MFU (0 disables).
+    pub flops_per_token: f64,
 }
 
 impl Default for TrainerConfig {
@@ -69,6 +81,9 @@ impl Default for TrainerConfig {
             algos: AlgoSelection::fast(),
             parallel: None,
             expert_param_indices: Vec::new(),
+            clocked: false,
+            compute_us_per_step: 0.0,
+            flops_per_token: 0.0,
         }
     }
 }
@@ -82,6 +97,12 @@ pub struct TrainReport {
     pub num_params: usize,
     pub final_loss: f32,
     pub initial_loss: f32,
+    /// Measured-in-sim step time (virtual clock, µs per step) when the
+    /// trainer ran clocked (`TrainerConfig::clocked`).
+    pub sim_step_us: Option<f64>,
+    /// Measured-in-sim MFU vs the **BF16** peak (needs `flops_per_token`
+    /// and a clocked run; the trainer has no precision knob).
+    pub sim_mfu: Option<f64>,
 }
 
 impl TrainReport {
@@ -165,12 +186,22 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         .as_ref()
         .map(|t| t.world())
         .unwrap_or(cfg.dp.max(1));
+    // Data-parallel replica count for the sim-MFU token accounting (the
+    // topology is moved into the rank closure below).
+    let replicas = topo.as_ref().map(|t| t.config().dp()).unwrap_or(world);
     let cfg2 = cfg.clone();
     let runtime2 = runtime.clone();
 
-    // Each rank runs the identical loop; rank 0's log is the report.
-    let algos = cfg.algos;
-    let reports = run_ranks_with(world, algos, move |rank, comm| -> Result<Vec<(usize, f32)>> {
+    // Each rank runs the identical loop; rank 0's log is the report. A
+    // clocked fabric advances simulated time alongside (never perturbing
+    // payloads); the plain fabric is byte-for-byte the old behaviour.
+    let cluster = ClusterSpec::eos(world);
+    let fabric = if cfg.clocked {
+        Fabric::new_clocked(world, cfg.algos, CommCost::new(cluster.clone()))
+    } else {
+        Fabric::new_with(world, cfg.algos)
+    };
+    let reports = run_ranks_on(&fabric, move |rank, comm| -> Result<Vec<(usize, f32)>> {
         let exe = runtime2.load(&step_name)?;
         // Reduction groups per parameter class: topology DP/EDP groups
         // under folding, the flat world group otherwise.
@@ -190,6 +221,9 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         for step in 0..cfg2.steps {
             let ids = corpus.batch(batch, seq);
             let (inputs, targets) = SyntheticCorpus::split(&ids, batch, seq);
+            // Model-scale compute charge for the artifact's fwd+bwd (the
+            // clock's compute phase; no-op on unclocked fabrics).
+            comm.advance("fwd_bwd", cfg2.compute_us_per_step);
 
             // Borrowed views: no param clone per step (perf pass §Perf).
             let io_dims = [batch, seq];
@@ -244,6 +278,25 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         .ok_or_else(|| anyhow!("no rank output"))??;
     let wall = t0.elapsed().as_secs_f64();
     let tokens = cfg.steps * batch * seq * world;
+    // Measured-in-sim step time: the slowest rank's virtual clock, per
+    // optimizer step; MFU from it when the caller supplied a FLOP count.
+    let (sim_step_us, sim_mfu) = if cfg.clocked && cfg.steps > 0 {
+        let step_us = fabric.max_sim_time_us() / cfg.steps as f64;
+        let mfu = if cfg.flops_per_token > 0.0 && step_us > 0.0 {
+            let tokens_per_step = (batch * seq * replicas) as f64;
+            // The trainer has no precision knob, so sim-MFU is always vs
+            // the BF16 peak — stated in the TrainReport field docs (the
+            // executed step estimator normalizes by the run's precision).
+            let peak = cluster.gpu.peak_bf16_tflops * 1e12;
+            // fwd+bwd model FLOPs / (step time × world × peak).
+            Some(cfg.flops_per_token * tokens_per_step / (step_us / 1e6) / world as f64 / peak)
+        } else {
+            None
+        };
+        (Some(step_us), mfu)
+    } else {
+        (None, None)
+    };
     Ok(TrainReport {
         initial_loss: losses.first().map(|x| x.1).unwrap_or(f32::NAN),
         final_loss: losses.last().map(|x| x.1).unwrap_or(f32::NAN),
@@ -251,6 +304,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         wall_seconds: wall,
         tokens_per_second: tokens as f64 / wall,
         num_params,
+        sim_step_us,
+        sim_mfu,
     })
 }
 

@@ -24,6 +24,7 @@ fn setup(top_k: usize, policy: DropPolicy, cf: f64) -> (Router, Vec<SwigluExpert
             capacity_factor: cf,
             drop_policy: policy,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     );
@@ -56,6 +57,7 @@ fn run_matrix(ep: usize, etp: usize, top_k: usize, policy: DropPolicy, cf: f64) 
             ep_index: ep_idx,
             num_experts: E,
             seq_group: None,
+            phase_cost: None,
         };
         let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
         layer.forward(&comm, &mine)
@@ -120,6 +122,7 @@ fn capacity_bound_respected_in_both_scopes() {
                 ep_index: rank,
                 num_experts: E,
                 seq_group: Some(vec![0, 1]),
+                phase_cost: None,
             };
             let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
             layer.forward(&comm, &mine).1

@@ -39,6 +39,7 @@ fn build_router(num_experts: usize, top_k: usize, policy: DropPolicy, seed: u64)
             capacity_factor: 1.0,
             drop_policy: policy,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         &mut rng,
     )
@@ -309,6 +310,7 @@ fn full_sequence_drop_handles_uneven_splits() {
             ep_index: rank,
             num_experts: 8,
             seq_group: Some(vec![0, 1]),
+            phase_cost: None,
         };
         let offset: usize = split[..rank].iter().sum();
         let mine = all_tokens[offset * H..(offset + split[rank]) * H].to_vec();

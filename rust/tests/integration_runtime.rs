@@ -50,6 +50,7 @@ fn router_artifact_matches_rust_softmax() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::Dropless,
             capacity_override: None,
+            pad_to_capacity: false,
         },
         w,
     );
@@ -110,6 +111,7 @@ fn rust_dispatcher_matches_pallas_moe_block() {
             capacity_factor: 1.0,
             drop_policy: DropPolicy::SubSequence,
             capacity_override: Some(cap),
+            pad_to_capacity: false,
         },
         wr,
     );

@@ -71,6 +71,26 @@ fn folded_parallel_trainer_is_deterministic() {
     assert!(a.losses.iter().all(|(_, l)| l.is_finite()));
 }
 
+/// The virtual clock must not perturb training: a clocked run is loss-
+/// bitwise-identical to the plain run, while reporting a measured-in-sim
+/// step time.
+#[test]
+fn clocked_trainer_is_bit_identical_and_reports_sim_time() {
+    if !have_artifacts() { return; }
+    let plain = TrainerConfig { preset: "test".into(), steps: 5, dp: 2, ..Default::default() };
+    let clocked = TrainerConfig {
+        clocked: true,
+        compute_us_per_step: 1234.0,
+        ..plain.clone()
+    };
+    let a = train(&plain).unwrap();
+    let b = train(&clocked).unwrap();
+    assert_eq!(a.losses, b.losses, "the clock must not perturb payloads");
+    assert!(a.sim_step_us.is_none());
+    let us = b.sim_step_us.expect("clocked run reports sim step time");
+    assert!(us >= 1234.0, "at least the charged compute: {us}");
+}
+
 #[test]
 fn different_seeds_different_curves() {
     if !have_artifacts() { return; }

@@ -249,6 +249,7 @@ fn prop_router_capacity_invariants() {
                     capacity_factor: cf,
                     drop_policy: policy,
                     capacity_override: None,
+                    pad_to_capacity: false,
                 },
                 &mut rng,
             );
@@ -264,6 +265,15 @@ fn prop_router_capacity_invariants() {
                 return Err(format!("conservation: {kept} + {dropped} != {}", n * k));
             }
             let capacity = ((cf * n as f64 * k as f64 / e as f64).ceil() as usize).max(1);
+            if router.capacity_for(n) != capacity {
+                return Err(format!(
+                    "capacity_for {} != derived {capacity}",
+                    router.capacity_for(n)
+                ));
+            }
+            if d.capacity != capacity {
+                return Err(format!("decision capacity {} != {capacity}", d.capacity));
+            }
             for (ex, &load) in d.expert_load.iter().enumerate() {
                 if load > capacity {
                     return Err(format!("expert {ex}: load {load} > capacity {capacity}"));
@@ -271,6 +281,107 @@ fn prop_router_capacity_invariants() {
             }
             if d.expert_load.iter().sum::<usize>() != kept {
                 return Err("expert_load sum != kept copies".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pad-to-capacity dispatch invariants (paper: drop **with** padding): for
+/// random (experts, top-k, CF, tokens) over a 2-rank EP group, the padded
+/// dispatch volume is *static* — exactly `ep · (epr + epr·capacity·h)`
+/// f32s per rank — padding conservation holds
+/// (`routed + padded == E·capacity` per rank), and outputs stay
+/// bit-identical to the unpadded drop mode.
+#[test]
+fn prop_padded_dispatch_static_volume_and_bit_equality() {
+    use moe_folding::dispatcher::DistributedMoeLayer;
+    use moe_folding::simcomm::run_ranks;
+    use moe_folding::train::math::SwigluExpert;
+
+    forall(
+        "padded dispatch invariants",
+        16,
+        |rng: &mut Rng| {
+            let e = draw::pow2_upto(rng, 8).max(2);
+            let k = draw::in_range(rng, 1, e.min(3));
+            let n = draw::in_range(rng, 4, 24);
+            let cf = 0.5 + rng.next_f64() * 1.5;
+            let seed = rng.next_u64();
+            (e, k, n, cf, seed)
+        },
+        |&(e, k, n, cf, seed)| {
+            let h = 8usize;
+            let mut rng = Rng::seed_from_u64(seed);
+            let experts: Vec<SwigluExpert> =
+                (0..e).map(|_| SwigluExpert::init(h, 16, &mut rng)).collect();
+            let mut tokens = vec![0.0f32; 2 * n * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            let topo = RuntimeTopology::folded(ParallelConfig::new(2, 1, 1, 2, 1, 1))?;
+            let run = |pad: bool| {
+                run_ranks(2, |rank, comm| {
+                    let mut r2 = Rng::seed_from_u64(seed ^ 0x5ca1ab1e);
+                    let router = Router::init(
+                        RouterConfig {
+                            hidden: h,
+                            num_experts: e,
+                            top_k: k,
+                            capacity_factor: cf,
+                            drop_policy: DropPolicy::SubSequence,
+                            capacity_override: None,
+                            pad_to_capacity: pad,
+                        },
+                        &mut r2,
+                    );
+                    let layer = DistributedMoeLayer::from_topology(
+                        topo.view(rank),
+                        router,
+                        &experts,
+                    );
+                    let mine = tokens[rank * n * h..(rank + 1) * n * h].to_vec();
+                    layer.forward(&comm, &mine)
+                })
+            };
+            let plain = run(false);
+            let padded = run(true);
+            let mut r3 = Rng::seed_from_u64(seed ^ 0x5ca1ab1e);
+            let router = Router::init(
+                RouterConfig {
+                    hidden: h,
+                    num_experts: e,
+                    top_k: k,
+                    capacity_factor: cf,
+                    drop_policy: DropPolicy::SubSequence,
+                    capacity_override: None,
+                    pad_to_capacity: true,
+                },
+                &mut r3,
+            );
+            let capacity = router.capacity_for(n);
+            let epr = e / 2;
+            for rank in 0..2 {
+                let (po, ps) = &padded[rank];
+                let (uo, _) = &plain[rank];
+                for (i, (a, b)) in po.iter().zip(uo).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("rank {rank} idx {i}: {a} vs {b}"));
+                    }
+                }
+                let want = 2 * (epr + epr * capacity * h) * 4;
+                if ps.a2a_send_bytes != want {
+                    return Err(format!(
+                        "rank {rank}: send bytes {} != static {want}",
+                        ps.a2a_send_bytes
+                    ));
+                }
+                if ps.tokens_routed + ps.tokens_padded != e * capacity {
+                    return Err(format!(
+                        "rank {rank}: routed {} + padded {} != E·cap {}",
+                        ps.tokens_routed,
+                        ps.tokens_padded,
+                        e * capacity
+                    ));
+                }
             }
             Ok(())
         },
