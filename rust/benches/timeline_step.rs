@@ -1,9 +1,10 @@
 //! Perf-trajectory bench: execute one training step of every Table-3
-//! folded optimum on the clocked simulator at full world size and emit the
-//! measured-in-sim step time + MFU next to the analytic estimate as
+//! folded optimum on the clocked simulator at full world size — in three
+//! scheduling variants per optimum (serialized, overlapped, overlapped +
+//! interleaved vpp) — and emit the measured-in-sim step time, MFU, bubble
+//! and hidden-comm fraction next to the analytic estimate as
 //! machine-readable `target/BENCH_timeline.json` (uploaded as a CI
-//! artifact — the baseline future overlap/scheduling PRs are measured
-//! against).
+//! artifact — the baseline future scheduling PRs are measured against).
 use std::time::Instant;
 
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
@@ -11,41 +12,69 @@ use moe_folding::perfmodel::{execute_step, PerfModel, Strategy};
 
 fn main() {
     let pm = PerfModel::default();
-    let train = TrainConfig::paper_default(4096, 256);
+    // (model, gpus, tp, cp, ep, etp, pp, vpp): vpp = layers per stage
+    // (one layer per virtual chunk, the maximal interleave).
     let cases = [
-        (ModelConfig::mixtral_8x22b(), 128usize, 2usize, 1usize, 8usize, 1usize, 8usize),
-        (ModelConfig::qwen2_57b_a14b(), 64, 2, 1, 4, 1, 4),
-        (ModelConfig::mixtral_8x22b_g8t8(), 128, 4, 1, 8, 1, 8),
-        (ModelConfig::llama3_8x70b(), 256, 8, 1, 8, 1, 16),
+        (ModelConfig::mixtral_8x22b(), 128usize, 2usize, 1usize, 8usize, 1usize, 8usize, 7usize),
+        (ModelConfig::qwen2_57b_a14b(), 64, 2, 1, 4, 1, 4, 7),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128, 4, 1, 8, 1, 8, 4),
+        (ModelConfig::llama3_8x70b(), 256, 8, 1, 8, 1, 16, 5),
     ];
+    let serial_train = {
+        let mut t = TrainConfig::paper_default(4096, 256);
+        t.overlap_grad_reduce = false;
+        t.overlap_param_gather = false;
+        t.overlap_a2a = false;
+        t
+    };
+    let overlap_train = {
+        let mut t = TrainConfig::paper_default(4096, 256);
+        t.overlap_a2a = true;
+        t
+    };
     let mut rows = Vec::new();
-    for (model, gpus, tp, cp, ep, etp, pp) in cases {
-        let cfg = ParallelConfig::new(gpus, tp, cp, ep, etp, pp);
-        let analytic = pm
-            .estimate(&model, cfg, &train, Strategy::MCoreFolding)
-            .expect("analytic estimate");
-        let t0 = Instant::now();
-        let executed = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding)
-            .expect("executed step");
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-        println!(
-            "{}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} rank threads)",
-            executed.summary(),
-            analytic.step_ms
-        );
-        rows.push(format!(
-            "{{\"model\":\"{}\",\"gpus\":{gpus},\"config\":\"{}\",\
-             \"sim_step_ms\":{:.3},\"analytic_step_ms\":{:.3},\
-             \"sim_mfu\":{:.5},\"analytic_mfu\":{:.5},\
-             \"bubble_fraction\":{:.5},\"harness_wall_ms\":{wall_ms:.1}}}",
-            model.name,
-            cfg.tag(),
-            executed.step_ms,
-            analytic.step_ms,
-            executed.mfu,
-            analytic.mfu,
-            executed.bubble_fraction
-        ));
+    for (model, gpus, tp, cp, ep, etp, pp, vpp) in cases {
+        let base = ParallelConfig::new(gpus, tp, cp, ep, etp, pp);
+        let variants = [
+            ("serialized", base, &serial_train),
+            ("overlap", base, &overlap_train),
+            ("overlap+vpp", base.with_vpp(vpp), &overlap_train),
+        ];
+        for (label, cfg, train) in variants {
+            let analytic = pm
+                .estimate(&model, cfg, train, Strategy::MCoreFolding)
+                .expect("analytic estimate");
+            let t0 = Instant::now();
+            let executed = execute_step(&pm, &model, cfg, train, Strategy::MCoreFolding)
+                .expect("executed step");
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let hidden_frac = executed.hidden_comm_us
+                / (executed.hidden_comm_us + executed.exposed_comm_us).max(1e-9);
+            println!(
+                "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} rank threads)",
+                label,
+                executed.summary(),
+                analytic.step_ms
+            );
+            rows.push(format!(
+                "{{\"model\":\"{}\",\"gpus\":{gpus},\"config\":\"{}\",\
+                 \"variant\":\"{label}\",\"vpp\":{},\"overlap\":{},\
+                 \"sim_step_ms\":{:.3},\"analytic_step_ms\":{:.3},\
+                 \"sim_mfu\":{:.5},\"analytic_mfu\":{:.5},\
+                 \"bubble_fraction\":{:.5},\"hidden_comm_frac\":{:.5},\
+                 \"harness_wall_ms\":{wall_ms:.1}}}",
+                model.name,
+                cfg.tag(),
+                cfg.vpp,
+                train.overlap_grad_reduce,
+                executed.step_ms,
+                analytic.step_ms,
+                executed.mfu,
+                analytic.mfu,
+                executed.bubble_fraction,
+                hidden_frac
+            ));
+        }
     }
     let json = format!(
         "{{\"bench\":\"timeline_step\",\"unit\":\"ms\",\"configs\":[\n{}\n]}}\n",

@@ -89,11 +89,14 @@ pub fn tune_all(
 }
 
 /// One analytically-ranked candidate re-measured by executing its step on
-/// the clocked simulator.
+/// the clocked simulator — once per overlap variant.
 #[derive(Debug, Clone)]
 pub struct ExecutedCandidate {
     pub analytic: StepEstimate,
     pub executed: ExecutedEstimate,
+    /// Whether this variant ran with comm–compute overlap (the train
+    /// config's overlap knobs) or as the fully serialized twin.
+    pub overlap: bool,
 }
 
 /// Outcome of [`tune_executed`]: the analytic top-k re-ranked by
@@ -117,8 +120,13 @@ impl ExecutedTune {
 /// candidates and re-rank them by **executing** each step on the clocked
 /// simulator at full world size ([`executed::execute_step`]). The analytic
 /// model stays the pruner (sweeping hundreds of configs); execution is the
-/// arbiter for the short list, where schedule composition and measured
-/// bubbles can reorder near-ties.
+/// arbiter for the short list, where schedule composition, measured
+/// bubbles, and measured comm–compute overlap can reorder near-ties.
+///
+/// Each candidate executes twice: with the train config's overlap knobs
+/// and as its fully **serialized twin** (all overlap off) — both paired
+/// with the matching analytic estimate — so the re-rank quantifies what
+/// overlap is worth per mapping, not just which mapping wins.
 pub fn tune_executed(
     pm: &PerfModel,
     model: &ModelConfig,
@@ -128,20 +136,47 @@ pub fn tune_executed(
     top_k: usize,
 ) -> ExecutedTune {
     let analytic = tune(pm, model, gpus, train, strategy);
+    let mut serial_train = train.clone();
+    serial_train.overlap_grad_reduce = false;
+    serial_train.overlap_param_gather = false;
+    serial_train.overlap_a2a = false;
     let mut candidates: Vec<ExecutedCandidate> = Vec::new();
     for e in analytic.feasible.iter().take(top_k) {
-        match executed::execute_step(pm, model, e.config, train, strategy) {
-            Ok(x) => candidates.push(ExecutedCandidate { analytic: e.clone(), executed: x }),
-            // Surface drops: a silently-shrunk survivor set would make an
-            // execution failure look like "no rank change".
-            Err(err) => eprintln!(
-                "tune_executed: {} failed to execute, dropped from re-rank: {err}",
-                e.config.tag()
-            ),
+        for (overlap, tc) in [(true, train), (false, &serial_train)] {
+            // Pair each variant with its *matching* analytic estimate (the
+            // serialized twin drops the analytic overlap credit too).
+            let paired = if overlap {
+                e.clone()
+            } else {
+                match pm.estimate(model, e.config, tc, strategy) {
+                    Ok(a) => a,
+                    Err(err) => {
+                        eprintln!(
+                            "tune_executed: {} serialized twin failed to estimate, \
+                             dropped from re-rank: {err}",
+                            e.config.tag()
+                        );
+                        continue;
+                    }
+                }
+            };
+            match executed::execute_step(pm, model, e.config, tc, strategy) {
+                Ok(x) => candidates.push(ExecutedCandidate {
+                    analytic: paired,
+                    executed: x,
+                    overlap,
+                }),
+                // Surface drops: a silently-shrunk survivor set would make
+                // an execution failure look like "no rank change".
+                Err(err) => eprintln!(
+                    "tune_executed: {} failed to execute, dropped from re-rank: {err}",
+                    e.config.tag()
+                ),
+            }
         }
     }
-    let analytic_order: Vec<ParallelConfig> =
-        candidates.iter().map(|c| c.analytic.config).collect();
+    let analytic_order: Vec<(ParallelConfig, bool)> =
+        candidates.iter().map(|c| (c.analytic.config, c.overlap)).collect();
     candidates.sort_by(|a, b| {
         a.executed
             .step_ms
@@ -150,7 +185,7 @@ pub fn tune_executed(
     });
     let rank_changed = candidates
         .iter()
-        .map(|c| c.analytic.config)
+        .map(|c| (c.analytic.config, c.overlap))
         .ne(analytic_order.into_iter());
     ExecutedTune { strategy, candidates, rank_changed }
 }
@@ -164,6 +199,8 @@ pub struct Constraints {
     pub ep: Option<usize>,
     pub etp: Option<usize>,
     pub pp: Option<usize>,
+    /// Pin the virtual-pipeline (interleaving) degree.
+    pub vpp: Option<usize>,
 }
 
 impl Constraints {
@@ -179,6 +216,7 @@ impl Constraints {
             && pinned(self.ep, c.ep)
             && pinned(self.etp, c.etp)
             && pinned(self.pp, c.pp)
+            && pinned(self.vpp, c.vpp)
     }
 }
 
@@ -256,6 +294,23 @@ mod tests {
         assert!(!r.candidates.is_empty(), "no executable candidates");
         for w in r.candidates.windows(2) {
             assert!(w[0].executed.step_ms <= w[1].executed.step_ms);
+        }
+        // Every config executes as an overlapped + serialized twin pair,
+        // and measured overlap never slows a config down.
+        for c in &r.candidates {
+            let twin = r
+                .candidates
+                .iter()
+                .find(|d| d.analytic.config == c.analytic.config && d.overlap != c.overlap);
+            let Some(twin) = twin else { continue };
+            let (ovl, ser) = if c.overlap { (c, twin) } else { (twin, c) };
+            assert!(
+                ovl.executed.step_ms <= ser.executed.step_ms + 1e-9,
+                "{}: overlap {:.1} ms > serialized {:.1} ms",
+                c.analytic.config.tag(),
+                ovl.executed.step_ms,
+                ser.executed.step_ms
+            );
         }
         // Tolerance is looser than the Table-3 pin (tests/clocked_timing.rs):
         // for arbitrary tuned configs the executed run prices each actual

@@ -66,6 +66,13 @@ impl ParallelConfig {
         Self { world_size, tp, cp, pp, ep, etp, vpp: 1 }
     }
 
+    /// Same mapping with `vpp` virtual chunks per pipeline stage
+    /// (interleaved 1F1B when `vpp > 1`).
+    pub fn with_vpp(mut self, vpp: usize) -> Self {
+        self.vpp = vpp;
+        self
+    }
+
     /// Attention-side data parallelism.
     pub fn dp(&self) -> usize {
         self.world_size / (self.tp * self.cp * self.pp)
@@ -138,9 +145,10 @@ impl ParallelConfig {
         Ok(())
     }
 
-    /// Short "tpXcpYepZ..." string used in reports.
+    /// Short "tpXcpYepZ..." string used in reports. `VPP` appears only when
+    /// interleaving is on (`vpp > 1`), keeping the plain-1F1B tags stable.
     pub fn tag(&self) -> String {
-        format!(
+        let mut t = format!(
             "TP{}CP{}EP{}ETP{}PP{}DP{}EDP{}",
             self.tp,
             self.cp,
@@ -149,7 +157,11 @@ impl ParallelConfig {
             self.pp,
             self.dp(),
             self.edp()
-        )
+        );
+        if self.vpp > 1 {
+            t.push_str(&format!("VPP{}", self.vpp));
+        }
+        t
     }
 }
 
@@ -173,6 +185,13 @@ pub struct TrainConfig {
     pub overlap_grad_reduce: bool,
     /// Overlap ZeRO-3 parameter all-gather with compute (FSDP prefetch).
     pub overlap_param_gather: bool,
+    /// Overlap the MoE token-dispatch All-to-All with expert GEMM
+    /// (chunk-pipelined dispatcher). Off by default: the analytic estimate
+    /// then matches the serialized dispatcher exactly; turning it on
+    /// credits `PerfModel::a2a_overlap_frac` of the hideable a2a
+    /// analytically and the executed estimator measures the same overlap
+    /// on the virtual clock's comm lane.
+    pub overlap_a2a: bool,
 }
 
 impl TrainConfig {
@@ -187,6 +206,7 @@ impl TrainConfig {
             activation_retained_frac: 0.4,
             overlap_grad_reduce: true,
             overlap_param_gather: true,
+            overlap_a2a: false,
         }
     }
 

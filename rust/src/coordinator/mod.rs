@@ -236,13 +236,21 @@ pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Tab
 /// (`set_bill_scale`) and compute is charged from the model's FLOPs
 /// ([`MoePhaseCost::from_model`]) — so routing imbalance, per-peer bin
 /// skew, and the EP-vs-ETP comm asymmetry are *measured*, not assumed.
+///
+/// With `overlap` the chunk-pipelined dispatcher runs
+/// ([`DistributedMoeLayer::with_overlap`]): the trailing two columns split
+/// the a2a time into what the expert GEMMs hid vs what stayed exposed
+/// (measured per chunk off the comm lane; ETP > 1 mappings fall back to
+/// the serialized path and report everything exposed).
 pub fn fig5_breakdown_executed(
     model: &ModelConfig,
     ep_etp: usize,
     tokens_per_rank: usize,
+    overlap: bool,
 ) -> Table {
     let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
-                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)"]);
+                             "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)",
+                             "A2A hidden (µs)", "A2A exposed (µs)"]);
     let h_sim = 64usize;
     let ff_sim = 128usize;
     for (ep, etp) in fig5_combos(model, ep_etp) {
@@ -276,21 +284,28 @@ pub fn fig5_breakdown_executed(
             CommCost::new(ClusterSpec::eos(world)),
         );
         let bill = model.hidden_size as f64 / h_sim as f64;
-        run_ranks_on(&fabric, |rank, comm| {
+        let stats = run_ranks_on(&fabric, |rank, comm| {
             comm.set_bill_scale(bill);
             let layer =
                 DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts)
-                    .with_phase_cost(pc);
+                    .with_phase_cost(pc)
+                    .with_overlap(overlap);
             let mine = tokens
                 [rank * tokens_per_rank * h_sim..(rank + 1) * tokens_per_rank * h_sim]
                 .to_vec();
-            layer.forward(&comm, &mine);
+            let (_, s) = layer.forward(&comm, &mine);
+            s
         });
         let trace = fabric.take_trace();
+        // Sum actual span occupancy only: exposed-`wait` events on the main
+        // lane carry the same name as their comm-lane span — counting both
+        // would double-bill the exposed share of an overlapped a2a.
         let sum_for = |names: &[&str]| -> f64 {
             trace
                 .iter()
-                .filter(|e| e.rank == 0 && names.contains(&e.name.as_str()))
+                .filter(|e| {
+                    e.rank == 0 && e.cat != "wait" && names.contains(&e.name.as_str())
+                })
                 .map(|e| e.dur_us)
                 .sum()
         };
@@ -298,6 +313,13 @@ pub fn fig5_breakdown_executed(
         let a2a = sum_for(&["moe/a2a_dispatch", "moe/a2a_combine"]);
         let etp_comm = sum_for(&["moe/etp"]);
         let expert = sum_for(&["moe/expert"]);
+        // Hidden/exposed split: measured per chunk by the overlapped
+        // dispatcher; the serialized path pays the whole a2a exposed.
+        let (hidden, exposed) = if stats[0].a2a_hidden_us + stats[0].a2a_exposed_us > 0.0 {
+            (stats[0].a2a_hidden_us, stats[0].a2a_exposed_us)
+        } else {
+            (0.0, a2a)
+        };
         t.row(&[
             format!("EP{ep}xETP{etp}"),
             format!("{router_permute:.0}"),
@@ -305,6 +327,8 @@ pub fn fig5_breakdown_executed(
             format!("{etp_comm:.0}"),
             format!("{expert:.0}"),
             format!("{:.0}", router_permute + a2a + etp_comm + expert),
+            format!("{hidden:.0}"),
+            format!("{exposed:.0}"),
         ]);
     }
     t
@@ -380,7 +404,7 @@ mod tests {
     /// A2A, and both carry model-scale expert compute.
     #[test]
     fn fig5_executed_measures_phase_asymmetry() {
-        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64);
+        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64, false);
         assert!(t.rows.len() >= 3, "{} rows", t.rows.len());
         let row_ep = t.rows.iter().find(|r| r[0] == "EP8xETP1").unwrap();
         assert_eq!(row_ep[3], "0", "EP-only mapping has no ETP comm");
@@ -390,7 +414,30 @@ mod tests {
         assert!(row_etp[3].parse::<f64>().unwrap() > 0.0, "etp comm measured");
         for r in &t.rows {
             assert!(r[4].parse::<f64>().unwrap() > 0.0, "{}: expert compute", r[0]);
+            // Serialized: every a2a microsecond is exposed.
+            assert_eq!(r[6], "0", "{}: serialized path hid a2a", r[0]);
         }
+    }
+
+    /// Executed fig5 with the chunk-pipelined dispatcher: mappings with
+    /// ≥ 2 local experts hide part of the dispatch a2a under expert GEMM
+    /// (measured, not assumed).
+    #[test]
+    fn fig5_executed_overlap_hides_a2a() {
+        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64, true);
+        // EP4×ETP2 falls back (ETP shares the comm stream); EP2/EP4 with
+        // ETP1 aren't in the default combo sweep, so check EP8 first: one
+        // local expert → nothing to pipeline → all exposed.
+        let row_ep8 = t.rows.iter().find(|r| r[0] == "EP8xETP1").unwrap();
+        assert_eq!(row_ep8[6], "0", "EP8 has a single local expert per rank");
+        // The 8-expert model at EP2×ETP4 / EP4×ETP2 keeps ETP > 1; build a
+        // dedicated 4-GPU EP4 sweep instead.
+        let t4 = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 4, 64, true);
+        let row = t4.rows.iter().find(|r| r[0] == "EP4xETP1").unwrap();
+        let hidden: f64 = row[6].parse().unwrap();
+        let exposed: f64 = row[7].parse().unwrap();
+        assert!(hidden > 0.0, "EP4xETP1 (2 local experts) must hide some a2a");
+        assert!(exposed > 0.0, "the first chunk is always exposed");
     }
 
     #[test]

@@ -151,6 +151,7 @@ mod tests {
                 num_experts: E,
                 seq_group: None,
                 phase_cost: None,
+                overlap_a2a: false,
             };
             layer.forward(&comm, &tokens(8, 40 + rank as u64)).1
         });
@@ -283,6 +284,7 @@ mod tests {
                 num_experts: E,
                 seq_group: None,
                 phase_cost: None,
+                overlap_a2a: false,
             };
             layer.forward(&comm, &tokens(32, 13 + rank as u64)).1
         });

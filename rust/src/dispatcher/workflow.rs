@@ -49,6 +49,12 @@ pub struct DispatchStats {
     /// full-sequence statistics, so every rank of the sequence group
     /// reports the bit-identical value.
     pub aux_loss: f32,
+    /// On a clocked fabric with the chunk-pipelined dispatcher
+    /// ([`DistributedMoeLayer::with_overlap`]): a2a time hidden under
+    /// expert GEMM, µs. 0 on unclocked fabrics or the serialized path.
+    pub a2a_hidden_us: f64,
+    /// Overlapped-path a2a time the compute lane had to wait for, µs.
+    pub a2a_exposed_us: f64,
 }
 
 /// Per-unit compute charges for the virtual clock's MoE phase tags
@@ -113,6 +119,14 @@ pub struct DispatchScratch {
     gathered: Vec<f32>,
     /// Expert-sorted combine output rows.
     expert_sorted: Vec<f32>,
+    /// Chunk-pipelined path: per-local-expert per-peer dispatch sends.
+    chunk_sends: Vec<Vec<Vec<f32>>>,
+    /// Chunk-pipelined path: per-local-expert per-peer dispatch receives.
+    chunk_recvs: Vec<Vec<Vec<f32>>>,
+    /// Chunk-pipelined path: per-local-expert per-peer combine sends.
+    chunk_returns: Vec<Vec<Vec<f32>>>,
+    /// Chunk-pipelined path: per-local-expert per-peer combine receives.
+    chunk_combined: Vec<Vec<Vec<f32>>>,
 }
 
 /// One rank's slice of a distributed MoE layer.
@@ -135,6 +149,14 @@ pub struct DistributedMoeLayer {
     /// Optional per-phase compute charges for the virtual clock; `None`
     /// leaves clocked forwards with communication time only.
     pub phase_cost: Option<MoePhaseCost>,
+    /// Chunk-pipelined dispatch: issue the per-local-expert a2a chunks
+    /// nonblocking so later chunks hide under earlier experts' GEMMs
+    /// (paper's a2a ⟂ expert-GEMM overlap). Outputs are bit-identical to
+    /// the serialized path — only the clock differs. Takes effect when
+    /// `ep > 1`, `etp == 1` (the ETP gathers share the comm stream, so
+    /// chunking would just queue ahead of them) and there are ≥ 2 local
+    /// experts to pipeline.
+    pub overlap_a2a: bool,
 }
 
 impl DistributedMoeLayer {
@@ -183,6 +205,7 @@ impl DistributedMoeLayer {
             num_experts,
             seq_group,
             phase_cost: None,
+            overlap_a2a: false,
         }
     }
 
@@ -190,6 +213,20 @@ impl DistributedMoeLayer {
     pub fn with_phase_cost(mut self, pc: MoePhaseCost) -> Self {
         self.phase_cost = Some(pc);
         self
+    }
+
+    /// Enable the chunk-pipelined (overlapped) dispatch path.
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap_a2a = on;
+        self
+    }
+
+    /// Whether this forward runs the chunk-pipelined dispatch.
+    fn overlapped(&self) -> bool {
+        self.overlap_a2a
+            && self.ep_group.len() > 1
+            && self.etp_group.len() == 1
+            && self.experts_per_rank() > 1
     }
 
     pub fn experts_per_rank(&self) -> usize {
@@ -301,6 +338,23 @@ impl DistributedMoeLayer {
         } else {
             0
         };
+
+        // Chunk-pipelined dispatch: per-local-expert a2a chunks issued
+        // nonblocking so chunk le+1's transfer hides under expert le's
+        // GEMM. Bit-identical outputs; only the clock differs.
+        if self.overlapped() {
+            self.overlapped_dispatch(comm, scratch, &perm, &permuted, pad, &mut stats);
+            let out = perm.unpermute_accumulate(
+                &scratch.expert_sorted,
+                h,
+                &decision.assignments,
+                n_local,
+            );
+            if let Some(pc) = self.phase_cost {
+                comm.advance("moe/unpermute", pc.permute_us_per_copy * perm.total() as f64);
+            }
+            return (out, stats);
+        }
 
         // 3. All-to-All-V dispatch. Send buffer for EP peer p:
         //    [counts for p's epr experts..., token rows...] — rows padded
@@ -461,6 +515,152 @@ impl DistributedMoeLayer {
             comm.advance("moe/unpermute", pc.permute_us_per_copy * perm.total() as f64);
         }
         (out, stats)
+    }
+
+    /// Steps 3–7 of the forward on the **chunk-pipelined** path: the
+    /// dispatch a2a is split into one chunk per local expert (chunk `le`
+    /// carries every peer's rows for its `le`-th local expert), all chunks
+    /// are enqueued nonblocking on the comm lane up front, and expert `le`
+    /// computes as soon as *its* chunk lands — later chunks' transfers run
+    /// under earlier experts' GEMMs, and each combine chunk returns
+    /// nonblocking under the remaining GEMMs. The rows each expert sees,
+    /// their order, and the total a2a volume (`epr` count headers + rows)
+    /// are identical to the serialized path, so outputs are bit-identical
+    /// (property-tested in `prop_invariants.rs`); hidden vs exposed a2a
+    /// time is measured per chunk into `stats`.
+    fn overlapped_dispatch(
+        &self,
+        comm: &Communicator,
+        scratch: &mut DispatchScratch,
+        perm: &Permutation,
+        permuted: &[f32],
+        pad: usize,
+        stats: &mut DispatchStats,
+    ) {
+        let h = self.router.config.hidden;
+        let ep = self.ep_group.len();
+        let epr = self.experts_per_rank();
+        debug_assert!(self.etp_group.len() == 1, "overlapped path is ETP-1 only");
+        let resize3 = |v: &mut Vec<Vec<Vec<f32>>>| {
+            v.truncate(epr);
+            v.resize_with(epr, Vec::new);
+            for inner in v.iter_mut() {
+                inner.truncate(ep);
+                inner.resize_with(ep, Vec::new);
+            }
+        };
+        resize3(&mut scratch.chunk_sends);
+        resize3(&mut scratch.chunk_recvs);
+        resize3(&mut scratch.chunk_returns);
+        resize3(&mut scratch.chunk_combined);
+
+        // Build every dispatch chunk up front (local staging, free on the
+        // clock): [count, rows…, zero-pad to capacity when padding is on].
+        for le in 0..epr {
+            for p in 0..ep {
+                let e = p * epr + le;
+                let rows = perm.counts[e];
+                let s = perm.offsets[e];
+                let buf = &mut scratch.chunk_sends[le][p];
+                buf.clear();
+                buf.push(rows as f32);
+                buf.extend_from_slice(&permuted[s * h..(s + rows) * h]);
+                if pad != 0 {
+                    debug_assert!(rows <= pad, "capacity must bound the bin");
+                    buf.resize(buf.len() + (pad - rows) * h, 0.0);
+                    stats.tokens_padded += pad - rows;
+                }
+                stats.a2a_send_bytes += buf.len() * 4;
+            }
+        }
+
+        // Enqueue all dispatch chunks (they queue on the serial comm lane;
+        // the payloads move eagerly — only the clock is deferred).
+        comm.set_phase("moe/a2a_dispatch");
+        let mut d_handles = Vec::with_capacity(epr);
+        for le in 0..epr {
+            d_handles.push(comm.all_to_all_v_into_i(
+                &self.ep_group,
+                &scratch.chunk_sends[le],
+                &mut scratch.chunk_recvs[le],
+            ));
+        }
+
+        scratch.per_expert.truncate(epr);
+        scratch.per_expert.resize_with(epr, Vec::new);
+        scratch.expert_outputs.truncate(epr);
+        scratch.expert_outputs.resize_with(epr, Vec::new);
+        let mut counts_from = vec![vec![0usize; epr]; ep];
+        let mut pad_from = vec![vec![0usize; ep]; epr];
+        let mut c_handles = Vec::with_capacity(epr);
+        for (le, dh) in d_handles.into_iter().enumerate() {
+            let (hid, exp) = comm.wait_split(dh);
+            stats.a2a_hidden_us += hid;
+            stats.a2a_exposed_us += exp;
+            // Parse chunk le: one count header + rows per peer, appended
+            // in peer order — the same row order the serialized path
+            // feeds expert le.
+            let mine = &mut scratch.per_expert[le];
+            mine.clear();
+            for p in 0..ep {
+                let buf = &scratch.chunk_recvs[le][p];
+                stats.a2a_recv_bytes += buf.len() * 4;
+                let cnt = buf[0] as usize;
+                counts_from[p][le] = cnt;
+                pad_from[le][p] = if pad == 0 { 0 } else { (buf.len() - 1) / h };
+                mine.extend_from_slice(&buf[1..1 + cnt * h]);
+            }
+            // Expert GEMM (ETP = 1 on this path) — the window the
+            // remaining chunks' transfers hide under.
+            scratch.expert_outputs[le] = self.local_experts[le].forward(&scratch.per_expert[le]);
+            if let Some(pc) = self.phase_cost {
+                let rows = scratch.per_expert[le].len() / h;
+                comm.advance("moe/expert", pc.expert_us_per_copy * rows as f64);
+            }
+            // Combine chunk le: each peer's rows back in its own layout
+            // (including its padding stride), issued nonblocking.
+            let mut cursor = 0usize;
+            for p in 0..ep {
+                let rows = counts_from[p][le];
+                let r = &mut scratch.chunk_returns[le][p];
+                r.clear();
+                r.extend_from_slice(
+                    &scratch.expert_outputs[le][cursor * h..(cursor + rows) * h],
+                );
+                cursor += rows;
+                if pad != 0 {
+                    r.resize(r.len() + (pad_from[le][p] - rows) * h, 0.0);
+                }
+            }
+            comm.set_phase("moe/a2a_combine");
+            c_handles.push(comm.all_to_all_v_into_i(
+                &self.ep_group,
+                &scratch.chunk_returns[le],
+                &mut scratch.chunk_combined[le],
+            ));
+            comm.set_phase("moe/a2a_dispatch");
+        }
+
+        // Settle the combine chunks and reassemble the permuted order:
+        // peer p's chunk le holds this rank's rows for global expert
+        // p·epr + le, padded to this rank's own capacity.
+        comm.set_phase("moe/a2a_combine");
+        scratch.expert_sorted.clear();
+        scratch.expert_sorted.resize(perm.total() * h, 0.0);
+        for (le, ch) in c_handles.into_iter().enumerate() {
+            let (hid, exp) = comm.wait_split(ch);
+            stats.a2a_hidden_us += hid;
+            stats.a2a_exposed_us += exp;
+            for p in 0..ep {
+                let e = p * epr + le;
+                let rows = perm.counts[e];
+                let dst = perm.offsets[e];
+                let buf = &scratch.chunk_combined[le][p];
+                scratch.expert_sorted[dst * h..(dst + rows) * h]
+                    .copy_from_slice(&buf[..rows * h]);
+            }
+        }
+        comm.clear_phase();
     }
 }
 

@@ -25,19 +25,27 @@ fn usage() -> ! {
 USAGE: moe-folding <command> [options]
 
 COMMANDS:
-  plan      --model <name> --gpus <n> [--strategy <s>] [--tp N --cp N --ep N --etp N --pp N]
+  plan      --model <name> --gpus <n> [--strategy <s>]
+            [--tp N --cp N --ep N --etp N --pp N --vpp N]
             [--executed [--top K]]   re-rank the analytic top-K by executing
-                                     each step on the clocked simulator
+                                     each step (overlapped + serialized twin)
+                                     on the clocked simulator
   timeline  --model <name> --gpus <n> --tp N --cp N --ep N --etp N --pp N
-            [--strategy <s>] [--seq N] [--gbs N] [--out trace.json]
+            [--vpp N] [--no-overlap] [--overlap-a2a] [--strategy <s>]
+            [--seq N] [--gbs N] [--out trace.json]
             execute one step on the clocked simulator and dump a
-            chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev)
+            chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev;
+            rows per rank: main lane, comm lane, grad-sync lane)
   mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
-  fig5      [--model <name>] [--ep-etp 8|16] [--executed [--tokens N]]
+  fig5      [--model <name>] [--ep-etp 8|16]
+            [--executed [--tokens N] [--overlap]]
+            --overlap runs the chunk-pipelined dispatcher and splits the
+            measured a2a into hidden vs exposed
   fig6      [--model <name>]
   train     [--preset test|e2e] [--steps N] [--dp N] [--lr F] [--artifacts DIR]
-            [--clocked [--compute-us F]]   measured-in-sim step time
+            [--clocked [--compute-us F] [--overlap]]  measured-in-sim step
+            time; --overlap issues grad reduces nonblocking under backward
   artifacts [--dir DIR]
 
 MODELS: mixtral-8x22b, llama3-8x70b, qwen2-57b-a14b, mixtral-8x22b-g8t8, tiny
@@ -91,6 +99,7 @@ fn main() -> moe_folding::util::error::Result<()> {
                 ep: args.get("ep").map(|v| v.parse().unwrap()),
                 etp: args.get("etp").map(|v| v.parse().unwrap()),
                 pp: args.get("pp").map(|v| v.parse().unwrap()),
+                vpp: args.get("vpp").map(|v| v.parse().unwrap()),
             };
             let r = coordinator::plan(&pm, &model, gpus, &train_cfg, strategy, cons);
             println!(
@@ -116,9 +125,10 @@ fn main() -> moe_folding::util::error::Result<()> {
                 );
                 for c in &ex.candidates {
                     println!(
-                        "{}   (analytic {:8.1} ms)",
+                        "{}   (analytic {:8.1} ms, {})",
                         c.executed.summary(),
-                        c.analytic.step_ms
+                        c.analytic.step_ms,
+                        if c.overlap { "overlapped" } else { "serialized" }
                     );
                 }
             }
@@ -133,12 +143,18 @@ fn main() -> moe_folding::util::error::Result<()> {
                 args.get_usize("ep", 8),
                 args.get_usize("etp", 1),
                 args.get_usize("pp", 8),
-            );
+            )
+            .with_vpp(args.get_usize("vpp", 1));
             let strategy = parse_strategy(args.get_or("strategy", "folding"));
-            let train_cfg = TrainConfig::paper_default(
+            let mut train_cfg = TrainConfig::paper_default(
                 args.get_usize("seq", model.seq_len),
                 args.get_usize("gbs", 256),
             );
+            if args.flag("no-overlap") {
+                train_cfg.overlap_grad_reduce = false;
+                train_cfg.overlap_param_gather = false;
+            }
+            train_cfg.overlap_a2a = args.flag("overlap-a2a");
             let (est, trace) =
                 execute_step_traced(&pm, &model, cfg, &train_cfg, strategy)
                     .map_err(|e| moe_folding::anyhow!(e))?;
@@ -221,7 +237,13 @@ fn main() -> moe_folding::util::error::Result<()> {
                 let tokens = args.get_usize("tokens", 256);
                 print!(
                     "{}",
-                    coordinator::fig5_breakdown_executed(&model, ep_etp, tokens).markdown()
+                    coordinator::fig5_breakdown_executed(
+                        &model,
+                        ep_etp,
+                        tokens,
+                        args.flag("overlap")
+                    )
+                    .markdown()
                 );
             } else {
                 print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
@@ -243,6 +265,7 @@ fn main() -> moe_folding::util::error::Result<()> {
                 clip_norm: args.get_f64("clip", 1.0) as f32,
                 clocked: args.flag("clocked"),
                 compute_us_per_step: args.get_f64("compute-us", 0.0),
+                overlap_grad_reduce: args.flag("overlap"),
                 ..TrainerConfig::default()
             };
             let report = train(&cfg)?;
@@ -263,6 +286,13 @@ fn main() -> moe_folding::util::error::Result<()> {
                         mfu * 100.0
                     ),
                     None => println!("measured-in-sim: {us:.1} µs/step"),
+                }
+                if let (Some(h), Some(e)) =
+                    (report.sim_hidden_comm_us, report.sim_exposed_comm_us)
+                {
+                    println!(
+                        "measured-in-sim grad comm: {h:.1} µs hidden, {e:.1} µs exposed per step"
+                    );
                 }
             }
             if let Some(path) = args.get("loss-csv") {

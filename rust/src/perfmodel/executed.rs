@@ -6,41 +6,63 @@
 //! with the analytic [`super::PerfModel::estimate`]: per-stage fwd/bwd
 //! charges, stage-boundary p2p volumes, and the gradient-sync collective
 //! list. The difference is *structural* — here `world_size` rank threads
-//! really execute the 1F1B schedule over [`crate::simcomm`] (real sends,
-//! real recvs, real blocking), grad-sync collectives run over each rank's
-//! mapped DP/EDP groups from the runtime topology, and the step time is
-//! read off the virtual clock. Warmup/steady/cooldown interleaving, cross-
-//! stage waits and bubbles *emerge* from the executed schedule; nothing is
-//! assumed about them.
+//! really execute the (interleaved-)1F1B schedule over [`crate::simcomm`]
+//! (real sends, real recvs, real blocking), grad-sync collectives run over
+//! each rank's mapped DP/EDP groups from the runtime topology, and the
+//! step time is read off the virtual clock. Warmup/steady/cooldown
+//! interleaving, cross-stage waits and bubbles *emerge* from the executed
+//! schedule; nothing is assumed about them.
 //!
-//! The differential suite (`tests/clocked_timing.rs`) pins analytic vs
-//! executed agreement on the paper's Table-3 folded optima; the `timeline`
-//! CLI subcommand dumps [`execute_step_traced`]'s chrome trace for any
-//! mapping.
+//! # Overlap is measured, not credited
+//!
+//! When `TrainConfig::overlap_grad_reduce` is on, the overlappable
+//! bucketed share of each DP/EDP grad collective
+//! (`PerfModel::dp_overlap_frac` of its bytes, capped by the half-backward
+//! window the analytic model assumes) is issued **nonblocking** on the
+//! background grad-sync lane once half the pipeline compute has run —
+//! buckets drain one per schedule op, the NCCL-style dedicated stream —
+//! and waited after the pipeline. The clock *measures* what the backward
+//! window actually hid ([`ExecutedEstimate::hidden_comm_us`] /
+//! [`ExecutedEstimate::exposed_comm_us`]); nothing subtracts the analytic
+//! `hidden_us` credit anymore. Likewise `TrainConfig::overlap_a2a` issues
+//! the per-op hideable a2a share on the comm lane under the expert-GEMM
+//! window. With both knobs off every collective runs blocking and fully
+//! exposed — the serialized twin the differential suite compares against.
+//!
+//! The differential suite (`tests/clocked_timing.rs`,
+//! `tests/schedule_equivalence.rs`) pins analytic vs executed agreement on
+//! the paper's Table-3 folded optima with and without overlap; the
+//! `timeline` CLI subcommand dumps [`execute_step_traced`]'s chrome trace
+//! (main + comm + grad-sync lanes) for any mapping.
+
+use std::cell::{Cell, RefCell};
 
 use crate::config::{ModelConfig, ParallelConfig, TrainConfig};
 use crate::mapping::RuntimeTopology;
 use crate::model::flops::ModelFlops;
-use crate::pipeline::{execute_1f1b_timed, measured_bubble_fraction};
-use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric, TraceEvent};
+use crate::pipeline::{execute_interleaved_with, measured_bubble_fraction};
+use crate::simcomm::{run_ranks_on, AlgoSelection, CommHandle, Communicator, Fabric, TraceEvent};
 
-use super::{GradScope, PerfModel, Strategy};
+use super::{GradScope, PerfModel, StepComponents, Strategy};
 
 /// Result of executing one step on the clocked simulator.
 #[derive(Debug, Clone)]
 pub struct ExecutedEstimate {
     pub config: ParallelConfig,
-    /// Measured-in-sim step time (pipeline + exposed grad sync +
-    /// optimizer), ms. The same overlap credit the analytic model grants
-    /// (`StepComponents::hidden_us`) is subtracted, so the two numbers are
-    /// directly comparable.
+    /// Measured-in-sim step time (pipeline + measured exposed grad sync +
+    /// optimizer), ms. Overlap is measured on the clock's comm lanes, not
+    /// granted as a credit.
     pub step_ms: f64,
-    /// Measured pipeline makespan (max rank finish of the 1F1B schedule),
-    /// ms.
+    /// Measured pipeline makespan (max rank finish of the schedule), ms.
     pub pipeline_ms: f64,
     /// Bubble fraction measured from the executed per-rank timelines:
     /// `1 − busy / (ranks × makespan)`.
     pub bubble_fraction: f64,
+    /// Communication genuinely hidden under compute (mean per rank), µs:
+    /// comm-lane span time whose `wait` exposed nothing.
+    pub hidden_comm_us: f64,
+    /// Communication the main lane had to wait for (mean per rank), µs.
+    pub exposed_comm_us: f64,
     /// Achieved model TFLOPS per GPU at the measured step time.
     pub tflops_per_gpu: f64,
     /// Measured-in-sim MFU.
@@ -52,14 +74,87 @@ impl ExecutedEstimate {
     /// Pretty single-line summary (mirrors `StepEstimate::summary`).
     pub fn summary(&self) -> String {
         format!(
-            "{:<28} sim-step {:8.1} ms   {:6.1} TFLOPS/GPU   MFU {:5.1}%   bubble {:4.1}%",
+            "{:<28} sim-step {:8.1} ms   {:6.1} TFLOPS/GPU   MFU {:5.1}%   bubble {:4.1}%   hidden-comm {:4.1}%",
             self.config.tag(),
             self.step_ms,
             self.tflops_per_gpu,
             self.mfu * 100.0,
-            self.bubble_fraction * 100.0
+            self.bubble_fraction * 100.0,
+            100.0 * self.hidden_comm_us / (self.hidden_comm_us + self.exposed_comm_us).max(1e-9)
         )
     }
+}
+
+/// One grad-sync charge of the executed step: the overlappable bucket list
+/// plus the exposed tail, all priced by the clock when they run.
+struct GradPlan {
+    label: &'static str,
+    prim: crate::collectives::CommPrimitive,
+    scope: GradScope,
+    /// Bytes of each nonblocking bucket issued under backward.
+    bucket_bytes: Vec<f64>,
+    /// Bytes of the blocking tail after the pipeline (0 = fully bucketed).
+    tail_bytes: f64,
+}
+
+/// Number of nonblocking buckets the overlappable share splits into.
+const GRAD_BUCKETS: usize = 4;
+
+/// Build the per-collective overlap plan: `overlap_frac` of each
+/// collective's bytes is bucketed for nonblocking issue, scaled down if the
+/// priced total would exceed the half-compute window `cap_us` (mirroring
+/// the analytic `hidden_us` cap), the rest is the exposed tail.
+fn plan_grad_overlap(
+    comps: &StepComponents,
+    cost: &crate::collectives::CommCost,
+    cap_us: f64,
+) -> Vec<GradPlan> {
+    let frac = comps.grad_overlap_frac.clamp(0.0, 1.0);
+    let fast = AlgoSelection::fast();
+    let dp_group = comps.mapping.attention.group_of("DP", 0).unwrap();
+    let edp_group = comps.mapping.moe.group_of("EDP", 0).unwrap();
+    // Price the full overlappable share to derive the cap scale.
+    let mut ovl_price = 0.0;
+    for gc in &comps.grad_comm {
+        if frac <= 0.0 {
+            continue;
+        }
+        let group = match gc.scope {
+            GradScope::Dp => dp_group,
+            GradScope::Edp => edp_group,
+        };
+        if group.len() > 1 {
+            let algo = match gc.prim {
+                crate::collectives::CommPrimitive::AllGather => fast.all_gather,
+                _ => fast.reduce_scatter,
+            };
+            ovl_price += cost.price(gc.prim, algo, group, gc.bytes * frac);
+        }
+    }
+    let scale = if ovl_price > cap_us && ovl_price > 0.0 {
+        cap_us / ovl_price
+    } else {
+        1.0
+    };
+    comps
+        .grad_comm
+        .iter()
+        .map(|gc| {
+            let ovl = gc.bytes * frac * scale;
+            let bucket_bytes = if ovl > 0.0 {
+                vec![ovl / GRAD_BUCKETS as f64; GRAD_BUCKETS]
+            } else {
+                Vec::new()
+            };
+            GradPlan {
+                label: gc.label,
+                prim: gc.prim,
+                scope: gc.scope,
+                bucket_bytes,
+                tail_bytes: gc.bytes - ovl,
+            }
+        })
+        .collect()
 }
 
 /// Execute one training step on the clocked simulator at full world size.
@@ -71,6 +166,15 @@ pub fn execute_step(
     strategy: Strategy,
 ) -> Result<ExecutedEstimate, String> {
     execute_step_traced(pm, model, cfg, train, strategy).map(|(e, _)| e)
+}
+
+/// Per-rank outcome of the executed schedule.
+struct RankOutcome {
+    pipeline_us: f64,
+    finish_us: f64,
+    busy_us: f64,
+    hidden_us: f64,
+    exposed_us: f64,
 }
 
 /// [`execute_step`] returning the full per-rank trace (serialize with
@@ -86,36 +190,148 @@ pub fn execute_step_traced(
     let topo = RuntimeTopology::from_mapping(comps.mapping.clone())?;
     let world = cfg.world_size;
     let cost = crate::collectives::CommCost::new(comps.cluster.clone());
-    let fabric = Fabric::new_clocked(world, AlgoSelection::fast(), cost);
 
     let m = comps.m_micro;
-    let (f_us, b_us, p2p_bytes) = (comps.f_us, comps.b_us, comps.p2p_bytes);
-    let grad_comm = &comps.grad_comm;
+    let vpp = comps.vpp.max(1);
+    let v = vpp as f64;
+    // Per-chunk charges: a stage's vpp chunks split its per-microbatch
+    // time evenly (layers_per_stage / vpp layers per chunk).
+    let f_c = comps.f_us / v;
+    let b_c = comps.b_us / v;
+    let fh_c = comps.f_hidden_us / v;
+    let bh_c = comps.b_hidden_us / v;
+    let f_win_c = (comps.f_expert_us / v).min(f_c - fh_c).max(0.0);
+    let b_win_c = (comps.b_expert_us / v).min(b_c - bh_c).max(0.0);
+    let p2p_bytes = comps.p2p_bytes;
     let optimizer_us = comps.optimizer_us;
-    let results = run_ranks_on(&fabric, |rank, comm| {
+    // Grad overlap plan: the same half-compute cap the analytic credit
+    // uses, so the two estimators stay structurally comparable.
+    let compute_total_us = m as f64 * (comps.f_eff_us() + comps.b_eff_us());
+    let grad_plan = plan_grad_overlap(&comps, &cost, compute_total_us * 0.5);
+    let total_ops = 2 * m * vpp;
+    // Issue buckets once half the per-rank compute has run (grads of the
+    // early buckets are complete by then), one bucket per op boundary.
+    let issue_threshold_us = compute_total_us * 0.5;
+
+    let fabric = Fabric::new_clocked(world, AlgoSelection::fast(), cost);
+    let results: Vec<RankOutcome> = run_ranks_on(&fabric, |rank, comm| {
         let view = topo.view(rank);
-        // The pipeline: real 1F1B over this rank's mapped stage group.
-        let pipe = execute_1f1b_timed(&comm, &view.pp_group, m, f_us, b_us, p2p_bytes);
+        let hidden = Cell::new(0.0f64);
+        let exposed = Cell::new(0.0f64);
+        let cum_compute = Cell::new(0.0f64);
+        let ops_done = Cell::new(0usize);
+        let next_bucket = Cell::new(0usize);
+        let pending: RefCell<Vec<CommHandle>> = RefCell::new(Vec::new());
+        // Flattened bucket issue order: collective-major, so DP and EDP
+        // buckets interleave the way Megatron's bucketed DDP drains them.
+        let bucket_seq: Vec<(usize, usize)> = grad_plan
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, gp)| (0..gp.bucket_bytes.len()).map(move |bi| (ci, bi)))
+            .collect();
+
+        let issue_buckets = |comm: &Communicator, force: bool| {
+            while next_bucket.get() < bucket_seq.len()
+                && (force || cum_compute.get() + 1e-9 >= issue_threshold_us)
+            {
+                let (ci, bi) = bucket_seq[next_bucket.get()];
+                let gp = &grad_plan[ci];
+                let group = match gp.scope {
+                    GradScope::Dp => &view.dp_group,
+                    GradScope::Edp => &view.edp_group,
+                };
+                let h = comm.charge_collective_bg(gp.label, gp.prim, group, gp.bucket_bytes[bi]);
+                pending.borrow_mut().push(h);
+                next_bucket.set(next_bucket.get() + 1);
+                if !force {
+                    // One bucket per op boundary: buckets become ready
+                    // progressively through the backward phase.
+                    break;
+                }
+            }
+        };
+        // One schedule op: overlap-aware charge structure. Net main-lane
+        // time is (total − hidden) when the a2a fits its window — and the
+        // clock *verifies* it per op (the wait exposes any shortfall).
+        let run_op = |comm: &Communicator,
+                      label: &str,
+                      total_us: f64,
+                      window_us: f64,
+                      a2a_hidden_us: f64| {
+            if a2a_hidden_us > 0.0 {
+                let h = comm.charge_comm_i("moe/a2a_ovl", &view.ep_group, a2a_hidden_us);
+                comm.advance(label, window_us);
+                let (hid, exp) = comm.wait_split(h);
+                hidden.set(hidden.get() + hid);
+                exposed.set(exposed.get() + exp);
+                comm.advance(label, (total_us - window_us - a2a_hidden_us).max(0.0));
+            } else {
+                comm.advance(label, total_us);
+            }
+            cum_compute.set(cum_compute.get() + total_us - a2a_hidden_us);
+            ops_done.set(ops_done.get() + 1);
+            issue_buckets(comm, false);
+        };
+
+        let inputs: Vec<Vec<f32>> = (0..m).map(|mb| vec![mb as f32]).collect();
+        let pipe = execute_interleaved_with(
+            &comm,
+            &view.pp_group,
+            m,
+            vpp,
+            &inputs,
+            |_chunk, _mb, x| {
+                run_op(&comm, "fwd", f_c, f_win_c, fh_c);
+                x.to_vec()
+            },
+            |_chunk, _mb, g| {
+                run_op(&comm, "bwd", b_c, b_win_c, bh_c);
+                g.to_vec()
+            },
+            Some(p2p_bytes),
+        );
         let t_pipeline = comm.now_us();
-        // Gradient/param sync over the rank's actual DP / EDP groups.
-        for gc in grad_comm {
-            let group = match gc.scope {
+        debug_assert_eq!(ops_done.get(), total_ops);
+        // Any buckets the schedule never reached (tiny m) issue now.
+        issue_buckets(&comm, true);
+        // Settle the overlapped grad buckets: exposed time = what the
+        // backward window failed to hide.
+        for h in pending.borrow_mut().drain(..) {
+            let (hid, exp) = comm.wait_split(h);
+            hidden.set(hidden.get() + hid);
+            exposed.set(exposed.get() + exp);
+        }
+        // Exposed tails: the non-overlappable share runs blocking on the
+        // same grad-sync lane (measured + traced like everything else).
+        for gp in &grad_plan {
+            if gp.tail_bytes <= 0.0 {
+                continue;
+            }
+            let group = match gp.scope {
                 GradScope::Dp => &view.dp_group,
                 GradScope::Edp => &view.edp_group,
             };
-            comm.charge_collective(gc.label, gc.prim, group, gc.bytes);
+            let h = comm.charge_collective_bg(gp.label, gp.prim, group, gp.tail_bytes);
+            let (hid, exp) = comm.wait_split(h);
+            hidden.set(hidden.get() + hid);
+            exposed.set(exposed.get() + exp);
         }
         comm.advance("optimizer", optimizer_us);
-        (t_pipeline, comm.now_us(), pipe.busy_us())
+        RankOutcome {
+            pipeline_us: t_pipeline,
+            finish_us: comm.now_us(),
+            busy_us: pipe.busy_us(),
+            hidden_us: hidden.get(),
+            exposed_us: exposed.get(),
+        }
     });
 
-    let pipeline_us = results.iter().map(|r| r.0).fold(0.0, f64::max);
-    let raw_us = results.iter().map(|r| r.1).fold(0.0, f64::max);
-    // Grant the same overlap credit the analytic model applies, so the two
-    // step times differ only where their structure does.
-    let step_us = raw_us - comps.hidden_us;
-    let busy: Vec<f64> = results.iter().map(|r| r.2).collect();
+    let pipeline_us = results.iter().map(|r| r.pipeline_us).fold(0.0, f64::max);
+    let step_us = results.iter().map(|r| r.finish_us).fold(0.0, f64::max);
+    let busy: Vec<f64> = results.iter().map(|r| r.busy_us).collect();
     let bubble = measured_bubble_fraction(&busy, pipeline_us);
+    let hidden_comm_us = results.iter().map(|r| r.hidden_us).sum::<f64>() / world as f64;
+    let exposed_comm_us = results.iter().map(|r| r.exposed_us).sum::<f64>() / world as f64;
 
     let tokens = train.tokens_per_global_batch();
     let flops = ModelFlops::per_token(model, train.seq_len);
@@ -129,6 +345,8 @@ pub fn execute_step_traced(
             step_ms: step_us / 1e3,
             pipeline_ms: pipeline_us / 1e3,
             bubble_fraction: bubble,
+            hidden_comm_us,
+            exposed_comm_us,
             tflops_per_gpu: if comps.oom { 0.0 } else { tflops },
             mfu: if comps.oom { 0.0 } else { mfu },
             oom: comps.oom,
@@ -158,9 +376,57 @@ mod tests {
             analytic.step_ms
         );
         assert!(executed.bubble_fraction > 0.0 && executed.bubble_fraction < 0.5);
+        // Overlap is on by default: the bucketed grad-reduce must be
+        // genuinely hidden under the backward window.
+        assert!(train.overlap_grad_reduce);
+        assert!(executed.hidden_comm_us > 0.0, "no comm hidden");
         assert!(!trace.is_empty());
         // Every rank contributed compute spans and the grad sync ran.
         assert!(trace.iter().any(|e| e.name == "dp/grad_reduce_scatter"));
         assert!(trace.iter().any(|e| e.name == "optimizer"));
+    }
+
+    /// The serialized twin (all overlap off) is never faster, and its
+    /// hidden-comm measurement is exactly zero.
+    #[test]
+    fn serialized_twin_never_faster() {
+        let pm = PerfModel::default();
+        let model = ModelConfig::qwen2_57b_a14b();
+        let mut train = TrainConfig::paper_default(4096, 64);
+        let cfg = ParallelConfig::new(16, 2, 1, 4, 1, 2);
+        let overlapped = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding).unwrap();
+        train.overlap_grad_reduce = false;
+        train.overlap_param_gather = false;
+        train.overlap_a2a = false;
+        let serial = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding).unwrap();
+        // Exactly zero up to float residue of `end − now` round-trips.
+        assert!(serial.hidden_comm_us < 1e-3, "serialized run hid {} µs", serial.hidden_comm_us);
+        assert!(
+            overlapped.step_ms <= serial.step_ms + 1e-9,
+            "overlap {:.2} ms vs serialized {:.2} ms",
+            overlapped.step_ms,
+            serial.step_ms
+        );
+        assert!(overlapped.hidden_comm_us > 0.0);
+    }
+
+    /// vpp > 1 executes the interleaved schedule and shrinks the measured
+    /// bubble toward the interleaved closed form.
+    #[test]
+    fn interleaved_vpp_shrinks_executed_bubble() {
+        let pm = PerfModel::default();
+        let model = ModelConfig::qwen2_57b_a14b(); // 28 layers
+        let train = TrainConfig::paper_default(4096, 64);
+        let plain = ParallelConfig::new(16, 2, 1, 4, 1, 2);
+        let inter = plain.with_vpp(2);
+        let e1 = execute_step(&pm, &model, plain, &train, Strategy::MCoreFolding).unwrap();
+        let e2 = execute_step(&pm, &model, inter, &train, Strategy::MCoreFolding).unwrap();
+        assert!(
+            e2.bubble_fraction < e1.bubble_fraction,
+            "vpp2 bubble {:.4} !< vpp1 bubble {:.4}",
+            e2.bubble_fraction,
+            e1.bubble_fraction
+        );
+        assert!(e2.step_ms < e1.step_ms);
     }
 }

@@ -123,13 +123,29 @@ impl Strategy {
                             let cfg = ParallelConfig::new(gpus, tp, cp, ep, etp, pp);
                             if self.admits(&cfg, model) && self.mapping(cfg).is_ok() {
                                 out.push(cfg);
+                                // Interleaved-1F1B variants: every vpp > 1
+                                // dividing the layers-per-stage count (so
+                                // pp·vpp tiles num_layers; e.g. 56 layers
+                                // at pp=8 admits exactly vpp=7), capped at
+                                // one-layer chunks / vpp ≤ 8. Microbatch
+                                // divisibility is train-config dependent;
+                                // the estimator rejects infeasible points
+                                // at tune time.
+                                if pp > 1 {
+                                    let lps = model.num_layers / pp;
+                                    for vpp in 2..=lps.min(8) {
+                                        if lps % vpp == 0 {
+                                            out.push(cfg.with_vpp(vpp));
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
                 }
             }
         }
-        out.sort_by_key(|c| (c.tp, c.cp, c.pp, c.ep, c.etp));
+        out.sort_by_key(|c| (c.tp, c.cp, c.pp, c.ep, c.etp, c.vpp));
         out.dedup();
         out
     }

@@ -71,6 +71,68 @@ pub fn bubble_fraction_interleaved(pp: usize, m: usize, vpp: usize) -> f64 {
     }
 }
 
+/// Generate the **interleaved** 1F1B schedule (Megatron-Core's virtual
+/// pipeline) for `stage` of `pp` stages over `m` microbatches with `vpp`
+/// model chunks per stage. Model chunk `c` of stage `s` is layer block
+/// `c·pp + s`, so one microbatch's forward visits
+/// `(0,c0) (1,c0) … (pp−1,c0) (0,c1) …`.
+///
+/// The schedule is the standard one: the forward stream enumerates virtual
+/// microbatches in groups of `pp·vpp` slots — within a group, chunk 0 runs
+/// microbatches `g·pp … g·pp+pp−1`, then chunk 1 the same microbatches, and
+/// so on; the backward stream mirrors it with the chunk order reversed.
+/// Rank `stage` runs `min(total, 2·(pp−stage−1) + (vpp−1)·pp)` warmup
+/// forwards, then alternates 1F1B, then drains the backwards. With uniform
+/// per-chunk times and free hand-offs the makespan is exactly
+/// `(m·vpp + pp − 1)(f + b)` — the closed form behind
+/// [`bubble_fraction_interleaved`], pinned by
+/// `tests/schedule_equivalence.rs`.
+///
+/// `vpp == 1` returns the plain [`schedule_1f1b`] (the interleaved warmup
+/// formula over-counts by `pp−stage−1` in that degenerate case, exactly as
+/// in Megatron, which only takes this path for `vpp > 1`). `vpp > 1`
+/// requires `m % pp == 0` (the schedule's microbatch groups span `pp`).
+pub fn schedule_interleaved(stage: usize, pp: usize, m: usize, vpp: usize) -> Vec<PipeOp> {
+    assert!(stage < pp);
+    assert!(vpp >= 1, "vpp must be >= 1");
+    if vpp == 1 {
+        return schedule_1f1b(stage, pp, m);
+    }
+    assert!(
+        m % pp == 0,
+        "interleaved 1F1B requires microbatches ({m}) divisible by pp ({pp})"
+    );
+    let total = m * vpp;
+    let chunk_of = |vid: usize, fwd: bool| -> usize {
+        let c = (vid % (pp * vpp)) / pp;
+        if fwd {
+            c
+        } else {
+            vpp - 1 - c
+        }
+    };
+    let mb_of = |vid: usize| -> usize { (vid / (pp * vpp)) * pp + vid % pp };
+    let warmup = (2 * (pp - stage - 1) + (vpp - 1) * pp).min(total);
+    let mut ops = Vec::with_capacity(2 * total);
+    let mut next_fwd = 0usize;
+    let mut next_bwd = 0usize;
+    for _ in 0..warmup {
+        ops.push(PipeOp::Fwd { mb: mb_of(next_fwd), chunk: chunk_of(next_fwd, true) });
+        next_fwd += 1;
+    }
+    while next_fwd < total {
+        ops.push(PipeOp::Fwd { mb: mb_of(next_fwd), chunk: chunk_of(next_fwd, true) });
+        next_fwd += 1;
+        ops.push(PipeOp::Bwd { mb: mb_of(next_bwd), chunk: chunk_of(next_bwd, false) });
+        next_bwd += 1;
+    }
+    while next_bwd < total {
+        ops.push(PipeOp::Bwd { mb: mb_of(next_bwd), chunk: chunk_of(next_bwd, false) });
+        next_bwd += 1;
+    }
+    ops
+}
+
 /// Timeline simulation of 1F1B.
 ///
 /// `fwd_us`/`bwd_us` are per-microbatch per-stage compute times;
@@ -140,6 +202,94 @@ pub fn simulate_1f1b(pp: usize, m: usize, fwd_us: f64, bwd_us: f64, p2p_us: f64)
             }
         }
         assert!(progressed, "pipeline deadlock: schedule inconsistent");
+    }
+    free_at.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Timeline simulation of **interleaved** 1F1B ([`schedule_interleaved`]).
+///
+/// `fwd_us`/`bwd_us` are **per-chunk** per-microbatch stage times (a stage
+/// holding `vpp` chunks of `L/(pp·vpp)` layers each spends `fwd_us` per
+/// chunk visit); `p2p_us` is the per-hop boundary transfer time, paid on
+/// every chunk hop including the `stage pp−1 → stage 0` wrap-around.
+/// Returns the step makespan in microseconds. `vpp == 1` matches
+/// [`simulate_1f1b`] exactly (same schedule, same dependency rules).
+pub fn simulate_interleaved(
+    pp: usize,
+    m: usize,
+    vpp: usize,
+    fwd_us: f64,
+    bwd_us: f64,
+    p2p_us: f64,
+) -> f64 {
+    if pp == 1 && vpp == 1 {
+        return m as f64 * (fwd_us + bwd_us);
+    }
+    // Single-stage "hand-offs" are self-sends — free, like the executed
+    // path's `cost.p2p(r, r, …) == 0`.
+    let p2p_us = if pp == 1 { 0.0 } else { p2p_us };
+    let schedules: Vec<Vec<PipeOp>> =
+        (0..pp).map(|s| schedule_interleaved(s, pp, m, vpp)).collect();
+    // done[(stage, chunk, mb)] completion times, forward and backward.
+    let mut fdone = vec![vec![vec![f64::INFINITY; m]; vpp]; pp];
+    let mut bdone = vec![vec![vec![f64::INFINITY; m]; vpp]; pp];
+    let mut free_at = vec![0.0f64; pp];
+    let mut idx = vec![0usize; pp];
+    let total_ops: usize = schedules.iter().map(|s| s.len()).sum();
+    let mut executed = 0usize;
+    let last = pp - 1;
+    while executed < total_ops {
+        let mut progressed = false;
+        for s in 0..pp {
+            while idx[s] < schedules[s].len() {
+                let op = schedules[s][idx[s]];
+                let ready = match op {
+                    PipeOp::Fwd { mb, chunk } => {
+                        if s == 0 && chunk == 0 {
+                            Some(free_at[s])
+                        } else {
+                            let (ps, pc) = if s > 0 { (s - 1, chunk) } else { (last, chunk - 1) };
+                            if fdone[ps][pc][mb].is_finite() {
+                                Some(free_at[s].max(fdone[ps][pc][mb] + p2p_us))
+                            } else {
+                                None
+                            }
+                        }
+                    }
+                    PipeOp::Bwd { mb, chunk } => {
+                        if s == last && chunk == vpp - 1 {
+                            if fdone[s][chunk][mb].is_finite() {
+                                Some(free_at[s].max(fdone[s][chunk][mb]))
+                            } else {
+                                None
+                            }
+                        } else {
+                            let (ns, nc) = if s < last { (s + 1, chunk) } else { (0, chunk + 1) };
+                            if bdone[ns][nc][mb].is_finite() {
+                                Some(free_at[s].max(bdone[ns][nc][mb] + p2p_us))
+                            } else {
+                                None
+                            }
+                        }
+                    }
+                };
+                let Some(start) = ready else { break };
+                match op {
+                    PipeOp::Fwd { mb, chunk } => {
+                        fdone[s][chunk][mb] = start + fwd_us;
+                        free_at[s] = fdone[s][chunk][mb];
+                    }
+                    PipeOp::Bwd { mb, chunk } => {
+                        bdone[s][chunk][mb] = start + bwd_us;
+                        free_at[s] = bdone[s][chunk][mb];
+                    }
+                }
+                idx[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "interleaved pipeline deadlock: schedule inconsistent");
     }
     free_at.iter().cloned().fold(0.0, f64::max)
 }
@@ -349,6 +499,195 @@ where
     execute_1f1b(comm, &view.pp_group, m, inputs, fwd, bwd)
 }
 
+/// Message tag of an interleaved-1F1B hand-off, named by the **receiver's**
+/// `(direction, chunk, microbatch)`. Interleaved schedules cross forward
+/// activations and backward gradients of different chunks on the same rank
+/// pair (for `pp == 2` the next and previous ring neighbours coincide), so
+/// the executor matches payloads by tag instead of arrival order.
+fn chunk_tag(bwd: bool, chunk: usize, mb: usize, vpp: usize) -> u64 {
+    1 + (((mb * vpp + chunk) * 2) + bwd as usize) as u64
+}
+
+/// Execute the **interleaved** 1F1B schedule functionally over
+/// [`crate::simcomm`], with `vpp` model chunks per stage.
+///
+/// `stage_group[s]` is the global rank of stage `s` (must contain
+/// `comm.rank()`; every member must call this collectively). `inputs`
+/// holds stage-0's `m` microbatch activations (ignored elsewhere).
+/// `fwd(chunk, mb, act)` runs model chunk `chunk` (layer block
+/// `chunk·pp + stage`) of this stage; `bwd(chunk, mb, grad)` its backward.
+/// The backward of the *last chunk on the last stage* is seeded with that
+/// chunk's own forward output (the caller's `bwd` closure is the loss
+/// head). Hand-offs are tagged point-to-point messages: stage `s` forwards
+/// chunk `c` to stage `s+1`, and the last stage forwards chunk `c` to
+/// stage 0 as chunk `c+1` input (the wrap-around hop); gradients flow the
+/// reverse ring. `vpp == 1` degenerates to the plain 1F1B dataflow and is
+/// bit-identical to [`execute_1f1b`] (pinned by
+/// `tests/schedule_equivalence.rs`).
+pub fn execute_interleaved<Fw, Bw>(
+    comm: &Communicator,
+    stage_group: &[usize],
+    m: usize,
+    vpp: usize,
+    inputs: &[Vec<f32>],
+    fwd: Fw,
+    bwd: Bw,
+) -> PipelineRunResult
+where
+    Fw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+    Bw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+{
+    execute_interleaved_with(comm, stage_group, m, vpp, inputs, fwd, bwd, None)
+}
+
+/// [`execute_interleaved`] with an explicit clock-billed volume for the
+/// boundary p2p transfers (see [`execute_1f1b_with`]).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_interleaved_with<Fw, Bw>(
+    comm: &Communicator,
+    stage_group: &[usize],
+    m: usize,
+    vpp: usize,
+    inputs: &[Vec<f32>],
+    mut fwd: Fw,
+    mut bwd: Bw,
+    p2p_billed_bytes: Option<f64>,
+) -> PipelineRunResult
+where
+    Fw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+    Bw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+{
+    let pp = stage_group.len();
+    let stage = stage_group
+        .iter()
+        .position(|&r| r == comm.rank())
+        .expect("rank must be a member of stage_group");
+    if stage == 0 {
+        assert_eq!(inputs.len(), m, "stage 0 needs one input per microbatch");
+    }
+    let last = pp - 1;
+    let clocked = comm.clocked();
+    let send = |dst: usize, tag: u64, data: &[f32]| match p2p_billed_bytes {
+        Some(b) => comm.send_tagged_billed(dst, tag, data, b),
+        None => comm.send_tagged(dst, tag, data),
+    };
+    // Forward outputs of the last chunk on the last stage (the pipeline
+    // outputs, and the seeds of its own backward).
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); m];
+    let mut input_grads: Vec<Vec<f32>> = vec![Vec::new(); m];
+    let mut op_spans = Vec::new();
+
+    for op in schedule_interleaved(stage, pp, m, vpp) {
+        match op {
+            PipeOp::Fwd { mb, chunk } => {
+                let act = if stage == 0 && chunk == 0 {
+                    let t0 = comm.now_us();
+                    let a = fwd(chunk, mb, &inputs[mb]);
+                    if clocked {
+                        op_spans.push((op, t0, comm.now_us()));
+                    }
+                    a
+                } else {
+                    let src = if stage > 0 { stage_group[stage - 1] } else { stage_group[last] };
+                    let x = comm.recv_tagged(src, chunk_tag(false, chunk, mb, vpp));
+                    let t0 = comm.now_us();
+                    let a = fwd(chunk, mb, &x);
+                    if clocked {
+                        op_spans.push((op, t0, comm.now_us()));
+                    }
+                    a
+                };
+                if stage < last {
+                    send(stage_group[stage + 1], chunk_tag(false, chunk, mb, vpp), &act);
+                } else if chunk < vpp - 1 {
+                    send(stage_group[0], chunk_tag(false, chunk + 1, mb, vpp), &act);
+                } else {
+                    outputs[mb] = act;
+                }
+            }
+            PipeOp::Bwd { mb, chunk } => {
+                let grad_in = if stage == last && chunk == vpp - 1 {
+                    outputs[mb].clone()
+                } else {
+                    let src = if stage < last { stage_group[stage + 1] } else { stage_group[0] };
+                    comm.recv_tagged(src, chunk_tag(true, chunk, mb, vpp))
+                };
+                let t0 = comm.now_us();
+                let g = bwd(chunk, mb, &grad_in);
+                if clocked {
+                    op_spans.push((op, t0, comm.now_us()));
+                }
+                if stage > 0 {
+                    send(stage_group[stage - 1], chunk_tag(true, chunk, mb, vpp), &g);
+                } else if chunk > 0 {
+                    send(stage_group[last], chunk_tag(true, chunk - 1, mb, vpp), &g);
+                } else {
+                    input_grads[mb] = g;
+                }
+            }
+        }
+    }
+
+    PipelineRunResult {
+        outputs: if stage == last { outputs } else { Vec::new() },
+        input_grads: if stage == 0 { input_grads } else { Vec::new() },
+        op_spans,
+        finish_us: comm.now_us(),
+    }
+}
+
+/// Executed, clocked interleaved-1F1B **skeleton**: the real schedule with
+/// uniform per-chunk compute charges and boundary p2p billed at
+/// `p2p_bytes`. The executed counterpart of [`simulate_interleaved`]; with
+/// zero-cost p2p the makespan equals `(m·vpp + pp − 1)(f + b)` to float
+/// precision (`tests/schedule_equivalence.rs`).
+pub fn execute_interleaved_timed(
+    comm: &Communicator,
+    stage_group: &[usize],
+    m: usize,
+    vpp: usize,
+    fwd_us: f64,
+    bwd_us: f64,
+    p2p_bytes: f64,
+) -> PipelineRunResult {
+    let inputs: Vec<Vec<f32>> = (0..m).map(|mb| vec![mb as f32]).collect();
+    execute_interleaved_with(
+        comm,
+        stage_group,
+        m,
+        vpp,
+        &inputs,
+        |_chunk, _mb, x| {
+            comm.advance("fwd", fwd_us);
+            x.to_vec()
+        },
+        |_chunk, _mb, g| {
+            comm.advance("bwd", bwd_us);
+            g.to_vec()
+        },
+        Some(p2p_bytes),
+    )
+}
+
+/// [`execute_interleaved`] with the stage group taken from a runtime
+/// topology (the mapped counterpart of [`execute_1f1b_mapped`]).
+pub fn execute_interleaved_mapped<Fw, Bw>(
+    comm: &Communicator,
+    topo: &RuntimeTopology,
+    m: usize,
+    vpp: usize,
+    inputs: &[Vec<f32>],
+    fwd: Fw,
+    bwd: Bw,
+) -> PipelineRunResult
+where
+    Fw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+    Bw: FnMut(usize, usize, &[f32]) -> Vec<f32>,
+{
+    let view = topo.view(comm.rank());
+    execute_interleaved(comm, &view.pp_group, m, vpp, inputs, fwd, bwd)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,6 +756,211 @@ mod tests {
         let plain = bubble_fraction(8, 16);
         let inter = bubble_fraction_interleaved(8, 16, 4);
         assert!(inter < plain);
+    }
+
+    /// Regression (m < pp corner audit): with fewer microbatches than
+    /// stages the schedule degenerates to all-forwards-then-all-backwards
+    /// on the early stages; every stage still runs exactly `m` forwards and
+    /// `m` backwards, warmup is clamped at `m`, and both the event-driven
+    /// simulation and the executed skeleton still equal the closed form
+    /// `(m + pp − 1)(f + b)` for free hand-offs.
+    #[test]
+    fn m_less_than_pp_corner() {
+        for (pp, m) in [(4usize, 1usize), (4, 2), (4, 3), (8, 3), (16, 5)] {
+            for s in 0..pp {
+                let ops = schedule_1f1b(s, pp, m);
+                let f = ops.iter().filter(|o| matches!(o, PipeOp::Fwd { .. })).count();
+                let b = ops.iter().filter(|o| matches!(o, PipeOp::Bwd { .. })).count();
+                assert_eq!(f, m, "pp={pp} m={m} stage {s} fwd count");
+                assert_eq!(b, m, "pp={pp} m={m} stage {s} bwd count");
+                // Warmup never exceeds the microbatch count.
+                let leading_f = ops
+                    .iter()
+                    .take_while(|o| matches!(o, PipeOp::Fwd { .. }))
+                    .count();
+                assert!(leading_f <= m, "pp={pp} m={m} stage {s}: warmup {leading_f} > m");
+            }
+            let (f, b) = (110.0, 230.0);
+            let sim = simulate_1f1b(pp, m, f, b, 0.0);
+            let closed = (m + pp - 1) as f64 * (f + b);
+            assert!(
+                (sim - closed).abs() < 1e-9 * closed,
+                "pp={pp} m={m}: sim {sim} vs closed {closed}"
+            );
+        }
+    }
+
+    /// Regression: the degenerate `makespan_us == 0` input (a pipeline that
+    /// never ran) reports a 0 bubble instead of NaN/negative garbage; so
+    /// does an empty rank list.
+    #[test]
+    fn measured_bubble_fraction_degenerate_inputs() {
+        assert_eq!(measured_bubble_fraction(&[10.0, 20.0], 0.0), 0.0);
+        assert_eq!(measured_bubble_fraction(&[], 100.0), 0.0);
+        assert_eq!(measured_bubble_fraction(&[0.0, 0.0], 0.0), 0.0);
+        // Busy exceeding the area clamps at 0, never negative.
+        assert_eq!(measured_bubble_fraction(&[200.0], 100.0), 0.0);
+    }
+
+    /// Interleaved schedule: vpp = 1 is byte-for-byte the plain 1F1B
+    /// schedule; vpp > 1 runs every (chunk, microbatch) exactly once per
+    /// direction with the Megatron warmup count.
+    #[test]
+    fn interleaved_schedule_counts_and_degenerate() {
+        for pp in [2usize, 4, 8] {
+            for m in [pp, 2 * pp, 4 * pp] {
+                for s in 0..pp {
+                    assert_eq!(
+                        schedule_interleaved(s, pp, m, 1),
+                        schedule_1f1b(s, pp, m),
+                        "vpp=1 must degenerate to plain 1F1B (pp={pp} m={m} s={s})"
+                    );
+                }
+                for vpp in [2usize, 3, 4] {
+                    for s in 0..pp {
+                        let ops = schedule_interleaved(s, pp, m, vpp);
+                        assert_eq!(ops.len(), 2 * m * vpp);
+                        let mut fseen = vec![vec![false; m]; vpp];
+                        let mut bseen = vec![vec![false; m]; vpp];
+                        for op in &ops {
+                            match *op {
+                                PipeOp::Fwd { mb, chunk } => {
+                                    assert!(!fseen[chunk][mb], "dup fwd {chunk}/{mb}");
+                                    fseen[chunk][mb] = true;
+                                }
+                                PipeOp::Bwd { mb, chunk } => {
+                                    assert!(!bseen[chunk][mb], "dup bwd {chunk}/{mb}");
+                                    bseen[chunk][mb] = true;
+                                }
+                            }
+                        }
+                        assert!(fseen.iter().flatten().all(|&x| x));
+                        assert!(bseen.iter().flatten().all(|&x| x));
+                        let warm = ops
+                            .iter()
+                            .take_while(|o| matches!(o, PipeOp::Fwd { .. }))
+                            .count();
+                        let expect = (2 * (pp - s - 1) + (vpp - 1) * pp).min(m * vpp);
+                        assert!(
+                            warm >= expect,
+                            "pp={pp} m={m} vpp={vpp} s={s}: {warm} warmup fwds < {expect}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The interleaved event simulation hits the closed form
+    /// `(m·vpp + pp − 1)(f + b)` exactly for free hand-offs, matches
+    /// [`simulate_1f1b`] at vpp = 1, and p2p only ever adds time.
+    #[test]
+    fn simulate_interleaved_closed_form_and_degenerate() {
+        for pp in [1usize, 2, 4, 8] {
+            for mult in [1usize, 2, 4] {
+                let m = pp * mult;
+                for vpp in [1usize, 2, 3, 4] {
+                    let (f, b) = (120.0, 275.5);
+                    let sim = simulate_interleaved(pp, m, vpp, f, b, 0.0);
+                    let closed = (m * vpp + pp - 1) as f64 * (f + b);
+                    assert!(
+                        (sim - closed).abs() < 1e-9 * closed,
+                        "pp={pp} m={m} vpp={vpp}: sim {sim} vs closed {closed}"
+                    );
+                    if vpp == 1 {
+                        let plain = simulate_1f1b(pp, m, f, b, 7.5);
+                        let inter = simulate_interleaved(pp, m, 1, f, b, 7.5);
+                        assert!(
+                            (plain - inter).abs() < 1e-9,
+                            "pp={pp} m={m}: {plain} vs {inter}"
+                        );
+                    }
+                    let with_p2p = simulate_interleaved(pp, m, vpp, f, b, 9.0);
+                    assert!(with_p2p >= sim - 1e-9);
+                }
+            }
+        }
+    }
+
+    /// Functional interleaved execution composes the virtual chunks in
+    /// layer-block order: chunk c of stage s is block c·pp + s, so the
+    /// composed forward applies blocks 0, 1, …, pp·vpp − 1 in order (and
+    /// the backward reverses it). Affine per-block maps make the
+    /// composition exactly checkable.
+    #[test]
+    fn execute_interleaved_composes_chunked_stages() {
+        let pp = 2;
+        let vpp = 3;
+        let m = 4;
+        let width = 5;
+        let blocks = pp * vpp;
+        let coef = |blk: usize| (blk + 2) as f32;
+        let inputs: Vec<Vec<f32>> =
+            (0..m).map(|mb| vec![mb as f32 - 1.5; width]).collect();
+        let outs = run_ranks(pp, |rank, comm| {
+            let group: Vec<usize> = (0..pp).collect();
+            execute_interleaved(
+                &comm,
+                &group,
+                m,
+                vpp,
+                &inputs,
+                |chunk, _mb, x| {
+                    let a = coef(chunk * pp + rank);
+                    x.iter().map(|v| a * v + 1.0).collect()
+                },
+                |chunk, _mb, g| {
+                    let a = coef(chunk * pp + rank);
+                    g.iter().map(|v| a * v).collect()
+                },
+            )
+        });
+        for mb in 0..m {
+            let mut y = inputs[mb].clone();
+            for blk in 0..blocks {
+                for v in y.iter_mut() {
+                    *v = coef(blk) * *v + 1.0;
+                }
+            }
+            assert_eq!(outs[pp - 1].outputs[mb], y, "mb {mb} forward");
+            let mut g = y.clone();
+            for blk in (0..blocks).rev() {
+                for v in g.iter_mut() {
+                    *v *= coef(blk);
+                }
+            }
+            assert_eq!(outs[0].input_grads[mb], g, "mb {mb} backward");
+        }
+    }
+
+    /// Executed interleaved skeleton on the clocked fabric equals the
+    /// event-driven simulation for nonzero p2p as well (same dependency
+    /// structure, same receiver-pays billing).
+    #[test]
+    fn executed_interleaved_matches_simulation_with_p2p() {
+        use crate::cluster::ClusterSpec;
+        use crate::collectives::CommCost;
+        use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+        for (pp, m, vpp) in [(2usize, 4usize, 2usize), (4, 4, 2), (4, 8, 3)] {
+            let mut cluster = ClusterSpec::eos(pp);
+            cluster.nvlink_latency_us = 0.0;
+            cluster.ib_latency_us = 0.0;
+            let cost = CommCost::new(cluster);
+            let p2p_bytes = 1.5e6;
+            let p2p_us = cost.p2p(0, 1, p2p_bytes);
+            let fabric = Fabric::new_clocked(pp, AlgoSelection::fast(), cost);
+            let group: Vec<usize> = (0..pp).collect();
+            let (f, b) = (100.0, 180.0);
+            let outs = run_ranks_on(&fabric, |_, comm| {
+                execute_interleaved_timed(&comm, &group, m, vpp, f, b, p2p_bytes)
+            });
+            let executed = outs.iter().map(|r| r.finish_us).fold(0.0, f64::max);
+            let simulated = simulate_interleaved(pp, m, vpp, f, b, p2p_us);
+            assert!(
+                (executed - simulated).abs() < 1e-6 * simulated,
+                "pp={pp} m={m} vpp={vpp}: executed {executed} vs simulated {simulated}"
+            );
+        }
     }
 
     #[test]

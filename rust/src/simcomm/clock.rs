@@ -1,44 +1,98 @@
 //! The virtual clock of the functional simulator.
 //!
 //! A clocked [`super::Fabric`] carries one [`SimClock`]: per-rank simulated
-//! time (microseconds) plus a per-rank trace-event log. Time advances in
-//! exactly two ways:
+//! time (microseconds) plus a per-rank trace-event log. Every rank owns
+//! **three lanes** ([`Lane`]):
+//!
+//! * the **main lane** — the compute stream. Time advances via
+//!   [`super::Communicator::advance`] (labelled compute spans), exposed
+//!   p2p waits, and exposed waits on nonblocking communication.
+//! * the **comm lane** — the layer-collective stream (the NCCL-comm-stream
+//!   stand-in for a2a / TP / ETP collectives). Every collective occupies it
+//!   for its priced duration; back-to-back collectives queue (the lane is
+//!   a serial resource). A nonblocking collective
+//!   ([`super::Communicator::all_reduce_sum_i`] &c.) runs here
+//!   **concurrently with the main lane** — the makespan only pays the part
+//!   not hidden under compute, which is what makes comm–compute overlap
+//!   measurable instead of assumed.
+//! * the **grad-sync lane** ([`Lane::Bg`]) — the dedicated
+//!   gradient/param-sync stream
+//!   ([`super::Communicator::charge_collective_bg`]), serial among its own
+//!   charges but concurrent with both other lanes.
+//!
+//! Time advances in exactly two ways:
 //!
 //! * **compute** — [`super::Communicator::advance`] charges a labelled span
-//!   to the calling rank;
+//!   to the calling rank's main lane;
 //! * **communication** — every collective and point-to-point transfer
 //!   charges the *same* [`CommCost`] primitive the analytic performance
 //!   model prices (`collectives::cost`), after synchronizing the group on
-//!   `max(entry times)`. One cost implementation means the executed clock
+//!   `max(issue times)`. One cost implementation means the executed clock
 //!   and the analytic estimate can never drift on the price of a
 //!   collective.
 //!
 //! Collective semantics: a collective entered by every group member at
-//! times `t_i` exits on every member at `max_i(t_i) + cost`, where `cost`
+//! times `t_i` (with comm-lane frontiers `c_i`) occupies each member's comm
+//! lane over `[S, S + cost]` where `S = max_i(max(t_i, c_i))` and `cost`
 //! comes from [`CommCost::price`] for the algorithm the communicator
-//! actually ran. The max is established by a tiny leader exchange of
-//! timestamps *after* the payload phase — control traffic that never
-//! touches payload math, so clocked execution is bit-identical to
+//! actually ran. A *blocking* collective additionally advances the main
+//! lane to `S + cost`; a *nonblocking* one returns a
+//! [`super::CommHandle`] and the main lane catches up only at
+//! [`super::Communicator::wait`]. The max is established by a tiny leader
+//! exchange of timestamps *after* the payload phase — control traffic that
+//! never touches payload math, so clocked execution is bit-identical to
 //! unclocked execution.
 //!
 //! The event log serializes to the Chrome trace-event format
 //! ([`chrome_trace_json`]): load the file at `chrome://tracing` or
-//! <https://ui.perfetto.dev> — one row per rank, compute and communication
-//! spans color-coded by category, gaps = waiting (pipeline bubbles).
+//! <https://ui.perfetto.dev> — up to three rows per rank (main, comm and
+//! grad-sync lanes), compute and communication spans color-coded by
+//! category, gaps on the main lane = waiting (pipeline bubbles / exposed
+//! communication).
 
 use std::sync::Mutex;
 
 use crate::collectives::CommCost;
 
+/// Which per-rank timeline a span occupies. The two comm lanes model the
+/// two NCCL streams a Megatron rank drives: layer collectives (a2a, TP/ETP
+/// gathers) on one, gradient/param sync on the other — they proceed
+/// concurrently with each other and with compute, but each lane is a
+/// serial resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// The compute stream: compute spans, exposed p2p waits, exposed
+    /// nonblocking-comm waits.
+    Main,
+    /// The layer-collective communication stream.
+    Comm,
+    /// The background gradient/param-sync stream (bucketed DP/EDP
+    /// grad-reduce issued under backward).
+    Bg,
+}
+
+impl Lane {
+    /// Stable name used in the chrome-trace thread labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Main => "main",
+            Lane::Comm => "comm",
+            Lane::Bg => "grad-sync",
+        }
+    }
+}
+
 /// One timed span on one rank's simulated timeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
-    /// Global rank the span belongs to (chrome-trace `tid`).
+    /// Global rank the span belongs to.
     pub rank: usize,
     /// Phase label (e.g. `moe/a2a_dispatch`, `fwd`, `optimizer`).
     pub name: String,
-    /// Category: `compute`, `comm`, or `p2p`.
+    /// Category: `compute`, `comm`, `p2p`, or `wait`.
     pub cat: &'static str,
+    /// Which of the rank's timelines the span occupies.
+    pub lane: Lane,
     /// Start time, simulated microseconds.
     pub ts_us: f64,
     /// Duration, simulated microseconds.
@@ -48,7 +102,13 @@ pub struct TraceEvent {
 /// Per-rank simulated time + trace log. Owned by a clocked fabric.
 pub(crate) struct SimClock {
     pub(crate) cost: CommCost,
+    /// Main-lane (compute) time per rank.
     times: Vec<Mutex<f64>>,
+    /// Comm-lane frontier per rank: when the rank's layer-collective
+    /// stream next becomes free.
+    comm_free: Vec<Mutex<f64>>,
+    /// Background (grad-sync) lane frontier per rank.
+    bg_free: Vec<Mutex<f64>>,
     events: Vec<Mutex<Vec<TraceEvent>>>,
 }
 
@@ -57,21 +117,49 @@ impl SimClock {
         Self {
             cost,
             times: (0..world).map(|_| Mutex::new(0.0)).collect(),
+            comm_free: (0..world).map(|_| Mutex::new(0.0)).collect(),
+            bg_free: (0..world).map(|_| Mutex::new(0.0)).collect(),
             events: (0..world).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
 
-    /// Current simulated time of `rank`.
+    /// Current simulated main-lane time of `rank`.
     pub(crate) fn now(&self, rank: usize) -> f64 {
         *self.times[rank].lock().unwrap()
     }
 
-    /// Set `rank`'s clock (collective exit, p2p arrival).
+    /// Set `rank`'s main-lane clock (collective exit, p2p arrival, wait).
     pub(crate) fn set(&self, rank: usize, t: f64) {
         *self.times[rank].lock().unwrap() = t;
     }
 
-    /// Charge `us` of local work to `rank`; returns the span start.
+    fn lane_frontier(&self, lane: Lane) -> &[Mutex<f64>] {
+        match lane {
+            Lane::Main => unreachable!("main lane has no frontier"),
+            Lane::Comm => &self.comm_free,
+            Lane::Bg => &self.bg_free,
+        }
+    }
+
+    /// When `rank`'s `lane` next becomes free.
+    pub(crate) fn lane_free_at(&self, rank: usize, lane: Lane) -> f64 {
+        *self.lane_frontier(lane)[rank].lock().unwrap()
+    }
+
+    /// Occupy `rank`'s `lane` over `[start, start + dur]`, recording the
+    /// span. `start` must be ≥ the lane frontier (the caller synchronizes
+    /// the group on `max(issue, frontier)` first), so lane spans never
+    /// overlap.
+    pub(crate) fn bill_lane(&self, rank: usize, lane: Lane, name: &str, start: f64, dur: f64) {
+        let mut free = self.lane_frontier(lane)[rank].lock().unwrap();
+        debug_assert!(start + 1e-9 >= *free, "lane overlap: {start} < {free}");
+        *free = start + dur;
+        drop(free);
+        self.record(rank, name, "comm", lane, start, dur);
+    }
+
+    /// Charge `us` of local work to `rank`'s main lane; returns the span
+    /// start.
     pub(crate) fn advance(&self, rank: usize, us: f64) -> f64 {
         let mut t = self.times[rank].lock().unwrap();
         let start = *t;
@@ -80,19 +168,38 @@ impl SimClock {
     }
 
     /// Append a span to `rank`'s trace.
-    pub(crate) fn record(&self, rank: usize, name: &str, cat: &'static str, ts: f64, dur: f64) {
+    pub(crate) fn record(
+        &self,
+        rank: usize,
+        name: &str,
+        cat: &'static str,
+        lane: Lane,
+        ts: f64,
+        dur: f64,
+    ) {
         self.events[rank].lock().unwrap().push(TraceEvent {
             rank,
             name: name.to_string(),
             cat,
+            lane,
             ts_us: ts,
             dur_us: dur,
         });
     }
 
-    /// Snapshot of every rank's simulated time.
+    /// Snapshot of every rank's main-lane simulated time.
     pub(crate) fn times(&self) -> Vec<f64> {
         self.times.iter().map(|t| *t.lock().unwrap()).collect()
+    }
+
+    /// Snapshot of every rank's comm-lane frontier, folded with the
+    /// background lane (the later of the two streams).
+    pub(crate) fn comm_times(&self) -> Vec<f64> {
+        self.comm_free
+            .iter()
+            .zip(&self.bg_free)
+            .map(|(c, b)| (*c.lock().unwrap()).max(*b.lock().unwrap()))
+            .collect()
     }
 
     /// Drain all recorded events, ordered by (rank, start time).
@@ -109,9 +216,9 @@ impl SimClock {
         out
     }
 
-    /// Reset every rank's clock to zero (events are kept).
+    /// Reset every rank's clock (all lanes) to zero (events are kept).
     pub(crate) fn reset(&self) {
-        for t in &self.times {
+        for t in self.times.iter().chain(&self.comm_free).chain(&self.bg_free) {
             *t.lock().unwrap() = 0.0;
         }
     }
@@ -145,26 +252,67 @@ fn json_escape(s: &str) -> String {
     out
 }
 
+/// Chrome-trace thread id of a (rank, lane) timeline: the lanes of a rank
+/// sit on adjacent tids so they group together in the viewer.
+fn tid_of(rank: usize, lane: Lane) -> usize {
+    let slot = match lane {
+        Lane::Main => 0,
+        Lane::Comm => 1,
+        Lane::Bg => 2,
+    };
+    rank * 3 + slot
+}
+
 /// Serialize trace events to Chrome trace-event JSON (the
 /// `{"traceEvents": [...]}` object form). Timestamps are microseconds —
-/// the native unit of both the trace format and the simulated clock.
+/// the native unit of both the trace format and the simulated clock. Each
+/// rank renders as one row per active lane: `rank N` (the main/compute
+/// lane), `rank N comm` (the layer-collective lane) and `rank N grad-sync`
+/// (the gradient-sync lane), named via thread-name metadata events.
 pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
     let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
-    for (i, e) in events.iter().enumerate() {
+    // Thread-name metadata for every (rank, lane) present.
+    let mut seen: Vec<(usize, Lane)> = Vec::new();
+    for e in events {
+        if !seen.contains(&(e.rank, e.lane)) {
+            seen.push((e.rank, e.lane));
+        }
+    }
+    seen.sort_by_key(|&(r, l)| tid_of(r, l));
+    let mut first = true;
+    for (rank, lane) in seen {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let label = match lane {
+            Lane::Main => format!("rank {rank}"),
+            Lane::Comm => format!("rank {rank} comm"),
+            Lane::Bg => format!("rank {rank} grad-sync"),
+        };
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tid_of(rank, lane),
+            label
+        ));
+    }
+    for e in events.iter() {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
         out.push_str(&format!(
             "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\
              \"ts\":{:.3},\"dur\":{:.3}}}",
             json_escape(&e.name),
             e.cat,
-            e.rank,
+            tid_of(e.rank, e.lane),
             e.ts_us,
             e.dur_us
         ));
-        if i + 1 < events.len() {
-            out.push(',');
-        }
-        out.push('\n');
     }
+    out.push('\n');
     out.push_str("]}\n");
     out
 }
@@ -192,6 +340,7 @@ mod tests {
                 rank: 0,
                 name: "fwd".into(),
                 cat: "compute",
+                lane: Lane::Main,
                 ts_us: 0.0,
                 dur_us: 10.0,
             },
@@ -199,6 +348,7 @@ mod tests {
                 rank: 1,
                 name: "moe/a2a \"x\"".into(),
                 cat: "comm",
+                lane: Lane::Comm,
                 ts_us: 10.0,
                 dur_us: 2.5,
             },
@@ -206,10 +356,35 @@ mod tests {
         let j = chrome_trace_json(&events);
         assert!(j.starts_with("{\"displayTimeUnit\""));
         assert!(j.contains("\"traceEvents\":["));
-        assert!(j.contains("\"tid\":1"));
+        // rank 0 main lane = tid 0; rank 1 comm lane = tid 4.
+        assert!(j.contains("\"tid\":0"));
+        assert!(j.contains("\"tid\":4"));
+        assert!(j.contains("rank 1 comm"));
         assert!(j.contains("\\\"x\\\""));
         assert!(j.trim_end().ends_with("]}"));
-        // Exactly one JSON object per event line.
+        // Exactly one JSON object per event line plus lane metadata.
         assert_eq!(j.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(j.matches("\"ph\":\"M\"").count(), 2);
+    }
+
+    #[test]
+    fn comm_lane_bill_advances_frontier() {
+        use crate::cluster::ClusterSpec;
+        let c = SimClock::new(2, CommCost::new(ClusterSpec::eos(2)));
+        assert_eq!(c.lane_free_at(0, Lane::Comm), 0.0);
+        c.bill_lane(0, Lane::Comm, "x", 5.0, 10.0);
+        assert_eq!(c.lane_free_at(0, Lane::Comm), 15.0);
+        // Main lane and bg lane untouched by comm billing.
+        assert_eq!(c.now(0), 0.0);
+        assert_eq!(c.lane_free_at(0, Lane::Bg), 0.0);
+        c.bill_lane(0, Lane::Comm, "y", 15.0, 2.0);
+        assert_eq!(c.lane_free_at(0, Lane::Comm), 17.0);
+        // The bg lane queues independently.
+        c.bill_lane(0, Lane::Bg, "g", 1.0, 4.0);
+        assert_eq!(c.lane_free_at(0, Lane::Bg), 5.0);
+        let ev = c.take_events();
+        assert_eq!(ev.len(), 3);
+        assert!(ev.iter().all(|e| e.cat == "comm"));
+        assert_eq!(ev.iter().filter(|e| e.lane == Lane::Bg).count(), 1);
     }
 }

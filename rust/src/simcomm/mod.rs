@@ -61,11 +61,36 @@
 //! **bit-identical** to unclocked runs (enforced by
 //! `tests/clocked_timing.rs`). Spans are logged per rank and export as a
 //! chrome trace ([`Fabric::take_trace`] + [`chrome_trace_json`]).
+//!
+//! # Nonblocking communication (comm–compute overlap)
+//!
+//! Every rank's clock has three lanes ([`Lane`]): the **main lane**
+//! (compute), the **comm lane** (the NCCL-comm-stream stand-in for layer
+//! collectives), and the **grad-sync lane** (the dedicated DP stream,
+//! [`Communicator::charge_collective_bg`]). The `*_i`
+//! variants of the collectives ([`Communicator::all_reduce_sum_i`],
+//! [`Communicator::charge_collective_i`], …) move the *same payload as
+//! their blocking counterparts, bill the *same* [`CommCost`] price on the
+//! comm lane — but return a [`CommHandle`] instead of advancing the main
+//! lane. The main lane keeps computing; [`Communicator::wait`] charges only
+//! the **exposed** remainder (`max(0, comm_end − now)`). An i-variant
+//! followed by an immediate `wait` is bit-identical in payload and equal in
+//! clock price to the blocking call (property-tested in
+//! `tests/prop_invariants.rs`); a `wait` issued after compute genuinely
+//! hides the overlapped communication in the makespan. The comm lane is a
+//! serial resource: concurrent collectives on one rank queue.
+//!
+//! Point-to-point messages carry an optional **tag**
+//! ([`Communicator::send_tagged`] / [`Communicator::recv_tagged`]) so
+//! executors with interleaved message streams (e.g. the interleaved-1F1B
+//! schedule, where forward activations and backward gradients of different
+//! model chunks cross on the same rank pair) match payloads by
+//! `(source, tag)` instead of arrival order.
 
 mod algos;
 mod clock;
 
-pub use clock::{chrome_trace_json, TraceEvent};
+pub use clock::{chrome_trace_json, Lane, TraceEvent};
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
@@ -142,11 +167,23 @@ impl Default for AlgoSelection {
     }
 }
 
+/// Reserved tag for the engine's internal transport (collective algorithm
+/// hops, clock-sync control traffic). Public p2p uses tag [`DEFAULT_TAG`];
+/// executors that need stream separation pick their own tags.
+const INTERNAL_TAG: u64 = u64::MAX;
+
+/// Tag of untagged public p2p sends/receives.
+pub const DEFAULT_TAG: u64 = 0;
+
 /// A message between ranks: tagged payload (pool-backed) plus the clock
 /// metadata the receiver needs to price the transfer.
 #[derive(Debug)]
 struct Msg {
     src: usize,
+    /// Match key: receives pair on `(src, tag)`, FIFO within the pair.
+    /// Internal engine traffic uses [`INTERNAL_TAG`] so collective hops
+    /// and p2p payloads can never cross streams.
+    tag: u64,
     /// Sender's simulated time when the message was posted (0 unclocked).
     sent_at: f64,
     /// Bytes billed to the clock for the transfer (defaults to the real
@@ -175,11 +212,11 @@ impl Mailbox {
         self.cv.notify_all();
     }
 
-    /// Earliest message from `src` (blocking).
-    fn take_from(&self, src: usize) -> Msg {
+    /// Earliest message from `src` with `tag` (blocking).
+    fn take_from(&self, src: usize, tag: u64) -> Msg {
         let mut q = self.q.lock().unwrap();
         loop {
-            if let Some(pos) = q.iter().position(|m| m.src == src) {
+            if let Some(pos) = q.iter().position(|m| m.src == src && m.tag == tag) {
                 return q.remove(pos).unwrap();
             }
             q = self.cv.wait(q).unwrap();
@@ -259,14 +296,25 @@ impl Fabric {
         self.clock.is_some()
     }
 
-    /// Per-rank simulated times (µs); empty on unclocked fabrics.
+    /// Per-rank simulated main-lane (compute) times (µs); empty on
+    /// unclocked fabrics.
     pub fn sim_times_us(&self) -> Vec<f64> {
         self.clock.as_ref().map(|c| c.times()).unwrap_or_default()
     }
 
-    /// Maximum simulated time across ranks (the makespan so far).
+    /// Per-rank comm-lane frontiers (µs); empty on unclocked fabrics.
+    pub fn sim_comm_times_us(&self) -> Vec<f64> {
+        self.clock.as_ref().map(|c| c.comm_times()).unwrap_or_default()
+    }
+
+    /// Maximum simulated time across ranks and lanes (the makespan so
+    /// far). Un-waited nonblocking communication counts — the step is not
+    /// over until the comm lane drains.
     pub fn max_sim_time_us(&self) -> f64 {
-        self.sim_times_us().into_iter().fold(0.0, f64::max)
+        self.sim_times_us()
+            .into_iter()
+            .chain(self.sim_comm_times_us())
+            .fold(0.0, f64::max)
     }
 
     /// Drain the recorded trace events (ordered by rank, then start time).
@@ -307,6 +355,8 @@ impl Fabric {
             algos: self.algos,
             phase: RefCell::new(String::new()),
             bill_scale: Cell::new(1.0),
+            nonblocking: Cell::new(false),
+            pending: RefCell::new(None),
         }
     }
 
@@ -377,6 +427,43 @@ impl Fabric {
     }
 }
 
+/// Completion handle of a nonblocking communication call. Carries the
+/// simulated completion time of the comm-lane span; the payload itself is
+/// already delivered when the call returns (the functional engine moves
+/// payloads eagerly — only the *clock* is deferred). Settle it with
+/// [`Communicator::wait`], which charges the exposed remainder to the main
+/// lane. Dropping a handle without waiting leaves the comm lane billed but
+/// the main lane un-synchronized (the fabric makespan still covers it).
+#[must_use = "wait() the handle so the exposed communication time is charged"]
+#[derive(Debug)]
+pub struct CommHandle {
+    /// Simulated completion time of the comm span, µs (0 unclocked).
+    end_us: f64,
+    /// Duration of the comm span, µs (0 unclocked).
+    dur_us: f64,
+    /// Label recorded on the main lane if the wait is exposed.
+    label: String,
+    /// Trace category of the exposed wait (`wait` or `p2p`).
+    cat: &'static str,
+}
+
+impl CommHandle {
+    /// An already-complete handle (unclocked fabrics, degenerate groups).
+    pub fn completed() -> Self {
+        Self { end_us: 0.0, dur_us: 0.0, label: String::new(), cat: "wait" }
+    }
+
+    /// Simulated completion time of the communication, µs.
+    pub fn end_us(&self) -> f64 {
+        self.end_us
+    }
+
+    /// Priced duration of the communication, µs.
+    pub fn dur_us(&self) -> f64 {
+        self.dur_us
+    }
+}
+
 /// Per-rank endpoint. Collective calls must be entered by *every* member of
 /// `group` (a sorted list of global ranks including `self.rank()`).
 pub struct Communicator {
@@ -389,6 +476,11 @@ pub struct Communicator {
     /// Multiplier applied to real payload bytes when billing the clock —
     /// lets scaled-down functional runs charge model-scale volumes.
     bill_scale: Cell<f64>,
+    /// When set, the next collective's clock charge is deferred into
+    /// `pending` instead of advancing the main lane (the `*_i` variants).
+    nonblocking: Cell<bool>,
+    /// Handle parked by the collective tail while `nonblocking` is set.
+    pending: RefCell<Option<CommHandle>>,
 }
 
 impl Communicator {
@@ -415,6 +507,8 @@ impl Communicator {
             algos,
             phase: RefCell::new(String::new()),
             bill_scale: Cell::new(self.bill_scale.get()),
+            nonblocking: Cell::new(false),
+            pending: RefCell::new(None),
         }
     }
 
@@ -436,43 +530,46 @@ impl Communicator {
         self.fabric.give(self.rank, buf);
     }
 
-    /// Move an owned (pooled) buffer to `dst` as a message.
+    /// Move an owned (pooled) buffer to `dst` as an internal-transport
+    /// message (collective hop / control traffic).
     pub(crate) fn send_vec(&self, dst: usize, data: Vec<f32>) {
         let billed = data.len() as f64 * 4.0;
-        self.push_msg(dst, data, billed);
+        self.push_msg(dst, INTERNAL_TAG, data, billed);
     }
 
-    /// Post a message with an explicit billed volume.
-    fn push_msg(&self, dst: usize, data: Vec<f32>, billed_bytes: f64) {
+    /// Post a message with an explicit tag and billed volume.
+    fn push_msg(&self, dst: usize, tag: u64, data: Vec<f32>, billed_bytes: f64) {
         let sent_at = match &self.fabric.clock {
             Some(c) => c.now(self.rank),
             None => 0.0,
         };
-        self.fabric.mailboxes[dst].push(Msg { src: self.rank, sent_at, billed_bytes, data });
+        self.fabric.mailboxes[dst].push(Msg { src: self.rank, tag, sent_at, billed_bytes, data });
     }
 
-    /// Copy `data` into a pooled buffer and send it to `dst`.
+    /// Copy `data` into a pooled buffer and send it to `dst` on the
+    /// internal-transport stream.
     pub(crate) fn send_slice(&self, dst: usize, data: &[f32]) {
         let mut buf = self.take_buf(data.len());
         buf.extend_from_slice(data);
         self.send_vec(dst, buf);
     }
 
-    /// Receive the earliest message from `src` with its clock metadata.
-    fn take_msg(&self, src: usize) -> Msg {
-        self.fabric.mailboxes[self.rank].take_from(src)
+    /// Receive the earliest message from `src` with `tag`, with its clock
+    /// metadata.
+    fn take_msg(&self, src: usize, tag: u64) -> Msg {
+        self.fabric.mailboxes[self.rank].take_from(src, tag)
     }
 
-    /// Receive the earliest message from `src`, taking ownership of the
-    /// pooled payload (pair with [`Self::release`] or forward it). Internal
-    /// transport: does **not** touch the clock — collective algorithms
+    /// Receive the earliest internal-transport message from `src`, taking
+    /// ownership of the pooled payload (pair with [`Self::release`] or
+    /// forward it). Does **not** touch the clock — collective algorithms
     /// account time once per collective, not per hop.
     pub(crate) fn recv_take(&self, src: usize) -> Vec<f32> {
-        self.take_msg(src).data
+        self.take_msg(src, INTERNAL_TAG).data
     }
 
     /// Receive from `src` into a caller buffer (cleared first); the pooled
-    /// payload is recycled.
+    /// payload is recycled. Internal transport.
     pub(crate) fn recv_into_vec(&self, src: usize, out: &mut Vec<f32>) {
         let buf = self.recv_take(src);
         out.clear();
@@ -493,7 +590,18 @@ impl Communicator {
     /// Point-to-point send (asynchronous: the sender's clock does not
     /// advance; the receiver pays the transfer, priced from `sent_at`).
     pub fn send(&self, dst: usize, data: &[f32]) {
-        self.send_slice(dst, data);
+        self.send_tagged(dst, DEFAULT_TAG, data);
+    }
+
+    /// [`Self::send`] with an explicit message tag: the receiver matches
+    /// on `(src, tag)`, FIFO within the pair. Executors whose message
+    /// streams interleave on one rank pair (interleaved-1F1B chunks) tag by
+    /// `(direction, chunk, microbatch)` so payloads can never cross.
+    pub fn send_tagged(&self, dst: usize, tag: u64, data: &[f32]) {
+        let billed = data.len() as f64 * 4.0;
+        let mut buf = self.take_buf(data.len());
+        buf.extend_from_slice(data);
+        self.push_msg(dst, tag, buf, billed);
     }
 
     /// [`Self::send`] with an explicit billed volume: the clock prices the
@@ -501,48 +609,181 @@ impl Communicator {
     /// is how the executed step estimator moves tiny stand-in activations
     /// billed at model scale.
     pub fn send_billed(&self, dst: usize, data: &[f32], billed_bytes: f64) {
+        self.send_tagged_billed(dst, DEFAULT_TAG, data, billed_bytes);
+    }
+
+    /// Tagged send with an explicit billed volume.
+    pub fn send_tagged_billed(&self, dst: usize, tag: u64, data: &[f32], billed_bytes: f64) {
         let mut buf = self.take_buf(data.len());
         buf.extend_from_slice(data);
-        self.push_msg(dst, buf, billed_bytes);
+        self.push_msg(dst, tag, buf, billed_bytes);
     }
 
     /// Point-to-point receive. Hands the message buffer to the caller
     /// directly (no copy); the pool mints a replacement on a later send.
     /// Use [`Self::recv_into`] to keep the buffer cycling instead.
     pub fn recv(&self, src: usize) -> Vec<f32> {
-        let msg = self.take_msg(src);
-        self.clock_p2p(&msg);
-        msg.data
+        self.recv_tagged(src, DEFAULT_TAG)
+    }
+
+    /// Blocking receive of the earliest `(src, tag)` message.
+    pub fn recv_tagged(&self, src: usize, tag: u64) -> Vec<f32> {
+        let (data, h) = self.irecv_tagged(src, tag);
+        self.wait(h);
+        data
     }
 
     /// Point-to-point receive into a reusable buffer.
     pub fn recv_into(&self, src: usize, out: &mut Vec<f32>) {
-        let msg = self.take_msg(src);
-        self.clock_p2p(&msg);
+        let msg = self.take_msg(src, DEFAULT_TAG);
+        let h = self.p2p_handle(&msg);
+        self.wait(h);
         out.clear();
         out.extend_from_slice(&msg.data);
         self.release(msg.data);
     }
 
-    /// Advance the receiver clock to the message's arrival time
-    /// (`sent_at + p2p cost`), recording the exposed wait.
-    fn clock_p2p(&self, msg: &Msg) {
-        let Some(clock) = &self.fabric.clock else {
-            return;
-        };
-        let cost = clock.cost.p2p(msg.src, self.rank, msg.billed_bytes);
-        let entry = clock.now(self.rank);
-        let arrival = (msg.sent_at + cost).max(entry);
-        if arrival > entry {
-            clock.set(self.rank, arrival);
-            clock.record(
-                self.rank,
-                &format!("recv<-{}", msg.src),
-                "p2p",
-                entry,
-                arrival - entry,
-            );
+    /// Nonblocking receive: takes the earliest `(src, DEFAULT_TAG)` payload
+    /// off the mailbox (blocking the *thread* until one is posted — the
+    /// functional engine has no background progress) without advancing the
+    /// virtual clock. The returned handle completes at the message's
+    /// arrival time; [`Self::wait`] charges the exposed remainder. An
+    /// `irecv` + immediate `wait` is exactly [`Self::recv`].
+    pub fn irecv(&self, src: usize) -> (Vec<f32>, CommHandle) {
+        self.irecv_tagged(src, DEFAULT_TAG)
+    }
+
+    /// Tagged [`Self::irecv`].
+    pub fn irecv_tagged(&self, src: usize, tag: u64) -> (Vec<f32>, CommHandle) {
+        let msg = self.take_msg(src, tag);
+        let h = self.p2p_handle(&msg);
+        (msg.data, h)
+    }
+
+    /// Handle completing at the message's arrival time
+    /// (`sent_at + p2p cost`).
+    fn p2p_handle(&self, msg: &Msg) -> CommHandle {
+        match &self.fabric.clock {
+            Some(clock) => {
+                let cost = clock.cost.p2p(msg.src, self.rank, msg.billed_bytes);
+                CommHandle {
+                    end_us: msg.sent_at + cost,
+                    dur_us: cost,
+                    label: format!("recv<-{}", msg.src),
+                    cat: "p2p",
+                }
+            }
+            None => CommHandle::completed(),
         }
+    }
+
+    /// Settle a nonblocking communication: advance the main lane to the
+    /// comm span's end, recording the **exposed** portion (`end − now`) as
+    /// a main-lane span. Returns the exposed time in µs — 0 when the
+    /// communication was fully hidden under compute (or the fabric is
+    /// unclocked).
+    pub fn wait(&self, h: CommHandle) -> f64 {
+        let Some(clock) = &self.fabric.clock else {
+            return 0.0;
+        };
+        let now = clock.now(self.rank);
+        if h.end_us > now {
+            let exposed = h.end_us - now;
+            clock.set(self.rank, h.end_us);
+            if !h.label.is_empty() {
+                clock.record(self.rank, &h.label, h.cat, clock::Lane::Main, now, exposed);
+            }
+            exposed
+        } else {
+            0.0
+        }
+    }
+
+    /// [`Self::wait`] splitting the span into `(hidden_us, exposed_us)`:
+    /// hidden = the priced duration the main lane did *not* have to wait
+    /// for, exposed = the wait actually charged (which can exceed the
+    /// duration when the span queued behind earlier lane traffic).
+    pub fn wait_split(&self, h: CommHandle) -> (f64, f64) {
+        let dur = h.dur_us();
+        let exposed = self.wait(h);
+        ((dur - exposed.min(dur)).max(0.0), exposed)
+    }
+
+    // ---- nonblocking collectives (i-variants) --------------------------
+    //
+    // Payload semantics are bit-identical to the blocking calls (the same
+    // algorithm code runs, eagerly); only the clock charge is deferred into
+    // the returned handle. An i-variant + immediate `wait` equals the
+    // blocking call in both payload bits and clock price — property-tested
+    // in `tests/prop_invariants.rs` for every `CollectiveAlgo`.
+
+    /// Nonblocking [`Self::all_reduce_sum`].
+    pub fn all_reduce_sum_i(&self, group: &[usize], local: &[f32]) -> (Vec<f32>, CommHandle) {
+        self.nonblocking.set(true);
+        let out = self.all_reduce_sum(group, local);
+        (out, self.take_pending())
+    }
+
+    /// Nonblocking in-place [`Self::all_reduce_sum_into`].
+    pub fn all_reduce_sum_into_i(&self, group: &[usize], buf: &mut [f32]) -> CommHandle {
+        self.nonblocking.set(true);
+        self.all_reduce_sum_into(group, buf);
+        self.take_pending()
+    }
+
+    /// Nonblocking [`Self::all_gather_v`].
+    pub fn all_gather_v_i(&self, group: &[usize], local: &[f32]) -> (Vec<f32>, CommHandle) {
+        self.nonblocking.set(true);
+        let out = self.all_gather_v(group, local);
+        (out, self.take_pending())
+    }
+
+    /// Nonblocking [`Self::reduce_scatter_v`].
+    pub fn reduce_scatter_v_i(
+        &self,
+        group: &[usize],
+        local: &[f32],
+        counts: &[usize],
+    ) -> (Vec<f32>, CommHandle) {
+        self.nonblocking.set(true);
+        let out = self.reduce_scatter_v(group, local, counts);
+        (out, self.take_pending())
+    }
+
+    /// Nonblocking [`Self::all_to_all_v`].
+    pub fn all_to_all_v_i(
+        &self,
+        group: &[usize],
+        sends: Vec<Vec<f32>>,
+    ) -> (Vec<Vec<f32>>, CommHandle) {
+        self.nonblocking.set(true);
+        let out = self.all_to_all_v(group, sends);
+        (out, self.take_pending())
+    }
+
+    /// Nonblocking `_into` [`Self::all_to_all_v_into`] — the dispatcher hot
+    /// path's overlapped a2a.
+    pub fn all_to_all_v_into_i(
+        &self,
+        group: &[usize],
+        sends: &[Vec<f32>],
+        out: &mut Vec<Vec<f32>>,
+    ) -> CommHandle {
+        self.nonblocking.set(true);
+        self.all_to_all_v_into(group, sends, out);
+        self.take_pending()
+    }
+
+    /// Nonblocking [`Self::broadcast`].
+    pub fn broadcast_i(
+        &self,
+        group: &[usize],
+        root: usize,
+        data: &[f32],
+    ) -> (Vec<f32>, CommHandle) {
+        self.nonblocking.set(true);
+        let out = self.broadcast(group, root, data);
+        (out, self.take_pending())
     }
 
     // ---- virtual clock -------------------------------------------------
@@ -566,7 +807,7 @@ impl Communicator {
         if let Some(clock) = &self.fabric.clock {
             if us > 0.0 {
                 let start = clock.advance(self.rank, us);
-                clock.record(self.rank, label, "compute", start, us);
+                clock.record(self.rank, label, "compute", clock::Lane::Main, start, us);
             }
         }
     }
@@ -593,7 +834,7 @@ impl Communicator {
     }
 
     /// Executed collective with **virtual volume**: synchronizes the group
-    /// on `max(entry times)` (a real cross-thread rendezvous — ordering and
+    /// on `max(issue times)` (a real cross-thread rendezvous — ordering and
     /// deadlock semantics of a collective) and advances every member's
     /// clock by the [`CommCost`] price of `prim` at `my_bytes` per rank.
     /// Must be entered by every member of `group`. No payload moves. No-op
@@ -611,6 +852,65 @@ impl Communicator {
         self.finish_collective(Some(label), prim, group, my_bytes);
     }
 
+    /// Nonblocking [`Self::charge_collective`]: bills the comm lane and
+    /// returns the handle instead of advancing the main lane. Must be
+    /// entered by every member of `group` (the issue rendezvous is a
+    /// collective).
+    pub fn charge_collective_i(
+        &self,
+        label: &str,
+        prim: CommPrimitive,
+        group: &[usize],
+        my_bytes: f64,
+    ) -> CommHandle {
+        if self.fabric.clock.is_none() || group.len() <= 1 {
+            return CommHandle::completed();
+        }
+        self.nonblocking.set(true);
+        self.finish_collective_on(Lane::Comm, Some(label), prim, group, my_bytes);
+        self.take_pending()
+    }
+
+    /// Nonblocking virtual-volume collective on the **background
+    /// grad-sync lane** ([`Lane::Bg`]) — the stand-in for the dedicated
+    /// NCCL stream Megatron's distributed optimizer reduces gradients on.
+    /// Background charges queue among themselves but run concurrently with
+    /// the layer-collective lane and with compute; this is what the
+    /// executed step estimator issues its bucketed DP/EDP grad-reduce on.
+    pub fn charge_collective_bg(
+        &self,
+        label: &str,
+        prim: CommPrimitive,
+        group: &[usize],
+        my_bytes: f64,
+    ) -> CommHandle {
+        if self.fabric.clock.is_none() || group.len() <= 1 {
+            return CommHandle::completed();
+        }
+        self.nonblocking.set(true);
+        self.finish_collective_on(Lane::Bg, Some(label), prim, group, my_bytes);
+        self.take_pending()
+    }
+
+    /// Nonblocking comm-lane charge of an explicit duration: synchronizes
+    /// `group` on `max(issue times, comm frontiers)` and occupies every
+    /// member's comm lane for `max(us over the group)` microseconds. This
+    /// is the raw-duration escape hatch for executed skeletons whose comm
+    /// phases are priced upstream (the layer coster's a2a time) rather than
+    /// re-priced from bytes. Returns a completed handle when `us <= 0` or
+    /// the fabric is unclocked.
+    pub fn charge_comm_i(&self, label: &str, group: &[usize], us: f64) -> CommHandle {
+        let Some(clock) = &self.fabric.clock else {
+            return CommHandle::completed();
+        };
+        if us <= 0.0 {
+            return CommHandle::completed();
+        }
+        let (t_start, _, dur) = self.clock_sync(Lane::Comm, group, us);
+        clock.bill_lane(self.rank, Lane::Comm, label, t_start, dur);
+        CommHandle { end_us: t_start + dur, dur_us: dur, label: label.to_string(), cat: "wait" }
+    }
+
     /// Clock accounting for a collective that just moved real payloads:
     /// called at the end of every public collective in `algos.rs` with this
     /// rank's payload element count.
@@ -622,7 +922,17 @@ impl Communicator {
         self.finish_collective(None, prim, group, my_bytes);
     }
 
-    /// Shared tail: timestamp sync + price + record.
+    /// Clear the nonblocking flag and take the parked handle (completed
+    /// when the collective never reached the clock tail — unclocked fabric
+    /// or singleton group).
+    fn take_pending(&self) -> CommHandle {
+        self.nonblocking.set(false);
+        self.pending.borrow_mut().take().unwrap_or_else(CommHandle::completed)
+    }
+
+    /// Shared tail: issue-time sync + price + comm-lane billing. Blocking
+    /// calls advance the main lane to the span end; nonblocking calls park
+    /// a [`CommHandle`] in `pending` instead.
     fn finish_collective(
         &self,
         label: Option<&str>,
@@ -630,8 +940,20 @@ impl Communicator {
         group: &[usize],
         my_bytes: f64,
     ) {
+        self.finish_collective_on(Lane::Comm, label, prim, group, my_bytes)
+    }
+
+    /// [`Self::finish_collective`] on an explicit lane.
+    fn finish_collective_on(
+        &self,
+        lane: Lane,
+        label: Option<&str>,
+        prim: CommPrimitive,
+        group: &[usize],
+        my_bytes: f64,
+    ) {
         let clock = self.fabric.clock.as_ref().expect("clocked fabric");
-        let (t_max, sum, max) = self.clock_sync(group, my_bytes);
+        let (t_start, sum, max) = self.clock_sync(lane, group, my_bytes);
         // Uniform primitives price the mean contribution; AllToAll(-V) and
         // Broadcast pace on the busiest/root payload — matching the
         // analytic model's `all_to_all_v(mean, imbalance)` convention.
@@ -647,7 +969,6 @@ impl Communicator {
             CommPrimitive::Broadcast => self.algos.broadcast,
         };
         let cost = clock.cost.price(prim, algo, group, bytes);
-        clock.set(self.rank, t_max + cost);
         let name: String = match label {
             Some(l) => l.to_string(),
             None => {
@@ -659,15 +980,24 @@ impl Communicator {
                 }
             }
         };
-        clock.record(self.rank, &name, "comm", t_max, cost);
+        clock.bill_lane(self.rank, lane, &name, t_start, cost);
+        let end = t_start + cost;
+        if self.nonblocking.get() {
+            *self.pending.borrow_mut() =
+                Some(CommHandle { end_us: end, dur_us: cost, label: name, cat: "wait" });
+        } else if end > clock.now(self.rank) {
+            clock.set(self.rank, end);
+        }
     }
 
-    /// Group rendezvous for the clock: leader folds `(entry time, value)`
+    /// Group rendezvous for the clock: leader folds `(issue time, value)`
     /// pairs in group order and replies `(max time, sum value, max value)`.
-    /// Control traffic only — payloads are untouched.
-    fn clock_sync(&self, group: &[usize], my_val: f64) -> (f64, f64, f64) {
+    /// The issue time is `max(main lane, lane frontier)` — a new collective
+    /// queues behind communication still occupying its lane. Control
+    /// traffic only — payloads are untouched.
+    fn clock_sync(&self, lane: Lane, group: &[usize], my_val: f64) -> (f64, f64, f64) {
         let clock = self.fabric.clock.as_ref().expect("clocked fabric");
-        let t = clock.now(self.rank);
+        let t = clock.now(self.rank).max(clock.lane_free_at(self.rank, lane));
         if group.len() <= 1 {
             return (t, my_val, my_val);
         }
@@ -1053,6 +1383,107 @@ mod tests {
         });
         for t in outs {
             assert!((t - expect).abs() < 1e-6, "{t} vs {expect}");
+        }
+    }
+
+    /// A nonblocking collective issued before compute is genuinely hidden:
+    /// the main lane pays only the exposed remainder at `wait`, and the
+    /// payload is identical to the blocking call.
+    #[test]
+    fn nonblocking_collective_hides_under_compute() {
+        use crate::cluster::ClusterSpec;
+        let group = [0usize, 1, 2, 3];
+        let elems = 4096usize;
+        let cost = CommCost::new(ClusterSpec::eos(4));
+        let comm_us = cost.all_reduce(&group, elems as f64 * 4.0);
+        assert!(comm_us > 1.0);
+        for compute_us in [comm_us * 2.0, comm_us * 0.25] {
+            let fabric = Fabric::new_clocked(4, AlgoSelection::fast(), cost.clone());
+            let outs = run_ranks_on(&fabric, |rank, comm| {
+                let (out, h) = comm.all_reduce_sum_i(&group, &vec![rank as f32; elems]);
+                comm.advance("work", compute_us);
+                let exposed = comm.wait(h);
+                (out[0], comm.now_us(), exposed)
+            });
+            let expect_t = compute_us.max(comm_us);
+            let expect_exposed = (comm_us - compute_us).max(0.0);
+            for (rank, &(sum, t, exposed)) in outs.iter().enumerate() {
+                assert_eq!(sum, 6.0, "payload must be unperturbed");
+                assert!((t - expect_t).abs() < 1e-9, "rank {rank}: {t} vs {expect_t}");
+                assert!(
+                    (exposed - expect_exposed).abs() < 1e-9,
+                    "rank {rank}: exposed {exposed} vs {expect_exposed}"
+                );
+            }
+        }
+    }
+
+    /// Back-to-back nonblocking collectives queue on the serial comm lane.
+    #[test]
+    fn comm_lane_serializes_inflight_collectives() {
+        use crate::cluster::ClusterSpec;
+        let group = [0usize, 1];
+        let elems = 2048usize;
+        let cost = CommCost::new(ClusterSpec::eos(2));
+        let one = cost.all_reduce(&group, elems as f64 * 4.0);
+        let fabric = Fabric::new_clocked(2, AlgoSelection::fast(), cost);
+        let outs = run_ranks_on(&fabric, |rank, comm| {
+            let (_, h1) = comm.all_reduce_sum_i(&group, &vec![rank as f32; elems]);
+            let (_, h2) = comm.all_reduce_sum_i(&group, &vec![rank as f32; elems]);
+            (h1.end_us(), h2.end_us(), comm.wait(h1), comm.wait(h2))
+        });
+        for &(e1, e2, _, _) in &outs {
+            assert!((e1 - one).abs() < 1e-9, "{e1} vs {one}");
+            assert!((e2 - 2.0 * one).abs() < 1e-9, "{e2} vs {}", 2.0 * one);
+        }
+    }
+
+    /// Tagged p2p: payloads match on (src, tag) even when posted out of the
+    /// receiver's consumption order.
+    #[test]
+    fn tagged_p2p_matches_out_of_order() {
+        let outs = run_ranks(2, |rank, comm| {
+            if rank == 0 {
+                comm.send_tagged(1, 7, &[7.0]);
+                comm.send_tagged(1, 3, &[3.0]);
+                comm.send(1, &[0.5]);
+                vec![]
+            } else {
+                // Consume in the reverse of the posted order.
+                let a = comm.recv(0);
+                let b = comm.recv_tagged(0, 3);
+                let c = comm.recv_tagged(0, 7);
+                vec![a[0], b[0], c[0]]
+            }
+        });
+        assert_eq!(outs[1], vec![0.5, 3.0, 7.0]);
+    }
+
+    /// `charge_comm_i` occupies the comm lane for the explicit duration and
+    /// synchronizes the group on issue.
+    #[test]
+    fn charge_comm_i_raw_duration() {
+        use crate::cluster::ClusterSpec;
+        let group = [0usize, 1];
+        let fabric =
+            Fabric::new_clocked(2, AlgoSelection::fast(), CommCost::new(ClusterSpec::eos(2)));
+        let outs = run_ranks_on(&fabric, |rank, comm| {
+            comm.advance("skew", 5.0 * rank as f64);
+            let h = comm.charge_comm_i("x", &group, 40.0);
+            comm.advance("work", 100.0);
+            let exposed = comm.wait(h);
+            (comm.now_us(), exposed)
+        });
+        // Issue at max(0, 5) = 5; span [5, 45]; both hidden under work.
+        assert!((outs[0].0 - 100.0).abs() < 1e-9);
+        assert!((outs[1].0 - 105.0).abs() < 1e-9);
+        assert_eq!(outs[0].1, 0.0);
+        assert_eq!(outs[1].1, 0.0);
+        let trace = fabric.take_trace();
+        let comm_spans: Vec<_> = trace.iter().filter(|e| e.lane == Lane::Comm).collect();
+        assert_eq!(comm_spans.len(), 2);
+        for e in comm_spans {
+            assert!((e.ts_us - 5.0).abs() < 1e-9 && (e.dur_us - 40.0).abs() < 1e-9);
         }
     }
 

@@ -15,7 +15,7 @@
 //! all-reduce per [`ParamClass`].
 
 use crate::mapping::RuntimeTopology;
-use crate::simcomm::Communicator;
+use crate::simcomm::{CommHandle, Communicator};
 
 /// Which replication axis a parameter tensor synchronizes over.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,15 +63,32 @@ impl GradSync {
     /// Mean all-reduce of `grad` over the class's group, in place. A
     /// singleton group is a no-op (no replication on that axis).
     pub fn reduce_mean(&self, comm: &Communicator, class: ParamClass, grad: &mut [f32]) {
+        let h = self.reduce_mean_i(comm, class, grad);
+        comm.wait(h);
+    }
+
+    /// Nonblocking [`Self::reduce_mean`]: the payload is reduced and
+    /// rescaled eagerly (bit-identical to the blocking call), but the
+    /// clock charge rides the returned handle — issue one per gradient
+    /// bucket under the backward compute charge and
+    /// [`Communicator::wait`] them afterwards, so the overlapped share is
+    /// *measured* as hidden. A singleton group returns a completed handle.
+    pub fn reduce_mean_i(
+        &self,
+        comm: &Communicator,
+        class: ParamClass,
+        grad: &mut [f32],
+    ) -> CommHandle {
         let group = self.group_for(class);
         if group.len() <= 1 {
-            return;
+            return CommHandle::completed();
         }
-        comm.all_reduce_sum_into(group, grad);
+        let h = comm.all_reduce_sum_into_i(group, grad);
         let n = group.len() as f32;
         for x in grad.iter_mut() {
             *x /= n;
         }
+        h
     }
 }
 

@@ -65,7 +65,17 @@ pub struct TrainerConfig {
     pub compute_us_per_step: f64,
     /// Model FLOPs per token for the measured-in-sim MFU (0 disables).
     pub flops_per_token: f64,
+    /// Issue the per-parameter gradient reductions **nonblocking** under
+    /// the backward share of `compute_us_per_step` (bucketed
+    /// grad-reduce-under-backward). Payloads and losses are bit-identical
+    /// to the serialized trainer — property-tested — and on a clocked run
+    /// the report splits the measured hidden vs exposed comm.
+    pub overlap_grad_reduce: bool,
 }
+
+/// Share of `compute_us_per_step` charged as forward (the rest is the
+/// backward window overlapped gradient reductions can hide under).
+const FWD_COMPUTE_FRAC: f64 = 1.0 / 3.0;
 
 impl Default for TrainerConfig {
     fn default() -> Self {
@@ -84,6 +94,7 @@ impl Default for TrainerConfig {
             clocked: false,
             compute_us_per_step: 0.0,
             flops_per_token: 0.0,
+            overlap_grad_reduce: false,
         }
     }
 }
@@ -103,6 +114,12 @@ pub struct TrainReport {
     /// Measured-in-sim MFU vs the **BF16** peak (needs `flops_per_token`
     /// and a clocked run; the trainer has no precision knob).
     pub sim_mfu: Option<f64>,
+    /// Gradient-reduce time hidden under backward compute (µs per step,
+    /// rank 0, clocked runs with `overlap_grad_reduce`).
+    pub sim_hidden_comm_us: Option<f64>,
+    /// Gradient-reduce time the compute lane waited for (µs per step,
+    /// rank 0, clocked runs).
+    pub sim_exposed_comm_us: Option<f64>,
 }
 
 impl TrainReport {
@@ -201,7 +218,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         Fabric::new_with(world, cfg.algos)
     };
-    let reports = run_ranks_on(&fabric, move |rank, comm| -> Result<Vec<(usize, f32)>> {
+    type RankOut = (Vec<(usize, f32)>, f64, f64);
+    let reports = run_ranks_on(&fabric, move |rank, comm| -> Result<RankOut> {
         let exe = runtime2.load(&step_name)?;
         // Reduction groups per parameter class: topology DP/EDP groups
         // under folding, the flat world group otherwise.
@@ -217,13 +235,23 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         let mut corpus =
             SyntheticCorpus::new(vocab, cfg2.seed.wrapping_add(1000 + data_replica as u64));
         let mut losses = Vec::new();
+        let mut hidden_us = 0.0f64;
+        let mut exposed_us = 0.0f64;
+        let overlap = cfg2.overlap_grad_reduce && world > 1;
 
         for step in 0..cfg2.steps {
             let ids = corpus.batch(batch, seq);
             let (inputs, targets) = SyntheticCorpus::split(&ids, batch, seq);
             // Model-scale compute charge for the artifact's fwd+bwd (the
-            // clock's compute phase; no-op on unclocked fabrics).
-            comm.advance("fwd_bwd", cfg2.compute_us_per_step);
+            // clock's compute phase; no-op on unclocked fabrics). With
+            // grad-reduce overlap the backward share is charged *after*
+            // the nonblocking reductions are issued, so they can hide
+            // under it.
+            if overlap {
+                comm.advance("fwd", cfg2.compute_us_per_step * FWD_COMPUTE_FRAC);
+            } else {
+                comm.advance("fwd_bwd", cfg2.compute_us_per_step);
+            }
 
             // Borrowed views: no param clone per step (perf pass §Perf).
             let io_dims = [batch, seq];
@@ -243,14 +271,33 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 // Average gradients per parameter class — attention params
                 // over the attention-DP group, expert params over EDP — in
                 // place, so steady-state steps allocate no gradient buffers
-                // (the fabric's pooled scratch carries the chunks).
-                for (i, g) in grads.iter_mut().enumerate() {
-                    let class = if cfg2.expert_param_indices.contains(&i) {
+                // (the fabric's pooled scratch carries the chunks). The
+                // payload work is identical on both paths (bitwise-equal
+                // losses); overlap defers only the clock charge.
+                let class_of = |i: usize| {
+                    if cfg2.expert_param_indices.contains(&i) {
                         ParamClass::Expert
                     } else {
                         ParamClass::Attention
-                    };
-                    sync.reduce_mean(&comm, class, g);
+                    }
+                };
+                if overlap {
+                    let mut handles = Vec::with_capacity(grads.len());
+                    for (i, g) in grads.iter_mut().enumerate() {
+                        handles.push(sync.reduce_mean_i(&comm, class_of(i), g));
+                    }
+                    // The backward window the bucketed reductions hide
+                    // under.
+                    comm.advance("bwd", cfg2.compute_us_per_step * (1.0 - FWD_COMPUTE_FRAC));
+                    for h in handles {
+                        let (hid, exp) = comm.wait_split(h);
+                        hidden_us += hid;
+                        exposed_us += exp;
+                    }
+                } else {
+                    for (i, g) in grads.iter_mut().enumerate() {
+                        sync.reduce_mean(&comm, class_of(i), g);
+                    }
                 }
                 // The logged loss averages over this rank's DP group (the
                 // whole world in the flat case).
@@ -269,10 +316,10 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 eprintln!("step {step:>5}  loss {loss:.4}");
             }
         }
-        Ok(losses)
+        Ok((losses, hidden_us, exposed_us))
     });
 
-    let losses = reports
+    let (losses, hidden_total_us, exposed_total_us) = reports
         .into_iter()
         .next()
         .ok_or_else(|| anyhow!("no rank output"))??;
@@ -297,6 +344,14 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         (None, None)
     };
+    let (sim_hidden_comm_us, sim_exposed_comm_us) = if cfg.clocked && cfg.steps > 0 {
+        (
+            Some(hidden_total_us / cfg.steps as f64),
+            Some(exposed_total_us / cfg.steps as f64),
+        )
+    } else {
+        (None, None)
+    };
     Ok(TrainReport {
         initial_loss: losses.first().map(|x| x.1).unwrap_or(f32::NAN),
         final_loss: losses.last().map(|x| x.1).unwrap_or(f32::NAN),
@@ -306,6 +361,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         num_params,
         sim_step_us,
         sim_mfu,
+        sim_hidden_comm_us,
+        sim_exposed_comm_us,
     })
 }
 

@@ -20,7 +20,7 @@ use moe_folding::dispatcher::{DistributedMoeLayer, MoePhaseCost, Router, RouterC
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{execute_step, execute_step_traced, PerfModel, Strategy};
 use moe_folding::pipeline::execute_1f1b_mapped;
-use moe_folding::simcomm::{chrome_trace_json, run_ranks_on, AlgoSelection, Fabric};
+use moe_folding::simcomm::{chrome_trace_json, run_ranks_on, AlgoSelection, Fabric, Lane};
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::util::Rng;
 
@@ -178,6 +178,68 @@ fn timeline_trace_is_valid_chrome_json_for_folded_mapping() {
     assert!(value_count > trace.len(), "one value per event at minimum");
     assert!(json.contains("\"traceEvents\""));
     assert!(json.contains("\"ph\":\"X\""));
+}
+
+/// Trace-integrity satellite (ISSUE 4): every `TraceEvent` stream from an
+/// **overlapped** executed step (grad-reduce under backward, a2a under
+/// expert GEMM, interleaved vpp) is well-formed — non-negative durations,
+/// per-lane spans non-overlapping within a rank, all three lanes present,
+/// and the chrome JSON round-trips through the strict in-test parser.
+#[test]
+fn overlapped_executed_trace_is_wellformed() {
+    let pm = PerfModel::default();
+    let model = ModelConfig::qwen2_57b_a14b(); // 28 layers: pp2·vpp2 tiles
+    let mut train = TrainConfig::paper_default(4096, 32);
+    train.overlap_a2a = true;
+    assert!(train.overlap_grad_reduce);
+    let cfg = ParallelConfig::new(8, 2, 1, 4, 1, 2).with_vpp(2);
+    let (est, trace) =
+        execute_step_traced(&pm, &model, cfg, &train, Strategy::MCoreFolding).unwrap();
+    assert!(est.step_ms > 0.0);
+    assert!(est.hidden_comm_us > 0.0, "overlap must hide something");
+    assert!(!trace.is_empty());
+    // 1. Durations are finite and non-negative; timestamps finite.
+    for e in &trace {
+        assert!(e.dur_us.is_finite() && e.dur_us >= 0.0, "{e:?}");
+        assert!(e.ts_us.is_finite() && e.ts_us >= 0.0, "{e:?}");
+    }
+    // 2. Per (rank, lane) spans never overlap.
+    for rank in 0..8 {
+        for lane in [Lane::Main, Lane::Comm, Lane::Bg] {
+            let mut spans: Vec<(f64, f64)> = trace
+                .iter()
+                .filter(|e| e.rank == rank && e.lane == lane)
+                .map(|e| (e.ts_us, e.ts_us + e.dur_us))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0 + 1e-6,
+                    "rank {rank} {lane:?}: span ending {:.3} overlaps next starting {:.3}",
+                    w[0].1,
+                    w[1].0
+                );
+            }
+        }
+        // Every rank drove all three lanes (compute ops, a2a charges, grad
+        // buckets).
+        for lane in [Lane::Main, Lane::Comm, Lane::Bg] {
+            assert!(
+                trace.iter().any(|e| e.rank == rank && e.lane == lane),
+                "rank {rank}: lane {lane:?} missing"
+            );
+        }
+    }
+    // 3. The overlapped grad buckets and a2a charges are visible.
+    assert!(trace.iter().any(|e| e.lane == Lane::Bg && e.name.contains("grad")));
+    assert!(trace.iter().any(|e| e.name == "moe/a2a_ovl"));
+    // 4. Chrome JSON round-trips the strict parser.
+    let json = chrome_trace_json(&trace);
+    let values = json_validate(&json).expect("overlapped trace must be valid JSON");
+    assert!(values > trace.len());
+    // Lane metadata rows are emitted.
+    assert!(json.contains("grad-sync"));
+    assert!(json.contains("comm"));
 }
 
 // ---------------------------------------------------------------------

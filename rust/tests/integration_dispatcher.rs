@@ -58,6 +58,7 @@ fn run_matrix(ep: usize, etp: usize, top_k: usize, policy: DropPolicy, cf: f64) 
             num_experts: E,
             seq_group: None,
             phase_cost: None,
+            overlap_a2a: false,
         };
         let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
         layer.forward(&comm, &mine)
@@ -123,6 +124,7 @@ fn capacity_bound_respected_in_both_scopes() {
                 num_experts: E,
                 seq_group: Some(vec![0, 1]),
                 phase_cost: None,
+                overlap_a2a: false,
             };
             let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
             layer.forward(&comm, &mine).1

@@ -311,6 +311,7 @@ fn full_sequence_drop_handles_uneven_splits() {
             num_experts: 8,
             seq_group: Some(vec![0, 1]),
             phase_cost: None,
+            overlap_a2a: false,
         };
         let offset: usize = split[..rank].iter().sum();
         let mine = all_tokens[offset * H..(offset + split[rank]) * H].to_vec();

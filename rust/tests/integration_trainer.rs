@@ -91,6 +91,36 @@ fn clocked_trainer_is_bit_identical_and_reports_sim_time() {
     assert!(us >= 1234.0, "at least the charged compute: {us}");
 }
 
+/// Overlapped grad-reduce (nonblocking reduces issued under the backward
+/// compute charge) must be loss-bitwise-identical to both the plain and
+/// the serialized-clocked trainer, never slower on the virtual clock, and
+/// report the measured hidden/exposed comm split.
+#[test]
+fn overlapped_grad_reduce_is_loss_bitwise_and_never_slower() {
+    if !have_artifacts() { return; }
+    let plain = TrainerConfig { preset: "test".into(), steps: 5, dp: 2, ..Default::default() };
+    let overlapped = TrainerConfig {
+        clocked: true,
+        compute_us_per_step: 5000.0,
+        overlap_grad_reduce: true,
+        ..plain.clone()
+    };
+    let serial = TrainerConfig { overlap_grad_reduce: false, ..overlapped.clone() };
+    let a = train(&plain).unwrap();
+    let b = train(&overlapped).unwrap();
+    let c = train(&serial).unwrap();
+    assert_eq!(a.losses, b.losses, "overlap must not perturb payloads");
+    assert_eq!(a.losses, c.losses, "the clock must not perturb payloads");
+    let t_overlap = b.sim_step_us.unwrap();
+    let t_serial = c.sim_step_us.unwrap();
+    assert!(
+        t_overlap <= t_serial + 1e-6,
+        "overlap {t_overlap} µs/step > serialized {t_serial} µs/step"
+    );
+    assert!(b.sim_hidden_comm_us.unwrap() >= 0.0);
+    assert!(c.sim_hidden_comm_us.unwrap() < 1e-3, "serialized path hid comm");
+}
+
 #[test]
 fn different_seeds_different_curves() {
     if !have_artifacts() { return; }

@@ -388,6 +388,218 @@ fn prop_padded_dispatch_static_volume_and_bit_equality() {
     );
 }
 
+/// Satellite (ISSUE 4a): a nonblocking collective with an **immediate
+/// wait** is bit-identical in payload and equal in clock price to its
+/// blocking counterpart — for every `CollectiveAlgo`, across all five
+/// primitives, on a pow-2 group (recursive halving's native shape) with
+/// uneven-v payloads.
+#[test]
+fn prop_nonblocking_immediate_wait_equals_blocking_every_algo() {
+    use moe_folding::cluster::ClusterSpec;
+    use moe_folding::collectives::CommCost;
+    use moe_folding::simcomm::{run_ranks_on, AlgoSelection, CollectiveAlgo, Fabric};
+
+    let algos_all = [
+        CollectiveAlgo::NaiveLeader,
+        CollectiveAlgo::Ring,
+        CollectiveAlgo::RecursiveHalving,
+        CollectiveAlgo::PairwiseExchange,
+    ];
+    forall(
+        "nonblocking == blocking per algo",
+        12,
+        |rng: &mut Rng| {
+            let world = [2usize, 4, 8][rng.next_below(3)];
+            let n = draw::in_range(rng, 1, 40);
+            let seed = rng.next_u64();
+            (world, n, seed)
+        },
+        |&(world, n, seed)| {
+            let group: Vec<usize> = (0..world).collect();
+            for algo in algos_all {
+                let sel = AlgoSelection {
+                    all_reduce: algo,
+                    all_gather: algo,
+                    reduce_scatter: algo,
+                    all_to_all: algo,
+                    broadcast: algo,
+                };
+                // Same program twice: blocking vs i-variant + wait.
+                let run = |nonblocking: bool| {
+                    let fabric = Fabric::new_clocked(
+                        world,
+                        sel,
+                        CommCost::new(ClusterSpec::eos(world)),
+                    );
+                    let outs = run_ranks_on(&fabric, |rank, comm| {
+                        let mut r = Rng::seed_from_u64(seed ^ (rank as u64) << 3);
+                        let mut local = vec![0.0f32; n * world];
+                        r.fill_normal(&mut local, 1.0);
+                        comm.advance("skew", 3.0 * rank as f64);
+                        let counts: Vec<usize> = (0..world).map(|_| n / world + 1).collect();
+                        let take: usize = counts.iter().sum();
+                        let a2a_len = |p: usize| ((n + p) % 7 + 1).min(n);
+                        let mut sink = Vec::new();
+                        if nonblocking {
+                            let (a, h) = comm.all_reduce_sum_i(&group, &local);
+                            comm.wait(h);
+                            sink.extend(a);
+                            let (b, h) = comm.all_gather_v_i(&group, &local[..n + rank]);
+                            comm.wait(h);
+                            sink.extend(b);
+                            let (c, h) = comm.reduce_scatter_v_i(&group, &local[..take], &counts);
+                            comm.wait(h);
+                            sink.extend(c);
+                            let sends: Vec<Vec<f32>> =
+                                (0..world).map(|p| local[..a2a_len(p)].to_vec()).collect();
+                            let (d, h) = comm.all_to_all_v_i(&group, sends);
+                            comm.wait(h);
+                            sink.extend(d.into_iter().flatten());
+                            let (e, h) = comm.broadcast_i(&group, world - 1, &local[..n]);
+                            comm.wait(h);
+                            sink.extend(e);
+                        } else {
+                            sink.extend(comm.all_reduce_sum(&group, &local));
+                            sink.extend(comm.all_gather_v(&group, &local[..n + rank]));
+                            sink.extend(comm.reduce_scatter_v(&group, &local[..take], &counts));
+                            let sends: Vec<Vec<f32>> =
+                                (0..world).map(|p| local[..a2a_len(p)].to_vec()).collect();
+                            sink.extend(comm.all_to_all_v(&group, sends).into_iter().flatten());
+                            sink.extend(comm.broadcast(&group, world - 1, &local[..n]));
+                        }
+                        (sink, comm.now_us())
+                    });
+                    outs
+                };
+                let blocking = run(false);
+                let immediate = run(true);
+                for rank in 0..world {
+                    let (bp, bt) = &blocking[rank];
+                    let (ip, it) = &immediate[rank];
+                    if bp.len() != ip.len() {
+                        return Err(format!("{algo:?} rank {rank}: payload lengths differ"));
+                    }
+                    for (k, (x, y)) in bp.iter().zip(ip).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{algo:?} rank {rank} idx {k}: {x} vs {y} (not bit-identical)"
+                            ));
+                        }
+                    }
+                    if (bt - it).abs() > 1e-9 {
+                        return Err(format!(
+                            "{algo:?} rank {rank}: clock {bt} vs {it} (price differs)"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite (ISSUE 4b): enabling the chunk-pipelined (overlapped)
+/// dispatcher never changes outputs (bitwise) and never changes the
+/// byte-accounting, across random (experts, top-k, capacity, tokens,
+/// padding) on a 4-rank EP group; and with **static volumes**
+/// (pad-to-capacity, the chunked β is exactly additive) on a zero-latency
+/// fabric the overlapped makespan never exceeds the serialized one. (With
+/// dynamic volumes, chunking adds per-chunk launch latency and per-chunk
+/// imbalance — the at-scale win is pinned separately in
+/// `schedule_equivalence.rs` / `clocked_timing.rs`.)
+#[test]
+fn prop_dispatch_overlap_bitwise_and_never_slower() {
+    use moe_folding::cluster::{ClusterSpec, GpuSpec};
+    use moe_folding::collectives::CommCost;
+    use moe_folding::config::ModelConfig;
+    use moe_folding::dispatcher::{DistributedMoeLayer, MoePhaseCost};
+    use moe_folding::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+    use moe_folding::train::math::SwigluExpert;
+
+    forall(
+        "overlapped dispatch invariants",
+        10,
+        |rng: &mut Rng| {
+            let e = [4usize, 8, 16][rng.next_below(3)];
+            let k = draw::in_range(rng, 1, 3);
+            let n = draw::in_range(rng, 4, 32);
+            let pad = rng.next_below(2) == 0;
+            let seed = rng.next_u64();
+            (e, k, n, pad, seed)
+        },
+        |&(e, k, n, pad, seed)| {
+            let h = 8usize;
+            let world = 4usize;
+            let mut rng = Rng::seed_from_u64(seed);
+            let experts: Vec<SwigluExpert> =
+                (0..e).map(|_| SwigluExpert::init(h, 16, &mut rng)).collect();
+            let mut tokens = vec![0.0f32; world * n * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, 4, 1, 1))?;
+            let pc = MoePhaseCost::from_model(&ModelConfig::mixtral_8x22b(), 1, &GpuSpec::h100());
+            let run = |overlap: bool| {
+                let mut cluster = ClusterSpec::eos(world);
+                cluster.nvlink_latency_us = 0.0;
+                cluster.ib_latency_us = 0.0;
+                let fabric =
+                    Fabric::new_clocked(world, AlgoSelection::fast(), CommCost::new(cluster));
+                let outs = run_ranks_on(&fabric, |rank, comm| {
+                    let mut r2 = Rng::seed_from_u64(seed ^ 0xfeed);
+                    let router = Router::init(
+                        RouterConfig {
+                            hidden: h,
+                            num_experts: e,
+                            top_k: k,
+                            capacity_factor: 1.2,
+                            drop_policy: DropPolicy::SubSequence,
+                            capacity_override: None,
+                            pad_to_capacity: pad,
+                        },
+                        &mut r2,
+                    );
+                    let layer = DistributedMoeLayer::from_topology(
+                        topo.view(rank),
+                        router,
+                        &experts,
+                    )
+                    .with_phase_cost(pc)
+                    .with_overlap(overlap);
+                    let mine = tokens[rank * n * h..(rank + 1) * n * h].to_vec();
+                    layer.forward(&comm, &mine)
+                });
+                (outs, fabric.max_sim_time_us())
+            };
+            let (serial, t_serial) = run(false);
+            let (overlapped, t_overlap) = run(true);
+            for rank in 0..world {
+                let (so, ss) = &serial[rank];
+                let (oo, os) = &overlapped[rank];
+                for (i, (a, b)) in so.iter().zip(oo).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("rank {rank} idx {i}: {a} vs {b}"));
+                    }
+                }
+                if (ss.a2a_send_bytes, ss.a2a_recv_bytes, ss.tokens_padded)
+                    != (os.a2a_send_bytes, os.a2a_recv_bytes, os.tokens_padded)
+                {
+                    return Err(format!(
+                        "rank {rank}: byte accounting differs ({ss:?} vs {os:?})"
+                    ));
+                }
+                if e / world > 1 && os.a2a_hidden_us + os.a2a_exposed_us <= 0.0 {
+                    return Err(format!("rank {rank}: overlapped path measured no a2a"));
+                }
+            }
+            if pad && t_overlap > t_serial + 1e-6 {
+                return Err(format!(
+                    "overlap makespan {t_overlap} > serialized {t_serial} (static volumes)"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Collective cost model: monotone in bytes and never cheaper across nodes
 /// than within a node for the same shape.
 #[test]

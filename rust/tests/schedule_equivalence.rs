@@ -1,0 +1,411 @@
+//! Scheduling differential suite (ISSUE 4): the executed interleaved-1F1B
+//! schedule against its closed forms, the plain-1F1B degenerate case, and
+//! the overlap acceptance criteria on the paper's Table-3 folded optima.
+//!
+//! 1. **Closed form** — the executed interleaved makespan with zero-cost
+//!    hand-offs equals `(m·vpp + pp − 1)(f + b)` (the form implied by
+//!    `bubble_fraction_interleaved`) to float precision across a
+//!    (pp, m, vpp) sweep.
+//! 2. **Degenerate case** — `vpp = 1` is bitwise-identical in outputs,
+//!    input gradients and losses to the existing `execute_1f1b_mapped`,
+//!    and equal in clocked makespan.
+//! 3. **Acceptance (Table-3)** — for all four folded optima: overlap-on
+//!    executed step ≤ serialized executed step, within 2% of the analytic
+//!    estimate (which keeps its overlap credit), and `vpp > 1` shrinks the
+//!    measured bubble toward `bubble_fraction_interleaved`.
+//! 4. **Loss invariance** — one folded program's losses are bit-identical
+//!    across clocked/unclocked, dispatcher overlapped/serialized, and vpp
+//!    settings (layer blocks placed by global block index, so the composed
+//!    function is literally the same f32 program).
+
+use moe_folding::cluster::ClusterSpec;
+use moe_folding::collectives::CommCost;
+use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::dispatcher::{DistributedMoeLayer, Router, RouterConfig};
+use moe_folding::mapping::RuntimeTopology;
+use moe_folding::perfmodel::{execute_step, PerfModel, Strategy};
+use moe_folding::pipeline::{
+    bubble_fraction_interleaved, execute_1f1b_mapped, execute_1f1b_timed,
+    execute_interleaved_mapped, execute_interleaved_timed,
+};
+use moe_folding::simcomm::{run_ranks, run_ranks_on, AlgoSelection, Fabric};
+use moe_folding::train::math::SwigluExpert;
+use moe_folding::util::Rng;
+
+fn zero_latency_cost(world: usize) -> CommCost {
+    let mut cluster = ClusterSpec::eos(world);
+    cluster.nvlink_latency_us = 0.0;
+    cluster.ib_latency_us = 0.0;
+    CommCost::new(cluster)
+}
+
+/// Satellite 1: executed interleaved makespan with free hand-offs equals
+/// the closed form implied by `bubble_fraction_interleaved` to float
+/// precision, across a (pp, m, vpp) sweep.
+#[test]
+fn executed_interleaved_matches_interleaved_closed_form() {
+    let (f, b) = (120.0, 260.0);
+    for pp in [2usize, 4, 8] {
+        for m in [pp, 2 * pp, 4 * pp] {
+            for vpp in [1usize, 2, 4] {
+                let fabric = Fabric::new_clocked(
+                    pp,
+                    AlgoSelection::fast(),
+                    zero_latency_cost(pp),
+                );
+                let group: Vec<usize> = (0..pp).collect();
+                let outs = run_ranks_on(&fabric, |_, comm| {
+                    execute_interleaved_timed(&comm, &group, m, vpp, f, b, 0.0)
+                });
+                let executed = outs.iter().map(|r| r.finish_us).fold(0.0, f64::max);
+                let closed = (m * vpp + pp - 1) as f64 * (f + b);
+                assert!(
+                    (executed - closed).abs() < 1e-9 * closed,
+                    "pp={pp} m={m} vpp={vpp}: executed {executed} vs closed {closed}"
+                );
+                // Consistency with the bubble-fraction form: makespan =
+                // ideal / (1 − bubble).
+                let ideal = (m * vpp) as f64 * (f + b);
+                let bubble = bubble_fraction_interleaved(pp, m, vpp);
+                let from_bubble = ideal / (1.0 - bubble);
+                assert!(
+                    (executed - from_bubble).abs() < 1e-9 * from_bubble,
+                    "pp={pp} m={m} vpp={vpp}: {executed} vs bubble-form {from_bubble}"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite 2a: `vpp = 1` interleaved execution is bitwise-identical to
+/// the existing `execute_1f1b_mapped` on real payloads.
+#[test]
+fn vpp1_bitwise_identical_to_plain_1f1b() {
+    let cfg = ParallelConfig::new(8, 2, 1, 2, 1, 2);
+    let topo = RuntimeTopology::folded(cfg).unwrap();
+    let m = 6;
+    let width = 7;
+    let inputs: Vec<Vec<f32>> =
+        (0..m).map(|mb| vec![0.37 * (mb as f32 + 1.0); width]).collect();
+    let run_plain = || {
+        run_ranks(8, |rank, comm| {
+            let a = 1.0 + 0.25 * (rank % 4) as f32;
+            execute_1f1b_mapped(
+                &comm,
+                &topo,
+                m,
+                &inputs,
+                |_mb, x| x.iter().map(|v| a * v + 0.125).collect(),
+                |_mb, g| g.iter().map(|v| a * v).collect(),
+            )
+        })
+    };
+    let run_inter = || {
+        run_ranks(8, |rank, comm| {
+            let a = 1.0 + 0.25 * (rank % 4) as f32;
+            execute_interleaved_mapped(
+                &comm,
+                &topo,
+                m,
+                1,
+                &inputs,
+                |_chunk, _mb, x| x.iter().map(|v| a * v + 0.125).collect(),
+                |_chunk, _mb, g| g.iter().map(|v| a * v).collect(),
+            )
+        })
+    };
+    let plain = run_plain();
+    let inter = run_inter();
+    for rank in 0..8 {
+        assert_eq!(plain[rank].outputs.len(), inter[rank].outputs.len());
+        for (mb, (p, i)) in plain[rank].outputs.iter().zip(&inter[rank].outputs).enumerate() {
+            assert_eq!(p.len(), i.len());
+            for (x, y) in p.iter().zip(i) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {rank} mb {mb} output");
+            }
+        }
+        for (mb, (p, i)) in
+            plain[rank].input_grads.iter().zip(&inter[rank].input_grads).enumerate()
+        {
+            for (x, y) in p.iter().zip(i) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {rank} mb {mb} grad");
+            }
+        }
+    }
+}
+
+/// Satellite 2b: `vpp = 1` interleaved execution is equal in clocked
+/// makespan to the plain executor (same ops, same billing — only the
+/// message tags differ, and tags are clock-free).
+#[test]
+fn vpp1_equal_makespan_to_plain_1f1b() {
+    for (pp, m, f, b, p2p_bytes) in
+        [(2usize, 4usize, 100.0, 200.0, 0.0), (4, 8, 120.0, 240.0, 2.0e6)]
+    {
+        let group: Vec<usize> = (0..pp).collect();
+        let run = |interleaved: bool| {
+            let fabric =
+                Fabric::new_clocked(pp, AlgoSelection::fast(), zero_latency_cost(pp));
+            let outs = run_ranks_on(&fabric, |_, comm| {
+                if interleaved {
+                    execute_interleaved_timed(&comm, &group, m, 1, f, b, p2p_bytes)
+                } else {
+                    execute_1f1b_timed(&comm, &group, m, f, b, p2p_bytes)
+                }
+            });
+            outs.iter().map(|r| r.finish_us).fold(0.0, f64::max)
+        };
+        let plain = run(false);
+        let inter = run(true);
+        assert!(
+            (plain - inter).abs() < 1e-9,
+            "pp={pp} m={m}: plain {plain} vs interleaved-vpp1 {inter}"
+        );
+    }
+}
+
+/// The Table-3 folded optima with their maximal interleave (one layer per
+/// virtual chunk): `(model, gpus, tp, cp, ep, etp, pp, vpp)`.
+fn table3_optima() -> Vec<(ModelConfig, usize, usize, usize, usize, usize, usize, usize)> {
+    vec![
+        (ModelConfig::mixtral_8x22b(), 128, 2, 1, 8, 1, 8, 7),
+        (ModelConfig::qwen2_57b_a14b(), 64, 2, 1, 4, 1, 4, 7),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128, 4, 1, 8, 1, 8, 4),
+        (ModelConfig::llama3_8x70b(), 256, 8, 1, 8, 1, 16, 5),
+    ]
+}
+
+/// Acceptance: for all four Table-3 folded optima, the executed step with
+/// overlap enabled is ≤ the serialized executed step and within 2% of the
+/// analytic estimate (which keeps its overlap credit); `vpp > 1` shrinks
+/// the measured bubble fraction toward `bubble_fraction_interleaved`.
+#[test]
+fn table3_overlap_and_vpp_acceptance() {
+    let pm = PerfModel::default();
+    let mut overlap_train = TrainConfig::paper_default(4096, 256);
+    overlap_train.overlap_a2a = true;
+    assert!(overlap_train.overlap_grad_reduce);
+    let mut serial_train = overlap_train.clone();
+    serial_train.overlap_grad_reduce = false;
+    serial_train.overlap_param_gather = false;
+    serial_train.overlap_a2a = false;
+    for (model, w, tp, cp, ep, etp, pp, vpp) in table3_optima() {
+        let cfg = ParallelConfig::new(w, tp, cp, ep, etp, pp);
+        let analytic = pm
+            .estimate(&model, cfg, &overlap_train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        let overlapped = execute_step(&pm, &model, cfg, &overlap_train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        let serialized = execute_step(&pm, &model, cfg, &serial_train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        assert!(
+            overlapped.step_ms <= serialized.step_ms + 1e-9,
+            "{} ({}): overlap {:.1} ms > serialized {:.1} ms",
+            model.name,
+            cfg.tag(),
+            overlapped.step_ms,
+            serialized.step_ms
+        );
+        let rel = (overlapped.step_ms - analytic.step_ms).abs() / analytic.step_ms;
+        assert!(
+            rel < 0.02,
+            "{} ({}): executed-overlap {:.1} ms vs analytic {:.1} ms (rel {rel:.4})",
+            model.name,
+            cfg.tag(),
+            overlapped.step_ms,
+            analytic.step_ms
+        );
+        assert!(
+            overlapped.hidden_comm_us > 0.0,
+            "{}: overlap hid nothing",
+            cfg.tag()
+        );
+
+        // vpp > 1: interleaving measurably shrinks the bubble toward the
+        // interleaved closed form.
+        let inter_cfg = cfg.with_vpp(vpp);
+        let inter =
+            execute_step(&pm, &model, inter_cfg, &overlap_train, Strategy::MCoreFolding)
+                .unwrap_or_else(|e| panic!("{}: {e}", inter_cfg.tag()));
+        let m_micro = overlap_train.num_microbatches(cfg.dp());
+        let bf_inter = bubble_fraction_interleaved(pp, m_micro, vpp);
+        assert!(
+            inter.bubble_fraction < overlapped.bubble_fraction,
+            "{}: vpp{} bubble {:.4} !< vpp1 bubble {:.4}",
+            cfg.tag(),
+            vpp,
+            inter.bubble_fraction,
+            overlapped.bubble_fraction
+        );
+        assert!(
+            (inter.bubble_fraction - bf_inter).abs() < 0.05,
+            "{}: measured vpp bubble {:.4} vs closed form {:.4}",
+            inter_cfg.tag(),
+            inter.bubble_fraction,
+            bf_inter
+        );
+        // Interleaving shortens the step itself (the bubble is real time).
+        assert!(
+            inter.step_ms < serialized.step_ms,
+            "{}: vpp step {:.1} ms !< serialized vpp1 {:.1} ms",
+            inter_cfg.tag(),
+            inter.step_ms,
+            serialized.step_ms
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loss invariance across clock / dispatcher-overlap / vpp.
+// ---------------------------------------------------------------------
+
+const H: usize = 16;
+const FF: usize = 32;
+const E: usize = 8;
+/// Total layer blocks of the toy pipeline model (pp·vpp_max).
+const BLOCKS: usize = 4;
+
+/// One folded program: dispatcher forward + interleaved pipeline + world
+/// reduction. Layer block `b` applies the same affine map regardless of
+/// the (pp, vpp) placement, and blocks compose in global index order on
+/// every vpp setting — so the result is one fixed f32 program and must be
+/// bit-identical across every execution mode.
+fn folded_program(clocked: bool, vpp: usize, overlap_dispatch: bool) -> (Vec<f32>, f64) {
+    assert!(BLOCKS % vpp == 0);
+    let cfg = ParallelConfig::new(8, 2, 1, 4, 1, 2);
+    let topo = RuntimeTopology::folded(cfg).unwrap();
+    let mut rng = Rng::seed_from_u64(77);
+    let router = Router::init(
+        RouterConfig {
+            hidden: H,
+            num_experts: E,
+            top_k: 2,
+            capacity_factor: 1.1,
+            drop_policy: DropPolicy::SubSequence,
+            capacity_override: None,
+            pad_to_capacity: false,
+        },
+        &mut rng,
+    );
+    let experts: Vec<SwigluExpert> =
+        (0..E).map(|_| SwigluExpert::init(H, FF, &mut rng)).collect();
+    let n_per_rank = 12;
+    let mut tokens = vec![0.0f32; 8 * n_per_rank * H];
+    rng.fill_normal(&mut tokens, 1.0);
+    let m = 4;
+    let inputs: Vec<Vec<f32>> = (0..m).map(|mb| vec![0.5 + mb as f32; 6]).collect();
+    let pp = 2usize;
+    let blocks_per_chunk = BLOCKS / (pp * vpp);
+    let block_coef = |b: usize| 0.9 + 0.05 * b as f32;
+
+    let fabric = if clocked {
+        Fabric::new_clocked(8, AlgoSelection::fast(), CommCost::new(ClusterSpec::eos(8)))
+    } else {
+        Fabric::new_with(8, AlgoSelection::fast())
+    };
+    let outs = run_ranks_on(&fabric, |rank, comm| {
+        let layer = DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts)
+            .with_overlap(overlap_dispatch);
+        let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
+        let (moe_out, _) = layer.forward(&comm, &mine);
+        let stage = topo.view(rank).pp_stage;
+        let apply_blocks = |first: usize, x: &[f32]| -> Vec<f32> {
+            let mut y = x.to_vec();
+            for b in first..first + blocks_per_chunk {
+                let a = block_coef(b);
+                for v in y.iter_mut() {
+                    *v = a * *v + 0.0625;
+                }
+            }
+            y
+        };
+        let apply_blocks_bwd = |first: usize, g: &[f32]| -> Vec<f32> {
+            let mut y = g.to_vec();
+            for b in (first..first + blocks_per_chunk).rev() {
+                let a = block_coef(b);
+                for v in y.iter_mut() {
+                    *v *= a;
+                }
+            }
+            y
+        };
+        let pipe = execute_interleaved_mapped(
+            &comm,
+            &topo,
+            m,
+            vpp,
+            &inputs,
+            |chunk, _mb, x| apply_blocks((chunk * pp + stage) * blocks_per_chunk, x),
+            |chunk, _mb, g| apply_blocks_bwd((chunk * pp + stage) * blocks_per_chunk, g),
+        );
+        let mut acc: f32 = moe_out.iter().sum();
+        for o in &pipe.outputs {
+            acc += o.iter().sum::<f32>();
+        }
+        for g in &pipe.input_grads {
+            acc += g.iter().sum::<f32>();
+        }
+        let all: Vec<usize> = (0..8).collect();
+        comm.all_reduce_sum(&all, &[acc])[0]
+    });
+    let makespan = fabric.max_sim_time_us();
+    (outs, makespan)
+}
+
+/// Acceptance: losses are bit-identical across clocked/unclocked,
+/// dispatcher overlapped/serialized, and vpp settings; the clock
+/// accumulates time only when enabled.
+#[test]
+fn losses_bitwise_invariant_across_clock_overlap_vpp() {
+    let (reference, t0) = folded_program(false, 1, false);
+    assert_eq!(t0, 0.0);
+    for clocked in [false, true] {
+        for vpp in [1usize, 2] {
+            for overlap in [false, true] {
+                let (losses, t) = folded_program(clocked, vpp, overlap);
+                if clocked {
+                    assert!(t > 0.0, "clocked run must accumulate time");
+                }
+                for (rank, (a, b)) in reference.iter().zip(&losses).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "rank {rank}: clocked={clocked} vpp={vpp} overlap={overlap}: \
+                         {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Large-world executed suite (≥ 128 ranks with interleaving + overlap) —
+/// run by the scheduled CI job: `cargo test --release -- --ignored`.
+#[test]
+#[ignore]
+fn large_world_interleaved_overlap_sweep() {
+    let pm = PerfModel::default();
+    let mut train = TrainConfig::paper_default(4096, 256);
+    train.overlap_a2a = true;
+    for (model, w, tp, cp, ep, etp, pp, vpp) in table3_optima() {
+        if w < 128 {
+            continue;
+        }
+        let cfg = ParallelConfig::new(w, tp, cp, ep, etp, pp).with_vpp(vpp);
+        let executed = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        let analytic = pm
+            .estimate(&model, cfg, &train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+        let rel = (executed.step_ms - analytic.step_ms).abs() / analytic.step_ms;
+        assert!(
+            rel < 0.05,
+            "{} ({}): executed {:.1} ms vs analytic {:.1} ms (rel {rel:.4})",
+            model.name,
+            cfg.tag(),
+            executed.step_ms,
+            analytic.step_ms
+        );
+        assert!(executed.hidden_comm_us > 0.0);
+    }
+}
