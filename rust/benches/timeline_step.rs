@@ -62,6 +62,7 @@ fn main() {
                  \"sim_step_ms\":{:.3},\"analytic_step_ms\":{:.3},\
                  \"sim_mfu\":{:.5},\"analytic_mfu\":{:.5},\
                  \"bubble_fraction\":{:.5},\"hidden_comm_frac\":{:.5},\
+                 \"cp_hidden_us\":{:.1},\"cp_exposed_us\":{:.1},\
                  \"harness_wall_ms\":{wall_ms:.1}}}",
                 model.name,
                 cfg.tag(),
@@ -72,9 +73,54 @@ fn main() {
                 executed.mfu,
                 analytic.mfu,
                 executed.bubble_fraction,
-                hidden_frac
+                hidden_frac,
+                executed.cp_hidden_us,
+                executed.cp_exposed_us
             ));
         }
+    }
+    // Fig6 executed CP sweep: the ring-attention KV exchange runs
+    // structurally on the clock; the hidden/exposed split is the perf
+    // trajectory future CP scheduling work is measured against.
+    let model = ModelConfig::mixtral_8x22b();
+    for (cp, seq) in [(2usize, 16384usize), (4, 32768), (8, 65536)] {
+        let gpus = 128usize;
+        let cfg = ParallelConfig::new(gpus, 2, cp, 8, 1, 1);
+        let train = TrainConfig::paper_default(seq, 256);
+        let analytic = pm
+            .estimate(&model, cfg, &train, Strategy::MCoreFolding)
+            .expect("analytic estimate");
+        let t0 = Instant::now();
+        let executed = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding)
+            .expect("executed step");
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let label = format!("fig6-cp{cp}");
+        println!(
+            "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} rank threads)",
+            label,
+            executed.summary(),
+            analytic.step_ms
+        );
+        rows.push(format!(
+            "{{\"model\":\"{}\",\"gpus\":{gpus},\"config\":\"{}\",\
+             \"variant\":\"fig6-cp{cp}\",\"vpp\":1,\"overlap\":{},\
+             \"seq_len\":{seq},\
+             \"sim_step_ms\":{:.3},\"analytic_step_ms\":{:.3},\
+             \"sim_mfu\":{:.5},\"analytic_mfu\":{:.5},\
+             \"bubble_fraction\":{:.5},\
+             \"cp_hidden_us\":{:.1},\"cp_exposed_us\":{:.1},\
+             \"harness_wall_ms\":{wall_ms:.1}}}",
+            model.name,
+            cfg.tag(),
+            train.overlap_grad_reduce,
+            executed.step_ms,
+            analytic.step_ms,
+            executed.mfu,
+            analytic.mfu,
+            executed.bubble_fraction,
+            executed.cp_hidden_us,
+            executed.cp_exposed_us
+        ));
     }
     let json = format!(
         "{{\"bench\":\"timeline_step\",\"unit\":\"ms\",\"configs\":[\n{}\n]}}\n",

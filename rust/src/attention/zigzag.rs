@@ -1,0 +1,140 @@
+//! Zig-zag causal sequence sharding for context parallelism.
+//!
+//! Plain contiguous sharding of a causal sequence over `cp` ranks is
+//! maximally imbalanced: the rank holding the head of the sequence attends
+//! to almost nothing while the rank holding the tail attends to everything.
+//! The zig-zag layout (Megatron-Core's CP sharding) splits the sequence
+//! into `2·cp` equal chunks and gives rank `i` chunks `i` and
+//! `2·cp − 1 − i`:
+//!
+//! ```text
+//! chunks:   0   1   2   3   4   5   6   7        (cp = 4)
+//! rank:     0   1   2   3   3   2   1   0
+//! ```
+//!
+//! Every rank then owns one early and one late chunk, and the causal
+//! attention work (each query position `p` attends to `p + 1` keys) sums to
+//! *exactly* the same count on every rank — pinned by
+//! `tests/prop_invariants.rs` via [`causal_workload`].
+//!
+//! Sharding is pure row movement (no arithmetic), so a shard → unshard
+//! round trip is bit-exact by construction; the property suite pins it for
+//! arbitrary `seq % (2·cp) == 0` lengths.
+
+/// The two chunk ids (of the `2·cp` grid) owned by CP rank `idx`, in the
+/// order their rows are stored in the rank's shard.
+pub fn zigzag_chunks(cp: usize, idx: usize) -> [usize; 2] {
+    assert!(idx < cp);
+    [idx, 2 * cp - 1 - idx]
+}
+
+/// CP rank owning chunk `chunk` of the `2·cp` zig-zag grid.
+pub fn zigzag_owner(cp: usize, chunk: usize) -> usize {
+    assert!(chunk < 2 * cp);
+    if chunk < cp {
+        chunk
+    } else {
+        2 * cp - 1 - chunk
+    }
+}
+
+/// Global token positions held by CP rank `idx` (ascending within each
+/// chunk, chunks in [`zigzag_chunks`] order) under zig-zag sharding of a
+/// `seq`-token sequence. `contiguous` = the naive split for comparison.
+pub fn shard_positions(seq: usize, cp: usize, idx: usize, zigzag: bool) -> Vec<usize> {
+    assert!(idx < cp);
+    if zigzag {
+        assert_eq!(seq % (2 * cp), 0, "seq must divide over 2·cp chunks");
+        let c = seq / (2 * cp);
+        zigzag_chunks(cp, idx)
+            .iter()
+            .flat_map(|&ch| ch * c..(ch + 1) * c)
+            .collect()
+    } else {
+        assert_eq!(seq % cp, 0, "seq must divide over cp ranks");
+        let c = seq / cp;
+        (idx * c..(idx + 1) * c).collect()
+    }
+}
+
+/// Cut CP rank `idx`'s shard out of `tokens` (`n × h` row-major).
+pub fn shard(tokens: &[f32], h: usize, cp: usize, idx: usize, zigzag: bool) -> Vec<f32> {
+    let n = tokens.len() / h;
+    let pos = shard_positions(n, cp, idx, zigzag);
+    let mut out = Vec::with_capacity(pos.len() * h);
+    for p in pos {
+        out.extend_from_slice(&tokens[p * h..(p + 1) * h]);
+    }
+    out
+}
+
+/// Reassemble the full sequence from all `cp` rank shards (inverse of
+/// [`shard`]; bit-exact — rows only move, no arithmetic).
+pub fn unshard(shards: &[Vec<f32>], h: usize, zigzag: bool) -> Vec<f32> {
+    let cp = shards.len();
+    let n: usize = shards.iter().map(|s| s.len() / h).sum();
+    let mut out = vec![0.0f32; n * h];
+    for (idx, s) in shards.iter().enumerate() {
+        for (row, p) in shard_positions(n, cp, idx, zigzag).into_iter().enumerate() {
+            out[p * h..(p + 1) * h].copy_from_slice(&s[row * h..(row + 1) * h]);
+        }
+    }
+    out
+}
+
+/// Causal attention work units on CP rank `idx`: `Σ (p + 1)` over the
+/// rank's query positions `p` (each position attends to `p + 1` keys).
+/// Under zig-zag this is identical on every rank; under contiguous
+/// sharding the spread grows linearly with `cp`.
+pub fn causal_workload(seq: usize, cp: usize, idx: usize, zigzag: bool) -> u64 {
+    shard_positions(seq, cp, idx, zigzag)
+        .into_iter()
+        .map(|p| p as u64 + 1)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_chunk_ownership() {
+        assert_eq!(zigzag_chunks(4, 0), [0, 7]);
+        assert_eq!(zigzag_chunks(4, 3), [3, 4]);
+        for cp in [1usize, 2, 4, 8] {
+            for ch in 0..2 * cp {
+                let owner = zigzag_owner(cp, ch);
+                assert!(zigzag_chunks(cp, owner).contains(&ch));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip() {
+        let h = 3;
+        let n = 16;
+        let tokens: Vec<f32> = (0..n * h).map(|i| i as f32).collect();
+        for zigzag in [true, false] {
+            for cp in [1usize, 2, 4] {
+                let shards: Vec<Vec<f32>> =
+                    (0..cp).map(|i| shard(&tokens, h, cp, i, zigzag)).collect();
+                assert_eq!(unshard(&shards, h, zigzag), tokens, "cp {cp} zigzag {zigzag}");
+            }
+        }
+    }
+
+    #[test]
+    fn zigzag_workload_is_exactly_balanced() {
+        for cp in [2usize, 4, 8] {
+            let seq = 16 * cp;
+            let w0 = causal_workload(seq, cp, 0, true);
+            for idx in 1..cp {
+                assert_eq!(causal_workload(seq, cp, idx, true), w0, "cp {cp} idx {idx}");
+            }
+            // Contiguous: the last rank does strictly more than the first.
+            let first = causal_workload(seq, cp, 0, false);
+            let last = causal_workload(seq, cp, cp - 1, false);
+            assert!(last > first);
+        }
+    }
+}

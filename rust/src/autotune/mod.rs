@@ -33,7 +33,8 @@ impl TuneResult {
 }
 
 /// Sweep every candidate configuration of `strategy` for `model` on `gpus`
-/// GPUs and keep the best non-OOM estimate.
+/// GPUs and keep the best non-OOM estimate. Unconstrained
+/// [`tune_constrained`] — one evaluate loop, one memory gate.
 pub fn tune(
     pm: &PerfModel,
     model: &ModelConfig,
@@ -41,25 +42,7 @@ pub fn tune(
     train: &TrainConfig,
     strategy: Strategy,
 ) -> TuneResult {
-    let candidates = strategy.candidates(model, gpus);
-    let evaluated = candidates.len();
-    let mut feasible = Vec::new();
-    let mut oom_count = 0usize;
-    for cfg in candidates {
-        match pm.estimate(model, cfg, train, strategy) {
-            Ok(e) if e.oom => oom_count += 1,
-            Ok(e) => feasible.push(e),
-            Err(_) => {}
-        }
-    }
-    feasible.sort_by(|a, b| b.mfu.partial_cmp(&a.mfu).unwrap());
-    TuneResult {
-        strategy,
-        best: feasible.first().cloned(),
-        feasible,
-        evaluated,
-        oom_count,
-    }
+    tune_constrained(pm, model, gpus, train, strategy, Constraints::default())
 }
 
 /// Tune all five strategies in parallel threads (they're independent).
@@ -201,6 +184,12 @@ pub struct Constraints {
     pub pp: Option<usize>,
     /// Pin the virtual-pipeline (interleaving) degree.
     pub vpp: Option<usize>,
+    /// Per-rank HBM budget in GiB: candidates whose memory estimate fails
+    /// [`crate::model::memory::MemoryEstimate::fits`] against it are
+    /// rejected (counted as OOM). Tightens on top of the cluster default —
+    /// a budget larger than the GPU's HBM cannot resurrect a config the
+    /// estimator already flags as OOM.
+    pub hbm_gib: Option<f64>,
 }
 
 impl Constraints {
@@ -218,9 +207,20 @@ impl Constraints {
             && pinned(self.pp, c.pp)
             && pinned(self.vpp, c.vpp)
     }
+
+    /// Memory feasibility of an estimate under this constraint set: the
+    /// estimator's own OOM flag (cluster-default HBM), optionally
+    /// tightened by the explicit `hbm_gib` budget.
+    pub fn fits_memory(&self, est: &StepEstimate, pm: &PerfModel) -> bool {
+        let within_budget = match self.hbm_gib {
+            Some(gib) => est.memory.fits(gib, &pm.memory.knobs),
+            None => true,
+        };
+        !est.oom && within_budget
+    }
 }
 
-/// Tune under dimension constraints.
+/// Tune under dimension constraints and the memory feasibility gate.
 pub fn tune_constrained(
     pm: &PerfModel,
     model: &ModelConfig,
@@ -239,7 +239,7 @@ pub fn tune_constrained(
     let mut oom_count = 0;
     for cfg in candidates {
         match pm.estimate(model, cfg, train, strategy) {
-            Ok(e) if e.oom => oom_count += 1,
+            Ok(e) if !cons.fits_memory(&e, pm) => oom_count += 1,
             Ok(e) => feasible.push(e),
             Err(_) => {}
         }
@@ -328,6 +328,56 @@ mod tests {
                 c.analytic.step_ms
             );
         }
+    }
+
+    /// Memory feasibility gate (ISSUE 5 satellite): the Table-3 folded
+    /// optima fit an explicit 80 GiB budget, an oversized no-PP Mixtral
+    /// mapping is pruned as OOM, and a tightened budget prunes configs the
+    /// default HBM would admit.
+    #[test]
+    fn memory_gate_prunes_infeasible_candidates() {
+        let pm = PerfModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        // Table-3 folded optima fit under the explicit H100 budget.
+        for (m, gpus, tp, ep, pp) in [
+            (ModelConfig::mixtral_8x22b(), 128usize, 2usize, 8usize, 8usize),
+            (ModelConfig::qwen2_57b_a14b(), 64, 2, 4, 4),
+        ] {
+            let cons = Constraints {
+                tp: Some(tp),
+                cp: Some(1),
+                ep: Some(ep),
+                etp: Some(1),
+                pp: Some(pp),
+                vpp: Some(1),
+                hbm_gib: Some(80.0),
+            };
+            let r = tune_constrained(&pm, &m, gpus, &t, Strategy::MCoreFolding, cons);
+            let best = r.best.unwrap_or_else(|| panic!("{}: optimum must fit 80 GiB", m.name));
+            assert_eq!((best.config.tp, best.config.ep, best.config.pp), (tp, ep, pp));
+            assert!(best.memory.fits(80.0, &pm.memory.knobs));
+        }
+        // No-PP Mixtral with unsharded experts: hundreds of GiB per rank —
+        // every candidate is rejected by the gate.
+        let m = ModelConfig::mixtral_8x22b();
+        let cons =
+            Constraints { pp: Some(1), ep: Some(1), etp: Some(1), ..Default::default() };
+        let r = tune_constrained(&pm, &m, 128, &t, Strategy::MCoreFolding, cons);
+        assert!(r.best.is_none(), "unsharded-expert no-PP Mixtral must be pruned");
+        assert!(r.oom_count > 0);
+        // A tightened budget prunes what the 80 GiB default admits.
+        let pinned = Constraints {
+            tp: Some(2),
+            cp: Some(1),
+            ep: Some(8),
+            etp: Some(1),
+            pp: Some(8),
+            vpp: Some(1),
+            hbm_gib: Some(20.0),
+        };
+        let r = tune_constrained(&pm, &m, 128, &t, Strategy::MCoreFolding, pinned);
+        assert!(r.best.is_none(), "a 20 GiB budget must reject the optimum");
+        assert_eq!(r.oom_count, r.evaluated);
     }
 
     #[test]

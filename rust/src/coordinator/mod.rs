@@ -143,15 +143,22 @@ pub fn strong_scaling(pm: &PerfModel, model: &ModelConfig, gpu_counts: &[usize])
     t
 }
 
+/// The (gpus, seq, gbs) context-scaling points of Table 5: tokens/batch
+/// constant at ~4M. Shared by the analytic and executed tables so the two
+/// always sweep the same points.
+const TABLE5_POINTS: [(usize, usize, usize); 4] = [
+    (128, 16384, 1024),
+    (256, 32768, 512),
+    (512, 65536, 256),
+    (1024, 131072, 128),
+];
+
 /// Figure 4 / Table 5: context scaling (fixed tokens per batch).
 pub fn context_scaling(pm: &PerfModel, model: &ModelConfig) -> Table {
     let mut t = Table::new(&["Method", "GPUs", "SeqLen", "CP", "TP", "EP", "PP", "ETP",
                              "GBS", "MFU"]);
-    // (gpus, seq, gbs) from Table 5: tokens/batch constant at ~4M.
-    let points = [(128usize, 16384usize, 1024usize), (256, 32768, 512),
-                  (512, 65536, 256), (1024, 131072, 128)];
     for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
-        for (gpus, seq, gbs) in &points {
+        for (gpus, seq, gbs) in &TABLE5_POINTS {
             let train = TrainConfig::paper_default(*seq, *gbs);
             let r = autotune::tune(pm, model, *gpus, &train, strategy);
             match &r.best {
@@ -359,6 +366,106 @@ pub fn fig6_cp_folding(pm: &PerfModel, model: &ModelConfig) -> Table {
                 ]);
             }
         }
+    }
+    t
+}
+
+/// The **executed** counterpart of [`fig6_cp_folding`] (ISSUE 5): for each
+/// CP point of the folded sweep, run the full step on the clocked
+/// simulator at `gpus` rank threads — the CP ring executes structurally
+/// (nonblocking ring-step charges hidden under the attention-core chunks,
+/// mirroring [`crate::attention::DistributedAttentionLayer`]) — and report
+/// the measured step time next to the analytic estimate plus the measured
+/// hidden/exposed split of the ring. The analytic column must agree within
+/// 2% (pinned by `tests/cp_equivalence.rs`), which is what keeps the
+/// recalibrated `layers::cp_exposed_us` credit honest.
+pub fn fig6_cp_folding_executed(pm: &PerfModel, model: &ModelConfig, gpus: usize) -> Table {
+    let mut t = Table::new(&["CP", "SeqLen", "Analytic (ms)", "Executed (ms)", "Δ%",
+                             "CP hidden (µs)", "CP exposed (µs)"]);
+    for (cp, seq) in [(1usize, 8192usize), (2, 16384), (4, 32768), (8, 65536)] {
+        if gpus % (2 * cp) != 0 || gpus % 8 != 0 {
+            continue; // tp2·cp and etp1·ep8 must both tile the world
+        }
+        let cfg = ParallelConfig::new(gpus, 2, cp, 8, 1, 1);
+        let train = TrainConfig::paper_default(seq, 256);
+        // Surface drops: a silently-shorter table would be
+        // indistinguishable from the world-size filter above.
+        let analytic = match pm.estimate(model, cfg, &train, Strategy::MCoreFolding) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("fig6 --executed: {} failed to estimate, row dropped: {e}", cfg.tag());
+                continue;
+            }
+        };
+        let executed =
+            match crate::perfmodel::execute_step(pm, model, cfg, &train, Strategy::MCoreFolding) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!(
+                        "fig6 --executed: {} failed to execute, row dropped: {e}",
+                        cfg.tag()
+                    );
+                    continue;
+                }
+            };
+        let delta = (executed.step_ms - analytic.step_ms) / analytic.step_ms * 100.0;
+        t.row(&[
+            cp.to_string(),
+            seq.to_string(),
+            format!("{:.1}", analytic.step_ms),
+            format!("{:.1}", executed.step_ms),
+            format!("{delta:+.2}"),
+            format!("{:.0}", executed.cp_hidden_us),
+            format!("{:.0}", executed.cp_exposed_us),
+        ]);
+    }
+    t
+}
+
+/// The **executed** counterpart of [`context_scaling`] (Figure 4 / Table
+/// 5): tune each context-scaling point analytically, then execute the
+/// winner on the clocked simulator. Points above `max_gpus` are skipped
+/// (the 1024-rank point spawns 1024 threads — fine for CI, heavy for a
+/// laptop).
+pub fn context_scaling_executed(pm: &PerfModel, model: &ModelConfig, max_gpus: usize) -> Table {
+    let mut t = Table::new(&["GPUs", "SeqLen", "Config", "Analytic MFU", "Sim MFU",
+                             "CP hidden (µs)", "CP exposed (µs)"]);
+    for (gpus, seq, gbs) in TABLE5_POINTS {
+        if gpus > max_gpus {
+            continue;
+        }
+        let train = TrainConfig::paper_default(seq, gbs);
+        let r = autotune::tune(pm, model, gpus, &train, Strategy::MCoreFolding);
+        let Some(best) = r.best else {
+            t.row(&[gpus.to_string(), seq.to_string(), "-".into(), "OOM".into(),
+                    "-".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        let executed = match crate::perfmodel::execute_step(
+            pm,
+            model,
+            best.config,
+            &train,
+            Strategy::MCoreFolding,
+        ) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!(
+                    "fig4 --executed: {} failed to execute, row dropped: {e}",
+                    best.config.tag()
+                );
+                continue;
+            }
+        };
+        t.row(&[
+            gpus.to_string(),
+            seq.to_string(),
+            best.config.tag(),
+            pct(best.mfu),
+            pct(executed.mfu),
+            format!("{:.0}", executed.cp_hidden_us),
+            format!("{:.0}", executed.cp_exposed_us),
+        ]);
     }
     t
 }

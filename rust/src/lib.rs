@@ -6,7 +6,8 @@
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: parallel
 //!   group generation with MoE Parallel Folding ([`mapping`]), the flexible
-//!   token dispatcher ([`dispatcher`]) running over a functional in-process
+//!   token dispatcher ([`dispatcher`]) and executed ring attention
+//!   ([`attention`]) running over a functional in-process
 //!   communicator ([`simcomm`]), a 1F1B pipeline scheduler ([`pipeline`]),
 //!   an analytic cluster + collectives performance model
 //!   ([`cluster`], [`collectives`], [`perfmodel`]) that regenerates every
@@ -30,6 +31,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod attention;
 pub mod autotune;
 pub mod cluster;
 pub mod dispatcher;

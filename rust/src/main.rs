@@ -27,6 +27,8 @@ USAGE: moe-folding <command> [options]
 COMMANDS:
   plan      --model <name> --gpus <n> [--strategy <s>]
             [--tp N --cp N --ep N --etp N --pp N --vpp N]
+            [--hbm GIB]   per-rank HBM budget: candidates that don't fit are
+                          rejected; the per-rank GiB estimate is printed
             [--executed [--top K]]   re-rank the analytic top-K by executing
                                      each step (overlapped + serialized twin)
                                      on the clocked simulator
@@ -35,14 +37,23 @@ COMMANDS:
             [--seq N] [--gbs N] [--out trace.json]
             execute one step on the clocked simulator and dump a
             chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev;
-            rows per rank: main lane, comm lane, grad-sync lane)
+            rows per rank: main lane, comm lane, grad-sync lane; cp > 1
+            shows each ring-attention KV step as an `attn/cp_ring` span
+            hidden under the `attn/core` chunks)
   mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
   fig5      [--model <name>] [--ep-etp 8|16]
             [--executed [--tokens N] [--overlap]]
             --overlap runs the chunk-pipelined dispatcher and splits the
             measured a2a into hidden vs exposed
-  fig6      [--model <name>]
+  fig4      [--model <name>] [--executed [--max-gpus N]]
+            context scaling (Figure 4 / Table 5, one model); --executed
+            runs each tuned point on the clocked simulator and adds
+            measured MFU + CP ring hidden/exposed columns
+  fig6      [--model <name>] [--executed [--gpus N]]
+            --executed runs the folded CP sweep on the clocked simulator:
+            executed vs analytic step time and the measured hidden/exposed
+            split of the ring-attention KV exchange
   train     [--preset test|e2e] [--steps N] [--dp N] [--lr F] [--artifacts DIR]
             [--clocked [--compute-us F] [--overlap]]  measured-in-sim step
             time; --overlap issues grad reduces nonblocking under backward
@@ -100,16 +111,31 @@ fn main() -> moe_folding::util::error::Result<()> {
                 etp: args.get("etp").map(|v| v.parse().unwrap()),
                 pp: args.get("pp").map(|v| v.parse().unwrap()),
                 vpp: args.get("vpp").map(|v| v.parse().unwrap()),
+                hbm_gib: args.get("hbm").map(|v| v.parse().unwrap()),
             };
             let r = coordinator::plan(&pm, &model, gpus, &train_cfg, strategy, cons);
             println!(
-                "# {} | {} | {} GPUs | {} candidates evaluated, {} OOM",
+                "# {} | {} | {} GPUs | {} candidates evaluated, {} OOM (budget {:.0} GiB/rank)",
                 model.name,
                 strategy.name(),
                 gpus,
                 r.evaluated,
-                r.oom_count
+                r.oom_count,
+                cons.hbm_gib.unwrap_or(80.0)
             );
+            if let Some(best) = &r.best {
+                let gib = (1u64 << 30) as f64;
+                println!(
+                    "per-rank memory at the optimum: {:.1} GiB (params {:.1} + grads {:.1} \
+                     + optimizer {:.1} + activations {:.1} + transient/overhead {:.1} GiB)",
+                    best.memory.total_gib(),
+                    best.memory.param_bytes / gib,
+                    best.memory.grad_bytes / gib,
+                    best.memory.optim_bytes / gib,
+                    best.memory.activation_bytes / gib,
+                    (best.memory.transient_bytes + best.memory.overhead_bytes) / gib,
+                );
+            }
             for e in r.feasible.iter().take(args.get_usize("top", 10)) {
                 println!("{}", e.summary());
             }
@@ -249,9 +275,29 @@ fn main() -> moe_folding::util::error::Result<()> {
                 print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
             }
         }
+        "fig4" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            if args.flag("executed") {
+                let max_gpus = args.get_usize("max-gpus", 256);
+                print!(
+                    "{}",
+                    coordinator::context_scaling_executed(&pm, &model, max_gpus).markdown()
+                );
+            } else {
+                print!("{}", coordinator::context_scaling(&pm, &model).markdown());
+            }
+        }
         "fig6" => {
             let model = model_arg(&args, "mixtral-8x22b");
-            print!("{}", coordinator::fig6_cp_folding(&pm, &model).markdown());
+            if args.flag("executed") {
+                let gpus = args.get_usize("gpus", 128);
+                print!(
+                    "{}",
+                    coordinator::fig6_cp_folding_executed(&pm, &model, gpus).markdown()
+                );
+            } else {
+                print!("{}", coordinator::fig6_cp_folding(&pm, &model).markdown());
+            }
         }
         "train" => {
             let cfg = TrainerConfig {

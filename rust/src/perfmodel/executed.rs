@@ -63,6 +63,14 @@ pub struct ExecutedEstimate {
     pub hidden_comm_us: f64,
     /// Communication the main lane had to wait for (mean per rank), µs.
     pub exposed_comm_us: f64,
+    /// CP ring KV transfer time hidden under the attention-core chunks
+    /// (mean per rank, whole step), µs — measured per ring step on the
+    /// comm lane; 0 without CP.
+    pub cp_hidden_us: f64,
+    /// CP ring time the core chunks failed to hide (mean per rank), µs.
+    /// The analytic estimate's `layers::cp_exposed_us` closed form must
+    /// agree with this within 2% (`tests/cp_equivalence.rs`).
+    pub cp_exposed_us: f64,
     /// Achieved model TFLOPS per GPU at the measured step time.
     pub tflops_per_gpu: f64,
     /// Measured-in-sim MFU.
@@ -73,7 +81,7 @@ pub struct ExecutedEstimate {
 impl ExecutedEstimate {
     /// Pretty single-line summary (mirrors `StepEstimate::summary`).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<28} sim-step {:8.1} ms   {:6.1} TFLOPS/GPU   MFU {:5.1}%   bubble {:4.1}%   hidden-comm {:4.1}%",
             self.config.tag(),
             self.step_ms,
@@ -81,7 +89,14 @@ impl ExecutedEstimate {
             self.mfu * 100.0,
             self.bubble_fraction * 100.0,
             100.0 * self.hidden_comm_us / (self.hidden_comm_us + self.exposed_comm_us).max(1e-9)
-        )
+        );
+        if self.cp_hidden_us + self.cp_exposed_us > 0.0 {
+            s.push_str(&format!(
+                "   cp-ring {:.0}/{:.0} µs hidden/exposed",
+                self.cp_hidden_us, self.cp_exposed_us
+            ));
+        }
+        s
     }
 }
 
@@ -175,6 +190,8 @@ struct RankOutcome {
     busy_us: f64,
     hidden_us: f64,
     exposed_us: f64,
+    cp_hidden_us: f64,
+    cp_exposed_us: f64,
 }
 
 /// [`execute_step`] returning the full per-rank trace (serialize with
@@ -202,6 +219,15 @@ pub fn execute_step_traced(
     let bh_c = comps.b_hidden_us / v;
     let f_win_c = (comps.f_expert_us / v).min(f_c - fh_c).max(0.0);
     let b_win_c = (comps.b_expert_us / v).min(b_c - bh_c).max(0.0);
+    // Executed CP ring: per-chunk ring-step comm, core windows, and the
+    // analytic exposed share already inside f_c/b_c (the charge loop
+    // re-runs the same structure and *measures* its own exposure).
+    let cp_steps = comps.cp_steps;
+    let cp_comm_c = comps.cp_step_comm_us / v;
+    let cp_fwin_c = comps.cp_f_window_us / v;
+    let cp_bwin_c = comps.cp_b_window_us / v;
+    let cp_fexp_c = comps.cp_f_exposed_us / v;
+    let cp_bexp_c = comps.cp_b_exposed_us / v;
     let p2p_bytes = comps.p2p_bytes;
     let optimizer_us = comps.optimizer_us;
     // Grad overlap plan: the same half-compute cap the analytic credit
@@ -218,6 +244,8 @@ pub fn execute_step_traced(
         let view = topo.view(rank);
         let hidden = Cell::new(0.0f64);
         let exposed = Cell::new(0.0f64);
+        let cp_hidden = Cell::new(0.0f64);
+        let cp_exposed = Cell::new(0.0f64);
         let cum_compute = Cell::new(0.0f64);
         let ops_done = Cell::new(0usize);
         let next_bucket = Cell::new(0usize);
@@ -250,25 +278,50 @@ pub fn execute_step_traced(
                 }
             }
         };
-        // One schedule op: overlap-aware charge structure. Net main-lane
-        // time is (total − hidden) when the a2a fits its window — and the
-        // clock *verifies* it per op (the wait exposes any shortfall).
+        // One schedule op: overlap-aware charge structure. The attention
+        // lump is gone for cp > 1 — the CP ring runs structurally (one
+        // nonblocking ring-step charge on the comm lane per core chunk,
+        // exactly the executed `attention::DistributedAttentionLayer`
+        // pattern) and its exposure is *measured*, not credited. The rest
+        // of the op keeps the a2a-under-expert-GEMM structure; net
+        // main-lane time is (total − hidden) when everything fits its
+        // window, and the clock verifies it per op.
         let run_op = |comm: &Communicator,
                       label: &str,
                       total_us: f64,
                       window_us: f64,
-                      a2a_hidden_us: f64| {
+                      a2a_hidden_us: f64,
+                      cp_chunk_us: f64,
+                      cp_exp_us: f64| {
+            let mut rest = total_us;
+            if cp_steps > 0 {
+                for _ in 0..cp_steps {
+                    let h = comm.charge_comm_i("attn/cp_ring", &view.cp_group, cp_comm_c);
+                    comm.advance("attn/core", cp_chunk_us);
+                    let (hid, exp) = comm.wait_split(h);
+                    cp_hidden.set(cp_hidden.get() + hid);
+                    cp_exposed.set(cp_exposed.get() + exp);
+                }
+                // Final core chunk: no ring step rides under it.
+                comm.advance("attn/core", cp_chunk_us);
+                // Main-lane budget the ring block consumed under the
+                // analytic closed form (the measurement equals it — same
+                // prices, same structure).
+                rest = (total_us - (cp_steps as f64 + 1.0) * cp_chunk_us - cp_exp_us).max(0.0);
+            }
             if a2a_hidden_us > 0.0 {
+                let win = window_us.min((rest - a2a_hidden_us).max(0.0));
                 let h = comm.charge_comm_i("moe/a2a_ovl", &view.ep_group, a2a_hidden_us);
-                comm.advance(label, window_us);
+                comm.advance(label, win);
                 let (hid, exp) = comm.wait_split(h);
                 hidden.set(hidden.get() + hid);
                 exposed.set(exposed.get() + exp);
-                comm.advance(label, (total_us - window_us - a2a_hidden_us).max(0.0));
+                comm.advance(label, (rest - win - a2a_hidden_us).max(0.0));
             } else {
-                comm.advance(label, total_us);
+                comm.advance(label, rest);
             }
-            cum_compute.set(cum_compute.get() + total_us - a2a_hidden_us);
+            let cp_block = if cp_steps > 0 { cp_exp_us } else { 0.0 };
+            cum_compute.set(cum_compute.get() + total_us - a2a_hidden_us - cp_block);
             ops_done.set(ops_done.get() + 1);
             issue_buckets(comm, false);
         };
@@ -281,11 +334,11 @@ pub fn execute_step_traced(
             vpp,
             &inputs,
             |_chunk, _mb, x| {
-                run_op(&comm, "fwd", f_c, f_win_c, fh_c);
+                run_op(&comm, "fwd", f_c, f_win_c, fh_c, cp_fwin_c, cp_fexp_c);
                 x.to_vec()
             },
             |_chunk, _mb, g| {
-                run_op(&comm, "bwd", b_c, b_win_c, bh_c);
+                run_op(&comm, "bwd", b_c, b_win_c, bh_c, cp_bwin_c, cp_bexp_c);
                 g.to_vec()
             },
             Some(p2p_bytes),
@@ -323,6 +376,8 @@ pub fn execute_step_traced(
             busy_us: pipe.busy_us(),
             hidden_us: hidden.get(),
             exposed_us: exposed.get(),
+            cp_hidden_us: cp_hidden.get(),
+            cp_exposed_us: cp_exposed.get(),
         }
     });
 
@@ -332,6 +387,8 @@ pub fn execute_step_traced(
     let bubble = measured_bubble_fraction(&busy, pipeline_us);
     let hidden_comm_us = results.iter().map(|r| r.hidden_us).sum::<f64>() / world as f64;
     let exposed_comm_us = results.iter().map(|r| r.exposed_us).sum::<f64>() / world as f64;
+    let cp_hidden_us = results.iter().map(|r| r.cp_hidden_us).sum::<f64>() / world as f64;
+    let cp_exposed_us = results.iter().map(|r| r.cp_exposed_us).sum::<f64>() / world as f64;
 
     let tokens = train.tokens_per_global_batch();
     let flops = ModelFlops::per_token(model, train.seq_len);
@@ -347,6 +404,8 @@ pub fn execute_step_traced(
             bubble_fraction: bubble,
             hidden_comm_us,
             exposed_comm_us,
+            cp_hidden_us,
+            cp_exposed_us,
             tflops_per_gpu: if comps.oom { 0.0 } else { tflops },
             mfu: if comps.oom { 0.0 } else { mfu },
             oom: comps.oom,
@@ -408,6 +467,37 @@ mod tests {
             serial.step_ms
         );
         assert!(overlapped.hidden_comm_us > 0.0);
+    }
+
+    /// cp > 1 replaces the attention lump with the executed ring: the
+    /// ring-step charges land on the comm lane (measured hidden/exposed),
+    /// and the step still agrees with the analytic estimate within 2% —
+    /// the closed form and the charge loop share structure and prices.
+    #[test]
+    fn executed_cp_ring_is_measured_and_agrees_with_analytic() {
+        let pm = PerfModel::default();
+        let model = ModelConfig::qwen2_57b_a14b();
+        let train = TrainConfig::paper_default(16384, 64);
+        let cfg = ParallelConfig::new(16, 2, 2, 4, 1, 1);
+        let analytic = pm.estimate(&model, cfg, &train, Strategy::MCoreFolding).unwrap();
+        let (executed, trace) =
+            execute_step_traced(&pm, &model, cfg, &train, Strategy::MCoreFolding).unwrap();
+        let rel = (executed.step_ms - analytic.step_ms).abs() / analytic.step_ms;
+        assert!(
+            rel < 0.02,
+            "executed {:.1} ms vs analytic {:.1} ms (rel {rel:.4})",
+            executed.step_ms,
+            analytic.step_ms
+        );
+        let total = executed.cp_hidden_us + executed.cp_exposed_us;
+        assert!(total > 0.0, "cp ring must be measured");
+        // The ring-step spans are visible in the trace on the comm lane.
+        assert!(trace.iter().any(|e| e.name == "attn/cp_ring"));
+        assert!(trace.iter().any(|e| e.name == "attn/core"));
+        // cp = 1 twin measures nothing on the ring.
+        let cfg1 = ParallelConfig::new(16, 2, 1, 4, 1, 1);
+        let e1 = execute_step(&pm, &model, cfg1, &train, Strategy::MCoreFolding).unwrap();
+        assert_eq!(e1.cp_hidden_us + e1.cp_exposed_us, 0.0);
     }
 
     /// vpp > 1 executes the interleaved schedule and shrinks the measured

@@ -19,8 +19,13 @@ pub struct AttnLayerTime {
     pub core_us: f64,
     /// Exposed TP (sequence-parallel) collective time.
     pub tp_comm_us: f64,
-    /// Exposed CP (ring KV-exchange) time after overlap with the core.
+    /// Exposed CP (ring KV-exchange) time after overlap with the core —
+    /// the closed form [`cp_exposed_us`] of the executed zig-zag ring.
     pub cp_comm_us: f64,
+    /// Raw CP ring KV volume time before overlap (all `cp − 1` steps), µs.
+    /// Not part of [`Self::total`]; the executed estimator re-runs the ring
+    /// structurally from it.
+    pub cp_ring_us: f64,
     /// Norms, residuals, rotary embedding, kernel-launch overhead.
     pub other_us: f64,
 }
@@ -161,16 +166,20 @@ impl<'a> LayerCoster<'a> {
             0.0
         };
 
-        // CP ring KV exchange, overlapped with the attention core.
-        let cp_comm_us = if self.parallel.cp > 1 {
+        // CP ring KV exchange, overlapped with the attention core. The
+        // exposed share is the closed form of the executed zig-zag ring
+        // (`cp_exposed_us`), which the executed estimator *measures* — the
+        // old `(ring − 0.85·core).max(0.05·ring)` guess is gone (see the
+        // function docs for why it was wrong in both directions).
+        let (cp_ring_us, cp_comm_us) = if self.parallel.cp > 1 {
             let cp_group = self.attn_group("CP");
             let kv_bytes = 2.0 * tokens * kv_dim * bytes * (cp - 1.0);
             let ring_us = kv_bytes / (self.comm.cluster.group_bottleneck_bw(cp_group) * 1e9 * 0.8)
                 * 1e6
                 + (cp - 1.0) * self.comm.cluster.group_latency_us(cp_group);
-            (ring_us - 0.85 * core_us).max(0.05 * ring_us)
+            (ring_us, cp_exposed_us(ring_us, core_us, cp))
         } else {
-            0.0
+            (0.0, 0.0)
         };
 
         // Elementwise work (norms, residual, rotary) + launch overhead.
@@ -179,7 +188,7 @@ impl<'a> LayerCoster<'a> {
             * 1e6
             + self.eff.fixed_layer_us;
 
-        AttnLayerTime { gemm_us, core_us, tp_comm_us, cp_comm_us, other_us }
+        AttnLayerTime { gemm_us, core_us, tp_comm_us, cp_comm_us, cp_ring_us, other_us }
     }
 
     /// Cost of one MoE block's forward. This is the Figure-5/6 breakdown.
@@ -258,6 +267,30 @@ impl<'a> LayerCoster<'a> {
 
         MoeLayerTime { router_us, permute_us, a2a_us, etp_comm_us, expert_gemm_us }
     }
+}
+
+/// Exposed CP ring time: the closed form of the **executed** zig-zag ring
+/// attention ([`crate::attention::DistributedAttentionLayer`]). The ring
+/// runs `cp − 1` KV transfer steps; step `s`'s transfer hides under the
+/// attention-core compute of block `s` (one of `cp` equal chunks of
+/// `core_us`), and the **final** chunk has no transfer behind it — so the
+/// overlap window is `(cp−1)/cp · core_us`, never the whole core.
+///
+/// This replaced the hand-tuned `(ring − 0.85·core).max(0.05·ring)` guess
+/// (ISSUE 5 satellite bugfix), which nothing validated and which was wrong
+/// in both directions: the `0.85·core` credit over-counted the window (the
+/// last chunk cannot hide a transfer that does not exist — the honest
+/// window fraction is `(cp−1)/cp ≤ 0.75` for `cp ≤ 4`), and the
+/// `0.05·ring` floor kept charging exposed time even when the core fully
+/// covers the ring. The executed estimator measures the same structure on
+/// the clock; `tests/cp_equivalence.rs` pins analytic-vs-executed
+/// agreement within 2% on the fig6 sweep so the formula cannot silently
+/// drift again.
+pub fn cp_exposed_us(ring_us: f64, core_window_us: f64, cp: f64) -> f64 {
+    if cp <= 1.0 {
+        return 0.0;
+    }
+    (ring_us - core_window_us * (cp - 1.0) / cp).max(0.0)
 }
 
 pub fn bytes_per_el(p: Precision) -> f64 {
@@ -370,6 +403,38 @@ mod tests {
         assert!(at.tp_comm_us > 0.0);
         assert!(at.gemm_us > 0.0 && at.core_us > 0.0);
         assert_eq!(at.cp_comm_us, 0.0);
+    }
+
+    /// Regression pin for the recalibrated CP overlap credit: the exposed
+    /// time is exactly the executed ring's closed form — window =
+    /// `(cp−1)/cp` of the core (the final chunk hides nothing), no floor —
+    /// and a comm-bound ring stays positive while a compute-bound one is
+    /// fully hidden. The old `0.85·core` / `0.05·ring` constants must not
+    /// creep back.
+    #[test]
+    fn cp_exposed_matches_executed_ring_closed_form() {
+        // Compute-bound: ring fits under the honest window → zero exposed
+        // (the old formula would still charge its 5% floor here).
+        assert_eq!(cp_exposed_us(100.0, 400.0, 4.0), 0.0);
+        // Comm-bound: exposed = ring − (cp−1)/cp·core exactly (the old
+        // 0.85·core credit would claim 640 − 340 = 300 instead).
+        let e = cp_exposed_us(640.0, 400.0, 2.0);
+        assert!((e - (640.0 - 200.0)).abs() < 1e-9, "{e}");
+        // cp = 1 has no ring.
+        assert_eq!(cp_exposed_us(640.0, 400.0, 1.0), 0.0);
+        // The layer coster wires the formula in: a cp > 1 attention layer's
+        // exposed time equals the closed form of its own ring/core parts.
+        let model = ModelConfig::mixtral_8x22b();
+        let (m, c, t, map, comm) =
+            coster_parts(model, ParallelConfig::new(64, 2, 4, 8, 1, 1), 64);
+        let at = LayerCoster {
+            model: &m, parallel: &c, train: &t, mapping: &map, comm: &comm,
+            eff: EffKnobs::default(),
+        }
+        .attention_layer();
+        assert!(at.cp_ring_us > 0.0);
+        let want = cp_exposed_us(at.cp_ring_us, at.core_us, 4.0);
+        assert_eq!(at.cp_comm_us, want);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::anyhow;
+use crate::attention::{zigzag, AttnConfig, AttnPhaseCost, AttnWeights, DistributedAttentionLayer};
 use crate::cluster::ClusterSpec;
 use crate::collectives::CommCost;
 use crate::config::ParallelConfig;
@@ -71,6 +72,51 @@ pub struct TrainerConfig {
     /// to the serialized trainer — property-tested — and on a clocked run
     /// the report splits the measured hidden vs exposed comm.
     pub overlap_grad_reduce: bool,
+    /// Run a **CP-sharded attention forward** each step (requires
+    /// `parallel`): every rank executes its zig-zag shard of a real ring
+    /// attention over its CP group ([`DistributedAttentionLayer`]) on a
+    /// shared per-step token block. The ring's payload math never touches
+    /// the artifact path (losses stay bit-identical across `cp`), the
+    /// measured hidden/exposed KV transfer time lands in the report, and
+    /// the step-0 full-sequence attention output
+    /// ([`TrainReport::cp_attn_digest`]) is the bit-comparable witness the
+    /// CP differential suite checks across `cp ∈ {1, 2, 4}`.
+    pub cp_attention: Option<CpAttnProbe>,
+}
+
+/// Configuration of the trainer's CP-sharded attention forward.
+#[derive(Debug, Clone)]
+pub struct CpAttnProbe {
+    /// Full sequence rows per step (must divide over `2·cp·tp` and
+    /// `kv_chunks`).
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub num_heads: usize,
+    /// Canonical LSE-combine grid; keep it fixed across the `cp` values
+    /// being compared (see [`crate::attention`]).
+    pub kv_chunks: usize,
+    /// Zig-zag (balanced) vs contiguous sharding.
+    pub zigzag: bool,
+    /// Billed-bytes multiplier on the KV ring (model-scale billing for
+    /// stand-in payloads); payload math unaffected.
+    pub kv_bill_scale: f64,
+    /// µs charged per allowed (query, key) pair on clocked runs (0 = no
+    /// core charge — ring comm only).
+    pub core_us_per_pair: f64,
+}
+
+impl Default for CpAttnProbe {
+    fn default() -> Self {
+        Self {
+            seq_len: 64,
+            hidden: 32,
+            num_heads: 4,
+            kv_chunks: 8,
+            zigzag: true,
+            kv_bill_scale: 1.0,
+            core_us_per_pair: 0.0,
+        }
+    }
 }
 
 /// Share of `compute_us_per_step` charged as forward (the rest is the
@@ -95,6 +141,7 @@ impl Default for TrainerConfig {
             compute_us_per_step: 0.0,
             flops_per_token: 0.0,
             overlap_grad_reduce: false,
+            cp_attention: None,
         }
     }
 }
@@ -120,6 +167,15 @@ pub struct TrainReport {
     /// Gradient-reduce time the compute lane waited for (µs per step,
     /// rank 0, clocked runs).
     pub sim_exposed_comm_us: Option<f64>,
+    /// CP ring KV transfer time hidden under the attention core (µs per
+    /// step, rank 0, clocked runs with `cp_attention`).
+    pub sim_cp_hidden_us: Option<f64>,
+    /// CP ring time the compute lane waited for (µs per step, rank 0).
+    pub sim_cp_exposed_us: Option<f64>,
+    /// Step-0 full-sequence attention output of the CP-sharded forward
+    /// (rank 0's TP × CP block, gathered + unsharded) — bit-identical
+    /// across `cp` at a fixed TP, pinned by `tests/cp_equivalence.rs`.
+    pub cp_attn_digest: Option<Vec<f32>>,
 }
 
 impl TrainReport {
@@ -168,6 +224,12 @@ pub fn init_params_from_spec(
 /// the DP group (deterministic rank-ordered reduction); every rank applies
 /// the identical Adam update, so parameters never diverge.
 pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+    if cfg.cp_attention.is_some() && cfg.parallel.is_none() {
+        return Err(anyhow!(
+            "cp_attention needs a parallel topology (TrainerConfig::parallel) \
+             to derive CP/TP groups from"
+        ));
+    }
     let runtime = Arc::new(Runtime::cpu(&cfg.artifacts_dir)?);
     let step_name = format!("{}_train_step", cfg.preset);
     let exe = runtime.load(&step_name)?;
@@ -218,7 +280,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         Fabric::new_with(world, cfg.algos)
     };
-    type RankOut = (Vec<(usize, f32)>, f64, f64);
+    type RankOut = (Vec<(usize, f32)>, f64, f64, f64, f64, Option<Vec<f32>>);
     let reports = run_ranks_on(&fabric, move |rank, comm| -> Result<RankOut> {
         let exe = runtime2.load(&step_name)?;
         // Reduction groups per parameter class: topology DP/EDP groups
@@ -227,6 +289,25 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             Some(t) => GradSync::from_topology(t, rank),
             None => GradSync::flat(world),
         };
+        // CP-sharded attention forward: this rank's slice of a ring
+        // attention over its CP group, weights replicated from the seed.
+        let cp_layer = topo.as_ref().zip(cfg2.cp_attention.as_ref()).map(|(t, probe)| {
+            let mut wrng = Rng::seed_from_u64(cfg2.seed ^ 0xA77E);
+            let weights = AttnWeights::init(probe.hidden, &mut wrng);
+            let acfg = AttnConfig {
+                hidden: probe.hidden,
+                num_heads: probe.num_heads,
+                kv_chunks: probe.kv_chunks,
+                zigzag: probe.zigzag,
+            };
+            let mut layer = DistributedAttentionLayer::from_topology(t.view(rank), acfg, &weights)
+                .with_kv_bill_scale(probe.kv_bill_scale);
+            if probe.core_us_per_pair > 0.0 {
+                layer = layer
+                    .with_phase_cost(AttnPhaseCost { core_us_per_pair: probe.core_us_per_pair });
+            }
+            layer
+        });
         // Model-parallel peers (same attention-DP coordinate) replicate
         // their microbatch stream; distinct DP replicas draw distinct data.
         let data_replica = topo.as_ref().map(|t| t.view(rank).dp_index).unwrap_or(rank);
@@ -237,11 +318,46 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         let mut losses = Vec::new();
         let mut hidden_us = 0.0f64;
         let mut exposed_us = 0.0f64;
+        let mut cp_hidden_us = 0.0f64;
+        let mut cp_exposed_us = 0.0f64;
+        let mut cp_digest: Option<Vec<f32>> = None;
         let overlap = cfg2.overlap_grad_reduce && world > 1;
 
         for step in 0..cfg2.steps {
             let ids = corpus.batch(batch, seq);
             let (inputs, targets) = SyntheticCorpus::split(&ids, batch, seq);
+
+            // CP-sharded attention forward on a shared per-step token
+            // block: real zig-zag ring over the CP group, its KV transfer
+            // measured on the clock. Separate RNG streams and message tags
+            // keep it payload-disjoint from the artifact path, so losses
+            // are bit-identical with and across `cp`.
+            if let (Some(layer), Some(probe)) = (&cp_layer, &cfg2.cp_attention) {
+                let mut trng = Rng::seed_from_u64(
+                    cfg2.seed ^ 0xC0FFEE ^ (step as u64).wrapping_mul(0x9E37_79B9),
+                );
+                let mut toks = vec![0.0f32; probe.seq_len * probe.hidden];
+                trng.fill_normal(&mut toks, 1.0);
+                let slice = layer.input_slice(&toks);
+                let (out, st) = layer.forward(&comm, &slice, probe.seq_len);
+                cp_hidden_us += st.cp_hidden_us;
+                cp_exposed_us += st.cp_exposed_us;
+                if step == 0 {
+                    // Full-sequence witness: gather over TP, then CP, then
+                    // undo the zig-zag — pure row movement, bit-exact.
+                    let shard_out = if layer.tp_group.len() > 1 {
+                        comm.all_gather_v(&layer.tp_group, &out)
+                    } else {
+                        out
+                    };
+                    let all = comm.all_gather_v(&layer.cp_group, &shard_out);
+                    let cpn = layer.cp_group.len();
+                    let per = all.len() / cpn;
+                    let shards: Vec<Vec<f32>> =
+                        (0..cpn).map(|i| all[i * per..(i + 1) * per].to_vec()).collect();
+                    cp_digest = Some(zigzag::unshard(&shards, probe.hidden, probe.zigzag));
+                }
+            }
             // Model-scale compute charge for the artifact's fwd+bwd (the
             // clock's compute phase; no-op on unclocked fabrics). With
             // grad-reduce overlap the backward share is charged *after*
@@ -316,13 +432,14 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 eprintln!("step {step:>5}  loss {loss:.4}");
             }
         }
-        Ok((losses, hidden_us, exposed_us))
+        Ok((losses, hidden_us, exposed_us, cp_hidden_us, cp_exposed_us, cp_digest))
     });
 
-    let (losses, hidden_total_us, exposed_total_us) = reports
-        .into_iter()
-        .next()
-        .ok_or_else(|| anyhow!("no rank output"))??;
+    let (losses, hidden_total_us, exposed_total_us, cp_hid_us, cp_exp_us, cp_attn_digest) =
+        reports
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no rank output"))??;
     let wall = t0.elapsed().as_secs_f64();
     let tokens = cfg.steps * batch * seq * world;
     // Measured-in-sim step time: the slowest rank's virtual clock, per
@@ -352,6 +469,15 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         (None, None)
     };
+    let (sim_cp_hidden_us, sim_cp_exposed_us) =
+        if cfg.clocked && cfg.steps > 0 && cfg.cp_attention.is_some() {
+            (
+                Some(cp_hid_us / cfg.steps as f64),
+                Some(cp_exp_us / cfg.steps as f64),
+            )
+        } else {
+            (None, None)
+        };
     Ok(TrainReport {
         initial_loss: losses.first().map(|x| x.1).unwrap_or(f32::NAN),
         final_loss: losses.last().map(|x| x.1).unwrap_or(f32::NAN),
@@ -363,6 +489,9 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         sim_mfu,
         sim_hidden_comm_us,
         sim_exposed_comm_us,
+        sim_cp_hidden_us,
+        sim_cp_exposed_us,
+        cp_attn_digest,
     })
 }
 

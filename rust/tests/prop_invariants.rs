@@ -660,3 +660,135 @@ fn prop_pipeline_bubble_bounds() {
         },
     );
 }
+
+/// Zig-zag (and contiguous) shard → unshard round-trips bit-exactly for
+/// arbitrary `seq % (2·cp) == 0` lengths — sharding is pure row movement.
+#[test]
+fn prop_zigzag_shard_roundtrip_bit_exact() {
+    use moe_folding::attention::zigzag;
+    forall(
+        "zigzag shard/unshard round trip",
+        60,
+        |rng: &mut Rng| {
+            let cp = draw::pow2_upto(rng, 8);
+            let seq = 2 * cp * draw::in_range(rng, 1, 12);
+            let h = draw::in_range(rng, 1, 9);
+            (cp, seq, h, rng.next_u64())
+        },
+        |&(cp, seq, h, seed)| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut tokens = vec![0.0f32; seq * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            for zz in [true, false] {
+                let shards: Vec<Vec<f32>> =
+                    (0..cp).map(|i| zigzag::shard(&tokens, h, cp, i, zz)).collect();
+                let back = zigzag::unshard(&shards, h, zz);
+                if back.len() != tokens.len() {
+                    return Err(format!("zigzag {zz}: length {} vs {}", back.len(), tokens.len()));
+                }
+                for (i, (a, b)) in tokens.iter().zip(&back).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("zigzag {zz}: idx {i}: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Per-rank causal-FLOPs imbalance is **exactly zero** under zig-zag
+/// sharding, while the naive contiguous split's imbalance grows with cp.
+#[test]
+fn prop_zigzag_causal_workload_exactly_balanced() {
+    use moe_folding::attention::zigzag;
+    forall(
+        "zig-zag causal balance",
+        40,
+        |rng: &mut Rng| {
+            let cp = draw::pow2_upto(rng, 8).max(2);
+            let seq = 2 * cp * draw::in_range(rng, 1, 16);
+            (cp, seq)
+        },
+        |&(cp, seq)| {
+            let zz: Vec<u64> =
+                (0..cp).map(|i| zigzag::causal_workload(seq, cp, i, true)).collect();
+            if zz.iter().any(|&w| w != zz[0]) {
+                return Err(format!("zig-zag imbalance: {zz:?}"));
+            }
+            let ct: Vec<u64> =
+                (0..cp).map(|i| zigzag::causal_workload(seq, cp, i, false)).collect();
+            let (min, max) = (*ct.iter().min().unwrap(), *ct.iter().max().unwrap());
+            if max <= min {
+                return Err(format!("contiguous should be imbalanced: {ct:?}"));
+            }
+            // Total work is conserved either way.
+            let want: u64 = (1..=seq as u64).sum();
+            if zz.iter().sum::<u64>() != want || ct.iter().sum::<u64>() != want {
+                return Err("workload not conserved".into());
+            }
+            // Contiguous imbalance grows with cp: exactly
+            // 1 + 2(cp−1)·c/(c+1) for c tokens per rank, which is ≥ cp for
+            // every c ≥ 2 and approaches 2cp−1 as c grows.
+            let ratio = max as f64 / min as f64;
+            if ratio < cp as f64 {
+                return Err(format!("contiguous ratio {ratio:.2} below cp {cp}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The executed ring's KV p2p volume equals the analytic `kv_bytes`
+/// formula of the layer coster per step and in total:
+/// `2 · tokens_local · kv_dim · 4 B · (cp − 1)` for f32 payloads.
+#[test]
+fn prop_ring_kv_bytes_match_analytic_formula() {
+    use moe_folding::attention::{AttnConfig, AttnWeights, DistributedAttentionLayer};
+    use moe_folding::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+    forall(
+        "ring KV bytes vs analytic formula",
+        12,
+        |rng: &mut Rng| {
+            let cp = [2usize, 4][rng.next_below(2)];
+            let chunks_per_piece = draw::in_range(rng, 1, 3);
+            (cp, 2 * cp * chunks_per_piece, rng.next_u64())
+        },
+        |&(cp, kv_chunks, seed)| {
+            let h = 8usize;
+            let seq = kv_chunks * 4; // 4 rows per canonical chunk
+            let cfg = AttnConfig { hidden: h, num_heads: 2, kv_chunks, zigzag: true };
+            let mut rng = Rng::seed_from_u64(seed);
+            let weights = AttnWeights::init(h, &mut rng);
+            let mut tokens = vec![0.0f32; seq * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            let topo = RuntimeTopology::folded(ParallelConfig::new(cp, 1, cp, 1, 1, 1))
+                .map_err(|e| e.to_string())?;
+            let fabric = Fabric::new_with(cp, AlgoSelection::fast());
+            let stats = run_ranks_on(&fabric, |rank, comm| {
+                let layer =
+                    DistributedAttentionLayer::from_topology(topo.view(rank), cfg, &weights);
+                let (_, s) = layer.forward(&comm, &layer.input_slice(&tokens), seq);
+                s
+            });
+            // tokens_local = seq/cp (tp = 1), kv_dim = h, 4-byte payloads.
+            let want = 2 * (seq / cp) * h * 4 * (cp - 1);
+            for (rank, s) in stats.iter().enumerate() {
+                if s.kv_send_bytes != want || s.kv_recv_bytes != want {
+                    return Err(format!(
+                        "rank {rank}: sent {} recv {} vs analytic {want}",
+                        s.kv_send_bytes, s.kv_recv_bytes
+                    ));
+                }
+                if s.ring_steps != cp - 1 {
+                    return Err(format!("rank {rank}: {} steps", s.ring_steps));
+                }
+                // Per-step volume is uniform.
+                if s.kv_send_bytes % s.ring_steps.max(1) != 0 {
+                    return Err("per-step volume must be uniform".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
