@@ -5,10 +5,15 @@
 //! and hidden-comm fraction next to the analytic estimate as
 //! machine-readable `target/BENCH_timeline.json` (uploaded as a CI
 //! artifact — the baseline future scheduling PRs are measured against).
+//! Also emits `engine-throughput` rows (ISSUE 6): harness wall-clock per
+//! executed step and simulated rank-steps/sec for the thread-per-rank vs
+//! discrete-event engines at 128 and 1024 ranks.
 use std::time::Instant;
 
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
-use moe_folding::perfmodel::{execute_step, PerfModel, Strategy};
+use moe_folding::perfmodel::{
+    execute_step, execute_step_traced_on, ExecEngine, PerfModel, Strategy,
+};
 
 fn main() {
     let pm = PerfModel::default();
@@ -51,7 +56,7 @@ fn main() {
             let hidden_frac = executed.hidden_comm_us
                 / (executed.hidden_comm_us + executed.exposed_comm_us).max(1e-9);
             println!(
-                "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} rank threads)",
+                "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} ranks)",
                 label,
                 executed.summary(),
                 analytic.step_ms
@@ -96,7 +101,7 @@ fn main() {
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let label = format!("fig6-cp{cp}");
         println!(
-            "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} rank threads)",
+            "{:<12} {}   analytic {:8.1} ms   (harness wall {wall_ms:.0} ms, {gpus} ranks)",
             label,
             executed.summary(),
             analytic.step_ms
@@ -121,6 +126,40 @@ fn main() {
             executed.cp_hidden_us,
             executed.cp_exposed_us
         ));
+    }
+    // Engine throughput (ISSUE 6): wall-clock cost of *running the
+    // simulation itself* on both execution engines, at 128 and 1024 ranks.
+    // `rank_steps_per_sec` = simulated rank-steps per harness second —
+    // the scaling headroom metric for the event engine vs thread-per-rank.
+    let model = ModelConfig::mixtral_8x22b();
+    for (gpus, gbs) in [(128usize, 256usize), (1024, 1024)] {
+        let cfg = ParallelConfig::new(gpus, 2, 1, 8, 1, 8).with_vpp(7);
+        let train = TrainConfig::paper_default(4096, gbs);
+        for (engine, ename) in [(ExecEngine::Threads, "threads"), (ExecEngine::Events, "events")] {
+            let t0 = Instant::now();
+            let (executed, _) =
+                execute_step_traced_on(engine, &pm, &model, cfg, &train, Strategy::MCoreFolding)
+                    .expect("executed step");
+            let wall_s = t0.elapsed().as_secs_f64();
+            let rank_steps_per_sec = gpus as f64 / wall_s.max(1e-9);
+            println!(
+                "engine-throughput {ename:<8} {gpus:>5} ranks   wall {:8.1} ms/step   \
+                 {rank_steps_per_sec:9.0} rank-steps/s   sim-step {:.1} ms",
+                wall_s * 1e3,
+                executed.step_ms
+            );
+            rows.push(format!(
+                "{{\"model\":\"{}\",\"gpus\":{gpus},\"config\":\"{}\",\
+                 \"variant\":\"engine-throughput\",\"engine\":\"{ename}\",\
+                 \"sim_step_ms\":{:.3},\"wall_ms_per_step\":{:.3},\
+                 \"rank_steps_per_sec\":{:.1}}}",
+                model.name,
+                cfg.tag(),
+                executed.step_ms,
+                wall_s * 1e3,
+                rank_steps_per_sec
+            ));
+        }
     }
     let json = format!(
         "{{\"bench\":\"timeline_step\",\"unit\":\"ms\",\"configs\":[\n{}\n]}}\n",

@@ -5,11 +5,36 @@
 //! configuration found by tuning its supported parallelism dimensions" for
 //! every baseline; this module is that tuning loop, and regenerates Table 3.
 
+use std::cmp::Ordering;
 use std::sync::mpsc;
 use std::thread;
 
 use crate::config::{ModelConfig, ParallelConfig, TrainConfig};
 use crate::perfmodel::{executed, ExecutedEstimate, PerfModel, StepEstimate, Strategy};
+
+/// Descending comparator that sorts NaN last. A NaN estimate (e.g. a
+/// degenerate flops denominator) must never win the tune, and the old
+/// `partial_cmp(..).unwrap()` panicked outright on one. `f64::total_cmp`
+/// alone is not enough either: reversed for descending order it puts +NaN
+/// *first*, so NaN gets explicit arms.
+fn desc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
+
+/// Ascending twin of [`desc_nan_last`]: smallest first, NaN still last.
+fn asc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
 
 /// One tuning outcome.
 #[derive(Debug, Clone)]
@@ -160,12 +185,7 @@ pub fn tune_executed(
     }
     let analytic_order: Vec<(ParallelConfig, bool)> =
         candidates.iter().map(|c| (c.analytic.config, c.overlap)).collect();
-    candidates.sort_by(|a, b| {
-        a.executed
-            .step_ms
-            .partial_cmp(&b.executed.step_ms)
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    candidates.sort_by(|a, b| asc_nan_last(a.executed.step_ms, b.executed.step_ms));
     let rank_changed = candidates
         .iter()
         .map(|c| (c.analytic.config, c.overlap))
@@ -244,7 +264,7 @@ pub fn tune_constrained(
             Err(_) => {}
         }
     }
-    feasible.sort_by(|a, b| b.mfu.partial_cmp(&a.mfu).unwrap());
+    feasible.sort_by(|a, b| desc_nan_last(a.mfu, b.mfu));
     TuneResult { strategy, best: feasible.first().cloned(), feasible, evaluated, oom_count }
 }
 
@@ -378,6 +398,49 @@ mod tests {
         let r = tune_constrained(&pm, &m, 128, &t, Strategy::MCoreFolding, pinned);
         assert!(r.best.is_none(), "a 20 GiB budget must reject the optimum");
         assert_eq!(r.oom_count, r.evaluated);
+    }
+
+    /// Regression (ISSUE 6 satellite): a candidate whose estimate carries a
+    /// NaN metric must sort *last*, not panic the tune. The old comparators
+    /// used `partial_cmp(..).unwrap()` (panic) and `unwrap_or(Equal)`
+    /// (NaN-position luck of the draw); these are the exact comparators the
+    /// two sort sites now use.
+    #[test]
+    fn nan_candidates_sort_last_without_panicking() {
+        let pm = PerfModel::default();
+        let m = ModelConfig::qwen2_57b_a14b();
+        let t = TrainConfig::paper_default(4096, 256);
+        let cons = Constraints {
+            tp: Some(2),
+            cp: Some(1),
+            ep: Some(4),
+            etp: Some(1),
+            pp: Some(4),
+            vpp: Some(1),
+            ..Default::default()
+        };
+        let r = tune_constrained(&pm, &m, 64, &t, Strategy::MCoreFolding, cons);
+        let good = r.best.expect("pinned Table-3 optimum must be feasible");
+        let mut poisoned = good.clone();
+        poisoned.mfu = f64::NAN;
+        poisoned.step_ms = f64::NAN;
+        let mut slower = good.clone();
+        slower.mfu = good.mfu / 2.0;
+        slower.step_ms = good.step_ms * 2.0;
+
+        // Descending-MFU site (tune_constrained): NaN sinks below every
+        // finite value regardless of insertion order.
+        let mut by_mfu = vec![poisoned.clone(), slower.clone(), good.clone()];
+        by_mfu.sort_by(|a, b| desc_nan_last(a.mfu, b.mfu));
+        assert_eq!(by_mfu[0].mfu.to_bits(), good.mfu.to_bits());
+        assert_eq!(by_mfu[1].mfu.to_bits(), slower.mfu.to_bits());
+        assert!(by_mfu[2].mfu.is_nan(), "NaN must sort last");
+
+        // Ascending-step_ms site (tune_executed): same guarantee.
+        let mut by_step = vec![poisoned, good.clone(), slower];
+        by_step.sort_by(|a, b| asc_nan_last(a.step_ms, b.step_ms));
+        assert_eq!(by_step[0].step_ms.to_bits(), good.step_ms.to_bits());
+        assert!(by_step[2].step_ms.is_nan(), "NaN must sort last");
     }
 
     #[test]

@@ -62,6 +62,10 @@ pub struct ClusterSpec {
     pub gpu: GpuSpec,
     pub gpus_per_node: usize,
     pub num_nodes: usize,
+    /// Exact world size. A world that does not fill its last node (e.g. 12
+    /// GPUs on 8-GPU nodes) keeps its true size here; `gpus_per_node *
+    /// num_nodes` would silently round it up to the full-node capacity.
+    pub total_gpus: usize,
     /// Uni-directional NVLink bandwidth per GPU, GB/s.
     pub nvlink_bw_gbs: f64,
     /// Uni-directional InfiniBand bandwidth per GPU, GB/s (400 Gb/s NIC).
@@ -81,6 +85,7 @@ impl ClusterSpec {
             gpu: GpuSpec::h100(),
             gpus_per_node,
             num_nodes: num_gpus.div_ceil(gpus_per_node),
+            total_gpus: num_gpus,
             nvlink_bw_gbs: 450.0,
             ib_bw_gbs: 50.0,
             nvlink_latency_us: 3.0,
@@ -89,7 +94,7 @@ impl ClusterSpec {
     }
 
     pub fn num_gpus(&self) -> usize {
-        self.gpus_per_node * self.num_nodes
+        self.total_gpus
     }
 
     /// Node index hosting a global rank.
@@ -152,6 +157,19 @@ mod tests {
         assert_eq!(c.node_of(0), 0);
         assert_eq!(c.node_of(7), 0);
         assert_eq!(c.node_of(8), 1);
+    }
+
+    /// Regression (ISSUE 6 satellite): a world that only partly fills its
+    /// last node must keep its exact size — `eos(12)` used to report
+    /// `num_gpus() == 16`.
+    #[test]
+    fn partial_last_node_world_is_exact() {
+        let c = ClusterSpec::eos(12);
+        assert_eq!(c.num_gpus(), 12);
+        assert_eq!(c.num_nodes, 2);
+        assert_eq!(c.gpus_per_node, 8);
+        assert_eq!(c.node_of(7), 0);
+        assert_eq!(c.node_of(11), 1);
     }
 
     #[test]

@@ -134,11 +134,17 @@ impl CommCost {
             return t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s);
         }
         // Hierarchical: intra-node reduce-scatter + inter-node all-reduce of
-        // the shard + intra-node all-gather.
+        // the shard + intra-node all-gather. Latency is charged per ring hop
+        // on the tier that hop actually crosses — the two intra-node rings
+        // take `(local-1)` NVLink hops each, the inter-node ring takes
+        // `2*(nodes-1)` IB hops. (Charging IB latency per *rank* here used
+        // to overbill a 1024-rank group by ~8 ms of pure launch latency.)
         let intra = 2.0 * (s.local as f64 - 1.0) / s.local as f64 * bytes / self.nv_bw();
         let inter =
             2.0 * (s.nodes as f64 - 1.0) / s.nodes as f64 * (bytes / s.local as f64) / self.ib_bw();
-        (intra + inter) * 1e6 + 2.0 * (s.n as f64) * self.cluster.ib_latency_us
+        let lat = 2.0 * (s.local as f64 - 1.0) * self.cluster.nvlink_latency_us
+            + 2.0 * (s.nodes as f64 - 1.0) * self.cluster.ib_latency_us;
+        (intra + inter) * 1e6 + lat
     }
 
     /// AllGather: each rank contributes `bytes`, receives `n*bytes`.
@@ -152,9 +158,14 @@ impl CommCost {
             let t = (s.n as f64 - 1.0) / s.n as f64 * total / self.nv_bw();
             return t * 1e6 + (s.n as f64 - 1.0) * self.lat(s);
         }
+        // Per-tier hop latency, same rationale as `all_reduce`: the
+        // intra-node ring pays `(local-1)` NVLink hops, the inter-node ring
+        // `(nodes-1)` IB hops — not one IB launch per member rank.
         let intra = (s.local as f64 - 1.0) / s.local as f64 * total / self.nv_bw();
         let inter = (s.nodes as f64 - 1.0) / s.nodes as f64 * total / self.ib_bw();
-        (intra + inter) * 1e6 + (s.n as f64) * self.cluster.ib_latency_us
+        let lat = (s.local as f64 - 1.0) * self.cluster.nvlink_latency_us
+            + (s.nodes as f64 - 1.0) * self.cluster.ib_latency_us;
+        (intra + inter) * 1e6 + lat
     }
 
     /// ReduceScatter of a `bytes_total_per_rank` input buffer held by every
@@ -359,5 +370,51 @@ impl CommCost {
             CommPrimitive::AllToAll => self.all_to_all_with(algo, group, bytes),
             CommPrimitive::Broadcast => self.broadcast_with(algo, group, bytes),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Zero-byte collectives isolate the α (latency) term. Regression for
+    /// the ISSUE 6 satellite: hierarchical latency is per ring hop on the
+    /// tier the hop crosses, not one IB launch per member rank.
+    #[test]
+    fn hierarchical_latency_is_per_tier_hop() {
+        let cost = CommCost::new(ClusterSpec::eos(128));
+        let group: Vec<usize> = (0..128).collect();
+        // 16 nodes × 8 local: AR = 2·(8−1)·3 µs NVLink + 2·(16−1)·8 µs IB.
+        assert_eq!(cost.all_reduce(&group, 0.0), 2.0 * 7.0 * 3.0 + 2.0 * 15.0 * 8.0);
+        // AG runs each ring once: (8−1)·3 + (16−1)·8.
+        assert_eq!(cost.all_gather(&group, 0.0), 7.0 * 3.0 + 15.0 * 8.0);
+        // The old per-rank model charged 2·128·8 = 2048 µs for the AR alone;
+        // pin the fixed model well below that.
+        assert!(cost.all_reduce(&group, 0.0) < 300.0);
+    }
+
+    /// Single-node groups are untouched by the hierarchical fix.
+    #[test]
+    fn single_node_latency_unchanged() {
+        let cost = CommCost::new(ClusterSpec::eos(8));
+        let group: Vec<usize> = (0..8).collect();
+        assert_eq!(cost.all_reduce(&group, 0.0), 2.0 * 7.0 * 3.0);
+        assert_eq!(cost.all_gather(&group, 0.0), 7.0 * 3.0);
+    }
+
+    /// The β (bandwidth) term did not move: latency-free difference between
+    /// two payload sizes matches the closed-form hierarchical ring time.
+    #[test]
+    fn hierarchical_bandwidth_term_unchanged() {
+        let cost = CommCost::new(ClusterSpec::eos(32));
+        let group: Vec<usize> = (0..32).collect();
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let measured = cost.all_reduce(&group, bytes) - cost.all_reduce(&group, 0.0);
+        let nv = 450.0e9 * 0.80;
+        let ib = 50.0e9 * 0.85;
+        let intra = 2.0 * (8.0 - 1.0) / 8.0 * bytes / nv;
+        let inter = 2.0 * (4.0 - 1.0) / 4.0 * (bytes / 8.0) / ib;
+        let expected = (intra + inter) * 1e6;
+        assert!((measured - expected).abs() < 1e-6, "{measured} vs {expected}");
     }
 }

@@ -311,7 +311,7 @@ pub fn fig5_breakdown_executed(
             trace
                 .iter()
                 .filter(|e| {
-                    e.rank == 0 && e.cat != "wait" && names.contains(&e.name.as_str())
+                    e.rank == 0 && e.cat != "wait" && names.contains(&e.name.as_ref())
                 })
                 .map(|e| e.dur_us)
                 .sum()

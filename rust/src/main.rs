@@ -29,9 +29,11 @@ COMMANDS:
             [--tp N --cp N --ep N --etp N --pp N --vpp N]
             [--hbm GIB]   per-rank HBM budget: candidates that don't fit are
                           rejected; the per-rank GiB estimate is printed
-            [--executed [--top K]]   re-rank the analytic top-K by executing
-                                     each step (overlapped + serialized twin)
-                                     on the clocked simulator
+            [--executed [--top K]]   re-rank the analytic top-K (default 5,
+                                     uncapped — pass the feasible-list size
+                                     for a full re-rank) by executing each
+                                     step (overlapped + serialized twin) on
+                                     the event-driven clocked simulator
   timeline  --model <name> --gpus <n> --tp N --cp N --ep N --etp N --pp N
             [--vpp N] [--no-overlap] [--overlap-a2a] [--strategy <s>]
             [--seq N] [--gbs N] [--out trace.json]
@@ -143,7 +145,10 @@ fn main() -> moe_folding::util::error::Result<()> {
                 println!("no feasible configuration (all OOM)");
             }
             if args.flag("executed") {
-                let k = args.get_usize("top", 5).min(8);
+                // No cap on K: the event engine executes each candidate
+                // single-threaded, so re-ranking the full feasible list at
+                // paper scale is tier-1-cheap (ROADMAP item 2).
+                let k = args.get_usize("top", 5);
                 let ex = autotune::tune_executed(&pm, &model, gpus, &train_cfg, strategy, k);
                 println!(
                     "\n# executed re-rank (top {k} analytic candidates, clocked simulator){}",

@@ -36,14 +36,39 @@
 //! (main + comm + grad-sync lanes) for any mapping.
 
 use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 
 use crate::config::{ModelConfig, ParallelConfig, TrainConfig};
 use crate::mapping::RuntimeTopology;
 use crate::model::flops::ModelFlops;
-use crate::pipeline::{execute_interleaved_with, measured_bubble_fraction};
+use crate::pipeline::{
+    chunk_tag, execute_interleaved_with, measured_bubble_fraction, schedule_interleaved, PipeOp,
+};
+use crate::simcomm::engine::{self, EngineOp, RankProgram, WaitAcc};
 use crate::simcomm::{run_ranks_on, AlgoSelection, CommHandle, Communicator, Fabric, TraceEvent};
 
 use super::{GradScope, PerfModel, StepComponents, Strategy};
+
+/// Which execution engine runs the clocked step schedule. Both engines
+/// bill the same [`crate::simcomm`] virtual clock and are bit-identical
+/// on every output (differentially pinned in
+/// `tests/engine_equivalence.rs`); they differ only in how rank programs
+/// are driven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecEngine {
+    /// One OS thread per rank over the message fabric
+    /// ([`run_ranks_on`]). The reference engine — also the only one that
+    /// can run payload-real programs — but O(world) threads make
+    /// 1024-rank steps painful.
+    Threads,
+    /// Single-threaded discrete-event interpreter
+    /// ([`crate::simcomm::engine`]): rank programs compile to payload-free
+    /// op lists, ranks park at rendezvous/receive points and resume on
+    /// completion. No threads, no per-event allocation — 1024+-rank steps
+    /// run in tier-1 CI.
+    #[default]
+    Events,
+}
 
 /// Result of executing one step on the clocked simulator.
 #[derive(Debug, Clone)]
@@ -195,8 +220,21 @@ struct RankOutcome {
 }
 
 /// [`execute_step`] returning the full per-rank trace (serialize with
-/// [`crate::simcomm::chrome_trace_json`]).
+/// [`crate::simcomm::chrome_trace_json`]). Runs on the default engine
+/// ([`ExecEngine::Events`]).
 pub fn execute_step_traced(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    cfg: ParallelConfig,
+    train: &TrainConfig,
+    strategy: Strategy,
+) -> Result<(ExecutedEstimate, Vec<TraceEvent>), String> {
+    execute_step_traced_on(ExecEngine::default(), pm, model, cfg, train, strategy)
+}
+
+/// [`execute_step_traced`] on an explicit [`ExecEngine`].
+pub fn execute_step_traced_on(
+    engine: ExecEngine,
     pm: &PerfModel,
     model: &ModelConfig,
     cfg: ParallelConfig,
@@ -238,6 +276,47 @@ pub fn execute_step_traced(
     // Issue buckets once half the per-rank compute has run (grads of the
     // early buckets are complete by then), one bucket per op boundary.
     let issue_threshold_us = compute_total_us * 0.5;
+    // Flattened bucket issue order: collective-major, so DP and EDP
+    // buckets interleave the way Megatron's bucketed DDP drains them.
+    let bucket_seq: Vec<(usize, usize)> = grad_plan
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, gp)| (0..gp.bucket_bytes.len()).map(move |bi| (ci, bi)))
+        .collect();
+
+    if engine == ExecEngine::Events {
+        // Compile each rank's schedule to a payload-free op program and
+        // interpret them all on the single-threaded event engine.
+        let mut table = GroupTable::default();
+        let programs: Vec<RankProgram> = (0..world)
+            .map(|rank| {
+                record_rank_program(
+                    rank,
+                    topo.view(rank),
+                    &comps,
+                    &grad_plan,
+                    &bucket_seq,
+                    issue_threshold_us,
+                    &mut table,
+                )
+            })
+            .collect();
+        let (stats, trace) =
+            engine::run_programs(cost, AlgoSelection::fast(), &table.groups, &programs);
+        let results: Vec<RankOutcome> = stats
+            .into_iter()
+            .map(|s| RankOutcome {
+                pipeline_us: s.pipeline_us,
+                finish_us: s.finish_us,
+                busy_us: s.busy_us,
+                hidden_us: s.hidden_us,
+                exposed_us: s.exposed_us,
+                cp_hidden_us: s.cp_hidden_us,
+                cp_exposed_us: s.cp_exposed_us,
+            })
+            .collect();
+        return Ok(aggregate_step(&comps, model, cfg, train, results, trace));
+    }
 
     let fabric = Fabric::new_clocked(world, AlgoSelection::fast(), cost);
     let results: Vec<RankOutcome> = run_ranks_on(&fabric, |rank, comm| {
@@ -250,13 +329,6 @@ pub fn execute_step_traced(
         let ops_done = Cell::new(0usize);
         let next_bucket = Cell::new(0usize);
         let pending: RefCell<Vec<CommHandle>> = RefCell::new(Vec::new());
-        // Flattened bucket issue order: collective-major, so DP and EDP
-        // buckets interleave the way Megatron's bucketed DDP drains them.
-        let bucket_seq: Vec<(usize, usize)> = grad_plan
-            .iter()
-            .enumerate()
-            .flat_map(|(ci, gp)| (0..gp.bucket_bytes.len()).map(move |bi| (ci, bi)))
-            .collect();
 
         let issue_buckets = |comm: &Communicator, force: bool| {
             while next_bucket.get() < bucket_seq.len()
@@ -287,7 +359,7 @@ pub fn execute_step_traced(
         // main-lane time is (total − hidden) when everything fits its
         // window, and the clock verifies it per op.
         let run_op = |comm: &Communicator,
-                      label: &str,
+                      label: &'static str,
                       total_us: f64,
                       window_us: f64,
                       a2a_hidden_us: f64,
@@ -381,6 +453,22 @@ pub fn execute_step_traced(
         }
     });
 
+    let trace = fabric.take_trace();
+    Ok(aggregate_step(&comps, model, cfg, train, results, trace))
+}
+
+/// Fold per-rank outcomes and the drained trace into the estimate —
+/// shared by both engines, so the aggregation arithmetic (and therefore
+/// every derived field) is one implementation.
+fn aggregate_step(
+    comps: &StepComponents,
+    model: &ModelConfig,
+    cfg: ParallelConfig,
+    train: &TrainConfig,
+    results: Vec<RankOutcome>,
+    trace: Vec<TraceEvent>,
+) -> (ExecutedEstimate, Vec<TraceEvent>) {
+    let world = cfg.world_size;
     let pipeline_us = results.iter().map(|r| r.pipeline_us).fold(0.0, f64::max);
     let step_us = results.iter().map(|r| r.finish_us).fold(0.0, f64::max);
     let busy: Vec<f64> = results.iter().map(|r| r.busy_us).collect();
@@ -395,8 +483,7 @@ pub fn execute_step_traced(
     let tflops = flops.achieved_tflops(tokens, step_us / 1e6, world);
     let mfu = tflops / comps.cluster.gpu.peak_tflops(train.precision);
 
-    let trace = fabric.take_trace();
-    Ok((
+    (
         ExecutedEstimate {
             config: cfg,
             step_ms: step_us / 1e3,
@@ -411,7 +498,261 @@ pub fn execute_step_traced(
             oom: comps.oom,
         },
         trace,
-    ))
+    )
+}
+
+/// Interned collective-group table for one compiled step: the event
+/// engine's rendezvous keys by group id, and identical member lists share
+/// one id (collective instances pair up by arrival count, exactly like
+/// the thread fabric's FIFO control messages — sound because every member
+/// of a group runs the same charge sequence on it).
+#[derive(Default)]
+struct GroupTable {
+    ids: HashMap<Vec<usize>, usize>,
+    groups: Vec<Vec<usize>>,
+}
+
+impl GroupTable {
+    /// Intern `group`, returning `(group id, this rank's member index,
+    /// member count)`.
+    fn of(&mut self, group: &[usize], rank: usize) -> (usize, usize, usize) {
+        let gid = match self.ids.get(group) {
+            Some(&gid) => gid,
+            None => {
+                let gid = self.groups.len();
+                self.groups.push(group.to_vec());
+                self.ids.insert(group.to_vec(), gid);
+                gid
+            }
+        };
+        let midx = group.iter().position(|&r| r == rank).expect("rank must be a group member");
+        (gid, midx, group.len())
+    }
+}
+
+/// Program-recorder state: the compile-time twin of the thread closure's
+/// accumulator cells. `cum_compute`/`next_bucket` replay the same bucket
+/// issue decisions; zero-duration charges and their waits are elided,
+/// which is bit-safe because they add exactly `+0.0` to accumulators that
+/// are never `-0.0` (they start at `+0.0` and only non-negative values
+/// are added).
+#[derive(Default)]
+struct Recorder {
+    ops: Vec<EngineOp>,
+    handles: usize,
+    cum_compute: f64,
+    ops_done: usize,
+    next_bucket: usize,
+    pending: Vec<usize>,
+}
+
+impl Recorder {
+    /// [`Communicator::advance`] twin (elides `us <= 0`, as advance
+    /// does).
+    fn advance(&mut self, label: &'static str, us: f64) {
+        if us > 0.0 {
+            self.ops.push(EngineOp::Advance { label, us });
+        }
+    }
+
+    /// [`Communicator::charge_comm_i`] twin; `None` is the
+    /// already-completed handle (`us <= 0`).
+    fn charge_comm(
+        &mut self,
+        label: &'static str,
+        (group, midx, _len): (usize, usize, usize),
+        us: f64,
+    ) -> Option<usize> {
+        if us <= 0.0 {
+            return None;
+        }
+        let handle = self.handles;
+        self.handles += 1;
+        self.ops.push(EngineOp::CommCharge { label, group, midx, us, handle });
+        Some(handle)
+    }
+
+    /// [`Communicator::charge_collective_bg`] twin; `None` for singleton
+    /// groups (the live call returns a completed handle without billing).
+    fn charge_bg(
+        &mut self,
+        label: &'static str,
+        prim: crate::collectives::CommPrimitive,
+        (group, midx, len): (usize, usize, usize),
+        bytes: f64,
+    ) -> Option<usize> {
+        if len <= 1 {
+            return None;
+        }
+        let handle = self.handles;
+        self.handles += 1;
+        self.ops.push(EngineOp::BgCharge { label, prim, group, midx, bytes, handle });
+        Some(handle)
+    }
+
+    /// [`Communicator::wait_split`] twin: elided handles split exactly
+    /// `(0.0, 0.0)`.
+    fn wait(&mut self, handle: Option<usize>, acc: WaitAcc) {
+        if let Some(handle) = handle {
+            self.ops.push(EngineOp::Wait { handle, acc });
+        }
+    }
+
+    fn send(&mut self, dst: usize, tag: u64, bytes: f64) {
+        self.ops.push(EngineOp::Send { dst, tag, bytes });
+    }
+
+    fn recv(&mut self, src: usize, tag: u64) {
+        self.ops.push(EngineOp::Recv { src, tag });
+    }
+}
+
+/// Compile one rank's step schedule into an [`EngineOp`] program — the
+/// op-for-op twin of the thread closure in [`execute_step_traced_on`]:
+/// the same charge order, the same bucket-issue decisions, and the p2p
+/// dataflow of [`execute_interleaved_with`] (walked directly from
+/// [`schedule_interleaved`] — the pipeline's dataflow has no dependence
+/// on payload values, only on the schedule). Differentially pinned
+/// bit-identical in `tests/engine_equivalence.rs`.
+fn record_rank_program(
+    rank: usize,
+    view: &crate::mapping::RankView,
+    comps: &StepComponents,
+    grad_plan: &[GradPlan],
+    bucket_seq: &[(usize, usize)],
+    issue_threshold_us: f64,
+    table: &mut GroupTable,
+) -> RankProgram {
+    let m = comps.m_micro;
+    let vpp = comps.vpp.max(1);
+    let v = vpp as f64;
+    let f_c = comps.f_us / v;
+    let b_c = comps.b_us / v;
+    let fh_c = comps.f_hidden_us / v;
+    let bh_c = comps.b_hidden_us / v;
+    let f_win_c = (comps.f_expert_us / v).min(f_c - fh_c).max(0.0);
+    let b_win_c = (comps.b_expert_us / v).min(b_c - bh_c).max(0.0);
+    let cp_steps = comps.cp_steps;
+    let cp_comm_c = comps.cp_step_comm_us / v;
+    let cp_fwin_c = comps.cp_f_window_us / v;
+    let cp_bwin_c = comps.cp_b_window_us / v;
+    let cp_fexp_c = comps.cp_f_exposed_us / v;
+    let cp_bexp_c = comps.cp_b_exposed_us / v;
+    let p2p_bytes = comps.p2p_bytes;
+    let cp_g = table.of(&view.cp_group, rank);
+    let ep_g = table.of(&view.ep_group, rank);
+    let dp_g = table.of(&view.dp_group, rank);
+    let edp_g = table.of(&view.edp_group, rank);
+
+    let mut rec = Recorder::default();
+
+    let issue_buckets = |rec: &mut Recorder, force: bool| {
+        while rec.next_bucket < bucket_seq.len()
+            && (force || rec.cum_compute + 1e-9 >= issue_threshold_us)
+        {
+            let (ci, bi) = bucket_seq[rec.next_bucket];
+            let gp = &grad_plan[ci];
+            let g = match gp.scope {
+                GradScope::Dp => dp_g,
+                GradScope::Edp => edp_g,
+            };
+            if let Some(h) = rec.charge_bg(gp.label, gp.prim, g, gp.bucket_bytes[bi]) {
+                rec.pending.push(h);
+            }
+            rec.next_bucket += 1;
+            if !force {
+                break;
+            }
+        }
+    };
+    let run_op = |rec: &mut Recorder,
+                  label: &'static str,
+                  total_us: f64,
+                  window_us: f64,
+                  a2a_hidden_us: f64,
+                  cp_chunk_us: f64,
+                  cp_exp_us: f64| {
+        let mut rest = total_us;
+        if cp_steps > 0 {
+            for _ in 0..cp_steps {
+                let h = rec.charge_comm("attn/cp_ring", cp_g, cp_comm_c);
+                rec.advance("attn/core", cp_chunk_us);
+                rec.wait(h, WaitAcc::Cp);
+            }
+            rec.advance("attn/core", cp_chunk_us);
+            rest = (total_us - (cp_steps as f64 + 1.0) * cp_chunk_us - cp_exp_us).max(0.0);
+        }
+        if a2a_hidden_us > 0.0 {
+            let win = window_us.min((rest - a2a_hidden_us).max(0.0));
+            let h = rec.charge_comm("moe/a2a_ovl", ep_g, a2a_hidden_us);
+            rec.advance(label, win);
+            rec.wait(h, WaitAcc::Comm);
+            rec.advance(label, (rest - win - a2a_hidden_us).max(0.0));
+        } else {
+            rec.advance(label, rest);
+        }
+        let cp_block = if cp_steps > 0 { cp_exp_us } else { 0.0 };
+        rec.cum_compute += total_us - a2a_hidden_us - cp_block;
+        rec.ops_done += 1;
+        issue_buckets(rec, false);
+    };
+
+    let pp = view.pp_group.len();
+    let stage = view.pp_stage;
+    let last = pp - 1;
+    for op in schedule_interleaved(stage, pp, m, vpp) {
+        match op {
+            PipeOp::Fwd { mb, chunk } => {
+                if !(stage == 0 && chunk == 0) {
+                    let src =
+                        if stage > 0 { view.pp_group[stage - 1] } else { view.pp_group[last] };
+                    rec.recv(src, chunk_tag(false, chunk, mb, vpp));
+                }
+                rec.ops.push(EngineOp::SpanOpen);
+                run_op(&mut rec, "fwd", f_c, f_win_c, fh_c, cp_fwin_c, cp_fexp_c);
+                rec.ops.push(EngineOp::SpanClose);
+                if stage < last {
+                    rec.send(view.pp_group[stage + 1], chunk_tag(false, chunk, mb, vpp), p2p_bytes);
+                } else if chunk < vpp - 1 {
+                    rec.send(view.pp_group[0], chunk_tag(false, chunk + 1, mb, vpp), p2p_bytes);
+                }
+            }
+            PipeOp::Bwd { mb, chunk } => {
+                if !(stage == last && chunk == vpp - 1) {
+                    let src =
+                        if stage < last { view.pp_group[stage + 1] } else { view.pp_group[0] };
+                    rec.recv(src, chunk_tag(true, chunk, mb, vpp));
+                }
+                rec.ops.push(EngineOp::SpanOpen);
+                run_op(&mut rec, "bwd", b_c, b_win_c, bh_c, cp_bwin_c, cp_bexp_c);
+                rec.ops.push(EngineOp::SpanClose);
+                if stage > 0 {
+                    rec.send(view.pp_group[stage - 1], chunk_tag(true, chunk, mb, vpp), p2p_bytes);
+                } else if chunk > 0 {
+                    rec.send(view.pp_group[last], chunk_tag(true, chunk - 1, mb, vpp), p2p_bytes);
+                }
+            }
+        }
+    }
+    rec.ops.push(EngineOp::MarkPipeline);
+    debug_assert_eq!(rec.ops_done, 2 * m * vpp);
+    issue_buckets(&mut rec, true);
+    for handle in std::mem::take(&mut rec.pending) {
+        rec.ops.push(EngineOp::Wait { handle, acc: WaitAcc::Comm });
+    }
+    for gp in grad_plan {
+        if gp.tail_bytes <= 0.0 {
+            continue;
+        }
+        let g = match gp.scope {
+            GradScope::Dp => dp_g,
+            GradScope::Edp => edp_g,
+        };
+        let h = rec.charge_bg(gp.label, gp.prim, g, gp.tail_bytes);
+        rec.wait(h, WaitAcc::Comm);
+    }
+    rec.advance("optimizer", comps.optimizer_us);
+    RankProgram { ops: rec.ops, handles: rec.handles }
 }
 
 #[cfg(test)]

@@ -504,7 +504,7 @@ where
 /// activations and backward gradients of different chunks on the same rank
 /// pair (for `pp == 2` the next and previous ring neighbours coincide), so
 /// the executor matches payloads by tag instead of arrival order.
-fn chunk_tag(bwd: bool, chunk: usize, mb: usize, vpp: usize) -> u64 {
+pub(crate) fn chunk_tag(bwd: bool, chunk: usize, mb: usize, vpp: usize) -> u64 {
     1 + (((mb * vpp + chunk) * 2) + bwd as usize) as u64
 }
 

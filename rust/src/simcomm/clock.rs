@@ -50,6 +50,7 @@
 //! category, gaps on the main lane = waiting (pipeline bubbles / exposed
 //! communication).
 
+use std::borrow::Cow;
 use std::sync::Mutex;
 
 use crate::collectives::CommCost;
@@ -87,8 +88,11 @@ impl Lane {
 pub struct TraceEvent {
     /// Global rank the span belongs to.
     pub rank: usize,
-    /// Phase label (e.g. `moe/a2a_dispatch`, `fwd`, `optimizer`).
-    pub name: String,
+    /// Phase label (e.g. `moe/a2a_dispatch`, `fwd`, `optimizer`). Almost
+    /// every span is labelled with a static string; `Cow` keeps the hot
+    /// record path allocation-free so a 4096-rank step doesn't malloc
+    /// per event.
+    pub name: Cow<'static, str>,
     /// Category: `compute`, `comm`, `p2p`, or `wait`.
     pub cat: &'static str,
     /// Which of the rank's timelines the span occupies.
@@ -150,7 +154,14 @@ impl SimClock {
     /// span. `start` must be ≥ the lane frontier (the caller synchronizes
     /// the group on `max(issue, frontier)` first), so lane spans never
     /// overlap.
-    pub(crate) fn bill_lane(&self, rank: usize, lane: Lane, name: &str, start: f64, dur: f64) {
+    pub(crate) fn bill_lane(
+        &self,
+        rank: usize,
+        lane: Lane,
+        name: impl Into<Cow<'static, str>>,
+        start: f64,
+        dur: f64,
+    ) {
         let mut free = self.lane_frontier(lane)[rank].lock().unwrap();
         debug_assert!(start + 1e-9 >= *free, "lane overlap: {start} < {free}");
         *free = start + dur;
@@ -171,7 +182,7 @@ impl SimClock {
     pub(crate) fn record(
         &self,
         rank: usize,
-        name: &str,
+        name: impl Into<Cow<'static, str>>,
         cat: &'static str,
         lane: Lane,
         ts: f64,
@@ -179,7 +190,7 @@ impl SimClock {
     ) {
         self.events[rank].lock().unwrap().push(TraceEvent {
             rank,
-            name: name.to_string(),
+            name: name.into(),
             cat,
             lane,
             ts_us: ts,

@@ -1,0 +1,512 @@
+//! Discrete-event execution engine for clocked rank programs.
+//!
+//! The thread engine ([`super::run_ranks_on`]) spawns one OS thread per
+//! rank — fine at 64 ranks, painful at 1024 and absurd at 4096. But the
+//! executed step skeleton (`perfmodel::executed`) never touches payload
+//! bytes: every instruction is a clock operation (charge a span, price a
+//! collective, wait on a handle, hand a microbatch to a neighbour). Such a
+//! program can be compiled to a small instruction set ([`EngineOp`]) and
+//! interpreted by a single-threaded cooperative scheduler over the same
+//! [`SimClock`] the thread engine bills — no threads, no condvars, no
+//! per-event allocation.
+//!
+//! Semantics are **bit-identical** to the thread engine by construction
+//! and by differential test (`tests/engine_equivalence.rs`):
+//!
+//! * every clock mutation goes through the same [`SimClock`] methods
+//!   (`advance` / `bill_lane` / `set` / `record`), so lane frontiers,
+//!   overlap accounting and the trace log share one implementation;
+//! * the group rendezvous replicates [`super::Communicator::clock_sync`]
+//!   exactly, including its leader/peer float-precision asymmetry: peer
+//!   contributions ride an `f32`-pair fabric in the thread engine, so the
+//!   fold here applies the same [`split_f64`]/[`join_f64`] rounding to
+//!   peer values and to the replies peers receive, while the leader keeps
+//!   exact `f64`s;
+//! * collective pricing re-runs the [`super::Communicator`] tail: the same
+//!   `sum`/`max` byte conventions per primitive, the same
+//!   [`AlgoSelection`] dispatch, the same [`CommCost::price`] call.
+//!
+//! A rank runs until it *parks* — a p2p receive with no matching message,
+//! or a rendezvous that other members haven't reached — and resumes when a
+//! send or the last rendezvous arrival wakes it. With every rank parked
+//! and none runnable the step would deadlock; the engine panics with the
+//! stuck ranks instead of hanging, mirroring a real collective mismatch.
+
+use std::borrow::Cow;
+use std::collections::{HashMap, VecDeque};
+
+use super::clock::{join_f64, split_f64, Lane, SimClock, TraceEvent};
+use super::AlgoSelection;
+use crate::collectives::{CommCost, CommPrimitive};
+
+/// Index into a rank's handle slab (sized by [`RankProgram::handles`]).
+pub(crate) type HandleId = usize;
+
+/// Index into the interned group table passed to [`run_programs`].
+pub(crate) type GroupId = usize;
+
+/// Which measured accumulator a [`EngineOp::Wait`] adds its
+/// `(hidden, exposed)` split to — mirrors the two accumulator pairs of the
+/// executed step skeleton.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WaitAcc {
+    /// Layer/grad communication: `hidden_us` / `exposed_us`.
+    Comm,
+    /// Context-parallel ring steps: `cp_hidden_us` / `cp_exposed_us`.
+    Cp,
+}
+
+/// One instruction of a compiled rank program. Payload-free: ops carry
+/// only durations, byte counts and static labels, so interpreting one
+/// never allocates.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum EngineOp {
+    /// [`super::Communicator::advance`]: charge `us > 0` of labelled
+    /// compute to the main lane.
+    Advance { label: &'static str, us: f64 },
+    /// [`super::Communicator::charge_comm_i`]: rendezvous `group` on
+    /// `max(main lane, comm frontier)`, occupy the comm lane for
+    /// `max(us)` over the group, park the handle.
+    CommCharge { label: &'static str, group: GroupId, midx: usize, us: f64, handle: HandleId },
+    /// [`super::Communicator::charge_collective_bg`]: rendezvous, price
+    /// `prim` from the folded byte counts, bill the grad-sync lane, park
+    /// the handle. Only emitted for groups of two or more ranks.
+    BgCharge {
+        label: &'static str,
+        prim: CommPrimitive,
+        group: GroupId,
+        midx: usize,
+        bytes: f64,
+        handle: HandleId,
+    },
+    /// [`super::Communicator::wait_split`] on a parked handle, adding the
+    /// `(hidden, exposed)` split to accumulator `acc`.
+    Wait { handle: HandleId, acc: WaitAcc },
+    /// Tagged p2p send of `bytes` billed bytes (payload-free).
+    Send { dst: usize, tag: u64, bytes: f64 },
+    /// Tagged p2p receive: parks until the matching send, then advances
+    /// the main lane to the arrival time, recording any exposed wait.
+    Recv { src: usize, tag: u64 },
+    /// Open a busy span at the current main-lane time (pipeline op start).
+    SpanOpen,
+    /// Close the busy span, accumulating `now − open` into `busy_us`.
+    SpanClose,
+    /// Capture the current main-lane time as `pipeline_us` (end of the
+    /// pipeline phase, before grad-tail drain and the optimizer).
+    MarkPipeline,
+}
+
+/// One rank's compiled program.
+#[derive(Debug, Default)]
+pub(crate) struct RankProgram {
+    pub(crate) ops: Vec<EngineOp>,
+    /// Handle-slab size: the number of distinct [`HandleId`]s the ops use.
+    pub(crate) handles: usize,
+}
+
+/// Per-rank measurements, mirroring the thread engine's rank outcome.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RankStats {
+    pub(crate) pipeline_us: f64,
+    pub(crate) finish_us: f64,
+    pub(crate) busy_us: f64,
+    pub(crate) hidden_us: f64,
+    pub(crate) exposed_us: f64,
+    pub(crate) cp_hidden_us: f64,
+    pub(crate) cp_exposed_us: f64,
+}
+
+/// A parked nonblocking-communication handle (the payload-free twin of
+/// [`super::CommHandle`]).
+#[derive(Debug, Clone, Copy)]
+struct Handle {
+    end_us: f64,
+    dur_us: f64,
+    label: &'static str,
+    cat: &'static str,
+}
+
+const NO_HANDLE: Handle = Handle { end_us: 0.0, dur_us: 0.0, label: "", cat: "wait" };
+
+/// One rank's interpreter state.
+struct Task {
+    pc: usize,
+    /// Deposited rendezvous result `(t_start, sum, max)`; consumed by the
+    /// charge op at `pc` when it re-executes after the group completes.
+    sync: Option<(f64, f64, f64)>,
+    handles: Vec<Handle>,
+    stats: RankStats,
+    span_open: f64,
+    done: bool,
+}
+
+/// Undelivered sends for one receiving rank, keyed by `(src, tag)`;
+/// values are `(sent_at, billed_bytes)` in send order.
+type Mailbox = HashMap<(usize, u64), VecDeque<(f64, f64)>>;
+
+/// An in-progress group rendezvous: per-member `(issue time, value)`
+/// arrivals, keyed by member index. Because every member of a group runs
+/// the same charge sequence, instances of the same collective pair up by
+/// arrival exactly like the thread engine's FIFO control messages.
+struct Rendezvous {
+    vals: Vec<Option<(f64, f64)>>,
+    arrived: usize,
+}
+
+/// Fold arrivals exactly as [`super::Communicator::clock_sync`] does: the
+/// leader (member 0) contributes exact `f64`s; every peer contribution is
+/// rounded through the `f32`-pair message encoding, in member order.
+/// Returns the leader's exact result and the rounded peer reply.
+fn fold_sync(vals: &[Option<(f64, f64)>]) -> ((f64, f64, f64), (f64, f64, f64)) {
+    let (t0, v0) = vals[0].expect("leader arrival");
+    let mut t_max = t0;
+    let mut sum = v0;
+    let mut max = v0;
+    for val in &vals[1..] {
+        let (tj, vj) = val.expect("member arrival");
+        let [th, tl] = split_f64(tj);
+        let pt = join_f64(th, tl);
+        let [vh, vl] = split_f64(vj);
+        let pv = join_f64(vh, vl);
+        if pt > t_max {
+            t_max = pt;
+        }
+        sum += pv;
+        if pv > max {
+            max = pv;
+        }
+    }
+    let [th, tl] = split_f64(t_max);
+    let [sh, sl] = split_f64(sum);
+    let [mh, ml] = split_f64(max);
+    let peer = (join_f64(th, tl), join_f64(sh, sl), join_f64(mh, ml));
+    ((t_max, sum, max), peer)
+}
+
+/// Interpret one compiled program per rank on a fresh [`SimClock`],
+/// returning per-rank stats and the drained trace. `groups` is the
+/// interned table [`EngineOp::CommCharge`]/[`EngineOp::BgCharge`] index
+/// into; members must be sorted ascending with the leader first, exactly
+/// as the thread engine's groups are.
+pub(crate) fn run_programs(
+    cost: CommCost,
+    algos: AlgoSelection,
+    groups: &[Vec<usize>],
+    programs: &[RankProgram],
+) -> (Vec<RankStats>, Vec<TraceEvent>) {
+    let world = programs.len();
+    let clock = SimClock::new(world, cost);
+    let mut tasks: Vec<Task> = programs
+        .iter()
+        .map(|p| Task {
+            pc: 0,
+            sync: None,
+            handles: vec![NO_HANDLE; p.handles],
+            stats: RankStats::default(),
+            span_open: 0.0,
+            done: false,
+        })
+        .collect();
+    let mut mail: Vec<Mailbox> = (0..world).map(|_| HashMap::new()).collect();
+    // What a parked receiver is waiting for, if anything.
+    let mut parked_recv: Vec<Option<(usize, u64)>> = vec![None; world];
+    let mut rendezvous: HashMap<GroupId, Rendezvous> = HashMap::new();
+    let mut ready: VecDeque<usize> = (0..world).collect();
+    let mut queued = vec![true; world];
+
+    while let Some(rank) = ready.pop_front() {
+        queued[rank] = false;
+        loop {
+            let pc = tasks[rank].pc;
+            let Some(op) = programs[rank].ops.get(pc) else {
+                tasks[rank].done = true;
+                tasks[rank].stats.finish_us = clock.now(rank);
+                break;
+            };
+            match *op {
+                EngineOp::Advance { label, us } => {
+                    debug_assert!(us > 0.0, "zero advances are elided at build time");
+                    let start = clock.advance(rank, us);
+                    clock.record(rank, label, "compute", Lane::Main, start, us);
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::SpanOpen => {
+                    tasks[rank].span_open = clock.now(rank);
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::SpanClose => {
+                    let open = tasks[rank].span_open;
+                    let now = clock.now(rank);
+                    tasks[rank].stats.busy_us += now - open;
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::MarkPipeline => {
+                    tasks[rank].stats.pipeline_us = clock.now(rank);
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::Wait { handle, acc } => {
+                    let h = tasks[rank].handles[handle];
+                    let now = clock.now(rank);
+                    let exposed = if h.end_us > now {
+                        let exposed = h.end_us - now;
+                        clock.set(rank, h.end_us);
+                        if !h.label.is_empty() {
+                            clock.record(rank, h.label, h.cat, Lane::Main, now, exposed);
+                        }
+                        exposed
+                    } else {
+                        0.0
+                    };
+                    let hidden = (h.dur_us - exposed.min(h.dur_us)).max(0.0);
+                    let stats = &mut tasks[rank].stats;
+                    match acc {
+                        WaitAcc::Comm => {
+                            stats.hidden_us += hidden;
+                            stats.exposed_us += exposed;
+                        }
+                        WaitAcc::Cp => {
+                            stats.cp_hidden_us += hidden;
+                            stats.cp_exposed_us += exposed;
+                        }
+                    }
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::Send { dst, tag, bytes } => {
+                    let sent_at = clock.now(rank);
+                    mail[dst].entry((rank, tag)).or_default().push_back((sent_at, bytes));
+                    if parked_recv[dst] == Some((rank, tag)) {
+                        parked_recv[dst] = None;
+                        if !queued[dst] {
+                            ready.push_back(dst);
+                            queued[dst] = true;
+                        }
+                    }
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::Recv { src, tag } => {
+                    let msg = mail[rank].get_mut(&(src, tag)).and_then(|q| q.pop_front());
+                    let Some((sent_at, bytes)) = msg else {
+                        parked_recv[rank] = Some((src, tag));
+                        break;
+                    };
+                    let arrival = sent_at + clock.cost.p2p(src, rank, bytes);
+                    let now = clock.now(rank);
+                    if arrival > now {
+                        clock.set(rank, arrival);
+                        clock.record(
+                            rank,
+                            Cow::Owned(format!("recv<-{src}")),
+                            "p2p",
+                            Lane::Main,
+                            now,
+                            arrival - now,
+                        );
+                    }
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::CommCharge { label, group, midx, us, handle } => {
+                    let members = &groups[group];
+                    let sync = if members.len() <= 1 {
+                        let t = clock.now(rank).max(clock.lane_free_at(rank, Lane::Comm));
+                        (t, us, us)
+                    } else if let Some(sync) = tasks[rank].sync.take() {
+                        sync
+                    } else {
+                        let t = clock.now(rank).max(clock.lane_free_at(rank, Lane::Comm));
+                        if arrive(&mut rendezvous, group, members.len(), midx, t, us) {
+                            complete(&mut rendezvous, group, members, &mut tasks);
+                            wake(members, rank, &mut ready, &mut queued);
+                            continue; // re-execute this op; `sync` is now set
+                        }
+                        break; // parked until the group completes
+                    };
+                    let (t_start, _, dur) = sync;
+                    clock.bill_lane(rank, Lane::Comm, label, t_start, dur);
+                    tasks[rank].handles[handle] =
+                        Handle { end_us: t_start + dur, dur_us: dur, label, cat: "wait" };
+                    tasks[rank].pc += 1;
+                }
+                EngineOp::BgCharge { label, prim, group, midx, bytes, handle } => {
+                    let members = &groups[group];
+                    debug_assert!(members.len() > 1, "singleton bg charges are elided");
+                    let sync = if let Some(sync) = tasks[rank].sync.take() {
+                        sync
+                    } else {
+                        let t = clock.now(rank).max(clock.lane_free_at(rank, Lane::Bg));
+                        if arrive(&mut rendezvous, group, members.len(), midx, t, bytes) {
+                            complete(&mut rendezvous, group, members, &mut tasks);
+                            wake(members, rank, &mut ready, &mut queued);
+                            continue;
+                        }
+                        break;
+                    };
+                    let (t_start, sum, max) = sync;
+                    // The Communicator tail's byte-count conventions and
+                    // algorithm dispatch, verbatim.
+                    let fold = match prim {
+                        CommPrimitive::AllToAll | CommPrimitive::Broadcast => max,
+                        _ => sum / members.len() as f64,
+                    };
+                    let algo = match prim {
+                        CommPrimitive::AllReduce => algos.all_reduce,
+                        CommPrimitive::AllGather => algos.all_gather,
+                        CommPrimitive::ReduceScatter => algos.reduce_scatter,
+                        CommPrimitive::AllToAll => algos.all_to_all,
+                        CommPrimitive::Broadcast => algos.broadcast,
+                    };
+                    let price = clock.cost.price(prim, algo, members, fold);
+                    clock.bill_lane(rank, Lane::Bg, label, t_start, price);
+                    tasks[rank].handles[handle] =
+                        Handle { end_us: t_start + price, dur_us: price, label, cat: "wait" };
+                    tasks[rank].pc += 1;
+                }
+            }
+        }
+    }
+
+    let stuck: Vec<(usize, usize)> =
+        tasks.iter().enumerate().filter(|(_, t)| !t.done).map(|(r, t)| (r, t.pc)).collect();
+    assert!(
+        stuck.is_empty(),
+        "event engine deadlock: {} rank(s) never finished (first stuck: rank {} at pc {})",
+        stuck.len(),
+        stuck.first().map(|s| s.0).unwrap_or(0),
+        stuck.first().map(|s| s.1).unwrap_or(0),
+    );
+
+    let stats = tasks.into_iter().map(|t| t.stats).collect();
+    let trace = clock.take_events();
+    (stats, trace)
+}
+
+/// Record one member's arrival at a group rendezvous; returns `true` when
+/// this arrival completes the group.
+fn arrive(
+    rendezvous: &mut HashMap<GroupId, Rendezvous>,
+    gid: GroupId,
+    n: usize,
+    midx: usize,
+    t: f64,
+    v: f64,
+) -> bool {
+    let entry = rendezvous
+        .entry(gid)
+        .or_insert_with(|| Rendezvous { vals: vec![None; n], arrived: 0 });
+    debug_assert!(entry.vals[midx].is_none(), "double arrival at rendezvous");
+    entry.vals[midx] = Some((t, v));
+    entry.arrived += 1;
+    entry.arrived == n
+}
+
+/// Fold a completed rendezvous and deposit each member's result (exact for
+/// the leader, `f32`-rounded for peers) into its task.
+fn complete(
+    rendezvous: &mut HashMap<GroupId, Rendezvous>,
+    gid: GroupId,
+    members: &[usize],
+    tasks: &mut [Task],
+) {
+    let entry = rendezvous.remove(&gid).expect("completed rendezvous");
+    let (leader, peer) = fold_sync(&entry.vals);
+    for (midx, &member) in members.iter().enumerate() {
+        tasks[member].sync = Some(if midx == 0 { leader } else { peer });
+    }
+}
+
+/// Re-queue every parked member of a completed rendezvous except the
+/// caller (who continues inline).
+fn wake(members: &[usize], caller: usize, ready: &mut VecDeque<usize>, queued: &mut [bool]) {
+    for &member in members {
+        if member != caller && !queued[member] {
+            ready.push_back(member);
+            queued[member] = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_ranks_on, Fabric};
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn cost2() -> CommCost {
+        CommCost::new(ClusterSpec::eos(2))
+    }
+
+    /// A two-rank comm-lane charge bills bit-identically to
+    /// `Communicator::charge_comm_i` + `wait_split` on the thread engine,
+    /// including the skewed-issue rendezvous and the exposed-wait record.
+    #[test]
+    fn comm_charge_matches_thread_engine() {
+        let fabric = Fabric::new_clocked(2, AlgoSelection::fast(), cost2());
+        let splits = run_ranks_on(&fabric, |rank, comm| {
+            comm.advance("warm", 5.0 * rank as f64 + 1.0);
+            let h = comm.charge_comm_i("x", &[0, 1], 7.0);
+            comm.advance("body", 2.0);
+            comm.wait_split(h)
+        });
+        let ref_times = fabric.sim_times_us();
+        let ref_trace = fabric.take_trace();
+
+        let mut programs = Vec::new();
+        for rank in 0..2usize {
+            let warm = EngineOp::Advance { label: "warm", us: 5.0 * rank as f64 + 1.0 };
+            let charge =
+                EngineOp::CommCharge { label: "x", group: 0, midx: rank, us: 7.0, handle: 0 };
+            let body = EngineOp::Advance { label: "body", us: 2.0 };
+            let wait = EngineOp::Wait { handle: 0, acc: WaitAcc::Comm };
+            programs.push(RankProgram { ops: vec![warm, charge, body, wait], handles: 1 });
+        }
+        let groups = [vec![0usize, 1]];
+        let (stats, trace) = run_programs(cost2(), AlgoSelection::fast(), &groups, &programs);
+
+        for rank in 0..2 {
+            let (hidden, exposed) = splits[rank];
+            assert_eq!(stats[rank].hidden_us.to_bits(), hidden.to_bits(), "hidden r{rank}");
+            assert_eq!(stats[rank].exposed_us.to_bits(), exposed.to_bits(), "exposed r{rank}");
+            assert_eq!(stats[rank].finish_us.to_bits(), ref_times[rank].to_bits(), "t r{rank}");
+        }
+        assert_eq!(trace.len(), ref_trace.len());
+        for (a, b) in trace.iter().zip(&ref_trace) {
+            assert_eq!((a.rank, &a.name, a.cat, a.lane), (b.rank, &b.name, b.cat, b.lane));
+            assert_eq!(a.ts_us.to_bits(), b.ts_us.to_bits(), "ts of {}", a.name);
+            assert_eq!(a.dur_us.to_bits(), b.dur_us.to_bits(), "dur of {}", a.name);
+        }
+    }
+
+    /// Sends wake parked receivers; a rank can also forward to itself
+    /// (pp=1 interleaved schedules send chunk hand-offs self-to-self).
+    #[test]
+    fn p2p_delivery_and_self_send() {
+        let p0 = RankProgram {
+            ops: vec![
+                EngineOp::Advance { label: "a", us: 3.0 },
+                EngineOp::Send { dst: 1, tag: 9, bytes: 0.0 },
+                EngineOp::Send { dst: 0, tag: 1, bytes: 0.0 },
+                EngineOp::Recv { src: 0, tag: 1 },
+            ],
+            handles: 0,
+        };
+        let p1 = RankProgram {
+            ops: vec![
+                EngineOp::Recv { src: 0, tag: 9 },
+                EngineOp::Advance { label: "b", us: 1.0 },
+            ],
+            handles: 0,
+        };
+        let (stats, _) = run_programs(cost2(), AlgoSelection::fast(), &[], &[p0, p1]);
+        // Rank 1 parked until rank 0's send at t=3, then computed 1 µs.
+        assert!(stats[1].finish_us >= 4.0 - 1e-9, "finish {}", stats[1].finish_us);
+        assert!(stats[0].finish_us >= 3.0 - 1e-9);
+    }
+
+    /// A receive that can never be satisfied panics with a deadlock
+    /// diagnostic instead of hanging the step.
+    #[test]
+    #[should_panic(expected = "event engine deadlock")]
+    fn unmatched_recv_panics() {
+        let stuck = RankProgram { ops: vec![EngineOp::Recv { src: 0, tag: 42 }], handles: 0 };
+        run_programs(cost2(), AlgoSelection::fast(), &[], &[stuck]);
+    }
+}

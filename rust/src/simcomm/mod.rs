@@ -89,9 +89,11 @@
 
 mod algos;
 mod clock;
+pub(crate) mod engine;
 
 pub use clock::{chrome_trace_json, Lane, TraceEvent};
 
+use std::borrow::Cow;
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -441,8 +443,10 @@ pub struct CommHandle {
     end_us: f64,
     /// Duration of the comm span, µs (0 unclocked).
     dur_us: f64,
-    /// Label recorded on the main lane if the wait is exposed.
-    label: String,
+    /// Label recorded on the main lane if the wait is exposed. `Cow` so
+    /// the static-labelled hot paths (executed skeletons, grad buckets)
+    /// never allocate per handle.
+    label: Cow<'static, str>,
     /// Trace category of the exposed wait (`wait` or `p2p`).
     cat: &'static str,
 }
@@ -450,7 +454,7 @@ pub struct CommHandle {
 impl CommHandle {
     /// An already-complete handle (unclocked fabrics, degenerate groups).
     pub fn completed() -> Self {
-        Self { end_us: 0.0, dur_us: 0.0, label: String::new(), cat: "wait" }
+        Self { end_us: 0.0, dur_us: 0.0, label: Cow::Borrowed(""), cat: "wait" }
     }
 
     /// Simulated completion time of the communication, µs.
@@ -669,7 +673,7 @@ impl Communicator {
                 CommHandle {
                     end_us: msg.sent_at + cost,
                     dur_us: cost,
-                    label: format!("recv<-{}", msg.src),
+                    label: Cow::Owned(format!("recv<-{}", msg.src)),
                     cat: "p2p",
                 }
             }
@@ -691,7 +695,7 @@ impl Communicator {
             let exposed = h.end_us - now;
             clock.set(self.rank, h.end_us);
             if !h.label.is_empty() {
-                clock.record(self.rank, &h.label, h.cat, clock::Lane::Main, now, exposed);
+                clock.record(self.rank, h.label, h.cat, clock::Lane::Main, now, exposed);
             }
             exposed
         } else {
@@ -802,8 +806,9 @@ impl Communicator {
     }
 
     /// Charge `us` microseconds of local compute under `label`. No-op on
-    /// unclocked fabrics.
-    pub fn advance(&self, label: &str, us: f64) {
+    /// unclocked fabrics. The label is `&'static` so the per-span record
+    /// is allocation-free (every call site labels with a literal).
+    pub fn advance(&self, label: &'static str, us: f64) {
         if let Some(clock) = &self.fabric.clock {
             if us > 0.0 {
                 let start = clock.advance(self.rank, us);
@@ -841,7 +846,7 @@ impl Communicator {
     /// on unclocked fabrics.
     pub fn charge_collective(
         &self,
-        label: &str,
+        label: &'static str,
         prim: CommPrimitive,
         group: &[usize],
         my_bytes: f64,
@@ -858,7 +863,7 @@ impl Communicator {
     /// collective).
     pub fn charge_collective_i(
         &self,
-        label: &str,
+        label: &'static str,
         prim: CommPrimitive,
         group: &[usize],
         my_bytes: f64,
@@ -879,7 +884,7 @@ impl Communicator {
     /// executed step estimator issues its bucketed DP/EDP grad-reduce on.
     pub fn charge_collective_bg(
         &self,
-        label: &str,
+        label: &'static str,
         prim: CommPrimitive,
         group: &[usize],
         my_bytes: f64,
@@ -899,7 +904,7 @@ impl Communicator {
     /// phases are priced upstream (the layer coster's a2a time) rather than
     /// re-priced from bytes. Returns a completed handle when `us <= 0` or
     /// the fabric is unclocked.
-    pub fn charge_comm_i(&self, label: &str, group: &[usize], us: f64) -> CommHandle {
+    pub fn charge_comm_i(&self, label: &'static str, group: &[usize], us: f64) -> CommHandle {
         let Some(clock) = &self.fabric.clock else {
             return CommHandle::completed();
         };
@@ -908,7 +913,7 @@ impl Communicator {
         }
         let (t_start, _, dur) = self.clock_sync(Lane::Comm, group, us);
         clock.bill_lane(self.rank, Lane::Comm, label, t_start, dur);
-        CommHandle { end_us: t_start + dur, dur_us: dur, label: label.to_string(), cat: "wait" }
+        CommHandle { end_us: t_start + dur, dur_us: dur, label: Cow::Borrowed(label), cat: "wait" }
     }
 
     /// Clock accounting for a collective that just moved real payloads:
@@ -935,7 +940,7 @@ impl Communicator {
     /// a [`CommHandle`] in `pending` instead.
     fn finish_collective(
         &self,
-        label: Option<&str>,
+        label: Option<&'static str>,
         prim: CommPrimitive,
         group: &[usize],
         my_bytes: f64,
@@ -947,7 +952,7 @@ impl Communicator {
     fn finish_collective_on(
         &self,
         lane: Lane,
-        label: Option<&str>,
+        label: Option<&'static str>,
         prim: CommPrimitive,
         group: &[usize],
         my_bytes: f64,
@@ -969,18 +974,18 @@ impl Communicator {
             CommPrimitive::Broadcast => self.algos.broadcast,
         };
         let cost = clock.cost.price(prim, algo, group, bytes);
-        let name: String = match label {
-            Some(l) => l.to_string(),
+        let name: Cow<'static, str> = match label {
+            Some(l) => Cow::Borrowed(l),
             None => {
                 let phase = self.phase.borrow();
                 if phase.is_empty() {
-                    prim.name().to_string()
+                    Cow::Borrowed(prim.name())
                 } else {
-                    phase.clone()
+                    Cow::Owned(phase.clone())
                 }
             }
         };
-        clock.bill_lane(self.rank, lane, &name, t_start, cost);
+        clock.bill_lane(self.rank, lane, name.clone(), t_start, cost);
         let end = t_start + cost;
         if self.nonblocking.get() {
             *self.pending.borrow_mut() =

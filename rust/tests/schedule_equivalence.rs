@@ -379,10 +379,11 @@ fn losses_bitwise_invariant_across_clock_overlap_vpp() {
     }
 }
 
-/// Large-world executed suite (≥ 128 ranks with interleaving + overlap) —
-/// run by the scheduled CI job: `cargo test --release -- --ignored`.
+/// Large-world executed suite (≥ 128 ranks with interleaving + overlap).
+/// Formerly `--ignored` (weekly CI) when each rank was an OS thread; the
+/// event engine (ISSUE 6) runs these worlds single-threaded, so the sweep
+/// is tier-1 now.
 #[test]
-#[ignore]
 fn large_world_interleaved_overlap_sweep() {
     let pm = PerfModel::default();
     let mut train = TrainConfig::paper_default(4096, 256);
