@@ -31,6 +31,7 @@ fn main() {
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     );
@@ -62,6 +63,7 @@ fn main() {
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     );

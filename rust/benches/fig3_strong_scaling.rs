@@ -19,6 +19,15 @@ fn main() {
         };
         print!("{}", coordinator::strong_scaling(&pm, &model, gpus).markdown());
     }
+    // Executed twin, capped at 64 GPUs so the bench stays laptop-sized:
+    // the tuned winner and its strided-EP twin on the clocked simulator
+    // (the full sweep is `moe-folding fig3 --executed`).
+    let qwen = ModelConfig::qwen2_57b_a14b();
+    println!("### {} — executed (capped at 64 GPUs)", qwen.name);
+    print!(
+        "{}",
+        coordinator::strong_scaling_executed(&pm, &qwen, &[64, 128], 64).markdown()
+    );
     let mut h = Harness::new();
     let m = ModelConfig::mixtral_8x22b_g8t8();
     h.bench("fig3/g8t8_1024gpu_point", || {

@@ -17,6 +17,15 @@ fn main() {
         println!("### {}", model.name);
         print!("{}", coordinator::strong_scaling(&pm, &model, gpus).markdown());
     }
+    // Executed twin, capped at 128 GPUs so the bench stays laptop-sized:
+    // measured step time of the tuned winner plus its strided-EP twin
+    // (the full sweep is `moe-folding table4 --executed`).
+    let mixtral = ModelConfig::mixtral_8x22b();
+    println!("### {} — executed (capped at 128 GPUs)", mixtral.name);
+    print!(
+        "{}",
+        coordinator::strong_scaling_executed(&pm, &mixtral, &[128, 256], 128).markdown()
+    );
     let mut h = Harness::new();
     let model = ModelConfig::mixtral_8x22b();
     h.bench("strong_scaling/mixtral_row", || {

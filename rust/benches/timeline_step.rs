@@ -10,7 +10,7 @@
 //! discrete-event engines at 128 and 1024 ranks.
 use std::time::Instant;
 
-use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::perfmodel::{
     execute_step, execute_step_traced_on, ExecEngine, PerfModel, Strategy,
 };
@@ -127,15 +127,70 @@ fn main() {
             executed.cp_exposed_us
         ));
     }
+    // Executed twins of the `fig3 --executed` / `table4 --executed` CLI
+    // commands (ISSUE 7): one capped scaling point per command, packed vs
+    // strided EP placement, so the placement axis has a measured
+    // trajectory in the artifact.
+    let twins = [
+        ("fig3-executed", ModelConfig::qwen2_57b_a14b(), 64, (2, 1, 4, 1, 4)),
+        ("table4-executed", ModelConfig::mixtral_8x22b(), 128, (2, 1, 8, 1, 8)),
+    ];
+    for (variant, model, gpus, (tp, cp, ep, etp, pp)) in twins {
+        let train = TrainConfig::paper_default(4096, 256);
+        for placement in [EpPlacement::Packed, EpPlacement::Strided] {
+            let cfg = ParallelConfig::new(gpus, tp, cp, ep, etp, pp).with_placement(placement);
+            let analytic = pm
+                .estimate(&model, cfg, &train, Strategy::MCoreFolding)
+                .expect("analytic estimate");
+            let t0 = Instant::now();
+            let executed = execute_step(&pm, &model, cfg, &train, Strategy::MCoreFolding)
+                .expect("executed step");
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "{variant:<16} {}   analytic {:8.1} ms   ({}, harness wall {wall_ms:.0} ms)",
+                executed.summary(),
+                analytic.step_ms,
+                cfg.tag()
+            );
+            let pname = if placement == EpPlacement::Strided {
+                "strided"
+            } else {
+                "packed"
+            };
+            rows.push(format!(
+                "{{\"model\":\"{}\",\"gpus\":{gpus},\"config\":\"{}\",\
+                 \"variant\":\"{variant}\",\"placement\":\"{pname}\",\
+                 \"sim_step_ms\":{:.3},\"analytic_step_ms\":{:.3},\
+                 \"sim_mfu\":{:.5},\"analytic_mfu\":{:.5},\
+                 \"harness_wall_ms\":{wall_ms:.1}}}",
+                model.name,
+                cfg.tag(),
+                executed.step_ms,
+                analytic.step_ms,
+                executed.mfu,
+                analytic.mfu
+            ));
+        }
+    }
     // Engine throughput (ISSUE 6): wall-clock cost of *running the
     // simulation itself* on both execution engines, at 128 and 1024 ranks.
     // `rank_steps_per_sec` = simulated rank-steps per harness second —
     // the scaling headroom metric for the event engine vs thread-per-rank.
+    // The 4096-rank world runs events-only (ISSUE 7): thread-per-rank
+    // would need one OS thread per rank, the event engine needs one total.
     let model = ModelConfig::mixtral_8x22b();
-    for (gpus, gbs) in [(128usize, 256usize), (1024, 1024)] {
+    let both = &[ExecEngine::Threads, ExecEngine::Events][..];
+    let events_only = &[ExecEngine::Events][..];
+    for (gpus, gbs, engines) in
+        [(128usize, 256usize, both), (1024, 1024, both), (4096, 4096, events_only)]
+    {
         let cfg = ParallelConfig::new(gpus, 2, 1, 8, 1, 8).with_vpp(7);
         let train = TrainConfig::paper_default(4096, gbs);
-        for (engine, ename) in [(ExecEngine::Threads, "threads"), (ExecEngine::Events, "events")] {
+        for &engine in engines {
+            let ename = match engine {
+                ExecEngine::Threads => "threads",
+                ExecEngine::Events => "events",
+            };
             let t0 = Instant::now();
             let (executed, _) =
                 execute_step_traced_on(engine, &pm, &model, cfg, &train, Strategy::MCoreFolding)

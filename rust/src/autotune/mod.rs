@@ -9,7 +9,7 @@ use std::cmp::Ordering;
 use std::sync::mpsc;
 use std::thread;
 
-use crate::config::{ModelConfig, ParallelConfig, TrainConfig};
+use crate::config::{EpPlacement, ModelConfig, ParallelConfig, TrainConfig};
 use crate::perfmodel::{executed, ExecutedEstimate, PerfModel, StepEstimate, Strategy};
 
 /// Descending comparator that sorts NaN last. A NaN estimate (e.g. a
@@ -135,6 +135,11 @@ impl ExecutedTune {
 /// and as its fully **serialized twin** (all overlap off) — both paired
 /// with the matching analytic estimate — so the re-rank quantifies what
 /// overlap is worth per mapping, not just which mapping wins.
+///
+/// Multi-rank-EP candidates additionally execute as their
+/// [`EpPlacement::Strided`] twin (both overlap variants): same degrees,
+/// EP peers strided across nodes instead of packed inside them, so the
+/// re-rank prices the placement axis itself.
 pub fn tune_executed(
     pm: &PerfModel,
     model: &ModelConfig,
@@ -150,36 +155,44 @@ pub fn tune_executed(
     serial_train.overlap_a2a = false;
     let mut candidates: Vec<ExecutedCandidate> = Vec::new();
     for e in analytic.feasible.iter().take(top_k) {
-        for (overlap, tc) in [(true, train), (false, &serial_train)] {
-            // Pair each variant with its *matching* analytic estimate (the
-            // serialized twin drops the analytic overlap credit too).
-            let paired = if overlap {
-                e.clone()
-            } else {
-                match pm.estimate(model, e.config, tc, strategy) {
-                    Ok(a) => a,
-                    Err(err) => {
-                        eprintln!(
-                            "tune_executed: {} serialized twin failed to estimate, \
-                             dropped from re-rank: {err}",
-                            e.config.tag()
-                        );
-                        continue;
+        let mut placements = vec![EpPlacement::Packed];
+        if e.config.ep > 1 {
+            placements.push(EpPlacement::Strided);
+        }
+        for placement in placements {
+            let cfg = e.config.with_placement(placement);
+            for (overlap, tc) in [(true, train), (false, &serial_train)] {
+                // Pair each variant with its *matching* analytic estimate
+                // (the serialized twin drops the analytic overlap credit;
+                // the strided twin re-prices comm over strided groups).
+                let paired = if overlap && placement == EpPlacement::Packed {
+                    e.clone()
+                } else {
+                    match pm.estimate(model, cfg, tc, strategy) {
+                        Ok(a) => a,
+                        Err(err) => {
+                            eprintln!(
+                                "tune_executed: {} twin failed to estimate, \
+                                 dropped from re-rank: {err}",
+                                cfg.tag()
+                            );
+                            continue;
+                        }
                     }
+                };
+                match executed::execute_step(pm, model, cfg, tc, strategy) {
+                    Ok(x) => candidates.push(ExecutedCandidate {
+                        analytic: paired,
+                        executed: x,
+                        overlap,
+                    }),
+                    // Surface drops: a silently-shrunk survivor set would
+                    // make an execution failure look like "no rank change".
+                    Err(err) => eprintln!(
+                        "tune_executed: {} failed to execute, dropped from re-rank: {err}",
+                        cfg.tag()
+                    ),
                 }
-            };
-            match executed::execute_step(pm, model, e.config, tc, strategy) {
-                Ok(x) => candidates.push(ExecutedCandidate {
-                    analytic: paired,
-                    executed: x,
-                    overlap,
-                }),
-                // Surface drops: a silently-shrunk survivor set would make
-                // an execution failure look like "no rank change".
-                Err(err) => eprintln!(
-                    "tune_executed: {} failed to execute, dropped from re-rank: {err}",
-                    e.config.tag()
-                ),
             }
         }
     }
@@ -348,6 +361,47 @@ mod tests {
                 c.analytic.step_ms
             );
         }
+    }
+
+    /// The EP-placement axis: every multi-rank-EP candidate is re-ranked
+    /// against its strided twin, the twins' executed step times differ
+    /// measurably, and packing EP inside nodes never loses — the token
+    /// all-to-all rides NVLink instead of IB (the paper's placement
+    /// argument, now *executed* rather than assumed).
+    #[test]
+    fn executed_rerank_ranks_ep_placements() {
+        let pm = PerfModel::default();
+        let m = ModelConfig::qwen2_57b_a14b();
+        let t = TrainConfig::paper_default(4096, 256);
+        let r = tune_executed(&pm, &m, 64, &t, Strategy::MCoreFolding, 2);
+        let strided: Vec<&ExecutedCandidate> = r
+            .candidates
+            .iter()
+            .filter(|c| c.analytic.config.placement == EpPlacement::Strided)
+            .collect();
+        assert!(!strided.is_empty(), "ep > 1 candidates must get strided twins");
+        let mut strict_wins = 0;
+        for s in strided {
+            let packed = r
+                .candidates
+                .iter()
+                .find(|c| {
+                    c.analytic.config == s.analytic.config.with_placement(EpPlacement::Packed)
+                        && c.overlap == s.overlap
+                })
+                .expect("every strided twin pairs with a packed original");
+            assert!(
+                packed.executed.step_ms <= s.executed.step_ms + 1e-9,
+                "{}: packed {:.2} ms must not lose to strided {:.2} ms",
+                s.analytic.config.tag(),
+                packed.executed.step_ms,
+                s.executed.step_ms
+            );
+            if packed.executed.step_ms < s.executed.step_ms {
+                strict_wins += 1;
+            }
+        }
+        assert!(strict_wins > 0, "striding EP across nodes must cost executed step time");
     }
 
     /// Memory feasibility gate (ISSUE 5 satellite): the Table-3 folded

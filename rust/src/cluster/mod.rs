@@ -102,8 +102,11 @@ impl ClusterSpec {
         rank / self.gpus_per_node
     }
 
-    /// Classify the link between two global ranks.
-    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+    /// Classify the link between two global ranks. This is the fabric's
+    /// source of truth: the executed hierarchical collectives, the
+    /// per-link traffic counters, and the two-tier cost model all route
+    /// their "which wire does this cross?" question here.
+    pub fn link_of(&self, a: usize, b: usize) -> LinkKind {
         if a == b {
             LinkKind::Loopback
         } else if self.node_of(a) == self.node_of(b) {
@@ -111,6 +114,11 @@ impl ClusterSpec {
         } else {
             LinkKind::InfiniBand
         }
+    }
+
+    /// Alias for [`Self::link_of`] (the original name).
+    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+        self.link_of(a, b)
     }
 
     /// Number of distinct nodes spanned by a rank group.
@@ -185,6 +193,8 @@ mod tests {
         assert_eq!(c.link(0, 0), LinkKind::Loopback);
         assert_eq!(c.link(0, 7), LinkKind::NvLink);
         assert_eq!(c.link(0, 8), LinkKind::InfiniBand);
+        assert_eq!(c.link_of(7, 8), LinkKind::InfiniBand);
+        assert_eq!(c.link_of(8, 9), LinkKind::NvLink);
     }
 
     #[test]

@@ -193,12 +193,17 @@ impl CommCost {
         let t_local = bytes_per_rank * frac_local / self.nv_bw();
         let t_remote = bytes_per_rank * frac_remote / self.ib_bw();
         // NVSwitch traffic and NIC traffic proceed concurrently; the slower
-        // path dominates, plus per-peer launch latency.
+        // path dominates, plus per-peer launch latency. Latency is priced
+        // per rank *pair class*: intra-node peers launch over NVLink,
+        // cross-node peers over IB — a multi-node group still pays its
+        // NVLink launches (the old model charged one flat IB lump, which
+        // mispriced groups that are mostly intra-node).
         let bw_time = t_local.max(t_remote) * 1e6;
         let lat = if s.single_node() {
             self.cluster.nvlink_latency_us * (s.n as f64 - 1.0).min(8.0)
         } else {
-            self.cluster.ib_latency_us * (s.nodes as f64).min(16.0)
+            self.cluster.nvlink_latency_us * (s.local as f64 - 1.0).min(8.0)
+                + self.cluster.ib_latency_us * (s.nodes as f64).min(16.0)
         };
         bw_time + lat
     }
@@ -228,7 +233,100 @@ impl CommCost {
         self.all_gather(group, bytes / group.len().max(1) as f64)
     }
 
+    /// Per-phase price decomposition of the **hierarchical** algorithms:
+    /// one `(label, microseconds)` entry per fabric tier the algorithm
+    /// actually crosses, in execution order. The virtual clock bills the
+    /// phases back-to-back, so the trace shows *which wire* each slice of
+    /// a hierarchical collective occupied; by construction the phase sum
+    /// **is** the `price()` of the `Hierarchical*` algorithms (the
+    /// `*_with` arms below return exactly this sum).
+    ///
+    /// `bytes` follows the per-primitive convention of [`CommPrimitive`].
+    pub fn hierarchical_phases(
+        &self,
+        prim: CommPrimitive,
+        group: &[usize],
+        bytes: f64,
+    ) -> Vec<(&'static str, f64)> {
+        let s = GroupShape::of(&self.cluster, group);
+        if s.n <= 1 {
+            return Vec::new();
+        }
+        let nvlat = self.cluster.nvlink_latency_us;
+        let iblat = self.cluster.ib_latency_us;
+        let n = s.n as f64;
+        let local = s.local as f64;
+        let nodes = s.nodes as f64;
+        match prim {
+            CommPrimitive::AllReduce => {
+                if s.single_node() {
+                    let t = 2.0 * (n - 1.0) / n * bytes / self.nv_bw();
+                    return vec![("intra", t * 1e6 + 2.0 * (n - 1.0) * nvlat)];
+                }
+                // intra-node reduce-scatter → inter-node ring over node
+                // leaders (shard all-reduce) → intra-node all-gather.
+                let intra = (local - 1.0) / local * bytes / self.nv_bw() * 1e6
+                    + (local - 1.0) * nvlat;
+                let inter = 2.0 * (nodes - 1.0) / nodes * (bytes / local) / self.ib_bw() * 1e6
+                    + 2.0 * (nodes - 1.0) * iblat;
+                vec![("rs-intra", intra), ("inter", inter), ("ag-intra", intra)]
+            }
+            CommPrimitive::AllGather => {
+                let total = bytes * n;
+                if s.single_node() {
+                    let t = (n - 1.0) / n * total / self.nv_bw();
+                    return vec![("intra", t * 1e6 + (n - 1.0) * nvlat)];
+                }
+                // inter-node exchange among node leaders, then intra-node
+                // fan-out of the full concatenation.
+                let inter = (nodes - 1.0) / nodes * total / self.ib_bw() * 1e6
+                    + (nodes - 1.0) * iblat;
+                let intra = (local - 1.0) / local * total / self.nv_bw() * 1e6
+                    + (local - 1.0) * nvlat;
+                vec![("inter", inter), ("intra", intra)]
+            }
+            CommPrimitive::ReduceScatter => {
+                // Dual of AllGather with the shard as the contribution;
+                // phases run intra-first (gather raw buffers to leaders),
+                // then the inter-node shard exchange.
+                let mut phases =
+                    self.hierarchical_phases(CommPrimitive::AllGather, group, bytes / n);
+                phases.reverse();
+                phases
+            }
+            CommPrimitive::Broadcast => {
+                // Tree broadcast ≈ AG of bytes/n chunks (same approximation
+                // as the flat model): root → node leaders over IB, leaders →
+                // members over NVLink.
+                self.hierarchical_phases(CommPrimitive::AllGather, group, bytes / n)
+            }
+            CommPrimitive::AllToAll => {
+                let frac_remote = (s.n - s.local) as f64 / n;
+                let frac_local = (local - 1.0) / n;
+                let t_local = bytes * frac_local / self.nv_bw() * 1e6;
+                let t_remote = bytes * frac_remote / self.ib_bw() * 1e6;
+                if s.single_node() {
+                    return vec![("intra", t_local + nvlat * (n - 1.0).min(8.0))];
+                }
+                // Two-level a2a: intra-node exchange + per-node aggregation,
+                // then one bundled crossing per node pair. The IB phase only
+                // pays the slack beyond the (concurrent) NVSwitch time, and
+                // each leader launches `nodes-1` bundles instead of one
+                // message per remote rank.
+                let intra = t_local + nvlat * (local - 1.0).min(8.0);
+                let inter = (t_local.max(t_remote) - t_local).max(0.0)
+                    + iblat * (nodes - 1.0).min(16.0);
+                vec![("intra", intra), ("inter", inter)]
+            }
+        }
+    }
+
     // ---- algorithm-explicit costs (same names simcomm executes) --------
+
+    /// Phase sum — the price of the `Hierarchical*` algorithms.
+    fn hierarchical_price(&self, prim: CommPrimitive, group: &[usize], bytes: f64) -> f64 {
+        self.hierarchical_phases(prim, group, bytes).iter().map(|p| p.1).sum()
+    }
 
     /// The link the naive leader serializes on.
     fn leader_bw(&self, s: GroupShape) -> f64 {
@@ -253,6 +351,9 @@ impl CommCost {
                 let t = 2.0 * (s.n as f64 - 1.0) * bytes / self.leader_bw(s);
                 t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
             }
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_price(CommPrimitive::AllReduce, group, bytes)
+            }
             _ => self.all_reduce(group, bytes),
         }
     }
@@ -275,6 +376,9 @@ impl CommCost {
                 let t = ((n - 1.0) * bytes_per_rank + (n - 1.0) * n * bytes_per_rank)
                     / self.leader_bw(s);
                 t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
+            }
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_price(CommPrimitive::AllGather, group, bytes_per_rank)
             }
             _ => self.all_gather(group, bytes_per_rank),
         }
@@ -300,6 +404,9 @@ impl CommCost {
                     / self.leader_bw(s);
                 t * 1e6 + 2.0 * (n - 1.0) * self.lat(s)
             }
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_price(CommPrimitive::ReduceScatter, group, bytes_total_per_rank)
+            }
             _ => self.reduce_scatter(group, bytes_total_per_rank),
         }
     }
@@ -320,6 +427,9 @@ impl CommCost {
             CollectiveAlgo::NaiveLeader => {
                 let t = 2.0 * (s.n as f64 - 1.0) * bytes_per_rank / self.leader_bw(s);
                 t * 1e6 + 2.0 * (s.n as f64 - 1.0) * self.lat(s)
+            }
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_price(CommPrimitive::AllToAll, group, bytes_per_rank)
             }
             _ => self.all_to_all(group, bytes_per_rank),
         }
@@ -348,6 +458,9 @@ impl CommCost {
             CollectiveAlgo::NaiveLeader => {
                 let t = (s.n as f64 - 1.0) * bytes / self.leader_bw(s);
                 t * 1e6 + (s.n as f64 - 1.0) * self.lat(s)
+            }
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_price(CommPrimitive::Broadcast, group, bytes)
             }
             _ => self.broadcast(group, bytes),
         }
@@ -400,6 +513,78 @@ mod tests {
         let group: Vec<usize> = (0..8).collect();
         assert_eq!(cost.all_reduce(&group, 0.0), 2.0 * 7.0 * 3.0);
         assert_eq!(cost.all_gather(&group, 0.0), 7.0 * 3.0);
+    }
+
+    /// The a2a launch term is priced per rank-pair *class* (ISSUE 7
+    /// satellite): a multi-node group pays its NVLink launches for the
+    /// intra-node peers on top of the IB launches — pinned against the
+    /// two-tier closed form.
+    #[test]
+    fn a2a_latency_is_per_link_class() {
+        let cost = CommCost::new(ClusterSpec::eos(128));
+        let group: Vec<usize> = (0..128).collect();
+        // 16 nodes × 8 local: min(8-1, 8)·3 µs NVLink + min(16, 16)·8 µs IB.
+        assert_eq!(cost.all_to_all(&group, 0.0), 7.0 * 3.0 + 16.0 * 8.0);
+        // Single-node groups are untouched: min(8-1, 8) NVLink launches.
+        let cost8 = CommCost::new(ClusterSpec::eos(8));
+        let node: Vec<usize> = (0..8).collect();
+        assert_eq!(cost8.all_to_all(&node, 0.0), 7.0 * 3.0);
+        // One-rank-per-node groups have no intra-node peers: IB term only.
+        let spread: Vec<usize> = (0..16).map(|i| i * 8).collect();
+        assert_eq!(cost.all_to_all(&spread, 0.0), 16.0 * 8.0);
+        // The -v variant inherits the fix through its delegation.
+        assert_eq!(cost.all_to_all_v(&group, 0.0, 2.0), 7.0 * 3.0 + 16.0 * 8.0);
+    }
+
+    /// The hierarchical algorithms' per-phase decomposition sums exactly to
+    /// their `price()` for every primitive and for awkward shapes (partial
+    /// last node, non-power-of-two node counts, single node).
+    #[test]
+    fn hierarchical_phase_sum_is_price() {
+        let prims = [
+            CommPrimitive::AllReduce,
+            CommPrimitive::AllGather,
+            CommPrimitive::ReduceScatter,
+            CommPrimitive::AllToAll,
+            CommPrimitive::Broadcast,
+        ];
+        for world in [8usize, 12, 24, 128] {
+            let cost = CommCost::new(ClusterSpec::eos(world));
+            let group: Vec<usize> = (0..world).collect();
+            for prim in prims {
+                for bytes in [0.0, 4096.0, 64.0 * 1024.0 * 1024.0] {
+                    let phases = cost.hierarchical_phases(prim, &group, bytes);
+                    assert!(!phases.is_empty());
+                    let sum: f64 = phases.iter().map(|p| p.1).sum();
+                    let priced = cost.price(prim, CollectiveAlgo::Hierarchical, &group, bytes);
+                    assert_eq!(sum, priced, "{prim:?} world {world} bytes {bytes}");
+                    let priced_a2a =
+                        cost.price(prim, CollectiveAlgo::HierarchicalA2A, &group, bytes);
+                    assert_eq!(sum, priced_a2a, "{prim:?} world {world} bytes {bytes}");
+                }
+            }
+        }
+    }
+
+    /// Hierarchical prices stay sane: cheaper than the naive leader on a
+    /// multi-node group, and never free on a non-trivial one.
+    #[test]
+    fn hierarchical_price_beats_leader_across_nodes() {
+        let cost = CommCost::new(ClusterSpec::eos(64));
+        let group: Vec<usize> = (0..64).collect();
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        for prim in [
+            CommPrimitive::AllReduce,
+            CommPrimitive::AllGather,
+            CommPrimitive::ReduceScatter,
+            CommPrimitive::AllToAll,
+            CommPrimitive::Broadcast,
+        ] {
+            let hier = cost.price(prim, CollectiveAlgo::Hierarchical, &group, bytes);
+            let leader = cost.price(prim, CollectiveAlgo::NaiveLeader, &group, bytes);
+            assert!(hier > 0.0, "{prim:?}");
+            assert!(hier < leader, "{prim:?}: {hier} !< {leader}");
+        }
     }
 
     /// The β (bandwidth) term did not move: latency-free difference between

@@ -4,4 +4,4 @@ pub mod models;
 pub mod parallel;
 
 pub use models::{ModelConfig, TinyScale};
-pub use parallel::{DropPolicy, ParallelConfig, Precision, TrainConfig, ZeroStage};
+pub use parallel::{DropPolicy, EpPlacement, ParallelConfig, Precision, TrainConfig, ZeroStage};

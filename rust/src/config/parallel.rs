@@ -39,6 +39,22 @@ pub enum DropPolicy {
     SubSequence,
 }
 
+/// Where EP groups land relative to node boundaries (MoETuner's placement
+/// axis). The analytic and executed estimators price a collective by the
+/// link classes its group spans, so placement changes step time without
+/// changing any group size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EpPlacement {
+    /// EP is the fastest-varying MoE grid axis after ETP: an EP group is a
+    /// contiguous rank range, packed inside NVLink domains when
+    /// `ep · etp` fits in a node. The default (and the paper's choice).
+    Packed,
+    /// EP varies slower than EDP: EP peers sit `edp · etp` ranks apart, so
+    /// an EP group strides across nodes and its dispatch a2a crosses IB.
+    /// The deliberately-bad twin the autotuner ranks against packed.
+    Strided,
+}
+
 /// The 5-D hybrid parallel mapping.
 ///
 /// `dp` and `edp` are derived from the world size; they are not free knobs.
@@ -59,17 +75,25 @@ pub struct ParallelConfig {
     pub etp: usize,
     /// Virtual pipeline stages per rank (interleaved 1F1B). 1 = plain 1F1B.
     pub vpp: usize,
+    /// EP-group placement relative to node boundaries (MoE grid only).
+    pub placement: EpPlacement,
 }
 
 impl ParallelConfig {
     pub fn new(world_size: usize, tp: usize, cp: usize, ep: usize, etp: usize, pp: usize) -> Self {
-        Self { world_size, tp, cp, pp, ep, etp, vpp: 1 }
+        Self { world_size, tp, cp, pp, ep, etp, vpp: 1, placement: EpPlacement::Packed }
     }
 
     /// Same mapping with `vpp` virtual chunks per pipeline stage
     /// (interleaved 1F1B when `vpp > 1`).
     pub fn with_vpp(mut self, vpp: usize) -> Self {
         self.vpp = vpp;
+        self
+    }
+
+    /// Same mapping with a different EP placement.
+    pub fn with_placement(mut self, placement: EpPlacement) -> Self {
+        self.placement = placement;
         self
     }
 
@@ -160,6 +184,9 @@ impl ParallelConfig {
         );
         if self.vpp > 1 {
             t.push_str(&format!("VPP{}", self.vpp));
+        }
+        if self.placement == EpPlacement::Strided {
+            t.push_str("+strided");
         }
         t
     }
@@ -263,5 +290,15 @@ mod tests {
         assert_eq!(p.dp(), 8);
         assert_eq!(p.edp(), 8);
         assert!(p.tag().contains("TP2CP2EP2ETP2PP2"));
+    }
+
+    #[test]
+    fn strided_placement_tags_and_defaults() {
+        let p = ParallelConfig::new(64, 2, 1, 4, 1, 2);
+        assert_eq!(p.placement, EpPlacement::Packed);
+        assert!(!p.tag().contains("strided"));
+        let s = p.with_placement(EpPlacement::Strided);
+        assert!(s.tag().ends_with("+strided"));
+        assert_eq!(s.with_placement(EpPlacement::Packed), p);
     }
 }

@@ -8,7 +8,7 @@
 use crate::autotune::{self, Constraints, TuneResult};
 use crate::cluster::{ClusterSpec, GpuSpec};
 use crate::collectives::CommCost;
-use crate::config::{DropPolicy, ModelConfig, ParallelConfig, Precision, TrainConfig};
+use crate::config::{DropPolicy, EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
 use crate::dispatcher::{DistributedMoeLayer, MoePhaseCost, Router, RouterConfig};
 use crate::mapping::RuntimeTopology;
 use crate::metrics::{pct, Table};
@@ -139,6 +139,87 @@ pub fn strong_scaling(pm: &PerfModel, model: &ModelConfig, gpu_counts: &[usize])
                 r.table_cell(),
             ]);
         }
+    }
+    t
+}
+
+/// The **executed** counterpart of [`strong_scaling`] (Figure 3 / Table
+/// 4): tune each GPU count analytically with folding, execute the winner
+/// on the clocked simulator, and execute its strided-EP twin when the
+/// winner has `ep > 1` — so the scaling table carries the measured cost
+/// of the placement axis, not an assumed one. Points above `max_gpus`
+/// are skipped (the large points run on the event engine, but a laptop
+/// invocation may still want to cap the sweep).
+pub fn strong_scaling_executed(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpu_counts: &[usize],
+    max_gpus: usize,
+) -> Table {
+    let mut t = Table::new(&[
+        "GPUs",
+        "Config",
+        "Analytic MFU",
+        "Sim MFU",
+        "Step (ms)",
+        "Strided (ms)",
+    ]);
+    let train = TrainConfig::paper_default(4096, 1024);
+    for &gpus in gpu_counts {
+        if gpus > max_gpus {
+            continue;
+        }
+        let r = autotune::tune(pm, model, gpus, &train, Strategy::MCoreFolding);
+        let Some(best) = r.best else {
+            t.row(&[
+                gpus.to_string(),
+                "-".into(),
+                "OOM".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        let executed = match crate::perfmodel::execute_step(
+            pm,
+            model,
+            best.config,
+            &train,
+            Strategy::MCoreFolding,
+        ) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!(
+                    "fig3 --executed: {} failed to execute, row dropped: {e}",
+                    best.config.tag()
+                );
+                continue;
+            }
+        };
+        let strided = if best.config.ep > 1 {
+            let cfg = best.config.with_placement(EpPlacement::Strided);
+            match crate::perfmodel::execute_step(pm, model, cfg, &train, Strategy::MCoreFolding) {
+                Ok(x) => format!("{:.1}", x.step_ms),
+                Err(e) => {
+                    eprintln!(
+                        "fig3 --executed: {} failed to execute, column dropped: {e}",
+                        cfg.tag()
+                    );
+                    "-".into()
+                }
+            }
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            gpus.to_string(),
+            best.config.tag(),
+            pct(best.mfu),
+            pct(executed.mfu),
+            format!("{:.1}", executed.step_ms),
+            strided,
+        ]);
     }
     t
 }
@@ -276,6 +357,7 @@ pub fn fig5_breakdown_executed(
                 drop_policy: DropPolicy::Dropless,
                 capacity_override: None,
                 pad_to_capacity: false,
+                node_limit: None,
             },
             &mut rng,
         );
@@ -552,5 +634,20 @@ mod tests {
         let pm = PerfModel::default();
         let t = strong_scaling(&pm, &ModelConfig::qwen2_57b_a14b(), &[64, 128]);
         assert_eq!(t.rows.len(), 8);
+    }
+
+    /// Executed strong scaling (fig3/table4 `--executed`): the tuned
+    /// winner executes, and its strided-EP twin costs more simulated step
+    /// time — the placement axis measured on the clock, not assumed.
+    #[test]
+    fn strong_scaling_executed_prices_placement() {
+        let pm = PerfModel::default();
+        let t = strong_scaling_executed(&pm, &ModelConfig::qwen2_57b_a14b(), &[64, 128], 64);
+        assert_eq!(t.rows.len(), 1, "the 128-GPU point is capped away");
+        let row = &t.rows[0];
+        let step: f64 = row[4].parse().unwrap();
+        let strided: f64 = row[5].parse().unwrap();
+        assert!(step > 0.0);
+        assert!(strided > step, "strided {strided} ms must exceed packed {step} ms");
     }
 }

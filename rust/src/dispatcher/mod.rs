@@ -9,7 +9,7 @@ pub mod router;
 pub mod workflow;
 
 pub use permute::Permutation;
-pub use router::{Assignment, RouteDecision, Router, RouterConfig};
+pub use router::{Assignment, NodeLimit, RouteDecision, Router, RouterConfig};
 pub use workflow::{
     reference_moe_forward, DispatchScratch, DispatchStats, DistributedMoeLayer, MoePhaseCost,
 };
@@ -47,6 +47,7 @@ mod tests {
                 drop_policy: policy,
                 capacity_override: None,
                 pad_to_capacity,
+                node_limit: None,
             },
             &mut rng,
         )

@@ -4,6 +4,20 @@
 use crate::config::DropPolicy;
 use crate::train::math::softmax_rows;
 
+/// Node-limited routing à la DeepSeek-V3: expert ids are grouped into
+/// contiguous blocks of `experts_per_node` (the experts co-located on one
+/// node under packed EP placement), and each token may only route to
+/// experts inside its `max_nodes` highest-affinity blocks. Bounding the
+/// nodes a token's copies span bounds the cross-IB legs of the dispatch
+/// all-to-all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeLimit {
+    /// Maximum expert-node groups a token's k copies may span (M).
+    pub max_nodes: usize,
+    /// Experts per node group (contiguous expert-id blocks).
+    pub experts_per_node: usize,
+}
+
 /// Router configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct RouterConfig {
@@ -21,6 +35,10 @@ pub struct RouterConfig {
     /// bit-identical to the unpadded drop mode — only communication volume
     /// changes ([`crate::dispatcher::DispatchStats::tokens_padded`]).
     pub pad_to_capacity: bool,
+    /// Optional node-limited routing ([`NodeLimit`]). `None` routes over
+    /// all experts (the default, and the behaviour of every pre-existing
+    /// config).
+    pub node_limit: Option<NodeLimit>,
 }
 
 /// One routed token-copy: which expert, with what gate weight, and whether
@@ -138,6 +156,7 @@ impl Router {
         for t in 0..n {
             let row = &probs[t * e..(t + 1) * e];
             taken.iter_mut().for_each(|x| *x = false);
+            self.ban_out_of_node_experts(row, &mut taken);
             for _ in 0..k {
                 let best = argmax_untaken(row, &taken);
                 let p = row[best];
@@ -153,6 +172,45 @@ impl Router {
             }
         }
         out
+    }
+
+    /// Node-limited pre-selection (DeepSeek-V3 style): rank the contiguous
+    /// `experts_per_node` expert groups by summed finite gate affinity,
+    /// keep the token's top `max_nodes` groups, and mask every expert
+    /// outside them before top-k runs. NaN gates contribute nothing to a
+    /// group's affinity, so an all-NaN row degenerates to the lowest-id
+    /// groups — matching the argmax fallback top-k already uses. If the
+    /// config under-provisions (`max_nodes · experts_per_node < top_k`)
+    /// the group budget is widened just enough that selection stays
+    /// total. No-op without a `node_limit`.
+    fn ban_out_of_node_experts(&self, row: &[f32], taken: &mut [bool]) {
+        let Some(nl) = self.config.node_limit else { return };
+        let e = self.config.num_experts;
+        let k = self.config.top_k.min(e);
+        let per = nl.experts_per_node.clamp(1, e);
+        let groups = e.div_ceil(per);
+        let m = nl.max_nodes.max(1).max(k.div_ceil(per));
+        if m >= groups {
+            return;
+        }
+        let mut affinity = vec![0.0f32; groups];
+        for (j, &p) in row.iter().enumerate() {
+            if p.is_finite() {
+                affinity[j / per] += p;
+            }
+        }
+        // M rounds of the shared argmax, so tied and NaN group affinities
+        // break exactly like tied expert gates (lower id wins).
+        let mut group_taken = vec![false; groups];
+        for _ in 0..m {
+            let best = argmax_untaken(&affinity, &group_taken);
+            group_taken[best] = true;
+        }
+        for (j, t) in taken.iter_mut().enumerate() {
+            if !group_taken[j / per] {
+                *t = true;
+            }
+        }
     }
 
     /// The per-expert capacity for a `scope_tokens`-token drop scope:
@@ -279,6 +337,7 @@ mod tests {
             drop_policy: policy,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         }
     }
 
@@ -428,5 +487,84 @@ mod tests {
         let d1 = r.route(&t);
         let d2 = r.route(&t);
         assert_eq!(d1.assignments, d2.assignments);
+    }
+
+    /// A node limit spanning every group is the unrestricted router,
+    /// bit-for-bit.
+    #[test]
+    fn node_limit_spanning_all_nodes_is_identity() {
+        let mut rng = Rng::seed_from_u64(40);
+        let mut c = cfg(8, 2, 1.0, DropPolicy::SubSequence);
+        let r = Router::init(c, &mut rng);
+        c.node_limit = Some(NodeLimit { max_nodes: 4, experts_per_node: 2 });
+        let limited = Router::new(c, r.weight.clone());
+        let t = tokens(64, 16, 41);
+        assert_eq!(r.route(&t).assignments, limited.route(&t).assignments);
+    }
+
+    /// With `max_nodes = 1` every token's k copies land inside one
+    /// contiguous expert group.
+    #[test]
+    fn node_limit_confines_copies_to_top_groups() {
+        let mut rng = Rng::seed_from_u64(42);
+        let mut c = cfg(16, 4, 1.0, DropPolicy::Dropless);
+        c.node_limit = Some(NodeLimit { max_nodes: 1, experts_per_node: 4 });
+        let r = Router::init(c, &mut rng);
+        let d = r.route(&tokens(64, 16, 43));
+        for t in 0..64 {
+            let group = d.assignments[t * 4].expert / 4;
+            for j in 1..4 {
+                assert_eq!(d.assignments[t * 4 + j].expert / 4, group, "token {t}");
+            }
+        }
+    }
+
+    /// Group affinity is *summed* gate probability, so a group of several
+    /// good experts beats a group holding the single best expert.
+    #[test]
+    fn node_limit_ranks_groups_by_summed_affinity() {
+        let mut c = cfg(4, 1, 1.0, DropPolicy::Dropless);
+        c.node_limit = Some(NodeLimit { max_nodes: 1, experts_per_node: 2 });
+        let r = Router::new(c, vec![0.0; 16 * 4]);
+        // Group 0 = {0.40, 0.05} -> 0.45; group 1 = {0.30, 0.25} -> 0.55.
+        // Unrestricted top-1 is expert 0; node-limited picks group 1's
+        // best, expert 2.
+        let probs = [0.40f32, 0.05, 0.30, 0.25];
+        let a = r.topk(&probs, 1);
+        assert_eq!(a[0].expert, 2);
+        assert_eq!(a[0].prob, 0.30);
+    }
+
+    /// An all-NaN gate row under a node limit falls back to the lowest-id
+    /// groups and experts without panicking, like the unrestricted router.
+    #[test]
+    fn node_limit_nan_row_degenerates_to_lowest_groups() {
+        let mut c = cfg(8, 2, 1.0, DropPolicy::Dropless);
+        c.node_limit = Some(NodeLimit { max_nodes: 1, experts_per_node: 4 });
+        let r = Router::new(c, vec![0.0; 16 * 8]);
+        let probs = [f32::NAN; 8];
+        let a = r.topk(&probs, 1);
+        assert_eq!(a[0].expert, 0);
+        assert_eq!(a[1].expert, 1);
+        assert_eq!(a[0].prob, 0.0);
+    }
+
+    /// Under-provisioned limits (`max_nodes · experts_per_node < top_k`)
+    /// widen the group budget instead of running out of experts.
+    #[test]
+    fn node_limit_widens_when_under_provisioned() {
+        let mut c = cfg(8, 4, 1.0, DropPolicy::Dropless);
+        c.node_limit = Some(NodeLimit { max_nodes: 1, experts_per_node: 2 });
+        let r = Router::new(c, vec![0.0; 16 * 8]);
+        let d = r.route(&tokens(16, 16, 44));
+        assert_eq!(d.assignments.len(), 64);
+        // k=4 over 2-expert groups needs 2 groups; copies span exactly 2.
+        for t in 0..16 {
+            let mut groups: Vec<usize> =
+                (0..4).map(|j| d.assignments[t * 4 + j].expert / 2).collect();
+            groups.sort_unstable();
+            groups.dedup();
+            assert_eq!(groups.len(), 2, "token {t}");
+        }
     }
 }

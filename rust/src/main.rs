@@ -10,7 +10,7 @@
 
 use moe_folding::autotune::{self, Constraints};
 use moe_folding::cluster::ClusterSpec;
-use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::coordinator;
 use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::perfmodel::{execute_step_traced, PerfModel, Strategy};
@@ -35,15 +35,22 @@ COMMANDS:
                                      step (overlapped + serialized twin) on
                                      the event-driven clocked simulator
   timeline  --model <name> --gpus <n> --tp N --cp N --ep N --etp N --pp N
-            [--vpp N] [--no-overlap] [--overlap-a2a] [--strategy <s>]
+            [--vpp N] [--placement packed|strided] [--no-overlap]
+            [--overlap-a2a] [--strategy <s>]
             [--seq N] [--gbs N] [--out trace.json]
             execute one step on the clocked simulator and dump a
             chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev;
             rows per rank: main lane, comm lane, grad-sync lane; cp > 1
             shows each ring-attention KV step as an `attn/cp_ring` span
-            hidden under the `attn/core` chunks)
+            hidden under the `attn/core` chunks; --placement strided lands
+            EP groups across node boundaries to price the placement axis)
   mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
+  table4    [--executed [--max-gpus N]]   GPU scaling; --executed runs each
+            tuned winner (and its strided-EP twin) on the clocked simulator
+  fig3      [--model <name>] [--executed [--max-gpus N]]
+            strong scaling over the paper's per-model GPU counts;
+            --executed adds measured MFU/step plus the strided-EP twin
   fig5      [--model <name>] [--ep-etp 8|16]
             [--executed [--tokens N] [--overlap]]
             --overlap runs the chunk-pipelined dispatcher and splits the
@@ -176,6 +183,14 @@ fn main() -> moe_folding::util::error::Result<()> {
                 args.get_usize("pp", 8),
             )
             .with_vpp(args.get_usize("vpp", 1));
+            let cfg = match args.get_or("placement", "packed") {
+                "packed" => cfg,
+                "strided" => cfg.with_placement(EpPlacement::Strided),
+                other => {
+                    eprintln!("unknown placement {other} (want packed|strided)");
+                    std::process::exit(2);
+                }
+            };
             let strategy = parse_strategy(args.get_or("strategy", "folding"));
             let mut train_cfg = TrainConfig::paper_default(
                 args.get_usize("seq", model.seq_len),
@@ -246,13 +261,39 @@ fn main() -> moe_folding::util::error::Result<()> {
         "table2" => print!("{}", coordinator::table2(&pm).markdown()),
         "table3" => print!("{}", coordinator::table3(&pm).markdown()),
         "table4" => {
+            let executed = args.flag("executed");
+            let max_gpus = args.get_usize("max-gpus", 1024);
             for model in ModelConfig::paper_models() {
                 println!("## {}", model.name);
-                print!(
-                    "{}",
-                    coordinator::strong_scaling(&pm, &model, &[128, 256, 512, 1024]).markdown()
-                );
+                let t = if executed {
+                    coordinator::strong_scaling_executed(
+                        &pm,
+                        &model,
+                        &[128, 256, 512, 1024],
+                        max_gpus,
+                    )
+                } else {
+                    coordinator::strong_scaling(&pm, &model, &[128, 256, 512, 1024])
+                };
+                print!("{}", t.markdown());
             }
+        }
+        "fig3" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            // Figure 3 sweeps per-model GPU counts (the paper scales each
+            // model from its Table-1 budget up to 1024).
+            let counts: &[usize] = match model.name.as_str() {
+                n if n.starts_with("Llama3") => &[256, 512, 1024],
+                n if n.starts_with("Qwen2") => &[64, 128, 256, 512, 1024],
+                _ => &[128, 256, 512, 1024],
+            };
+            let t = if args.flag("executed") {
+                let max_gpus = args.get_usize("max-gpus", 1024);
+                coordinator::strong_scaling_executed(&pm, &model, counts, max_gpus)
+            } else {
+                coordinator::strong_scaling(&pm, &model, counts)
+            };
+            print!("{}", t.markdown());
         }
         "table5" => {
             for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {

@@ -33,7 +33,7 @@ use std::collections::BTreeMap;
 
 
 use crate::cluster::ClusterSpec;
-use crate::config::ParallelConfig;
+use crate::config::{EpPlacement, ParallelConfig};
 
 /// Named axes of the attention grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -110,15 +110,26 @@ impl ParallelMapping {
                 ("TP", config.tp),
             ],
         )?;
-        let moe_grid = Grid::new(
-            config.world_size,
-            &[
+        // Packed: `etp` then `ep` fastest, so an EP×ETP block is a
+        // contiguous rank range (inside a node when it fits). Strided
+        // (the [`EpPlacement`] twin): EP varies *slower* than EDP, so EP
+        // peers sit `edp·etp` ranks apart and the dispatch a2a crosses
+        // nodes — same group sizes, different wires.
+        let moe_axes: [(&str, usize); 4] = match config.placement {
+            EpPlacement::Packed => [
                 ("PP", config.pp),
                 ("EDP", config.edp()),
                 ("EP", config.ep),
                 ("ETP", config.etp),
             ],
-        )?;
+            EpPlacement::Strided => [
+                ("PP", config.pp),
+                ("EP", config.ep),
+                ("EDP", config.edp()),
+                ("ETP", config.etp),
+            ],
+        };
+        let moe_grid = Grid::new(config.world_size, &moe_axes)?;
         let mapping = Self {
             config,
             attention: attn_grid.group_set(),
@@ -138,6 +149,9 @@ impl ParallelMapping {
     /// This reproduces the pre-folding behaviour the ablations measure: with
     /// `tp·cp >= 8` the EP group members land on *different nodes*, pushing
     /// token All-to-All traffic onto InfiniBand (Figure 6).
+    ///
+    /// Ignores `config.placement`: the legacy layout predates the placement
+    /// axis and already strides EP by construction.
     pub fn legacy(config: ParallelConfig) -> Result<Self, String> {
         if config.etp != config.tp {
             return Err(format!(
@@ -416,6 +430,23 @@ mod tests {
     fn legacy_requires_coupling() {
         let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8); // etp != tp
         assert!(ParallelMapping::legacy(cfg).is_err());
+    }
+
+    /// The placement axis changes wires, not group sizes: strided EP peers
+    /// sit `edp·etp` ranks apart, so the same degrees that pack EP into a
+    /// node under [`EpPlacement::Packed`] span nodes under `Strided`.
+    #[test]
+    fn strided_placement_pushes_ep_across_nodes() {
+        let cluster = ClusterSpec::eos(128);
+        let packed = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        let strided = packed.with_placement(EpPlacement::Strided);
+        let mp = ParallelMapping::folded(packed).unwrap();
+        let ms = ParallelMapping::folded(strided).unwrap();
+        ms.check_invariants().unwrap();
+        ms.validate_pp_consistency().unwrap();
+        assert_eq!(mp.fold_report(&cluster).ep_nodes, 1);
+        let rep = ms.fold_report(&cluster);
+        assert!(rep.ep_nodes > 1, "strided EP should span nodes: {rep:?}");
     }
 
     #[test]

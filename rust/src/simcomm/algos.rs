@@ -35,6 +35,9 @@ impl Communicator {
         }
         match self.algos().all_gather {
             CollectiveAlgo::NaiveLeader => self.naive_all_gather_v(group, local, out),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_all_gather_v(group, local, out)
+            }
             _ => self.ring_all_gather_v(group, local, out),
         }
         self.clock_collective(CommPrimitive::AllGather, group, local.len() as f64);
@@ -126,6 +129,9 @@ impl Communicator {
         }
         match self.algos().all_reduce {
             CollectiveAlgo::NaiveLeader => self.naive_all_reduce_into(group, buf),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_all_reduce_into(group, buf)
+            }
             _ => self.chain_all_reduce_into(group, buf),
         }
         self.clock_collective(CommPrimitive::AllReduce, group, buf.len() as f64);
@@ -257,6 +263,9 @@ impl Communicator {
         let counts = vec![shard; n];
         match self.algos().reduce_scatter {
             CollectiveAlgo::NaiveLeader => self.naive_reduce_scatter_v(group, local, &counts, out),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_reduce_scatter_v(group, local, &counts, out)
+            }
             CollectiveAlgo::RecursiveHalving if n.is_power_of_two() => {
                 self.halving_reduce_scatter(group, local, out)
             }
@@ -296,6 +305,9 @@ impl Communicator {
         }
         match self.algos().reduce_scatter {
             CollectiveAlgo::NaiveLeader => self.naive_reduce_scatter_v(group, local, counts, out),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_reduce_scatter_v(group, local, counts, out)
+            }
             // Variable shards break the halving size symmetry; pairwise
             // exchange is the variable-count workhorse for every fast suite.
             _ => self.pairwise_reduce_scatter_v(group, local, counts, out),
@@ -510,6 +522,9 @@ impl Communicator {
         out.resize_with(n, Vec::new);
         match self.algos().all_to_all {
             CollectiveAlgo::NaiveLeader => self.naive_all_to_all_v(group, sends, out),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.two_level_all_to_all_v(group, sends, out)
+            }
             _ => self.pairwise_all_to_all_v(group, sends, out),
         }
         let total: usize = sends.iter().map(|s| s.len()).sum();
@@ -583,6 +598,9 @@ impl Communicator {
         }
         match self.algos().broadcast {
             CollectiveAlgo::NaiveLeader => self.naive_broadcast_into(group, root, buf),
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                self.hierarchical_broadcast_into(group, root, buf)
+            }
             _ => self.ring_broadcast_into(group, root, buf),
         }
         self.clock_collective(CommPrimitive::Broadcast, group, buf.len() as f64);
@@ -627,5 +645,360 @@ impl Communicator {
             buf.resize(len, 0.0);
         }
         self.ring_chain_broadcast(group, root_idx, buf);
+    }
+
+    // =====================================================================
+    // Hierarchical (node-grouped) algorithms
+    // =====================================================================
+
+    /// Maximal runs of consecutive group members on the same node, as
+    /// `(start, end)` index ranges into `group` (ascending order). Groups
+    /// are sorted and `node_of` is monotone in rank, so each run is
+    /// exactly the slice of the group living in one NVLink domain; the
+    /// first member of each run acts as its node leader.
+    fn node_runs(&self, group: &[usize]) -> Vec<(usize, usize)> {
+        let topo = self.topology();
+        let mut runs = Vec::new();
+        let mut start = 0usize;
+        for i in 1..group.len() {
+            if topo.node_of(group[i]) != topo.node_of(group[start]) {
+                runs.push((start, i));
+                start = i;
+            }
+        }
+        runs.push((start, group.len()));
+        runs
+    }
+
+    /// Index of the run containing group index `me`.
+    fn run_of(runs: &[(usize, usize)], me: usize) -> usize {
+        runs.iter().position(|&(s, e)| me >= s && me < e).expect("index in some run")
+    }
+
+    /// Hierarchical AllReduce: members ship raw buffers to their node
+    /// leader over NVLink; leaders chain the partial sum across nodes in
+    /// ascending run order (run 0's left fold travels to run 1's leader,
+    /// which folds its run on top, …) so the total is the exact ascending
+    /// group-order fold the `NaiveLeader` oracle produces; the last leader
+    /// fans the result back out through the other leaders. Only the
+    /// leader chain and the fan-out cross IB.
+    fn hierarchical_all_reduce_into(&self, group: &[usize], buf: &mut [f32]) {
+        let runs = self.node_runs(group);
+        let me = self.my_index(group);
+        let ri = Self::run_of(&runs, me);
+        let (start, end) = runs[ri];
+        let leader = group[start];
+        if me != start {
+            self.send_slice(leader, buf);
+            let full = self.recv_take(leader);
+            buf.copy_from_slice(&full);
+            self.release(full);
+            return;
+        }
+        let mut acc = if ri == 0 {
+            let mut a = self.take_buf(buf.len());
+            a.extend_from_slice(buf);
+            a
+        } else {
+            let mut a = self.recv_take(group[runs[ri - 1].0]);
+            debug_assert_eq!(a.len(), buf.len(), "hierarchical allreduce framing");
+            for (x, y) in a.iter_mut().zip(buf.iter()) {
+                *x += *y;
+            }
+            a
+        };
+        for i in start + 1..end {
+            let part = self.recv_take(group[i]);
+            debug_assert_eq!(part.len(), buf.len(), "hierarchical allreduce framing");
+            for (x, y) in acc.iter_mut().zip(part.iter()) {
+                *x += *y;
+            }
+            self.release(part);
+        }
+        let last = runs.len() - 1;
+        if ri < last {
+            self.send_vec(group[runs[ri + 1].0], acc);
+            let total = self.recv_take(group[runs[last].0]);
+            buf.copy_from_slice(&total);
+            self.release(total);
+        } else {
+            buf.copy_from_slice(&acc);
+            for &(s, _) in runs.iter().take(last) {
+                self.send_slice(group[s], &acc);
+            }
+            self.release(acc);
+        }
+        for i in start + 1..end {
+            self.send_slice(group[i], buf);
+        }
+    }
+
+    /// Hierarchical ReduceScatter-V: the same ascending leader chain as
+    /// [`Self::hierarchical_all_reduce_into`] over the full vector, after
+    /// which the last leader scatters each run's concatenated shard block
+    /// to that run's leader (one IB message per node) and leaders split
+    /// shards out to their members over NVLink.
+    fn hierarchical_reduce_scatter_v(
+        &self,
+        group: &[usize],
+        local: &[f32],
+        counts: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        let runs = self.node_runs(group);
+        let me = self.my_index(group);
+        let ri = Self::run_of(&runs, me);
+        let (start, end) = runs[ri];
+        let leader = group[start];
+        if me != start {
+            self.send_slice(leader, local);
+            self.recv_into_vec(leader, out);
+            debug_assert_eq!(out.len(), counts[me], "hierarchical rs framing");
+            return;
+        }
+        let mut acc = if ri == 0 {
+            let mut a = self.take_buf(local.len());
+            a.extend_from_slice(local);
+            a
+        } else {
+            let mut a = self.recv_take(group[runs[ri - 1].0]);
+            debug_assert_eq!(a.len(), local.len(), "hierarchical rs framing");
+            for (x, y) in a.iter_mut().zip(local.iter()) {
+                *x += *y;
+            }
+            a
+        };
+        for i in start + 1..end {
+            let part = self.recv_take(group[i]);
+            debug_assert_eq!(part.len(), local.len(), "hierarchical rs framing");
+            for (x, y) in acc.iter_mut().zip(part.iter()) {
+                *x += *y;
+            }
+            self.release(part);
+        }
+        let mut offsets = vec![0usize; group.len() + 1];
+        for (i, &c) in counts.iter().enumerate() {
+            offsets[i + 1] = offsets[i] + c;
+        }
+        let last = runs.len() - 1;
+        let my_block = if ri < last {
+            self.send_vec(group[runs[ri + 1].0], acc);
+            let block = self.recv_take(group[runs[last].0]);
+            debug_assert_eq!(block.len(), offsets[end] - offsets[start], "hierarchical rs block");
+            block
+        } else {
+            for &(s, e) in runs.iter().take(last) {
+                self.send_slice(group[s], &acc[offsets[s]..offsets[e]]);
+            }
+            let mut block = self.take_buf(offsets[end] - offsets[start]);
+            block.extend_from_slice(&acc[offsets[start]..offsets[end]]);
+            self.release(acc);
+            block
+        };
+        out.clear();
+        out.extend_from_slice(&my_block[..counts[start]]);
+        let mut off = counts[start];
+        for i in start + 1..end {
+            self.send_slice(group[i], &my_block[off..off + counts[i]]);
+            off += counts[i];
+        }
+        self.release(my_block);
+    }
+
+    /// Hierarchical AllGather-V: members gather their shards to the node
+    /// leader, leaders exchange per-run concatenations (one IB message per
+    /// ordered leader pair), and each leader rebroadcasts the full
+    /// group-order concatenation to its members over NVLink.
+    fn hierarchical_all_gather_v(&self, group: &[usize], local: &[f32], out: &mut Vec<f32>) {
+        let runs = self.node_runs(group);
+        let me = self.my_index(group);
+        let ri = Self::run_of(&runs, me);
+        let (start, end) = runs[ri];
+        let leader = group[start];
+        if me != start {
+            self.send_slice(leader, local);
+            self.recv_into_vec(leader, out);
+            return;
+        }
+        let mut mine = self.take_buf(local.len());
+        mine.extend_from_slice(local);
+        for i in start + 1..end {
+            let part = self.recv_take(group[i]);
+            mine.extend_from_slice(&part);
+            self.release(part);
+        }
+        for (r, &(s, _)) in runs.iter().enumerate() {
+            if r != ri {
+                self.send_slice(group[s], &mine);
+            }
+        }
+        out.clear();
+        for (r, &(s, _)) in runs.iter().enumerate() {
+            if r == ri {
+                out.extend_from_slice(&mine);
+            } else {
+                let part = self.recv_take(group[s]);
+                out.extend_from_slice(&part);
+                self.release(part);
+            }
+        }
+        self.release(mine);
+        for i in start + 1..end {
+            self.send_slice(group[i], out);
+        }
+    }
+
+    /// Hierarchical broadcast: the root sends one copy per remote node to
+    /// that node's leader, which re-distributes over NVLink; the root's
+    /// own run is fed directly.
+    fn hierarchical_broadcast_into(&self, group: &[usize], root: usize, buf: &mut Vec<f32>) {
+        let runs = self.node_runs(group);
+        let me = self.my_index(group);
+        let ri = Self::run_of(&runs, me);
+        let (start, end) = runs[ri];
+        let leader = group[start];
+        let root_idx = group.iter().position(|&r| r == root).expect("root must be in group");
+        let root_run = Self::run_of(&runs, root_idx);
+        if me == root_idx {
+            for (r, &(s, _)) in runs.iter().enumerate() {
+                if r != root_run {
+                    self.send_slice(group[s], buf);
+                }
+            }
+            for i in start..end {
+                if i != root_idx {
+                    self.send_slice(group[i], buf);
+                }
+            }
+        } else if ri == root_run {
+            self.recv_into_vec(root, buf);
+        } else if me == start {
+            self.recv_into_vec(root, buf);
+            for i in start + 1..end {
+                self.send_slice(group[i], buf);
+            }
+        } else {
+            self.recv_into_vec(leader, buf);
+        }
+    }
+
+    /// Two-level AllToAll-V (DeepEP-style): intra-node payloads travel
+    /// directly over NVLink; payloads bound for each remote node are
+    /// bundled at the sender's node leader and cross IB as **one message
+    /// per ordered node pair** before fanning out on the far side. Output
+    /// buffers are bit-identical to the pairwise/naive exchange — only the
+    /// wires the bytes ride (and the per-link message counts) differ.
+    ///
+    /// Framing: a member's per-remote-run bundle is `[len(dst) as f32 for
+    /// each dst in the run, then the payloads in ascending dst order]`;
+    /// the leader's cross-IB mega-bundle concatenates member bundles in
+    /// ascending member order. FIFO mailbox order per (src, dst) channel
+    /// makes every take below unambiguous: members send leader bundles in
+    /// ascending remote-run order *before* their direct intra-run pieces,
+    /// and leaders forward remote pieces in (run, source) ascending order.
+    fn two_level_all_to_all_v(&self, group: &[usize], sends: &[Vec<f32>], out: &mut [Vec<f32>]) {
+        let runs = self.node_runs(group);
+        let me = self.my_index(group);
+        let ri = Self::run_of(&runs, me);
+        let (start, end) = runs[ri];
+        let leader = group[start];
+
+        out[me].clear();
+        out[me].extend_from_slice(&sends[me]);
+        // Bundles for remote runs go to my leader first (leaders keep
+        // their own contribution local and splice it in below).
+        if me != start {
+            for (r, &(rs, re)) in runs.iter().enumerate() {
+                if r == ri {
+                    continue;
+                }
+                let payload: usize = (rs..re).map(|di| sends[di].len()).sum();
+                let mut bundle = self.take_buf(re - rs + payload);
+                for di in rs..re {
+                    bundle.push(sends[di].len() as f32);
+                }
+                for di in rs..re {
+                    bundle.extend_from_slice(&sends[di]);
+                }
+                self.send_vec(leader, bundle);
+            }
+        }
+        // Direct intra-run pieces (ascending destination order).
+        for di in start..end {
+            if di != me {
+                self.send_slice(group[di], &sends[di]);
+            }
+        }
+
+        if me == start {
+            // Aggregate member bundles per remote run and cross IB once
+            // per destination node.
+            for (r, &(rs, re)) in runs.iter().enumerate() {
+                if r == ri {
+                    continue;
+                }
+                let mut mega = self.take_buf(0);
+                for m in start..end {
+                    if m == me {
+                        for di in rs..re {
+                            mega.push(sends[di].len() as f32);
+                        }
+                        for di in rs..re {
+                            mega.extend_from_slice(&sends[di]);
+                        }
+                    } else {
+                        let bundle = self.recv_take(group[m]);
+                        mega.extend_from_slice(&bundle);
+                        self.release(bundle);
+                    }
+                }
+                self.send_vec(group[rs], mega);
+            }
+            // Unpack each remote leader's mega-bundle and fan the pieces
+            // out to their destinations, keeping my own.
+            for (r, &(rs, re)) in runs.iter().enumerate() {
+                if r == ri {
+                    continue;
+                }
+                let mega = self.recv_take(group[rs]);
+                let mut off = 0usize;
+                for src in rs..re {
+                    let lens_at = off;
+                    off += end - start;
+                    for j in 0..end - start {
+                        let len = mega[lens_at + j] as usize;
+                        let piece = &mega[off..off + len];
+                        off += len;
+                        if start + j == me {
+                            out[src].clear();
+                            out[src].extend_from_slice(piece);
+                        } else {
+                            self.send_slice(group[start + j], piece);
+                        }
+                    }
+                }
+                debug_assert_eq!(off, mega.len(), "two-level a2a framing");
+                self.release(mega);
+            }
+        }
+
+        // Collect direct intra-run pieces (ascending source order)…
+        for si in start..end {
+            if si != me {
+                self.recv_into_vec(group[si], &mut out[si]);
+            }
+        }
+        // …then remote pieces forwarded by my leader in (run, source)
+        // ascending order. The leader filled its own slots while
+        // unpacking.
+        if me != start {
+            for (r, &(rs, re)) in runs.iter().enumerate() {
+                if r != ri {
+                    for si in rs..re {
+                        self.recv_into_vec(leader, &mut out[si]);
+                    }
+                }
+            }
+        }
     }
 }

@@ -36,7 +36,7 @@ use std::borrow::Cow;
 use std::collections::{HashMap, VecDeque};
 
 use super::clock::{join_f64, split_f64, Lane, SimClock, TraceEvent};
-use super::AlgoSelection;
+use super::{AlgoSelection, CollectiveAlgo};
 use crate::collectives::{CommCost, CommPrimitive};
 
 /// Index into a rank's handle slab (sized by [`RankProgram::handles`]).
@@ -354,10 +354,29 @@ pub(crate) fn run_programs(
                         CommPrimitive::AllToAll => algos.all_to_all,
                         CommPrimitive::Broadcast => algos.broadcast,
                     };
-                    let price = clock.cost.price(prim, algo, members, fold);
-                    clock.bill_lane(rank, Lane::Bg, label, t_start, price);
+                    let end = match algo {
+                        CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                            // Per-phase billing, mirroring the clocked
+                            // Communicator: each hierarchical phase is a
+                            // separate span priced by the link class it
+                            // actually crosses.
+                            let mut t = t_start;
+                            for (suffix, dur) in clock.cost.hierarchical_phases(prim, members, fold)
+                            {
+                                let span = Cow::Owned(format!("{label}/{suffix}"));
+                                clock.bill_lane(rank, Lane::Bg, span, t, dur);
+                                t += dur;
+                            }
+                            t
+                        }
+                        _ => {
+                            let price = clock.cost.price(prim, algo, members, fold);
+                            clock.bill_lane(rank, Lane::Bg, label, t_start, price);
+                            t_start + price
+                        }
+                    };
                     tasks[rank].handles[handle] =
-                        Handle { end_us: t_start + price, dur_us: price, label, cat: "wait" };
+                        Handle { end_us: end, dur_us: end - t_start, label, cat: "wait" };
                     tasks[rank].pc += 1;
                 }
             }

@@ -100,6 +100,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 
 use clock::SimClock;
+use crate::cluster::{ClusterSpec, LinkKind};
 use crate::collectives::{CommCost, CommPrimitive};
 
 /// Which algorithm a collective primitive runs. See module docs.
@@ -114,6 +115,19 @@ pub enum CollectiveAlgo {
     RecursiveHalving,
     /// n−1 deterministic direct-exchange rounds (all-to-all, reduce-scatter).
     PairwiseExchange,
+    /// Node-grouped, topology-executed: intra-node gather to a node leader
+    /// over NVLink, sequential inter-node exchange across the node leaders
+    /// over IB, intra-node fan-out back. The inter-node reduction chains
+    /// across leaders in ascending group order (node runs are contiguous in
+    /// the sorted group), so every fold stays `((x₀+x₁)+x₂)+…` —
+    /// bit-identical to the oracle.
+    Hierarchical,
+    /// Two-level all-to-all-v (DeepEP-style): payloads headed for a remote
+    /// node are aggregated at the local node leader, cross IB as **one
+    /// bundled message per node pair**, and are distributed intra-node on
+    /// the far side. For the non-a2a primitives this is an alias of
+    /// [`Self::Hierarchical`].
+    HierarchicalA2A,
 }
 
 impl CollectiveAlgo {
@@ -124,6 +138,8 @@ impl CollectiveAlgo {
             CollectiveAlgo::Ring => "ring",
             CollectiveAlgo::RecursiveHalving => "recursive-halving",
             CollectiveAlgo::PairwiseExchange => "pairwise",
+            CollectiveAlgo::Hierarchical => "hierarchical",
+            CollectiveAlgo::HierarchicalA2A => "hierarchical-a2a",
         }
     }
 }
@@ -159,6 +175,18 @@ impl AlgoSelection {
             reduce_scatter: CollectiveAlgo::RecursiveHalving,
             all_to_all: CollectiveAlgo::PairwiseExchange,
             broadcast: CollectiveAlgo::Ring,
+        }
+    }
+
+    /// The topology-aware suite: node-grouped hierarchical algorithms for
+    /// every primitive, with the two-level (node-aggregated) all-to-all.
+    pub fn hierarchical() -> Self {
+        Self {
+            all_reduce: CollectiveAlgo::Hierarchical,
+            all_gather: CollectiveAlgo::Hierarchical,
+            reduce_scatter: CollectiveAlgo::Hierarchical,
+            all_to_all: CollectiveAlgo::HierarchicalA2A,
+            broadcast: CollectiveAlgo::Hierarchical,
         }
     }
 }
@@ -242,6 +270,25 @@ impl Pool {
     }
 }
 
+/// Cumulative traffic that crossed one link class of the fabric — see
+/// [`Fabric::link_traffic`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LinkTraffic {
+    /// Messages posted over this link class.
+    pub messages: u64,
+    /// Billed bytes moved over it.
+    pub bytes: f64,
+}
+
+/// Slot of a [`LinkKind`] in the fabric's traffic table.
+fn link_index(kind: LinkKind) -> usize {
+    match kind {
+        LinkKind::Loopback => 0,
+        LinkKind::NvLink => 1,
+        LinkKind::InfiniBand => 2,
+    }
+}
+
 /// Shared mailbox fabric connecting `world` ranks.
 pub struct Fabric {
     world: usize,
@@ -251,6 +298,13 @@ pub struct Fabric {
     algos: AlgoSelection,
     pool_hits: AtomicUsize,
     pool_misses: AtomicUsize,
+    /// Node-grouped topology of this fabric: the grouping oracle of the
+    /// hierarchical collective algorithms and the classifier behind the
+    /// per-link traffic counters. Clocked fabrics share the cost model's
+    /// cluster; plain fabrics default to the Eos shape for `world` GPUs.
+    topology: ClusterSpec,
+    /// Per-link-class traffic counters, indexed by [`link_index`].
+    traffic: Mutex<[LinkTraffic; 3]>,
     /// Virtual clock (None on plain fabrics — zero overhead, no extra
     /// control messages).
     clock: Option<SimClock>,
@@ -264,17 +318,23 @@ impl Fabric {
 
     /// Fabric with an explicit algorithm selection.
     pub fn new_with(world: usize, algos: AlgoSelection) -> Arc<Self> {
-        Self::build(world, algos, None)
+        Self::build(world, algos, None, ClusterSpec::eos(world.max(1)))
     }
 
     /// Clocked fabric: collectives, p2p transfers and
     /// [`Communicator::advance`] charges move per-rank simulated time priced
     /// by `cost` — the same [`CommCost`] the analytic model uses.
     pub fn new_clocked(world: usize, algos: AlgoSelection, cost: CommCost) -> Arc<Self> {
-        Self::build(world, algos, Some(SimClock::new(world, cost)))
+        let topology = cost.cluster.clone();
+        Self::build(world, algos, Some(SimClock::new(world, cost)), topology)
     }
 
-    fn build(world: usize, algos: AlgoSelection, clock: Option<SimClock>) -> Arc<Self> {
+    fn build(
+        world: usize,
+        algos: AlgoSelection,
+        clock: Option<SimClock>,
+        topology: ClusterSpec,
+    ) -> Arc<Self> {
         let mailboxes = (0..world).map(|_| Mailbox::new()).collect();
         let pools = (0..world).map(|_| Pool::new()).collect();
         Arc::new(Self {
@@ -285,6 +345,8 @@ impl Fabric {
             algos,
             pool_hits: AtomicUsize::new(0),
             pool_misses: AtomicUsize::new(0),
+            topology,
+            traffic: Mutex::new([LinkTraffic::default(); 3]),
             clock,
         })
     }
@@ -336,6 +398,20 @@ impl Fabric {
     /// The fabric-wide algorithm selection.
     pub fn algos(&self) -> AlgoSelection {
         self.algos
+    }
+
+    /// The node-grouped topology this fabric runs on.
+    pub fn topology(&self) -> &ClusterSpec {
+        &self.topology
+    }
+
+    /// Cumulative traffic that crossed `kind` links since the fabric was
+    /// built. Every posted message counts — collective algorithm hops, p2p
+    /// payloads, and clock control traffic — so the counters measure what
+    /// an algorithm *actually* put on each wire. This is how the two-level
+    /// a2a's cross-IB saving is pinned by test.
+    pub fn link_traffic(&self, kind: LinkKind) -> LinkTraffic {
+        self.traffic.lock().unwrap()[link_index(kind)]
     }
 
     /// `(hits, misses)` of the payload buffer pool. A workload is in steady
@@ -541,12 +617,22 @@ impl Communicator {
         self.push_msg(dst, INTERNAL_TAG, data, billed);
     }
 
-    /// Post a message with an explicit tag and billed volume.
+    /// Post a message with an explicit tag and billed volume. Every message
+    /// is classified against the fabric topology and counted into the
+    /// per-link traffic table — this is the single choke point all traffic
+    /// (collective hops, p2p, control) flows through.
     fn push_msg(&self, dst: usize, tag: u64, data: Vec<f32>, billed_bytes: f64) {
         let sent_at = match &self.fabric.clock {
             Some(c) => c.now(self.rank),
             None => 0.0,
         };
+        {
+            let kind = self.fabric.topology.link_of(self.rank, dst);
+            let mut table = self.fabric.traffic.lock().unwrap();
+            let slot = &mut table[link_index(kind)];
+            slot.messages += 1;
+            slot.bytes += billed_bytes;
+        }
         self.fabric.mailboxes[dst].push(Msg { src: self.rank, tag, sent_at, billed_bytes, data });
     }
 
@@ -579,6 +665,12 @@ impl Communicator {
         out.clear();
         out.extend_from_slice(&buf);
         self.release(buf);
+    }
+
+    /// The fabric's node-grouped topology (the hierarchical algorithms'
+    /// grouping oracle).
+    pub(crate) fn topology(&self) -> &ClusterSpec {
+        &self.fabric.topology
     }
 
     /// This rank's index within `group`.
@@ -973,7 +1065,6 @@ impl Communicator {
             CommPrimitive::AllToAll => self.algos.all_to_all,
             CommPrimitive::Broadcast => self.algos.broadcast,
         };
-        let cost = clock.cost.price(prim, algo, group, bytes);
         let name: Cow<'static, str> = match label {
             Some(l) => Cow::Borrowed(l),
             None => {
@@ -985,11 +1076,29 @@ impl Communicator {
                 }
             }
         };
-        clock.bill_lane(self.rank, lane, name.clone(), t_start, cost);
-        let end = t_start + cost;
+        let end = match algo {
+            // Hierarchical algorithms bill one back-to-back span per fabric
+            // tier they cross, so the trace shows which wire each slice
+            // occupied. The phase sum is exactly `price()` for these algos
+            // (pinned in `collectives/cost.rs`), so totals are unchanged.
+            CollectiveAlgo::Hierarchical | CollectiveAlgo::HierarchicalA2A => {
+                let mut t = t_start;
+                for (suffix, dur) in clock.cost.hierarchical_phases(prim, group, bytes) {
+                    let span = Cow::Owned(format!("{name}/{suffix}"));
+                    clock.bill_lane(self.rank, lane, span, t, dur);
+                    t += dur;
+                }
+                t
+            }
+            _ => {
+                let cost = clock.cost.price(prim, algo, group, bytes);
+                clock.bill_lane(self.rank, lane, name.clone(), t_start, cost);
+                t_start + cost
+            }
+        };
         if self.nonblocking.get() {
             *self.pending.borrow_mut() =
-                Some(CommHandle { end_us: end, dur_us: cost, label: name, cat: "wait" });
+                Some(CommHandle { end_us: end, dur_us: end - t_start, label: name, cat: "wait" });
         } else if end > clock.now(self.rank) {
             clock.set(self.rank, end);
         }
@@ -1100,13 +1209,13 @@ where
 mod tests {
     use super::*;
 
-    fn both_suites() -> [AlgoSelection; 2] {
-        [AlgoSelection::naive(), AlgoSelection::fast()]
+    fn all_suites() -> [AlgoSelection; 3] {
+        [AlgoSelection::naive(), AlgoSelection::fast(), AlgoSelection::hierarchical()]
     }
 
     #[test]
     fn all_gather_v_concatenates_in_order() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(4, algos, |rank, comm| {
                 let local = vec![rank as f32; rank + 1]; // variable lengths
                 comm.all_gather_v(&[0, 1, 2, 3], &local)
@@ -1120,7 +1229,7 @@ mod tests {
 
     #[test]
     fn all_reduce_sums() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(4, algos, |rank, comm| {
                 comm.all_reduce_sum(&[0, 1, 2, 3], &[rank as f32, 1.0])
             });
@@ -1135,7 +1244,7 @@ mod tests {
         // Exercises the pipelined chain with chunk boundaries that don't
         // divide evenly.
         let n = 1037usize;
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(5, algos, |rank, comm| {
                 let local: Vec<f32> = (0..n).map(|i| (rank * n + i) as f32).collect();
                 comm.all_reduce_sum(&[0, 1, 2, 3, 4], &local)
@@ -1152,7 +1261,7 @@ mod tests {
     #[test]
     fn subgroup_collectives() {
         // Two disjoint groups of 2 run independently.
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(4, algos, |rank, comm| {
                 let group: Vec<usize> = if rank < 2 { vec![0, 1] } else { vec![2, 3] };
                 comm.all_reduce_sum(&group, &[1.0])
@@ -1163,7 +1272,7 @@ mod tests {
 
     #[test]
     fn reduce_scatter_shards() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(2, algos, |_, comm| {
                 comm.reduce_scatter_sum(&[0, 1], &[1.0, 2.0, 3.0, 4.0])
             });
@@ -1190,7 +1299,7 @@ mod tests {
 
     #[test]
     fn reduce_scatter_v_variable_shards() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let counts = [1usize, 3, 2];
             let outs = run_ranks_with(3, algos, |rank, comm| {
                 let local: Vec<f32> = (0..6).map(|i| (rank * 6 + i) as f32).collect();
@@ -1210,7 +1319,7 @@ mod tests {
 
     #[test]
     fn all_to_all_v_exchanges() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(3, algos, |rank, comm| {
                 // rank r sends [r*10 + i] to member i.
                 let sends: Vec<Vec<f32>> =
@@ -1226,7 +1335,7 @@ mod tests {
 
     #[test]
     fn all_to_all_v_variable_sizes() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(2, algos, |rank, comm| {
                 let sends = if rank == 0 {
                     vec![vec![], vec![1.0, 2.0, 3.0]]
@@ -1242,11 +1351,35 @@ mod tests {
 
     #[test]
     fn broadcast_from_root() {
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs =
                 run_ranks_with(3, algos, |_, comm| comm.broadcast(&[0, 1, 2], 1, &[7.0, 8.0]));
             assert_eq!(outs, vec![vec![7.0, 8.0]; 3]);
         }
+    }
+
+    /// Every posted message lands in the per-link traffic table classified
+    /// by the fabric topology (eos(16): ranks 0–7 node 0, 8–15 node 1).
+    #[test]
+    fn link_traffic_classifies_by_node() {
+        let fabric = Fabric::new(16);
+        run_ranks_on(&fabric, |rank, comm| {
+            if rank == 0 {
+                comm.send(1, &[1.0; 8]);
+                comm.send(8, &[1.0; 4]);
+            } else if rank == 1 {
+                comm.recv(0);
+            } else if rank == 8 {
+                comm.recv(0);
+            }
+        });
+        let nv = fabric.link_traffic(LinkKind::NvLink);
+        let ib = fabric.link_traffic(LinkKind::InfiniBand);
+        assert_eq!(nv.messages, 1);
+        assert_eq!(nv.bytes, 32.0);
+        assert_eq!(ib.messages, 1);
+        assert_eq!(ib.bytes, 16.0);
+        assert_eq!(fabric.link_traffic(LinkKind::Loopback).messages, 0);
     }
 
     #[test]
@@ -1265,7 +1398,7 @@ mod tests {
     #[test]
     fn concurrent_disjoint_a2a() {
         // Simulates EP groups folded inside a larger world: {0,2} and {1,3}.
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(4, algos, |rank, comm| {
                 let group = if rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
                 let sends: Vec<Vec<f32>> =
@@ -1302,7 +1435,7 @@ mod tests {
         // association yields 1.0.
         let vals = [1e8f32, 1.0, -1e8];
         let expect = ((vals[0] + vals[1]) + vals[2]).to_bits();
-        for algos in both_suites() {
+        for algos in all_suites() {
             let outs = run_ranks_with(3, algos, |rank, comm| {
                 comm.all_reduce_sum(&[0, 1, 2], &[vals[rank]])
             });

@@ -39,6 +39,7 @@ fn build_router(policy: DropPolicy, seed: u64) -> Router {
             drop_policy: policy,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     )

@@ -4,7 +4,11 @@
 //! the oracle exactly — not within a tolerance. Inputs are seeded via
 //! `util::rng` with per-rank magnitude skew (1e-2 … 1e2) so that any
 //! reordering of f32 additions would change the bits and fail loudly.
-use moe_folding::simcomm::{run_ranks_with, AlgoSelection, CollectiveAlgo, Communicator};
+use moe_folding::cluster::{ClusterSpec, LinkKind};
+use moe_folding::collectives::CommCost;
+use moe_folding::simcomm::{
+    run_ranks_on, run_ranks_with, AlgoSelection, CollectiveAlgo, Communicator, Fabric,
+};
 use moe_folding::util::Rng;
 
 /// Group sizes exercised everywhere: singleton, pair, odd (recursive
@@ -183,6 +187,170 @@ fn non_contiguous_groups_match_oracle_bitwise() {
             assert_bits_eq(x, y, &format!("nc a2av rank={me} from={src}"));
         }
     }
+}
+
+/// Hierarchical algorithms on awkward node shapes (ISSUE 7): full
+/// two-node world (16 = 2×8), partial last node (12 = 8+4), and a
+/// non-power-of-two node count (24 = 3×8) — every collective must stay
+/// bit-identical to the oracle despite the intra-node / inter-node phase
+/// split, because the leader chain folds in ascending group-index order.
+#[test]
+fn hierarchical_matches_oracle_on_awkward_worlds() {
+    for world in [12usize, 16, 24] {
+        let group: Vec<usize> = (0..world).collect();
+        let counts: Vec<usize> = (0..world).map(|i| if i == 1 { 0 } else { 2 * i + 1 }).collect();
+        let total: usize = counts.iter().sum();
+        let root = group[world / 2];
+        let (naive, hier) = differential(world, AlgoSelection::hierarchical(), |rank, comm| {
+            let local = skewed(rank, 97, 4 * world);
+            let ar = comm.all_reduce_sum(&group, &local);
+            let rs = comm.reduce_scatter_sum(&group, &local);
+            let wide = skewed(rank, 101, total);
+            let rsv = comm.reduce_scatter_v(&group, &wide, &counts);
+            let ag = comm.all_gather_v(&group, &skewed(rank, 103, (rank % 5) * 3));
+            let bc = if rank == root {
+                comm.broadcast(&group, root, &skewed(root, 107, 33))
+            } else {
+                comm.broadcast(&group, root, &[])
+            };
+            let sends: Vec<Vec<f32>> = (0..world)
+                .map(|dst| skewed(rank, 109 + dst as u64, (rank * 5 + dst * 3) % 6))
+                .collect();
+            let a2a = comm.all_to_all_v(&group, sends);
+            (ar, rs, rsv, ag, bc, a2a)
+        });
+        for (me, (a, b)) in naive.iter().zip(&hier).enumerate() {
+            let ctx = format!("hier world={world} rank={me}");
+            assert_bits_eq(&a.0, &b.0, &format!("{ctx} allreduce"));
+            assert_bits_eq(&a.1, &b.1, &format!("{ctx} reducescatter"));
+            assert_bits_eq(&a.2, &b.2, &format!("{ctx} rsv"));
+            assert_bits_eq(&a.3, &b.3, &format!("{ctx} allgatherv"));
+            assert_bits_eq(&a.4, &b.4, &format!("{ctx} broadcast"));
+            for (src, (x, y)) in a.5.iter().zip(&b.5).enumerate() {
+                assert_bits_eq(x, y, &format!("{ctx} a2av from={src}"));
+            }
+        }
+    }
+}
+
+/// The hierarchical suite on the small single-node worlds of `SIZES`: the
+/// node-grouped algorithms must degrade cleanly to a single intra-node run
+/// (and a singleton group to a no-op), still bit-identical to the oracle.
+#[test]
+fn hierarchical_matches_oracle_on_single_node_worlds() {
+    for &n in &SIZES {
+        let group: Vec<usize> = (0..n).collect();
+        let (naive, hier) = differential(n, AlgoSelection::hierarchical(), |rank, comm| {
+            let local = skewed(rank, 113, n * 13);
+            let ar = comm.all_reduce_sum(&group, &local);
+            let ag = comm.all_gather_v(&group, &skewed(rank, 127, 5 * rank));
+            let sends: Vec<Vec<f32>> =
+                (0..n).map(|dst| skewed(rank, 131 + dst as u64, (rank + 2 * dst) % 5)).collect();
+            let a2a = comm.all_to_all_v(&group, sends);
+            (ar, ag, a2a)
+        });
+        for (me, (a, b)) in naive.iter().zip(&hier).enumerate() {
+            assert_bits_eq(&a.0, &b.0, &format!("hier1 n={n} rank={me} allreduce"));
+            assert_bits_eq(&a.1, &b.1, &format!("hier1 n={n} rank={me} allgatherv"));
+            for (src, (x, y)) in a.2.iter().zip(&b.2).enumerate() {
+                assert_bits_eq(x, y, &format!("hier1 n={n} rank={me} a2av from={src}"));
+            }
+        }
+    }
+}
+
+/// Non-contiguous groups that straddle a node boundary: evens and odds of
+/// a 16-rank (two-node) world run concurrent hierarchical collectives —
+/// each group folds into two node runs of four — bit-identical to the
+/// oracle.
+#[test]
+fn hierarchical_non_contiguous_groups_across_nodes() {
+    let (naive, hier) = differential(16, AlgoSelection::hierarchical(), |rank, comm| {
+        let group: Vec<usize> = ((rank % 2)..16).step_by(2).collect();
+        let local = skewed(rank, 137, 8 * 9);
+        let summed = comm.all_reduce_sum(&group, &local);
+        let shard = comm.reduce_scatter_sum(&group, &local);
+        let sends: Vec<Vec<f32>> = (0..8).map(|i| skewed(rank, 139 + i as u64, i + 1)).collect();
+        let exchanged = comm.all_to_all_v(&group, sends);
+        (summed, shard, exchanged)
+    });
+    for (me, (a, b)) in naive.iter().zip(&hier).enumerate() {
+        assert_bits_eq(&a.0, &b.0, &format!("ncx allreduce rank={me}"));
+        assert_bits_eq(&a.1, &b.1, &format!("ncx reducescatter rank={me}"));
+        for (src, (x, y)) in a.2.iter().zip(&b.2).enumerate() {
+            assert_bits_eq(x, y, &format!("ncx a2av rank={me} from={src}"));
+        }
+    }
+}
+
+/// Hierarchical collectives on a *clocked* partial-last-node fabric
+/// (eos(12) = one full node of eight + one node of four): per-phase
+/// billing by link class must never touch payload math — outputs stay
+/// bit-identical to the unclocked oracle, and the run demonstrably
+/// crossed InfiniBand.
+#[test]
+fn clocked_hierarchical_partial_node_is_bit_exact() {
+    let world = 12usize;
+    let group: Vec<usize> = (0..world).collect();
+    let program = |rank: usize, comm: &Communicator| {
+        let local = skewed(rank, 149, 3 * world);
+        let ar = comm.all_reduce_sum(&group, &local);
+        let ag = comm.all_gather_v(&group, &skewed(rank, 151, rank % 4));
+        let sends: Vec<Vec<f32>> =
+            (0..world).map(|dst| skewed(rank, 157 + dst as u64, (rank + dst) % 4)).collect();
+        let a2a = comm.all_to_all_v(&group, sends);
+        (ar, ag, a2a)
+    };
+    let naive = run_ranks_with(world, AlgoSelection::naive(), |r, c| program(r, &c));
+    let clocked = Fabric::new_clocked(
+        world,
+        AlgoSelection::hierarchical(),
+        CommCost::new(ClusterSpec::eos(world)),
+    );
+    let hier = run_ranks_on(&clocked, |r, c| program(r, &c));
+    for (me, (a, b)) in naive.iter().zip(&hier).enumerate() {
+        assert_bits_eq(&a.0, &b.0, &format!("clocked hier allreduce rank={me}"));
+        assert_bits_eq(&a.1, &b.1, &format!("clocked hier allgatherv rank={me}"));
+        for (src, (x, y)) in a.2.iter().zip(&b.2).enumerate() {
+            assert_bits_eq(x, y, &format!("clocked hier a2av rank={me} from={src}"));
+        }
+    }
+    assert!(
+        clocked.link_traffic(LinkKind::InfiniBand).messages > 0,
+        "a 12-rank world spans two nodes, so the leader chain must cross IB"
+    );
+}
+
+/// The two-level a2a crosses IB once per ordered node pair instead of once
+/// per cross-node rank pair: on a 16-rank / two-node world with every
+/// split non-empty it posts exactly two InfiniBand messages (one
+/// mega-bundle each way) where the flat exchange posts one per crossing
+/// (src, dst) pair — while staying bit-identical to it.
+#[test]
+fn two_level_a2a_sends_fewer_ib_messages() {
+    let world = 16usize;
+    let group: Vec<usize> = (0..world).collect();
+    let program = |rank: usize, comm: &Communicator| {
+        let sends: Vec<Vec<f32>> =
+            (0..world).map(|dst| skewed(rank, 163 + dst as u64, dst + 1)).collect();
+        comm.all_to_all_v(&group, sends)
+    };
+    let flat = Fabric::new_with(world, AlgoSelection::fast());
+    let flat_out = run_ranks_on(&flat, |r, c| program(r, &c));
+    let hier = Fabric::new_with(world, AlgoSelection::hierarchical());
+    let hier_out = run_ranks_on(&hier, |r, c| program(r, &c));
+    for (me, (a, b)) in flat_out.iter().zip(&hier_out).enumerate() {
+        for (src, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_bits_eq(x, y, &format!("two-level a2a rank={me} from={src}"));
+        }
+    }
+    let flat_ib = flat.link_traffic(LinkKind::InfiniBand).messages;
+    let hier_ib = hier.link_traffic(LinkKind::InfiniBand).messages;
+    assert!(
+        hier_ib < flat_ib,
+        "two-level a2a must cross IB less often: {hier_ib} vs flat {flat_ib}"
+    );
+    assert_eq!(hier_ib, 2, "one mega-bundle per ordered node pair");
 }
 
 /// Catastrophic-cancellation stress: ranks contribute alternating ±1e8

@@ -156,6 +156,7 @@ fn moe_parts(seed: u64) -> (Router, Vec<SwigluExpert>) {
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     );

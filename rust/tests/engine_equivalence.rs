@@ -153,3 +153,61 @@ fn event_engine_1024_rank_step_agrees_with_analytic() {
     }
     assert!(seen.iter().all(|&s| s), "every rank must appear in the trace");
 }
+
+/// Placement is a priced axis (ISSUE 7): at 1024 ranks the packed EP
+/// groups sit whole inside NVLink domains while the strided twin's EP
+/// peers sit `edp·etp = 16` ranks apart — every dispatch a2a crosses IB —
+/// so the two executed step times must differ, packed strictly faster.
+#[test]
+fn executed_step_prices_ep_placement_at_1024_ranks() {
+    use moe_folding::config::EpPlacement;
+    use moe_folding::perfmodel::execute_step;
+
+    let pm = PerfModel::default();
+    let model = ModelConfig::mixtral_8x22b();
+    let train = TrainConfig::paper_default(4096, 1024);
+    let packed_cfg = ParallelConfig::new(1024, 2, 1, 8, 1, 8).with_vpp(7);
+    let strided_cfg = packed_cfg.with_placement(EpPlacement::Strided);
+    let packed = execute_step(&pm, &model, packed_cfg, &train, Strategy::MCoreFolding)
+        .unwrap_or_else(|e| panic!("{}: {e}", packed_cfg.tag()));
+    let strided = execute_step(&pm, &model, strided_cfg, &train, Strategy::MCoreFolding)
+        .unwrap_or_else(|e| panic!("{}: {e}", strided_cfg.tag()));
+    assert!(
+        packed.step_ms < strided.step_ms,
+        "packed EP must beat strided across nodes: {:.2} ms vs {:.2} ms",
+        packed.step_ms,
+        strided.step_ms
+    );
+}
+
+/// Weekly stress tier (ISSUE 7): a 4096-rank folded step, events engine
+/// only — thread-per-rank would need 4096 OS threads, the event
+/// interpreter needs one. Same 5% analytic agreement and full-trace
+/// coverage as the 1024-rank tier-1 smoke. `cargo test --release -- --ignored`.
+#[test]
+#[ignore = "weekly stress tier: 4096-rank world"]
+fn event_engine_4096_rank_step_agrees_with_analytic() {
+    let pm = PerfModel::default();
+    let model = ModelConfig::mixtral_8x22b();
+    let mut train = TrainConfig::paper_default(4096, 4096);
+    train.overlap_a2a = true;
+    let cfg = ParallelConfig::new(4096, 2, 1, 8, 1, 8).with_vpp(7);
+    let (executed, trace) =
+        execute_step_traced_on(ExecEngine::Events, &pm, &model, cfg, &train, Strategy::MCoreFolding)
+            .unwrap_or_else(|e| panic!("{}: {e}", cfg.tag()));
+    let analytic = pm.estimate(&model, cfg, &train, Strategy::MCoreFolding).unwrap();
+    let rel = (executed.step_ms - analytic.step_ms).abs() / analytic.step_ms;
+    assert!(
+        rel < 0.05,
+        "{}: executed {:.1} ms vs analytic {:.1} ms (rel {rel:.4})",
+        cfg.tag(),
+        executed.step_ms,
+        analytic.step_ms
+    );
+    assert!(executed.hidden_comm_us > 0.0, "overlap must be measured");
+    let mut seen = vec![false; 4096];
+    for e in &trace {
+        seen[e.rank] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "every rank must appear in the trace");
+}

@@ -25,6 +25,7 @@ fn setup(top_k: usize, policy: DropPolicy, cf: f64) -> (Router, Vec<SwigluExpert
             drop_policy: policy,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     );

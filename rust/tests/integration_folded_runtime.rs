@@ -40,6 +40,7 @@ fn build_router(num_experts: usize, top_k: usize, policy: DropPolicy, seed: u64)
             drop_policy: policy,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     )

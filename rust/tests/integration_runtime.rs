@@ -51,6 +51,7 @@ fn router_artifact_matches_rust_softmax() {
             drop_policy: DropPolicy::Dropless,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         w,
     );
@@ -112,6 +113,7 @@ fn rust_dispatcher_matches_pallas_moe_block() {
             drop_policy: DropPolicy::SubSequence,
             capacity_override: Some(cap),
             pad_to_capacity: false,
+            node_limit: None,
         },
         wr,
     );

@@ -250,6 +250,7 @@ fn prop_router_capacity_invariants() {
                     drop_policy: policy,
                     capacity_override: None,
                     pad_to_capacity: false,
+                    node_limit: None,
                 },
                 &mut rng,
             );
@@ -330,6 +331,7 @@ fn prop_padded_dispatch_static_volume_and_bit_equality() {
                             drop_policy: DropPolicy::SubSequence,
                             capacity_override: None,
                             pad_to_capacity: pad,
+                            node_limit: None,
                         },
                         &mut r2,
                     );
@@ -354,6 +356,7 @@ fn prop_padded_dispatch_static_volume_and_bit_equality() {
                     drop_policy: DropPolicy::SubSequence,
                     capacity_override: None,
                     pad_to_capacity: true,
+                    node_limit: None,
                 },
                 &mut r3,
             );
@@ -404,12 +407,16 @@ fn prop_nonblocking_immediate_wait_equals_blocking_every_algo() {
         CollectiveAlgo::Ring,
         CollectiveAlgo::RecursiveHalving,
         CollectiveAlgo::PairwiseExchange,
+        CollectiveAlgo::Hierarchical,
+        CollectiveAlgo::HierarchicalA2A,
     ];
     forall(
         "nonblocking == blocking per algo",
         12,
         |rng: &mut Rng| {
-            let world = [2usize, 4, 8][rng.next_below(3)];
+            // 12 = a partial-last-node two-node world (8 + 4), so the
+            // hierarchical algorithms cross a real IB boundary here.
+            let world = [2usize, 4, 8, 12][rng.next_below(4)];
             let n = draw::in_range(rng, 1, 40);
             let seed = rng.next_u64();
             (world, n, seed)
@@ -554,6 +561,7 @@ fn prop_dispatch_overlap_bitwise_and_never_slower() {
                             drop_policy: DropPolicy::SubSequence,
                             capacity_override: None,
                             pad_to_capacity: pad,
+                            node_limit: None,
                         },
                         &mut r2,
                     );
@@ -790,5 +798,92 @@ fn prop_ring_kv_bytes_match_analytic_formula() {
             }
             Ok(())
         },
+    );
+}
+
+/// Satellite (ISSUE 7): node-limited routing (DeepSeek-V3 style) caps the
+/// number of node groups a token's copies span. With gate affinities that
+/// are locally concentrated plus one weak remote straggler, the
+/// unrestricted top-4 ships one copy per token across InfiniBand while
+/// the 1-node-limited top-4 keeps every copy inside the token's preferred
+/// group — strictly fewer IB bytes through the EP dispatch a2a for the
+/// same token load.
+#[test]
+fn node_limited_routing_saves_ib_bytes_on_correlated_gates() {
+    use moe_folding::cluster::LinkKind;
+    use moe_folding::dispatcher::NodeLimit;
+    use moe_folding::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+
+    // eos(16): two nodes of eight, one expert per rank.
+    let world = 16usize;
+    let (h, e, k) = (16usize, 16usize, 4usize);
+    // Identity gating weight: a token's features are its expert logits.
+    let mut weight = vec![0.0f32; h * e];
+    for i in 0..e {
+        weight[i * e + i] = 1.0;
+    }
+    // Rank r's token prefers its own node's expert block (logits 5, 4, 3,
+    // 2) with a weak remote straggler at 3.5 that outranks the 4th local
+    // choice — so unrestricted top-4 always crosses IB once per token.
+    let features = |rank: usize| {
+        let base = (rank / 8) * 8;
+        let mut f = vec![0.0f32; h];
+        f[base] = 5.0;
+        f[base + 1] = 4.0;
+        f[base + 2] = 3.0;
+        f[base + 3] = 2.0;
+        f[(base + 8) % e] = 3.5;
+        f
+    };
+    let cfg = |node_limit| RouterConfig {
+        hidden: h,
+        num_experts: e,
+        top_k: k,
+        capacity_factor: 1.0,
+        drop_policy: DropPolicy::Dropless,
+        capacity_override: None,
+        pad_to_capacity: false,
+        node_limit,
+    };
+    let limit = NodeLimit { max_nodes: 1, experts_per_node: 8 };
+    // Sanity: the crafted gates do what the comment above claims.
+    let unres: Vec<usize> = Router::new(cfg(None), weight.clone())
+        .route(&features(0))
+        .assignments
+        .iter()
+        .map(|a| a.expert)
+        .collect();
+    assert!(unres.contains(&8), "unrestricted top-4 must take the remote straggler: {unres:?}");
+    let lim: Vec<usize> = Router::new(cfg(Some(limit)), weight.clone())
+        .route(&features(0))
+        .assignments
+        .iter()
+        .map(|a| a.expert)
+        .collect();
+    assert!(lim.iter().all(|&x| x < 8), "node-limited top-4 must stay local: {lim:?}");
+    // Route every rank's token, dispatch the copies through the two-level
+    // a2a, and meter what actually crossed IB.
+    let ib_bytes = |node_limit: Option<NodeLimit>| {
+        let router = Router::new(cfg(node_limit), weight.clone());
+        let fabric = Fabric::new_with(world, AlgoSelection::hierarchical());
+        run_ranks_on(&fabric, |rank, comm| {
+            let group: Vec<usize> = (0..world).collect();
+            let d = router.route(&features(rank));
+            let mut sends: Vec<Vec<f32>> = (0..world).map(|_| Vec::new()).collect();
+            for a in &d.assignments {
+                if a.kept {
+                    sends[a.expert].extend_from_slice(&[a.prob; 16]);
+                }
+            }
+            comm.all_to_all_v(&group, sends)
+        });
+        fabric.link_traffic(LinkKind::InfiniBand).bytes
+    };
+    let unrestricted = ib_bytes(None);
+    let limited = ib_bytes(Some(limit));
+    assert!(unrestricted > 0.0, "unrestricted dispatch must cross IB");
+    assert!(
+        limited < unrestricted,
+        "node-limited dispatch must move fewer IB bytes: {limited} vs {unrestricted}"
     );
 }

@@ -284,6 +284,7 @@ fn folded_program(clocked: bool, vpp: usize, overlap_dispatch: bool) -> (Vec<f32
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
         },
         &mut rng,
     );
