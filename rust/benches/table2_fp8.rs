@@ -10,6 +10,11 @@ fn main() {
     println!("\n## Table 2 — Mixtral 8x22B BF16 vs FP8\n");
     print!("{}", coordinator::table2(&pm).markdown());
 
+    // Executed twin (ISSUE 8): the same comparison measured on the clocked
+    // simulator — fp8 GEMM peaks, 1-byte a2a payloads, cast/amax passes.
+    println!("\n## Table 2 — executed (clocked simulator)\n");
+    print!("{}", coordinator::table2_executed(&pm).markdown());
+
     let mut h = Harness::new();
     let model = ModelConfig::mixtral_8x22b();
     let mut train = TrainConfig::paper_default(4096, 256);

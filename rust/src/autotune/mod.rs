@@ -9,7 +9,7 @@ use std::cmp::Ordering;
 use std::sync::mpsc;
 use std::thread;
 
-use crate::config::{EpPlacement, ModelConfig, ParallelConfig, TrainConfig};
+use crate::config::{EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
 use crate::perfmodel::{executed, ExecutedEstimate, PerfModel, StepEstimate, Strategy};
 
 /// Descending comparator that sorts NaN last. A NaN estimate (e.g. a
@@ -105,6 +105,10 @@ pub struct ExecutedCandidate {
     /// Whether this variant ran with comm–compute overlap (the train
     /// config's overlap knobs) or as the fully serialized twin.
     pub overlap: bool,
+    /// Precision this variant executed under. Every candidate also runs as
+    /// its [`Precision::twin`], so the re-rank prices the precision axis
+    /// the same way it prices EP placement.
+    pub precision: Precision,
 }
 
 /// Outcome of [`tune_executed`]: the analytic top-k re-ranked by
@@ -140,6 +144,12 @@ impl ExecutedTune {
 /// [`EpPlacement::Strided`] twin (both overlap variants): same degrees,
 /// EP peers strided across nodes instead of packed inside them, so the
 /// re-rank prices the placement axis itself.
+///
+/// Every variant further executes at both the train config's precision and
+/// its [`Precision::twin`] (ISSUE 8): fp8 vs bf16 becomes a ranked axis
+/// like placement, with the speedup *measured* on the executed fabric
+/// rather than assumed. A twin whose re-estimate is OOM at the flipped
+/// precision (e.g. the bf16 twin of an fp8-only mapping) is dropped.
 pub fn tune_executed(
     pm: &PerfModel,
     model: &ModelConfig,
@@ -162,46 +172,66 @@ pub fn tune_executed(
         for placement in placements {
             let cfg = e.config.with_placement(placement);
             for (overlap, tc) in [(true, train), (false, &serial_train)] {
-                // Pair each variant with its *matching* analytic estimate
-                // (the serialized twin drops the analytic overlap credit;
-                // the strided twin re-prices comm over strided groups).
-                let paired = if overlap && placement == EpPlacement::Packed {
-                    e.clone()
-                } else {
-                    match pm.estimate(model, cfg, tc, strategy) {
-                        Ok(a) => a,
-                        Err(err) => {
-                            eprintln!(
-                                "tune_executed: {} twin failed to estimate, \
-                                 dropped from re-rank: {err}",
-                                cfg.tag()
-                            );
-                            continue;
-                        }
+                for precision in [train.precision, train.precision.twin()] {
+                    let native = precision == train.precision;
+                    let mut tc = tc.clone();
+                    tc.precision = precision;
+                    // Pair each variant with its *matching* analytic
+                    // estimate (the serialized twin drops the analytic
+                    // overlap credit; the strided twin re-prices comm over
+                    // strided groups; the precision twin re-prices GEMMs,
+                    // payload bytes and activation memory).
+                    let paired =
+                        if overlap && placement == EpPlacement::Packed && native {
+                            e.clone()
+                        } else {
+                            match pm.estimate(model, cfg, &tc, strategy) {
+                                Ok(a) => a,
+                                Err(err) => {
+                                    eprintln!(
+                                        "tune_executed: {} twin failed to estimate, \
+                                         dropped from re-rank: {err}",
+                                        cfg.tag()
+                                    );
+                                    continue;
+                                }
+                            }
+                        };
+                    if !native && paired.oom {
+                        eprintln!(
+                            "tune_executed: {} {} twin is OOM, dropped from re-rank",
+                            cfg.tag(),
+                            precision.name()
+                        );
+                        continue;
                     }
-                };
-                match executed::execute_step(pm, model, cfg, tc, strategy) {
-                    Ok(x) => candidates.push(ExecutedCandidate {
-                        analytic: paired,
-                        executed: x,
-                        overlap,
-                    }),
-                    // Surface drops: a silently-shrunk survivor set would
-                    // make an execution failure look like "no rank change".
-                    Err(err) => eprintln!(
-                        "tune_executed: {} failed to execute, dropped from re-rank: {err}",
-                        cfg.tag()
-                    ),
+                    match executed::execute_step(pm, model, cfg, &tc, strategy) {
+                        Ok(x) => candidates.push(ExecutedCandidate {
+                            analytic: paired,
+                            executed: x,
+                            overlap,
+                            precision,
+                        }),
+                        // Surface drops: a silently-shrunk survivor set
+                        // would make an execution failure look like "no
+                        // rank change".
+                        Err(err) => eprintln!(
+                            "tune_executed: {} failed to execute, dropped from re-rank: {err}",
+                            cfg.tag()
+                        ),
+                    }
                 }
             }
         }
     }
-    let analytic_order: Vec<(ParallelConfig, bool)> =
-        candidates.iter().map(|c| (c.analytic.config, c.overlap)).collect();
+    let analytic_order: Vec<(ParallelConfig, bool, Precision)> = candidates
+        .iter()
+        .map(|c| (c.analytic.config, c.overlap, c.precision))
+        .collect();
     candidates.sort_by(|a, b| asc_nan_last(a.executed.step_ms, b.executed.step_ms));
     let rank_changed = candidates
         .iter()
-        .map(|c| (c.analytic.config, c.overlap))
+        .map(|c| (c.analytic.config, c.overlap, c.precision))
         .ne(analytic_order.into_iter());
     ExecutedTune { strategy, candidates, rank_changed }
 }
@@ -331,10 +361,11 @@ mod tests {
         // Every config executes as an overlapped + serialized twin pair,
         // and measured overlap never slows a config down.
         for c in &r.candidates {
-            let twin = r
-                .candidates
-                .iter()
-                .find(|d| d.analytic.config == c.analytic.config && d.overlap != c.overlap);
+            let twin = r.candidates.iter().find(|d| {
+                d.analytic.config == c.analytic.config
+                    && d.precision == c.precision
+                    && d.overlap != c.overlap
+            });
             let Some(twin) = twin else { continue };
             let (ovl, ser) = if c.overlap { (c, twin) } else { (twin, c) };
             assert!(
@@ -361,6 +392,27 @@ mod tests {
                 c.analytic.step_ms
             );
         }
+        // The precision axis (ISSUE 8): every variant pairs with its
+        // precision twin, and the fp8 member of each pair wins its
+        // measured step (the paper's Table-2 direction, executed).
+        let mut pairs = 0;
+        for c in r.candidates.iter().filter(|c| c.precision == Precision::Bf16) {
+            let twin = r.candidates.iter().find(|d| {
+                d.analytic.config == c.analytic.config
+                    && d.overlap == c.overlap
+                    && d.precision == Precision::Fp8
+            });
+            let Some(fp8) = twin else { continue };
+            pairs += 1;
+            assert!(
+                fp8.executed.step_ms < c.executed.step_ms,
+                "{}: fp8 {:.1} ms must beat bf16 {:.1} ms",
+                c.analytic.config.tag(),
+                fp8.executed.step_ms,
+                c.executed.step_ms
+            );
+        }
+        assert!(pairs > 0, "every candidate must execute a precision twin");
     }
 
     /// The EP-placement axis: every multi-rank-EP candidate is re-ranked
@@ -388,6 +440,7 @@ mod tests {
                 .find(|c| {
                     c.analytic.config == s.analytic.config.with_placement(EpPlacement::Packed)
                         && c.overlap == s.overlap
+                        && c.precision == s.precision
                 })
                 .expect("every strided twin pairs with a packed original");
             assert!(
@@ -452,6 +505,41 @@ mod tests {
         let r = tune_constrained(&pm, &m, 128, &t, Strategy::MCoreFolding, pinned);
         assert!(r.best.is_none(), "a 20 GiB budget must reject the optimum");
         assert_eq!(r.oom_count, r.evaluated);
+    }
+
+    /// Precision-aware memory gate (ISSUE 8): the Table-2 Mixtral optimum
+    /// needs ~58 GiB under bf16 but ~47 GiB under fp8 (activations are
+    /// half-width), so a 56 GiB budget prunes the bf16 run and admits the
+    /// fp8 twin of the *same* mapping — fp8 is a feasibility axis, not
+    /// just a speed axis.
+    #[test]
+    fn fp8_memory_gate_admits_what_bf16_prunes() {
+        use crate::config::Precision;
+        let pm = PerfModel::default();
+        let m = ModelConfig::mixtral_8x22b();
+        let cons = Constraints {
+            tp: Some(2),
+            cp: Some(1),
+            ep: Some(8),
+            etp: Some(1),
+            pp: Some(8),
+            vpp: Some(1),
+            hbm_gib: Some(56.0),
+        };
+        let bf16 = TrainConfig::paper_default(4096, 256);
+        let mut fp8 = bf16.clone();
+        fp8.precision = Precision::Fp8;
+        let r16 = tune_constrained(&pm, &m, 128, &bf16, Strategy::MCoreFolding, cons);
+        assert!(r16.best.is_none(), "56 GiB must prune the bf16 optimum");
+        assert!(r16.oom_count > 0);
+        let r8 = tune_constrained(&pm, &m, 128, &fp8, Strategy::MCoreFolding, cons);
+        let best = r8.best.expect("fp8 must fit the same mapping in 56 GiB");
+        assert_eq!(
+            (best.config.tp, best.config.ep, best.config.pp),
+            (2, 8, 8),
+            "the admitted fp8 config is the pinned Table-2 mapping"
+        );
+        assert!(best.memory.fits(56.0, &pm.memory.knobs));
     }
 
     /// Regression (ISSUE 6 satellite): a candidate whose estimate carries a

@@ -15,6 +15,25 @@ pub enum Precision {
     Fp8,
 }
 
+impl Precision {
+    /// Human label for table rows ("BF16" / "FP8").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Bf16 => "BF16",
+            Precision::Fp8 => "FP8",
+        }
+    }
+
+    /// The other precision — the twin the executed tuner ranks against,
+    /// the same way [`EpPlacement::Strided`] twins [`EpPlacement::Packed`].
+    pub fn twin(&self) -> Precision {
+        match self {
+            Precision::Bf16 => Precision::Fp8,
+            Precision::Fp8 => Precision::Bf16,
+        }
+    }
+}
+
 /// ZeRO / distributed-optimizer sharding level along the DP axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ZeroStage {

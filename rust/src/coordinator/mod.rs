@@ -57,19 +57,25 @@ pub fn table2(pm: &PerfModel) -> Table {
             results.push((strategy, precision, tflops));
         }
     }
-    let base_bf16 = results[0].2; // MCore BF16
-    let fold_bf16 = results[1].2;
+    // Baselines are looked up by (strategy, precision) key — positional
+    // indexing into `results` silently broke whenever the sweep order
+    // changed (ISSUE 8 satellite).
+    let cell = |s: Strategy, p: Precision| -> f64 {
+        results
+            .iter()
+            .find(|(rs, rp, _)| *rs == s && *rp == p)
+            .map(|(_, _, tf)| *tf)
+            .unwrap_or(f64::NAN)
+    };
     for (strategy, precision, tflops) in &results {
         let vs_bf16 = match precision {
             Precision::Fp8 => {
-                let base = if *strategy == Strategy::MCore { base_bf16 } else { fold_bf16 };
-                format!("{:.2}x", tflops / base)
+                format!("{:.2}x", tflops / cell(*strategy, Precision::Bf16))
             }
             _ => "-".into(),
         };
         let vs_fold = if *strategy == Strategy::MCoreFolding {
-            let base = if *precision == Precision::Bf16 { base_bf16 } else { results[2].2 };
-            format!("{:.2}x", tflops / base)
+            format!("{:.2}x", tflops / cell(Strategy::MCore, *precision))
         } else {
             "-".into()
         };
@@ -79,6 +85,115 @@ pub fn table2(pm: &PerfModel) -> Table {
             format!("{tflops:.1}"),
             vs_bf16,
             vs_fold,
+        ]);
+    }
+    t
+}
+
+/// The **executed** counterpart of [`table2`] (ISSUE 8): tune the BF16
+/// mapping per strategy, then execute that *fixed* mapping under BF16 and
+/// FP8 on the clocked simulator — the fp8-vs-bf16 speedup is read off the
+/// virtual clock, not off an analytic closed form. Under FP8 the GEMMs run
+/// at the derated fp8 peak, activation-class payloads (a2a / TP AG/RS /
+/// p2p) move at 1 byte per element, cast/amax HBM passes are charged, and
+/// grad sync stays at bf16 master-weight widths — so the measured deltas
+/// land in the paper's 1.26–1.30x window for the folded Mixtral optimum.
+pub fn table2_executed(pm: &PerfModel) -> Table {
+    let model = ModelConfig::mixtral_8x22b();
+    let mut t = Table::new(&["Configuration", "Precision", "Config", "Step (ms)",
+                             "Sim TFLOPS", "Speedup vs BF16"]);
+    for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
+        let bf16 = TrainConfig::paper_default(4096, 256);
+        let r = autotune::tune(pm, &model, 128, &bf16, strategy);
+        let Some(best) = r.best else {
+            t.row(&[strategy.name().to_string(), "-".into(), "-".into(),
+                    "OOM".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        let mut bf16_step = f64::NAN;
+        for precision in [Precision::Bf16, Precision::Fp8] {
+            let mut train = bf16.clone();
+            train.precision = precision;
+            let executed = match crate::perfmodel::execute_step(
+                pm, &model, best.config, &train, strategy,
+            ) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!(
+                        "table2 --executed: {} failed to execute, row dropped: {e}",
+                        best.config.tag()
+                    );
+                    continue;
+                }
+            };
+            let speedup = match precision {
+                Precision::Bf16 => {
+                    bf16_step = executed.step_ms;
+                    "-".into()
+                }
+                Precision::Fp8 => format!("{:.2}x", bf16_step / executed.step_ms),
+            };
+            t.row(&[
+                strategy.name().to_string(),
+                format!("{precision:?}"),
+                best.config.tag(),
+                format!("{:.1}", executed.step_ms),
+                format!("{:.1}", executed.tflops_per_gpu),
+                speedup,
+            ]);
+        }
+    }
+    t
+}
+
+/// The **executed** counterpart of [`table1`]: tune each of the paper's
+/// four models with folding, execute the winner on the clocked simulator,
+/// and report analytic vs measured-in-sim MFU side by side. Points above
+/// `max_gpus` are skipped (the 256-GPU Llama3 point is fine on the event
+/// engine, heavy for a laptop thread run).
+pub fn table1_executed(pm: &PerfModel, max_gpus: usize) -> Table {
+    let mut t = Table::new(&["Model", "GPUs", "Config", "Analytic MFU", "Sim MFU",
+                             "Step (ms)"]);
+    let cases = [
+        (ModelConfig::mixtral_8x22b(), 128),
+        (ModelConfig::llama3_8x70b(), 256),
+        (ModelConfig::qwen2_57b_a14b(), 64),
+        (ModelConfig::mixtral_8x22b_g8t8(), 128),
+    ];
+    let train = TrainConfig::paper_default(4096, 256);
+    for (model, gpus) in &cases {
+        if *gpus > max_gpus {
+            continue;
+        }
+        let r = autotune::tune(pm, model, *gpus, &train, Strategy::MCoreFolding);
+        let Some(best) = r.best else {
+            t.row(&[model.name.clone(), gpus.to_string(), "-".into(),
+                    "OOM".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        let executed = match crate::perfmodel::execute_step(
+            pm,
+            model,
+            best.config,
+            &train,
+            Strategy::MCoreFolding,
+        ) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!(
+                    "table1 --executed: {} failed to execute, row dropped: {e}",
+                    best.config.tag()
+                );
+                continue;
+            }
+        };
+        t.row(&[
+            model.name.clone(),
+            gpus.to_string(),
+            best.config.tag(),
+            pct(best.mfu),
+            pct(executed.mfu),
+            format!("{:.1}", executed.step_ms),
         ]);
     }
     t

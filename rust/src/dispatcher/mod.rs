@@ -19,7 +19,7 @@ mod tests {
     use super::*;
     use crate::config::{DropPolicy, ParallelConfig};
     use crate::mapping::RuntimeTopology;
-    use crate::simcomm::run_ranks;
+    use crate::simcomm::{run_ranks, Payload};
     use crate::train::math::SwigluExpert;
     use crate::util::Rng;
 
@@ -153,6 +153,7 @@ mod tests {
                 seq_group: None,
                 phase_cost: None,
                 overlap_a2a: false,
+                payload: Payload::F32,
             };
             layer.forward(&comm, &tokens(8, 40 + rank as u64)).1
         });
@@ -286,6 +287,7 @@ mod tests {
                 seq_group: None,
                 phase_cost: None,
                 overlap_a2a: false,
+                payload: Payload::F32,
             };
             layer.forward(&comm, &tokens(32, 13 + rank as u64)).1
         });

@@ -26,7 +26,7 @@ use crate::cluster::GpuSpec;
 use crate::config::{DropPolicy, ModelConfig};
 use crate::mapping::RankView;
 use crate::model::flops::ModelFlops;
-use crate::simcomm::Communicator;
+use crate::simcomm::{fake_quantize_chunked, Communicator, Payload};
 use crate::train::math::SwigluExpert;
 
 use super::permute::Permutation;
@@ -157,6 +157,14 @@ pub struct DistributedMoeLayer {
     /// chunking would just queue ahead of them) and there are ≥ 2 local
     /// experts to pipeline.
     pub overlap_a2a: bool,
+    /// Wire width of the dispatch/combine All-to-All payloads.
+    /// [`Payload::Quantized`] fake-quantizes every token row (per-row
+    /// symmetric 1-byte codes, [`crate::simcomm::quant`]) before the a2a
+    /// and bills the transport at 1 B/el — count headers stay exact and
+    /// f32-billed-as-width like the rows, so routing is untouched and the
+    /// byte ratio vs a wider twin is exactly the width ratio. The ETP
+    /// gather/scatter and all control traffic keep the ambient width.
+    pub payload: Payload,
 }
 
 impl DistributedMoeLayer {
@@ -206,6 +214,7 @@ impl DistributedMoeLayer {
             seq_group,
             phase_cost: None,
             overlap_a2a: false,
+            payload: Payload::F32,
         }
     }
 
@@ -219,6 +228,23 @@ impl DistributedMoeLayer {
     pub fn with_overlap(mut self, on: bool) -> Self {
         self.overlap_a2a = on;
         self
+    }
+
+    /// Select the dispatch/combine a2a wire width (see the `payload` field).
+    pub fn with_payload(mut self, p: Payload) -> Self {
+        self.payload = p;
+        self
+    }
+
+    /// Fake-quantize the token rows of an a2a staging buffer in place
+    /// (`header` leading f32-encoded count entries are left exact), one
+    /// scale per h-wide row so padding zeros and row maxima survive
+    /// bit-for-bit.
+    fn quantize_rows(&self, buf: &mut [f32], header: usize) {
+        if self.payload == Payload::Quantized {
+            let h = self.router.config.hidden;
+            fake_quantize_chunked(&mut buf[header..], h);
+        }
     }
 
     /// Whether this forward runs the chunk-pipelined dispatch.
@@ -390,7 +416,12 @@ impl DistributedMoeLayer {
             }
             stats.a2a_send_bytes += buf.len() * 4;
         }
+        for buf in scratch.sends.iter_mut() {
+            self.quantize_rows(buf, epr);
+        }
+        let prev = comm.set_payload(self.payload);
         comm.all_to_all_v_into(&self.ep_group, &scratch.sends, &mut scratch.recvs);
+        comm.set_payload(prev);
 
         // Parse: per peer, counts per local expert + rows grouped by expert.
         // Regroup into per-local-expert buffers, preserving peer order so
@@ -479,7 +510,12 @@ impl DistributedMoeLayer {
                 }
             }
         }
+        for buf in scratch.returns.iter_mut() {
+            self.quantize_rows(buf, 0);
+        }
+        let prev = comm.set_payload(self.payload);
         comm.all_to_all_v_into(&self.ep_group, &scratch.returns, &mut scratch.combined);
+        comm.set_payload(prev);
         comm.clear_phase();
 
         // Reassemble into the original permuted order: peer p returned rows
@@ -571,11 +607,15 @@ impl DistributedMoeLayer {
                     stats.tokens_padded += pad - rows;
                 }
                 stats.a2a_send_bytes += buf.len() * 4;
+                self.quantize_rows(buf, 1); // the count header stays exact
             }
         }
 
         // Enqueue all dispatch chunks (they queue on the serial comm lane;
-        // the payloads move eagerly — only the clock is deferred).
+        // the payloads move eagerly — only the clock is deferred). Every
+        // collective in this region is a dispatch/combine a2a, so the
+        // payload width can scope the whole pipelined section.
+        let prev_payload = comm.set_payload(self.payload);
         comm.set_phase("moe/a2a_dispatch");
         let mut d_handles = Vec::with_capacity(epr);
         for le in 0..epr {
@@ -631,6 +671,7 @@ impl DistributedMoeLayer {
                 if pad != 0 {
                     r.resize(r.len() + (pad_from[le][p] - rows) * h, 0.0);
                 }
+                self.quantize_rows(r, 0);
             }
             comm.set_phase("moe/a2a_combine");
             c_handles.push(comm.all_to_all_v_into_i(
@@ -660,6 +701,7 @@ impl DistributedMoeLayer {
                     .copy_from_slice(&buf[..rows * h]);
             }
         }
+        comm.set_payload(prev_payload);
         comm.clear_phase();
     }
 }

@@ -10,7 +10,7 @@
 
 use moe_folding::autotune::{self, Constraints};
 use moe_folding::cluster::ClusterSpec;
-use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, TrainConfig};
+use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
 use moe_folding::coordinator;
 use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::perfmodel::{execute_step_traced, PerfModel, Strategy};
@@ -25,7 +25,7 @@ fn usage() -> ! {
 USAGE: moe-folding <command> [options]
 
 COMMANDS:
-  plan      --model <name> --gpus <n> [--strategy <s>]
+  plan      --model <name> --gpus <n> [--strategy <s>] [--fp8]
             [--tp N --cp N --ep N --etp N --pp N --vpp N]
             [--hbm GIB]   per-rank HBM budget: candidates that don't fit are
                           rejected; the per-rank GiB estimate is printed
@@ -36,7 +36,7 @@ COMMANDS:
                                      the event-driven clocked simulator
   timeline  --model <name> --gpus <n> --tp N --cp N --ep N --etp N --pp N
             [--vpp N] [--placement packed|strided] [--no-overlap]
-            [--overlap-a2a] [--strategy <s>]
+            [--overlap-a2a] [--fp8] [--strategy <s>]
             [--seq N] [--gbs N] [--out trace.json]
             execute one step on the clocked simulator and dump a
             chrome-trace JSON (load at chrome://tracing or ui.perfetto.dev;
@@ -46,8 +46,15 @@ COMMANDS:
             EP groups across node boundaries to price the placement axis)
   mapping   --gpus <n> --tp N --cp N --ep N --etp N --pp N [--legacy] [--rank R]
   table1 | table2 | table3 | table4 | table5
+  table1    [--executed [--max-gpus N]]   per-model MFU; --executed runs each
+            folded winner on the clocked simulator (analytic vs sim MFU)
+  table2    [--executed]   BF16 vs FP8 on Mixtral 8x22B @128; --executed
+            measures the fp8 speedup on the clocked simulator (quantized
+            a2a payloads, fp8 GEMM peaks, cast/amax passes — 1.26-1.30x)
   table4    [--executed [--max-gpus N]]   GPU scaling; --executed runs each
             tuned winner (and its strided-EP twin) on the clocked simulator
+  table5    [--executed [--max-gpus N]]   context scaling, both models;
+            --executed runs each tuned point on the clocked simulator
   fig3      [--model <name>] [--executed [--max-gpus N]]
             strong scaling over the paper's per-model GPU counts;
             --executed adds measured MFU/step plus the strided-EP twin
@@ -109,10 +116,13 @@ fn main() -> moe_folding::util::error::Result<()> {
             let model = model_arg(&args, "mixtral-8x22b");
             let gpus = args.get_usize("gpus", 128);
             let strategy = parse_strategy(args.get_or("strategy", "folding"));
-            let train_cfg = TrainConfig::paper_default(
+            let mut train_cfg = TrainConfig::paper_default(
                 args.get_usize("seq", model.seq_len),
                 args.get_usize("gbs", 256),
             );
+            if args.flag("fp8") {
+                train_cfg.precision = Precision::Fp8;
+            }
             let cons = Constraints {
                 tp: args.get("tp").map(|v| v.parse().unwrap()),
                 cp: args.get("cp").map(|v| v.parse().unwrap()),
@@ -163,10 +173,11 @@ fn main() -> moe_folding::util::error::Result<()> {
                 );
                 for c in &ex.candidates {
                     println!(
-                        "{}   (analytic {:8.1} ms, {})",
+                        "{}   (analytic {:8.1} ms, {}, {})",
                         c.executed.summary(),
                         c.analytic.step_ms,
-                        if c.overlap { "overlapped" } else { "serialized" }
+                        if c.overlap { "overlapped" } else { "serialized" },
+                        c.precision.name()
                     );
                 }
             }
@@ -201,6 +212,9 @@ fn main() -> moe_folding::util::error::Result<()> {
                 train_cfg.overlap_param_gather = false;
             }
             train_cfg.overlap_a2a = args.flag("overlap-a2a");
+            if args.flag("fp8") {
+                train_cfg.precision = Precision::Fp8;
+            }
             let (est, trace) =
                 execute_step_traced(&pm, &model, cfg, &train_cfg, strategy)
                     .map_err(|e| moe_folding::anyhow!(e))?;
@@ -257,8 +271,21 @@ fn main() -> moe_folding::util::error::Result<()> {
                 println!("{}", topo.view(rank).summary());
             }
         }
-        "table1" => print!("{}", coordinator::table1(&pm).markdown()),
-        "table2" => print!("{}", coordinator::table2(&pm).markdown()),
+        "table1" => {
+            if args.flag("executed") {
+                let max_gpus = args.get_usize("max-gpus", 1024);
+                print!("{}", coordinator::table1_executed(&pm, max_gpus).markdown());
+            } else {
+                print!("{}", coordinator::table1(&pm).markdown());
+            }
+        }
+        "table2" => {
+            if args.flag("executed") {
+                print!("{}", coordinator::table2_executed(&pm).markdown());
+            } else {
+                print!("{}", coordinator::table2(&pm).markdown());
+            }
+        }
         "table3" => print!("{}", coordinator::table3(&pm).markdown()),
         "table4" => {
             let executed = args.flag("executed");
@@ -296,10 +323,17 @@ fn main() -> moe_folding::util::error::Result<()> {
             print!("{}", t.markdown());
         }
         "table5" => {
+            let executed = args.flag("executed");
+            let max_gpus = args.get_usize("max-gpus", 1024);
             for name in ["mixtral-8x22b", "qwen2-57b-a14b"] {
                 let model = ModelConfig::by_name(name).unwrap();
                 println!("## {}", model.name);
-                print!("{}", coordinator::context_scaling(&pm, &model).markdown());
+                let t = if executed {
+                    coordinator::context_scaling_executed(&pm, &model, max_gpus)
+                } else {
+                    coordinator::context_scaling(&pm, &model)
+                };
+                print!("{}", t.markdown());
             }
         }
         "fig5" => {

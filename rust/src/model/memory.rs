@@ -4,7 +4,7 @@
 //! Llama3-8x70B) and drives the auto-tuner's feasibility filter. Numbers are
 //! bytes per GPU at the training steady state (peak of fwd/bwd).
 
-use crate::config::{ModelConfig, ParallelConfig, TrainConfig, ZeroStage};
+use crate::config::{ModelConfig, ParallelConfig, Precision, TrainConfig, ZeroStage};
 
 /// Tunable constants of the memory model (calibrated once, documented in
 /// EXPERIMENTS.md).
@@ -176,6 +176,15 @@ impl MemoryModel {
             _ => train.capacity_factor,
         };
         let block_units = k.attn_act_factor + k.moe_act_factor * model.top_k as f64 * cf;
+        // Retained activations (incl. KV) are stored at the training
+        // precision: fp8 halves this term while weights stay bf16 and the
+        // optimizer keeps fp32 masters (Megatron convention) — this is what
+        // lets the autotuner's `hbm_gib` gate admit configs under fp8 that
+        // bf16 prunes.
+        let act_width = match train.precision {
+            Precision::Bf16 => 2.0,
+            Precision::Fp8 => 1.0,
+        };
         let activation_bytes = match zero {
             // FSDP baseline (PyTorch FSDP + TP): no Megatron sequence
             // parallelism — norms/residual/input activations (~12 units) are
@@ -185,7 +194,7 @@ impl MemoryModel {
                 let tokens_cp = train.micro_batch_size as f64 * train.seq_len as f64 / cp;
                 tokens_cp
                     * layers_local
-                    * 2.0
+                    * act_width
                     * h
                     * (8.0 + block_units / tp)
                     * train.activation_retained_frac
@@ -197,7 +206,7 @@ impl MemoryModel {
                     train.micro_batch_size as f64 * train.seq_len as f64 / (tp * cp);
                 tokens_local
                     * layers_local
-                    * 2.0
+                    * act_width
                     * h
                     * block_units
                     * train.activation_retained_frac
@@ -278,6 +287,24 @@ mod tests {
         let p1 = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 1), &t, ZeroStage::Zero1);
         let p8 = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 8), &t, ZeroStage::Zero1);
         assert!(p8.param_bytes < p1.param_bytes);
+    }
+
+    /// FP8 halves the retained-activation term exactly while weights stay
+    /// bf16 and the optimizer keeps fp32 masters — so only activations move
+    /// (ISSUE 8: precision-aware memory behind the autotuner's hbm gate).
+    #[test]
+    fn fp8_halves_activations_only() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let mut t = TrainConfig::paper_default(4096, 256);
+        let bf16 = mm.estimate(&m, &cfg(128, 2, 1, 8, 1, 8), &t, ZeroStage::Zero1);
+        t.precision = Precision::Fp8;
+        let fp8 = mm.estimate(&m, &cfg(128, 2, 1, 8, 1, 8), &t, ZeroStage::Zero1);
+        assert_eq!(fp8.activation_bytes, bf16.activation_bytes / 2.0);
+        assert_eq!(fp8.param_bytes, bf16.param_bytes, "bf16 master weights");
+        assert_eq!(fp8.grad_bytes, bf16.grad_bytes, "fp32 main grads");
+        assert_eq!(fp8.optim_bytes, bf16.optim_bytes, "fp32 optimizer masters");
+        assert!(fp8.total_gib() < bf16.total_gib());
     }
 
     #[test]

@@ -24,6 +24,14 @@ pub struct EffKnobs {
     pub fp8_overhead: f64,
     /// FP8 efficiency derate: FP8 tensor cores are harder to saturate.
     pub fp8_derate: f64,
+    /// HBM passes over the layer activations (at bf16 width) charged only
+    /// under FP8, for the Transformer-Engine-style cast/transpose/amax
+    /// bookkeeping that surrounds every fp8 GEMM: quantize inputs, keep a
+    /// transposed copy for the backward, track amax history. Calibrated so
+    /// the Table-2 Mixtral 8x22B @128-GPU step speedup lands inside the
+    /// paper's 1.26–1.30× window (the pure-GEMM fp8 speedup stays ~1.36,
+    /// pinned separately by `fp8_faster_despite_derate`).
+    pub fp8_cast_passes: f64,
     /// Fixed per-layer per-microbatch overhead (kernel launches, small ops),
     /// microseconds. Penalizes very small shards (large CP/TP at short seq).
     pub fixed_layer_us: f64,
@@ -42,6 +50,7 @@ impl Default for EffKnobs {
             attn_core_eff: 0.52,
             fp8_overhead: 0.15,
             fp8_derate: 0.78,
+            fp8_cast_passes: 8.0,
             fixed_layer_us: 14.0,
             elementwise_passes: 14.0,
         }

@@ -841,6 +841,46 @@ mod tests {
         assert_eq!(e1.cp_hidden_us + e1.cp_exposed_us, 0.0);
     }
 
+    /// ISSUE 8 pin: on the Table-2/3 folded Mixtral mapping the
+    /// **measured** fp8-vs-bf16 step speedup lands in the paper's
+    /// 1.26–1.30x window (Table 2 reports 1.255x/1.295x for
+    /// MCore/folding). The same fixed config executes under both
+    /// precisions — fp8 GEMMs at the derated fp8 peak, activation-class
+    /// payloads at 1 byte/element, cast/amax HBM passes charged, grad
+    /// sync at bf16 master-weight widths — and each precision's executed
+    /// step agrees with its analytic twin within the existing 2% pin.
+    #[test]
+    fn fp8_executed_speedup_in_paper_window() {
+        let pm = PerfModel::default();
+        let model = ModelConfig::mixtral_8x22b();
+        let cfg = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        let bf16 = TrainConfig::paper_default(4096, 256);
+        let mut fp8 = bf16.clone();
+        fp8.precision = crate::config::Precision::Fp8;
+        let mut steps = Vec::new();
+        for train in [&bf16, &fp8] {
+            let analytic = pm.estimate(&model, cfg, train, Strategy::MCoreFolding).unwrap();
+            let executed = execute_step(&pm, &model, cfg, train, Strategy::MCoreFolding).unwrap();
+            let rel = (executed.step_ms - analytic.step_ms).abs() / analytic.step_ms;
+            assert!(
+                rel < 0.02,
+                "{:?}: executed {:.1} ms vs analytic {:.1} ms (rel {rel:.4})",
+                train.precision,
+                executed.step_ms,
+                analytic.step_ms
+            );
+            steps.push(executed.step_ms);
+        }
+        let speedup = steps[0] / steps[1];
+        assert!(
+            (1.26..=1.30).contains(&speedup),
+            "measured fp8 speedup {speedup:.4} outside the paper's 1.26–1.30x window \
+             (bf16 {:.1} ms, fp8 {:.1} ms)",
+            steps[0],
+            steps[1]
+        );
+    }
+
     /// vpp > 1 executes the interleaved schedule and shrinks the measured
     /// bubble toward the interleaved closed form.
     #[test]

@@ -134,7 +134,7 @@ impl<'a> LayerCoster<'a> {
         // M = tokens_mb / cp rows and 1/tp of the output columns:
         // per-rank flops = tokens_local * full-layer per-token flops.
         let gemm_flops = tokens * 2.0 * h * (h + 2.0 * kv_dim + h);
-        let gemm_us = gemm_time_us(
+        let mut gemm_us = gemm_time_us(
             &self.eff,
             gemm_flops,
             tokens * tp,                    // M: CP-local sequence rows
@@ -143,6 +143,14 @@ impl<'a> LayerCoster<'a> {
             self.peak(),
             t.precision,
         );
+        // FP8 cast/transpose/amax traffic around the block's GEMMs: extra
+        // HBM passes over the bf16-width activations (Transformer-Engine
+        // keeps the master activations in bf16 and quantizes per GEMM).
+        if t.precision == Precision::Fp8 {
+            gemm_us += self.eff.fp8_cast_passes * tokens * h * 2.0
+                / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9)
+                * 1e6;
+        }
 
         // Attention core (flash): quadratic term, causal, split over heads
         // (TP) and sequence (CP).
@@ -220,7 +228,14 @@ impl<'a> LayerCoster<'a> {
 
         // Permute + unpermute: 2 gather passes over routed activations.
         let permute_bytes = 2.0 * routed * h * bytes * 2.0; // read+write
-        let permute_us = permute_bytes / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9) * 1e6 + 2.0;
+        let mut permute_us = permute_bytes / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9) * 1e6 + 2.0;
+        // FP8 cast/transpose/amax traffic around the expert GEMMs, charged
+        // on the routed copies at bf16 width (see `attention_layer`).
+        if t.precision == Precision::Fp8 {
+            permute_us += self.eff.fp8_cast_passes * routed * h * 2.0
+                / (self.comm.cluster.gpu.hbm_bw_gbs * 1e9)
+                * 1e6;
+        }
 
         // All-to-All-V dispatch + combine across the EP group.
         let a2a_bytes = routed * h * bytes;

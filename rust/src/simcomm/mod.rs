@@ -90,8 +90,10 @@
 mod algos;
 mod clock;
 pub(crate) mod engine;
+pub mod quant;
 
 pub use clock::{chrome_trace_json, Lane, TraceEvent};
+pub use quant::{dequantize_chunked, fake_quantize_chunked, quantize_chunked, QuantChunks};
 
 use std::borrow::Cow;
 use std::cell::{Cell, RefCell};
@@ -102,6 +104,37 @@ use std::sync::{Arc, Barrier, Condvar, Mutex};
 use clock::SimClock;
 use crate::cluster::{ClusterSpec, LinkKind};
 use crate::collectives::{CommCost, CommPrimitive};
+
+/// Wire width of collective payload elements — the dtype the fabric *bills*
+/// per transported element. The functional engine always moves `f32`
+/// stand-ins (determinism and reduction order are untouched); the payload
+/// width scales what [`Fabric::link_traffic`] meters and what the virtual
+/// clock prices per element, so a quantized dispatch is billed at 1 B/el
+/// while a bf16 twin of the same routes is billed at 2 B/el — exactly half
+/// the bytes on every wire, by construction (pinned in
+/// `tests/prop_invariants.rs`). Per-chunk scales of the quantized codec
+/// ([`quant`]) ride as unbilled metadata, mirroring NCCL's out-of-band
+/// scale exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// Full f32 elements, 4 B each (the functional default).
+    F32,
+    /// bf16 activations, 2 B per element.
+    Bf16,
+    /// 1-byte quantized elements (fp8-class dispatch) with per-chunk scales.
+    Quantized,
+}
+
+impl Payload {
+    /// Billed bytes per transported element.
+    pub fn bytes_per_el(self) -> f64 {
+        match self {
+            Payload::F32 => 4.0,
+            Payload::Bf16 => 2.0,
+            Payload::Quantized => 1.0,
+        }
+    }
+}
 
 /// Which algorithm a collective primitive runs. See module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -433,6 +466,7 @@ impl Fabric {
             algos: self.algos,
             phase: RefCell::new(String::new()),
             bill_scale: Cell::new(1.0),
+            payload: Cell::new(Payload::F32),
             nonblocking: Cell::new(false),
             pending: RefCell::new(None),
         }
@@ -556,6 +590,11 @@ pub struct Communicator {
     /// Multiplier applied to real payload bytes when billing the clock —
     /// lets scaled-down functional runs charge model-scale volumes.
     bill_scale: Cell<f64>,
+    /// Billed wire width per transported element (see [`Payload`]). Applies
+    /// to collective transport hops and the per-collective clock charge;
+    /// explicit-volume calls (`send_billed`, `charge_collective`) are
+    /// unaffected.
+    payload: Cell<Payload>,
     /// When set, the next collective's clock charge is deferred into
     /// `pending` instead of advancing the main lane (the `*_i` variants).
     nonblocking: Cell<bool>,
@@ -587,6 +626,7 @@ impl Communicator {
             algos,
             phase: RefCell::new(String::new()),
             bill_scale: Cell::new(self.bill_scale.get()),
+            payload: Cell::new(self.payload.get()),
             nonblocking: Cell::new(false),
             pending: RefCell::new(None),
         }
@@ -613,7 +653,7 @@ impl Communicator {
     /// Move an owned (pooled) buffer to `dst` as an internal-transport
     /// message (collective hop / control traffic).
     pub(crate) fn send_vec(&self, dst: usize, data: Vec<f32>) {
-        let billed = data.len() as f64 * 4.0;
+        let billed = data.len() as f64 * self.payload.get().bytes_per_el();
         self.push_msg(dst, INTERNAL_TAG, data, billed);
     }
 
@@ -930,6 +970,20 @@ impl Communicator {
         self.bill_scale.set(scale.max(0.0));
     }
 
+    /// Set the billed wire width per transported element for subsequent
+    /// collective calls (see [`Payload`]). Returns the previous width so
+    /// callers can scope the change (`let prev = set_payload(..); …;
+    /// set_payload(prev)`). The functional payload stays f32 — only the
+    /// traffic meters and the clock price change.
+    pub fn set_payload(&self, p: Payload) -> Payload {
+        self.payload.replace(p)
+    }
+
+    /// The billed wire width currently in effect.
+    pub fn payload(&self) -> Payload {
+        self.payload.get()
+    }
+
     /// Executed collective with **virtual volume**: synchronizes the group
     /// on `max(issue times)` (a real cross-thread rendezvous — ordering and
     /// deadlock semantics of a collective) and advances every member's
@@ -1015,7 +1069,7 @@ impl Communicator {
         if self.fabric.clock.is_none() || group.len() <= 1 {
             return;
         }
-        let my_bytes = my_elems * 4.0 * self.bill_scale.get();
+        let my_bytes = my_elems * self.payload.get().bytes_per_el() * self.bill_scale.get();
         self.finish_collective(None, prim, group, my_bytes);
     }
 

@@ -1,0 +1,148 @@
+//! Chunked symmetric 1-byte quantization codec for reduced-precision
+//! dispatch payloads (ISSUE 8).
+//!
+//! The paper's Table 2 and the Megatron-Core FP8 path move activation-class
+//! traffic at 1 byte per element; this codec is the functional stand-in.
+//! Each `chunk`-element block gets one f32 scale `s = max|x| / 127` and
+//! 1-byte codes `q = round(x / s) ∈ [-127, 127]`, so the worst-case
+//! round-trip error of any element is **`s / 2 = max|x| / 254` per chunk**
+//! — the pinned envelope. Two exact cases fall out of the symmetric scheme:
+//! zeros stay exactly zero (padding rows survive bit-for-bit) and the
+//! chunk's own ±max round-trips exactly (`±max / s = ±127`, an integer).
+//!
+//! The fabric transports dequantized f32 stand-ins (fake quantization), so
+//! reduction order and determinism are untouched; [`super::Payload`] is
+//! what makes the *billing* 1 byte per element. Scales are out-of-band
+//! metadata, unbilled — mirroring how scale tensors ride the NCCL header
+//! stream rather than the payload allocation.
+
+/// Quantized representation of a buffer: 1-byte codes plus one f32 scale
+/// per `chunk` elements (the last chunk may be short).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantChunks {
+    /// Symmetric signed codes in `[-127, 127]`, one per input element.
+    pub codes: Vec<i8>,
+    /// Per-chunk dequantization scales (`codes[i] as f32 * scales[i / chunk]`).
+    pub scales: Vec<f32>,
+    /// Elements per scale.
+    pub chunk: usize,
+}
+
+impl QuantChunks {
+    /// Worst-case absolute round-trip error any element of this buffer can
+    /// carry: `max(scales) / 2` (each chunk's bound is `scale / 2`).
+    pub fn error_bound(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |m, &s| m.max(s)) / 2.0
+    }
+}
+
+/// Quantize `data` with one symmetric scale per `chunk` elements.
+pub fn quantize_chunked(data: &[f32], chunk: usize) -> QuantChunks {
+    let chunk = chunk.max(1);
+    let mut codes = Vec::with_capacity(data.len());
+    let mut scales = Vec::with_capacity(data.len().div_ceil(chunk));
+    for block in data.chunks(chunk) {
+        let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        scales.push(scale);
+        if scale == 0.0 {
+            codes.extend(std::iter::repeat(0i8).take(block.len()));
+        } else {
+            codes.extend(
+                block
+                    .iter()
+                    .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8),
+            );
+        }
+    }
+    QuantChunks { codes, scales, chunk }
+}
+
+/// Reconstruct f32 values from a [`QuantChunks`].
+pub fn dequantize_chunked(q: &QuantChunks) -> Vec<f32> {
+    q.codes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c as f32 * q.scales[i / q.chunk])
+        .collect()
+}
+
+/// Dequantize∘quantize in place: `data` becomes exactly what a receiver of
+/// the quantized payload would observe. Idempotent (a second pass is a
+/// no-op: the reconstruction points are fixed points of the codec).
+pub fn fake_quantize_chunked(data: &mut [f32], chunk: usize) {
+    let chunk = chunk.max(1);
+    for block in data.chunks_mut(chunk) {
+        let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = max_abs / 127.0;
+        if scale == 0.0 {
+            continue; // all-zero chunk is already exact
+        }
+        for x in block.iter_mut() {
+            *x = (*x / scale).round().clamp(-127.0, 127.0) * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The pinned envelope: every element round-trips within `scale / 2 =
+    /// chunk_max_abs / 254`, across chunks whose magnitudes span six orders
+    /// (per-chunk scaling is the whole point — one global scale would
+    /// crush the small chunks to zero).
+    #[test]
+    fn round_trip_error_within_envelope_across_skewed_magnitudes() {
+        let mut rng = Rng::seed_from_u64(88);
+        let chunk = 64usize;
+        let mut data = vec![0.0f32; chunk * 4];
+        rng.fill_normal(&mut data, 1.0);
+        for (i, block_scale) in [1e-3f32, 1.0, 40.0, 1e3].into_iter().enumerate() {
+            for x in &mut data[i * chunk..(i + 1) * chunk] {
+                *x *= block_scale;
+            }
+        }
+        let q = quantize_chunked(&data, chunk);
+        let back = dequantize_chunked(&q);
+        for (b, block) in data.chunks(chunk).enumerate() {
+            let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let bound = max_abs / 254.0 + f32::EPSILON * max_abs;
+            for (i, &x) in block.iter().enumerate() {
+                let err = (back[b * chunk + i] - x).abs();
+                assert!(
+                    err <= bound,
+                    "chunk {b} el {i}: err {err} > bound {bound} (x = {x})"
+                );
+            }
+        }
+        assert!(q.error_bound() > 0.0);
+        // The codec is lossy for generic values — the twin must differ.
+        assert!(back.iter().zip(&data).any(|(a, b)| a != b));
+    }
+
+    /// Zeros and the chunk's own ±max are exact; fake-quantize is
+    /// idempotent (reconstruction points are codec fixed points).
+    #[test]
+    fn exact_cases_and_idempotence() {
+        let mut data = vec![0.0f32, 0.5, -3.25, 3.25, 1.0, 0.0, -0.125, 2.0];
+        let q = quantize_chunked(&data, 4);
+        let back = dequantize_chunked(&q);
+        assert_eq!(back[0], 0.0);
+        assert_eq!(back[5], 0.0);
+        assert_eq!(back[2], -3.25, "chunk -max is exact");
+        assert_eq!(back[3], 3.25, "chunk +max is exact");
+        assert_eq!(back[7], 2.0, "second chunk's max is exact too");
+        assert_ne!(back[4], 1.0, "non-max elements are lossy (1.0 → 64·2/127)");
+        fake_quantize_chunked(&mut data, 4);
+        assert_eq!(data, back, "fake quantization = dequantize∘quantize");
+        let mut twice = data.clone();
+        fake_quantize_chunked(&mut twice, 4);
+        assert_eq!(twice, data, "idempotent");
+        // All-zero buffers survive untouched (padding rows).
+        let mut zeros = vec![0.0f32; 16];
+        fake_quantize_chunked(&mut zeros, 4);
+        assert!(zeros.iter().all(|&z| z == 0.0));
+    }
+}

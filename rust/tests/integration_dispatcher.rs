@@ -6,7 +6,7 @@ use moe_folding::config::DropPolicy;
 use moe_folding::dispatcher::{
     reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
 };
-use moe_folding::simcomm::run_ranks;
+use moe_folding::simcomm::{run_ranks, Payload};
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::util::Rng;
 
@@ -60,6 +60,7 @@ fn run_matrix(ep: usize, etp: usize, top_k: usize, policy: DropPolicy, cf: f64) 
             seq_group: None,
             phase_cost: None,
             overlap_a2a: false,
+            payload: Payload::F32,
         };
         let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
         layer.forward(&comm, &mine)
@@ -126,6 +127,7 @@ fn capacity_bound_respected_in_both_scopes() {
                 seq_group: Some(vec![0, 1]),
                 phase_cost: None,
                 overlap_a2a: false,
+            payload: Payload::F32,
             };
             let mine = tokens[rank * n_per_rank * H..(rank + 1) * n_per_rank * H].to_vec();
             layer.forward(&comm, &mine).1

@@ -21,7 +21,7 @@ use moe_folding::dispatcher::{
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{PerfModel, Strategy};
 use moe_folding::pipeline::execute_1f1b_mapped;
-use moe_folding::simcomm::run_ranks;
+use moe_folding::simcomm::{run_ranks, Payload};
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::train::{GradSync, ParamClass};
 use moe_folding::util::Rng;
@@ -313,6 +313,7 @@ fn full_sequence_drop_handles_uneven_splits() {
             seq_group: Some(vec![0, 1]),
             phase_cost: None,
             overlap_a2a: false,
+            payload: Payload::F32,
         };
         let offset: usize = split[..rank].iter().sum();
         let mine = all_tokens[offset * H..(offset + split[rank]) * H].to_vec();

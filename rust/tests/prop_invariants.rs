@@ -887,3 +887,114 @@ fn node_limited_routing_saves_ib_bytes_on_correlated_gates() {
         "node-limited dispatch must move fewer IB bytes: {limited} vs {unrestricted}"
     );
 }
+
+/// Satellite (ISSUE 8): quantized-payload dispatch. On identical routes the
+/// [`Payload::Quantized`] twin's measured `link_traffic` bytes are
+/// **exactly** `bytes_per_el(Fp8) / bytes_per_el(Bf16) = 1/2` of the
+/// [`Payload::Bf16`] twin's (uniform per-element billing; per-chunk scales
+/// ride out of band, unbilled), and `Payload::Bf16` is bit-identical in
+/// output to the f32 reference (width is billing-only). The quantized
+/// twin's layer outputs stay inside a generous relative-L2 envelope of the
+/// dequantized f32 reference while being measurably lossy — the
+/// bounded-epsilon half of the twin pin (the per-chunk `max|x|/254` bound
+/// itself is pinned in `simcomm::quant`).
+#[test]
+fn prop_quantized_dispatch_halves_link_bytes_and_bounds_error() {
+    use moe_folding::cluster::LinkKind;
+    use moe_folding::dispatcher::DistributedMoeLayer;
+    use moe_folding::simcomm::{run_ranks_on, AlgoSelection, Fabric, Payload};
+    use moe_folding::train::math::SwigluExpert;
+
+    forall(
+        "quantized a2a bytes and error envelope",
+        8,
+        |rng: &mut Rng| {
+            let e = [4usize, 8][rng.next_below(2)];
+            let k = draw::in_range(rng, 1, 3);
+            let n = draw::in_range(rng, 4, 24);
+            let overlap = rng.next_below(2) == 0;
+            (e, k, n, overlap, rng.next_u64())
+        },
+        |&(e, k, n, overlap, seed)| {
+            let h = 8usize;
+            let world = 4usize;
+            let mut rng = Rng::seed_from_u64(seed);
+            let experts: Vec<SwigluExpert> =
+                (0..e).map(|_| SwigluExpert::init(h, 16, &mut rng)).collect();
+            let mut tokens = vec![0.0f32; world * n * h];
+            rng.fill_normal(&mut tokens, 1.0);
+            let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, 4, 1, 1))?;
+            let run = |payload: Payload| {
+                let fabric = Fabric::new_with(world, AlgoSelection::fast());
+                let outs = run_ranks_on(&fabric, |rank, comm| {
+                    let mut r2 = Rng::seed_from_u64(seed ^ 0x0ddba11);
+                    let router = Router::init(
+                        RouterConfig {
+                            hidden: h,
+                            num_experts: e,
+                            top_k: k,
+                            capacity_factor: 1.0,
+                            drop_policy: DropPolicy::Dropless,
+                            capacity_override: None,
+                            pad_to_capacity: false,
+                            node_limit: None,
+                        },
+                        &mut r2,
+                    );
+                    let layer =
+                        DistributedMoeLayer::from_topology(topo.view(rank), router, &experts)
+                            .with_overlap(overlap)
+                            .with_payload(payload);
+                    let mine = tokens[rank * n * h..(rank + 1) * n * h].to_vec();
+                    layer.forward(&comm, &mine).0
+                });
+                let bytes: f64 = [LinkKind::Loopback, LinkKind::NvLink, LinkKind::InfiniBand]
+                    .iter()
+                    .map(|&kind| fabric.link_traffic(kind).bytes)
+                    .sum();
+                (outs, bytes)
+            };
+            let (ref_out, f32_bytes) = run(Payload::F32);
+            let (bf16_out, bf16_bytes) = run(Payload::Bf16);
+            let (q_out, q_bytes) = run(Payload::Quantized);
+            if bf16_bytes <= 0.0 {
+                return Err("no a2a traffic measured".into());
+            }
+            // Identical element counts on identical routes × uniform widths
+            // ⇒ the ratios are exact, not approximate.
+            if q_bytes * 2.0 != bf16_bytes {
+                return Err(format!(
+                    "quantized bytes {q_bytes} must be exactly half of bf16 {bf16_bytes}"
+                ));
+            }
+            if bf16_bytes * 2.0 != f32_bytes {
+                return Err(format!(
+                    "bf16 bytes {bf16_bytes} must be exactly half of f32 {f32_bytes}"
+                ));
+            }
+            let (mut num, mut den, mut lossy) = (0.0f64, 0.0f64, false);
+            for rank in 0..world {
+                for (i, (b, r)) in bf16_out[rank].iter().zip(&ref_out[rank]).enumerate() {
+                    if b.to_bits() != r.to_bits() {
+                        return Err(format!(
+                            "rank {rank} idx {i}: bf16 billing twin changed the payload"
+                        ));
+                    }
+                }
+                for (q, r) in q_out[rank].iter().zip(&ref_out[rank]) {
+                    num += (*q as f64 - *r as f64).powi(2);
+                    den += (*r as f64).powi(2);
+                    lossy |= q.to_bits() != r.to_bits();
+                }
+            }
+            let rel_l2 = (num / den.max(1e-30)).sqrt();
+            if rel_l2 > 0.05 {
+                return Err(format!("quantized rel-L2 {rel_l2:.4} outside the 5% envelope"));
+            }
+            if !lossy {
+                return Err("quantized twin must be measurably lossy".into());
+            }
+            Ok(())
+        },
+    );
+}
