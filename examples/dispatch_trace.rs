@@ -8,7 +8,7 @@
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::collectives::CommModel;
 use moe_folding::config::{DropPolicy, ParallelConfig};
-use moe_folding::dispatcher::{DistributedMoeLayer, Router, RouterConfig};
+use moe_folding::dispatcher::{Balancer, DistributedMoeLayer, Router, RouterConfig};
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::simcomm::run_ranks;
 use moe_folding::train::math::SwigluExpert;
@@ -37,6 +37,8 @@ fn main() {
             drop_policy: DropPolicy::SubSequence,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );

@@ -16,7 +16,7 @@
 
 use moe_folding::config::{DropPolicy, ParallelConfig};
 use moe_folding::dispatcher::{
-    reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
+    reference_moe_forward, Balancer, DistributedMoeLayer, Router, RouterConfig,
 };
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::simcomm::run_ranks;
@@ -42,6 +42,8 @@ fn dispatcher_equivalence() {
             drop_policy: DropPolicy::Dropless,
             capacity_override: None,
             pad_to_capacity: false,
+            node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );

@@ -9,7 +9,7 @@ use std::sync::Mutex;
 use moe_folding::config::DropPolicy;
 use moe_folding::config::{ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::dispatcher::{
-    DispatchScratch, DistributedMoeLayer, Permutation, Router, RouterConfig,
+    Balancer, DispatchScratch, DistributedMoeLayer, Permutation, Router, RouterConfig,
 };
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{PerfModel, Strategy};
@@ -32,6 +32,7 @@ fn main() {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );
@@ -64,6 +65,7 @@ fn main() {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );

@@ -11,6 +11,8 @@
 use std::time::Instant;
 
 use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
+use moe_folding::coordinator;
+use moe_folding::dispatcher::SkewProfile;
 use moe_folding::perfmodel::layers::bytes_per_el;
 use moe_folding::perfmodel::{
     execute_step, execute_step_traced_on, ExecEngine, PerfModel, Strategy,
@@ -278,6 +280,47 @@ fn main() {
                 rank_steps_per_sec
             ));
         }
+    }
+    // Capacity-policy cost triangle under Zipf gate skew (ISSUE 9): one
+    // executed sweep cell per (balancer, policy) at CF=1 on the clocked
+    // fabric — drop rate, dispatch a2a MB, and executed step µs are the
+    // trajectory future routing-realism work is measured against.
+    let model = ModelConfig::mixtral_8x22b();
+    let skew = SkewProfile::Zipf { exponent: 1.2 };
+    let t0 = Instant::now();
+    let points = coordinator::sweep_capacity_points(&model, 8, 64, skew, &[1.0]);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3 / points.len().max(1) as f64;
+    for p in &points {
+        println!(
+            "fig5-skew    {:<9} {:<9} cf {:.2}   drop {:5.1}%   a2a {:8.2} MB   \
+             step {:8.0} µs   load {:.2}   entropy {:.3}",
+            p.balancer,
+            p.policy,
+            p.capacity_factor,
+            p.drop_rate * 100.0,
+            p.a2a_mb,
+            p.step_us,
+            p.imbalance,
+            p.entropy
+        );
+        rows.push(format!(
+            "{{\"model\":\"{}\",\"gpus\":8,\"config\":\"ep8-etp1\",\
+             \"variant\":\"fig5-skew\",\"skew\":\"{}\",\
+             \"balancer\":\"{}\",\"policy\":\"{}\",\"capacity_factor\":{:.2},\
+             \"drop_rate\":{:.5},\"a2a_mb\":{:.4},\"sim_step_us\":{:.1},\
+             \"load_imbalance\":{:.4},\"load_entropy\":{:.4},\
+             \"harness_wall_ms\":{wall_ms:.1}}}",
+            model.name,
+            skew.name(),
+            p.balancer,
+            p.policy,
+            p.capacity_factor,
+            p.drop_rate,
+            p.a2a_mb,
+            p.step_us,
+            p.imbalance,
+            p.entropy
+        ));
     }
     let json = format!(
         "{{\"bench\":\"timeline_step\",\"unit\":\"ms\",\"configs\":[\n{}\n]}}\n",

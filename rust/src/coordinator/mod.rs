@@ -6,10 +6,13 @@
 //! [`crate::train`] (execution).
 
 use crate::autotune::{self, Constraints, TuneResult};
-use crate::cluster::{ClusterSpec, GpuSpec};
+use crate::cluster::{ClusterSpec, GpuSpec, LinkKind};
 use crate::collectives::CommCost;
 use crate::config::{DropPolicy, EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
-use crate::dispatcher::{DistributedMoeLayer, MoePhaseCost, Router, RouterConfig};
+use crate::dispatcher::{
+    Balancer, DistributedMoeLayer, LoadStats, MoePhaseCost, Router, RouterConfig, SkewGen,
+    SkewProfile,
+};
 use crate::mapping::RuntimeTopology;
 use crate::metrics::{pct, Table};
 use crate::perfmodel::{PerfModel, Strategy};
@@ -441,20 +444,30 @@ pub fn fig5_breakdown(pm: &PerfModel, model: &ModelConfig, ep_etp: usize) -> Tab
 /// skew, and the EP-vs-ETP comm asymmetry are *measured*, not assumed.
 ///
 /// With `overlap` the chunk-pipelined dispatcher runs
-/// ([`DistributedMoeLayer::with_overlap`]): the trailing two columns split
-/// the a2a time into what the expert GEMMs hid vs what stayed exposed
-/// (measured per chunk off the comm lane; ETP > 1 mappings fall back to
-/// the serialized path and report everything exposed).
+/// ([`DistributedMoeLayer::with_overlap`]): the "A2A hidden/exposed"
+/// columns split the a2a time into what the expert GEMMs hid vs what
+/// stayed exposed (measured per chunk off the comm lane; ETP > 1 mappings
+/// fall back to the serialized path and report everything exposed).
+///
+/// `policy` carries the routing knobs that used to be hardcoded to
+/// CF=1 dropless (ISSUE 9 satellite): capacity factor, drop policy,
+/// padding, balancer, and an optional skew profile. With a skew profile
+/// the token stream comes from [`SkewGen`] through its identity gating
+/// weight, so the breakdown prices what skewed traffic actually costs —
+/// the trailing "Drop %" and "A2A (MB)" columns surface the other two
+/// corners of the cost triangle next to the executed step time.
 pub fn fig5_breakdown_executed(
     model: &ModelConfig,
     ep_etp: usize,
     tokens_per_rank: usize,
     overlap: bool,
+    policy: &RoutingPolicy,
 ) -> Table {
     let mut t = Table::new(&["Mapping", "Router+Permute (µs)", "A2A (µs)",
                              "ETP AG/RS (µs)", "Expert GEMM (µs)", "Total (µs)",
-                             "A2A hidden (µs)", "A2A exposed (µs)"]);
-    let h_sim = 64usize;
+                             "A2A hidden (µs)", "A2A exposed (µs)",
+                             "Drop %", "A2A (MB)"]);
+    let h_sim = 64usize.max(model.num_experts);
     let ff_sim = 128usize;
     for (ep, etp) in fig5_combos(model, ep_etp) {
         let world = ep * etp;
@@ -463,25 +476,34 @@ pub fn fig5_breakdown_executed(
             continue;
         };
         let mut rng = Rng::seed_from_u64(4242);
-        let router = Router::init(
-            RouterConfig {
-                hidden: h_sim,
-                num_experts: model.num_experts,
-                top_k: model.top_k,
-                capacity_factor: 1.0,
-                drop_policy: DropPolicy::Dropless,
-                capacity_override: None,
-                pad_to_capacity: false,
-                node_limit: None,
-            },
-            &mut rng,
-        );
+        let config = RouterConfig {
+            hidden: h_sim,
+            num_experts: model.num_experts,
+            top_k: model.top_k,
+            capacity_factor: policy.capacity_factor,
+            drop_policy: policy.drop_policy,
+            capacity_override: None,
+            pad_to_capacity: policy.pad_to_capacity,
+            node_limit: None,
+            balancer: policy.balancer,
+        };
+        let mut skew = policy.skew.map(|p| SkewGen::new(p, model.num_experts, h_sim, 4242));
+        let router = match &skew {
+            Some(gen) => gen.router(config),
+            None => Router::init(config, &mut rng),
+        };
         let experts: Vec<SwigluExpert> = (0..model.num_experts)
             .map(|_| SwigluExpert::init(h_sim, ff_sim, &mut rng))
             .collect();
         let pc = MoePhaseCost::from_model(model, etp, &GpuSpec::h100());
-        let mut tokens = vec![0.0f32; world * tokens_per_rank * h_sim];
-        rng.fill_normal(&mut tokens, 1.0);
+        let tokens = match &mut skew {
+            Some(gen) => gen.next_tokens(world * tokens_per_rank),
+            None => {
+                let mut t = vec![0.0f32; world * tokens_per_rank * h_sim];
+                rng.fill_normal(&mut t, 1.0);
+                t
+            }
+        };
         let fabric = Fabric::new_clocked(
             world,
             AlgoSelection::fast(),
@@ -500,6 +522,14 @@ pub fn fig5_breakdown_executed(
             let (_, s) = layer.forward(&comm, &mine);
             s
         });
+        let a2a_mb = [LinkKind::Loopback, LinkKind::NvLink, LinkKind::InfiniBand]
+            .iter()
+            .map(|&k| fabric.link_traffic(k).bytes)
+            .sum::<f64>()
+            / 1e6;
+        let (routed, dropped) = stats
+            .iter()
+            .fold((0usize, 0usize), |(r, d), s| (r + s.tokens_routed, d + s.tokens_dropped));
         let trace = fabric.take_trace();
         // Sum actual span occupancy only: exposed-`wait` events on the main
         // lane carry the same name as their comm-lane span — counting both
@@ -533,6 +563,195 @@ pub fn fig5_breakdown_executed(
             format!("{:.0}", router_permute + a2a + etp_comm + expert),
             format!("{hidden:.0}"),
             format!("{exposed:.0}"),
+            pct(dropped as f64 / (routed + dropped).max(1) as f64),
+            format!("{a2a_mb:.2}"),
+        ]);
+    }
+    t
+}
+
+/// Routing-policy knobs for [`fig5_breakdown_executed`] and
+/// [`sweep_capacity_points`] — previously hardcoded to CF=1 dropless
+/// inside the breakdown (ISSUE 9 satellite). `Default` reproduces the
+/// old behaviour exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutingPolicy {
+    pub capacity_factor: f64,
+    pub drop_policy: DropPolicy,
+    pub pad_to_capacity: bool,
+    pub balancer: Balancer,
+    /// `None` routes the pre-existing near-uniform random tokens;
+    /// `Some(profile)` streams skewed tokens through the [`SkewGen`]
+    /// identity gate.
+    pub skew: Option<SkewProfile>,
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> Self {
+        RoutingPolicy {
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::Dropless,
+            pad_to_capacity: false,
+            balancer: Balancer::AuxLoss,
+            skew: None,
+        }
+    }
+}
+
+/// One measured point of the capacity-policy sweep: the cost triangle
+/// (a2a volume, drop rate, executed step time) plus load-balance quality
+/// for a (balancer, policy, capacity-factor) cell under one skew profile.
+#[derive(Debug, Clone)]
+pub struct CapacityPoint {
+    pub balancer: &'static str,
+    pub policy: &'static str,
+    pub capacity_factor: f64,
+    /// Fraction of routed token-copies dropped, summed over ranks.
+    pub drop_rate: f64,
+    /// Total bytes moved on the fabric (all link classes), in MB.
+    pub a2a_mb: f64,
+    /// Executed step time off the virtual clock, µs.
+    pub step_us: f64,
+    /// max/mean kept expert load, aggregated over ranks.
+    pub imbalance: f64,
+    /// Normalized load entropy (1.0 = perfectly balanced).
+    pub entropy: f64,
+}
+
+/// The capacity-policy sweep (ISSUE 9 tentpole): run capacity-factor ×
+/// {dropless, drop, pad} × {aux-loss, aux-loss-free, sinkhorn} under one
+/// skew profile on the clocked fabric at `ep` ranks, measuring the real
+/// cost triangle per cell. Dropless ignores the capacity factor, so it
+/// contributes one row per balancer; drop/pad get one row per CF in
+/// `cfs`. The aux-loss-free balancer's bias is warmed up on a disjoint
+/// stream from the same profile (64 chunks), then frozen — every cell
+/// routes the *identical* measurement stream, so rows differ only by
+/// policy.
+pub fn sweep_capacity_points(
+    model: &ModelConfig,
+    ep: usize,
+    tokens_per_rank: usize,
+    profile: SkewProfile,
+    cfs: &[f64],
+) -> Vec<CapacityPoint> {
+    let h_sim = 64usize.max(model.num_experts);
+    let ff_sim = 128usize;
+    let e = model.num_experts;
+    let world = ep;
+    let mut rng = Rng::seed_from_u64(4242);
+    let experts: Vec<SwigluExpert> =
+        (0..e).map(|_| SwigluExpert::init(h_sim, ff_sim, &mut rng)).collect();
+    let pc = MoePhaseCost::from_model(model, 1, &GpuSpec::h100());
+    let tokens = SkewGen::new(profile, e, h_sim, 4242).next_tokens(world * tokens_per_rank);
+    let balancers: [(&'static str, Balancer); 3] = [
+        ("aux-loss", Balancer::AuxLoss),
+        ("aux-free", Balancer::AuxFree { update_rate: 0.05 }),
+        ("sinkhorn", Balancer::Sinkhorn { iters: 32 }),
+    ];
+    let mut points = Vec::new();
+    for (bname, balancer) in balancers {
+        let mut cells: Vec<(&'static str, DropPolicy, bool, f64)> =
+            vec![("dropless", DropPolicy::Dropless, false, 1.0)];
+        for &cf in cfs {
+            cells.push(("drop", DropPolicy::SubSequence, false, cf));
+            cells.push(("pad", DropPolicy::SubSequence, true, cf));
+        }
+        for (pname, drop_policy, pad, cf) in cells {
+            let config = RouterConfig {
+                hidden: h_sim,
+                num_experts: e,
+                top_k: model.top_k,
+                capacity_factor: cf,
+                drop_policy,
+                capacity_override: None,
+                pad_to_capacity: pad,
+                node_limit: None,
+                balancer,
+            };
+            let mut router = Router::new(config, SkewGen::gate_weight(h_sim, e));
+            // Warm the aux-loss-free bias on a disjoint stream so the
+            // measurement stream stays identical across cells.
+            if matches!(balancer, Balancer::AuxFree { .. }) {
+                let mut warm = SkewGen::new(profile, e, h_sim, 9999);
+                for _ in 0..64 {
+                    let d = router.route(&warm.next_tokens(tokens_per_rank.max(16)));
+                    router.update_bias(&d.expert_load);
+                }
+            }
+            let Ok(topo) = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, ep, 1, 1))
+            else {
+                continue;
+            };
+            let fabric = Fabric::new_clocked(
+                world,
+                AlgoSelection::fast(),
+                CommCost::new(ClusterSpec::eos(world)),
+            );
+            let bill = model.hidden_size as f64 / h_sim as f64;
+            let span = tokens_per_rank * h_sim;
+            let stats = run_ranks_on(&fabric, |rank, comm| {
+                comm.set_bill_scale(bill);
+                let layer =
+                    DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts)
+                        .with_phase_cost(pc);
+                let mine = tokens[rank * span..(rank + 1) * span].to_vec();
+                layer.forward(&comm, &mine).1
+            });
+            let a2a_mb = [LinkKind::Loopback, LinkKind::NvLink, LinkKind::InfiniBand]
+                .iter()
+                .map(|&k| fabric.link_traffic(k).bytes)
+                .sum::<f64>()
+                / 1e6;
+            let (routed, dropped) = stats
+                .iter()
+                .fold((0usize, 0usize), |(r, d), s| (r + s.tokens_routed, d + s.tokens_dropped));
+            // Aggregate kept load across ranks by re-routing each rank's
+            // chunk with the same (frozen) router — the clocked forward
+            // above routed exactly these decisions.
+            let mut load = vec![0usize; e];
+            for rank in 0..world {
+                let d = router.route(&tokens[rank * span..(rank + 1) * span]);
+                for (l, dl) in load.iter_mut().zip(&d.expert_load) {
+                    *l += dl;
+                }
+            }
+            let ls = LoadStats::from_load(&load);
+            points.push(CapacityPoint {
+                balancer: bname,
+                policy: pname,
+                capacity_factor: cf,
+                drop_rate: dropped as f64 / (routed + dropped).max(1) as f64,
+                a2a_mb,
+                step_us: fabric.max_sim_time_us(),
+                imbalance: ls.imbalance,
+                entropy: ls.entropy,
+            });
+        }
+    }
+    points
+}
+
+/// CLI table over [`sweep_capacity_points`]: one row per (balancer,
+/// policy, CF) cell of the sweep.
+pub fn sweep_capacity(
+    model: &ModelConfig,
+    ep: usize,
+    tokens_per_rank: usize,
+    profile: SkewProfile,
+    cfs: &[f64],
+) -> Table {
+    let mut t = Table::new(&["Balancer", "Policy", "CF", "Drop %", "A2A (MB)",
+                             "Step (µs)", "Load max/mean", "Entropy"]);
+    for p in sweep_capacity_points(model, ep, tokens_per_rank, profile, cfs) {
+        t.row(&[
+            p.balancer.to_string(),
+            p.policy.to_string(),
+            format!("{:.2}", p.capacity_factor),
+            format!("{:.1}", p.drop_rate * 100.0),
+            format!("{:.2}", p.a2a_mb),
+            format!("{:.0}", p.step_us),
+            format!("{:.2}", p.imbalance),
+            format!("{:.3}", p.entropy),
         ]);
     }
     t
@@ -708,7 +927,13 @@ mod tests {
     /// A2A, and both carry model-scale expert compute.
     #[test]
     fn fig5_executed_measures_phase_asymmetry() {
-        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64, false);
+        let t = fig5_breakdown_executed(
+            &ModelConfig::mixtral_8x22b(),
+            8,
+            64,
+            false,
+            &RoutingPolicy::default(),
+        );
         assert!(t.rows.len() >= 3, "{} rows", t.rows.len());
         let row_ep = t.rows.iter().find(|r| r[0] == "EP8xETP1").unwrap();
         assert_eq!(row_ep[3], "0", "EP-only mapping has no ETP comm");
@@ -720,7 +945,58 @@ mod tests {
             assert!(r[4].parse::<f64>().unwrap() > 0.0, "{}: expert compute", r[0]);
             // Serialized: every a2a microsecond is exposed.
             assert_eq!(r[6], "0", "{}: serialized path hid a2a", r[0]);
+            // Default policy is dropless: nothing drops, volume is metered.
+            assert_eq!(r[8], "0.0%", "{}: dropless policy never drops", r[0]);
         }
+    }
+
+    /// The lifted policy knobs actually bite: under Zipf skew at CF=1 the
+    /// drop policy reports a non-zero drop rate and strictly less a2a
+    /// volume than the dropless twin on the identical stream.
+    #[test]
+    fn fig5_executed_skew_policy_prices_drops() {
+        let model = ModelConfig::mixtral_8x22b();
+        let dropless = RoutingPolicy {
+            skew: Some(SkewProfile::Zipf { exponent: 1.2 }),
+            ..RoutingPolicy::default()
+        };
+        let drop = RoutingPolicy { drop_policy: DropPolicy::SubSequence, ..dropless };
+        let td = fig5_breakdown_executed(&model, 4, 64, false, &dropless);
+        let tk = fig5_breakdown_executed(&model, 4, 64, false, &drop);
+        let rd = td.rows.iter().find(|r| r[0] == "EP4xETP1").unwrap();
+        let rk = tk.rows.iter().find(|r| r[0] == "EP4xETP1").unwrap();
+        assert_eq!(rd[8], "0.0%");
+        assert_ne!(rk[8], "0.0%", "zipf at CF=1 must drop");
+        let mb_dropless: f64 = rd[9].parse().unwrap();
+        let mb_drop: f64 = rk[9].parse().unwrap();
+        assert!(
+            mb_drop < mb_dropless,
+            "dropping must shrink a2a volume: {mb_drop} vs {mb_dropless}"
+        );
+    }
+
+    /// Capacity sweep smoke: all three balancers × {dropless, drop, pad}
+    /// cells appear; dropless never drops; on the same Zipf stream both
+    /// new balancers beat plain aux-loss on max/mean load imbalance.
+    #[test]
+    fn sweep_capacity_covers_cells_and_balancers_balance() {
+        let model = ModelConfig::mixtral_8x22b();
+        let pts = sweep_capacity_points(&model, 4, 64, SkewProfile::Zipf { exponent: 1.2 }, &[1.0]);
+        assert_eq!(pts.len(), 9, "3 balancers × (dropless + drop + pad)");
+        for p in &pts {
+            assert!(p.step_us > 0.0);
+            assert!(p.a2a_mb > 0.0);
+            if p.policy == "dropless" {
+                assert_eq!(p.drop_rate, 0.0, "{}: dropless drops", p.balancer);
+            }
+        }
+        let imb = |b: &str| {
+            pts.iter().find(|p| p.balancer == b && p.policy == "dropless").unwrap().imbalance
+        };
+        let plain = imb("aux-loss");
+        assert!(plain > 1.5, "zipf stream must skew the plain router, got {plain}");
+        assert!(imb("aux-free") < plain, "aux-free {} vs {plain}", imb("aux-free"));
+        assert!(imb("sinkhorn") < plain, "sinkhorn {} vs {plain}", imb("sinkhorn"));
     }
 
     /// Executed fig5 with the chunk-pipelined dispatcher: mappings with
@@ -728,7 +1004,13 @@ mod tests {
     /// (measured, not assumed).
     #[test]
     fn fig5_executed_overlap_hides_a2a() {
-        let t = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 8, 64, true);
+        let t = fig5_breakdown_executed(
+            &ModelConfig::mixtral_8x22b(),
+            8,
+            64,
+            true,
+            &RoutingPolicy::default(),
+        );
         // EP4×ETP2 falls back (ETP shares the comm stream); EP2/EP4 with
         // ETP1 aren't in the default combo sweep, so check EP8 first: one
         // local expert → nothing to pipeline → all exposed.
@@ -736,7 +1018,13 @@ mod tests {
         assert_eq!(row_ep8[6], "0", "EP8 has a single local expert per rank");
         // The 8-expert model at EP2×ETP4 / EP4×ETP2 keeps ETP > 1; build a
         // dedicated 4-GPU EP4 sweep instead.
-        let t4 = fig5_breakdown_executed(&ModelConfig::mixtral_8x22b(), 4, 64, true);
+        let t4 = fig5_breakdown_executed(
+            &ModelConfig::mixtral_8x22b(),
+            4,
+            64,
+            true,
+            &RoutingPolicy::default(),
+        );
         let row = t4.rows.iter().find(|r| r[0] == "EP4xETP1").unwrap();
         let hidden: f64 = row[6].parse().unwrap();
         let exposed: f64 = row[7].parse().unwrap();

@@ -1,15 +1,20 @@
 //! The flexible token-level MoE dispatcher (paper §3.3): router with
-//! token-dropping (full/sub-sequence) and dropless modes ([`router`]),
-//! expert-order permutation ([`permute`]), and the distributed
-//! EP×ETP dispatch workflow over the functional communicator
+//! token-dropping (full/sub-sequence) and dropless modes plus pluggable
+//! load balancing ([`router`]), expert-order permutation ([`permute`]),
+//! deterministic skewed-workload generators ([`skewgen`]), and the
+//! distributed EP×ETP dispatch workflow over the functional communicator
 //! ([`workflow`]).
 
 pub mod permute;
 pub mod router;
+pub mod skewgen;
 pub mod workflow;
 
 pub use permute::Permutation;
-pub use router::{Assignment, NodeLimit, RouteDecision, Router, RouterConfig};
+pub use router::{
+    sinkhorn_plan, Assignment, Balancer, NodeLimit, RouteDecision, Router, RouterConfig,
+};
+pub use skewgen::{LoadStats, SkewGen, SkewProfile};
 pub use workflow::{
     reference_moe_forward, DispatchScratch, DispatchStats, DistributedMoeLayer, MoePhaseCost,
 };
@@ -48,6 +53,7 @@ mod tests {
                 capacity_override: None,
                 pad_to_capacity,
                 node_limit: None,
+                balancer: Balancer::AuxLoss,
             },
             &mut rng,
         )

@@ -1,8 +1,33 @@
 //! Top-K router with capacity-factor dropping (full-sequence and
-//! sub-sequence variants) and dropless mode — paper §3.3.
+//! sub-sequence variants), dropless mode, and pluggable load balancing
+//! (aux-loss, DeepSeek-V3 aux-loss-free, Sinkhorn) — paper §3.3.
 
 use crate::config::DropPolicy;
 use crate::train::math::softmax_rows;
+
+/// Load-balancing strategy. All three share [`argmax_untaken`] for
+/// selection, so tied and NaN gates break identically regardless of the
+/// balancer, and all three record the **raw** softmax probability as the
+/// gate weight — a balancer steers *which* experts are picked, never *how
+/// much* each copy contributes to the combine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Balancer {
+    /// Plain softmax top-k plus the Switch-style auxiliary loss — the
+    /// pre-existing router behaviour and the default.
+    AuxLoss,
+    /// DeepSeek-V3 aux-loss-free balancing: a per-expert bias
+    /// ([`Router::bias`]) is added to the gate score for *selection only*;
+    /// [`Router::update_bias`] nudges each bias against the observed load
+    /// error by `update_rate` per step. Routing itself stays pure
+    /// (`&self`), so distributed replicas and single-rank references see
+    /// the same bias and stay bit-identical.
+    AuxFree { update_rate: f32 },
+    /// Sinkhorn (S-BASE) balancing: `iters` rounds of column/row
+    /// normalization turn the gate matrix into a row-stochastic,
+    /// approximately column-balanced transport plan
+    /// ([`sinkhorn_plan`]); selection runs on the plan.
+    Sinkhorn { iters: usize },
+}
 
 /// Node-limited routing à la DeepSeek-V3: expert ids are grouped into
 /// contiguous blocks of `experts_per_node` (the experts co-located on one
@@ -39,6 +64,9 @@ pub struct RouterConfig {
     /// all experts (the default, and the behaviour of every pre-existing
     /// config).
     pub node_limit: Option<NodeLimit>,
+    /// Load-balancing strategy ([`Balancer`]). `Balancer::AuxLoss` is the
+    /// pre-existing behaviour.
+    pub balancer: Balancer,
 }
 
 /// One routed token-copy: which expert, with what gate weight, and whether
@@ -88,6 +116,11 @@ pub struct Router {
     /// the gating GEMM runs as contiguous dot products (perf pass §Perf:
     /// 14.2 ms → ~4 ms on the 4096×256 routing benchmark).
     weight_t: Vec<f32>,
+    /// Per-expert selection bias for [`Balancer::AuxFree`] (zeros for the
+    /// other balancers, where it is ignored). Mutated only by
+    /// [`Self::update_bias`], never inside `route` — so a `Router` clone
+    /// shipped to every rank routes bit-identically to the original.
+    pub bias: Vec<f32>,
 }
 
 impl Router {
@@ -100,7 +133,39 @@ impl Router {
                 weight_t[c * h + r] = weight[r * e + c];
             }
         }
-        Self { config, weight, weight_t }
+        Self { config, weight, weight_t, bias: vec![0.0; e] }
+    }
+
+    /// Replace the aux-loss-free selection bias (e.g. with a warmed-up
+    /// state); builder-style for test and sweep setup.
+    pub fn with_bias(mut self, bias: Vec<f32>) -> Self {
+        assert_eq!(bias.len(), self.config.num_experts);
+        self.bias = bias;
+        self
+    }
+
+    /// DeepSeek-V3 aux-loss-free bias step: nudge each expert's selection
+    /// bias *against* its observed load error — overloaded experts
+    /// (`load > mean`) lose `update_rate`, underloaded ones gain it.
+    /// `load` is kept-token counts per expert over whatever scope the
+    /// caller balances (a local chunk, or an all-reduced global load —
+    /// replicated routers must all be fed the same reduced load to stay
+    /// identical). No-op for the other balancers.
+    pub fn update_bias(&mut self, load: &[usize]) {
+        let Balancer::AuxFree { update_rate } = self.config.balancer else {
+            return;
+        };
+        let e = self.config.num_experts;
+        assert_eq!(load.len(), e);
+        let mean = load.iter().sum::<usize>() as f64 / e as f64;
+        for (b, &l) in self.bias.iter_mut().zip(load) {
+            let err = l as f64 - mean;
+            if err > 0.0 {
+                *b -= update_rate;
+            } else if err < 0.0 {
+                *b += update_rate;
+            }
+        }
     }
 
     pub fn init(config: RouterConfig, rng: &mut crate::util::Rng) -> Self {
@@ -148,17 +213,39 @@ impl Router {
     /// id wins; see [`argmax_untaken`]). K rounds of (argmax, mask) — no
     /// allocation, no sort; k is 1-8 in every MoE of interest, so this beats
     /// sorting E entries per token.
+    ///
+    /// The configured [`Balancer`] only changes the *selection scores*
+    /// (raw probs, bias-shifted probs, or the Sinkhorn plan); the gate
+    /// weight recorded in each [`Assignment`] is always the raw softmax
+    /// probability of the chosen expert.
     pub fn topk(&self, probs: &[f32], n: usize) -> Vec<Assignment> {
         let e = self.config.num_experts;
         let k = self.config.top_k.min(e);
+        let scores: Option<Vec<f32>> = match self.config.balancer {
+            Balancer::AuxLoss => None,
+            Balancer::AuxFree { .. } => {
+                let mut s = probs.to_vec();
+                for t in 0..n {
+                    for (j, x) in s[t * e..(t + 1) * e].iter_mut().enumerate() {
+                        *x += self.bias[j];
+                    }
+                }
+                Some(s)
+            }
+            Balancer::Sinkhorn { iters } => Some(sinkhorn_plan(probs, n, e, iters)),
+        };
         let mut out = Vec::with_capacity(n * k);
         let mut taken = vec![false; e];
         for t in 0..n {
             let row = &probs[t * e..(t + 1) * e];
+            let srow = match &scores {
+                Some(s) => &s[t * e..(t + 1) * e],
+                None => row,
+            };
             taken.iter_mut().for_each(|x| *x = false);
             self.ban_out_of_node_experts(row, &mut taken);
             for _ in 0..k {
-                let best = argmax_untaken(row, &taken);
+                let best = argmax_untaken(srow, &taken);
                 let p = row[best];
                 taken[best] = true;
                 out.push(Assignment {
@@ -323,6 +410,54 @@ fn argmax_untaken(row: &[f32], taken: &[bool]) -> usize {
     }
 }
 
+/// Sinkhorn (S-BASE) normalization of a gate matrix `probs` [n × E]:
+/// `iters` rounds of (column-normalize to `n/E`, row-normalize to 1)
+/// drive the matrix toward the balanced transport polytope. The sweep
+/// always **ends on a row pass**, so every output row sums to exactly 1
+/// (up to f32 rounding) while columns converge toward `n/E` as `iters`
+/// grows. NaN-safe and deterministic: non-finite or non-positive inputs
+/// are zeroed up front, a row that zeroes out entirely (an all-NaN gate
+/// row) renormalizes to uniform `1/E` — which selection then breaks to
+/// the lowest expert ids, matching [`argmax_untaken`]'s NaN fallback.
+/// Column sums accumulate in f64 so large-n scopes don't lose mass.
+pub fn sinkhorn_plan(probs: &[f32], n: usize, e: usize, iters: usize) -> Vec<f32> {
+    assert_eq!(probs.len(), n * e);
+    let mut m: Vec<f32> =
+        probs.iter().map(|&p| if p.is_finite() && p > 0.0 { p } else { 0.0 }).collect();
+    if n == 0 || e == 0 {
+        return m;
+    }
+    let col_target = n as f64 / e as f64;
+    for _ in 0..iters.max(1) {
+        for j in 0..e {
+            let mut s = 0.0f64;
+            for t in 0..n {
+                s += m[t * e + j] as f64;
+            }
+            if s > 0.0 {
+                let scale = col_target / s;
+                for t in 0..n {
+                    m[t * e + j] = (m[t * e + j] as f64 * scale) as f32;
+                }
+            }
+        }
+        for t in 0..n {
+            let row = &mut m[t * e..(t + 1) * e];
+            let s: f64 = row.iter().map(|&x| x as f64).sum();
+            if s > 0.0 {
+                for x in row.iter_mut() {
+                    *x = (*x as f64 / s) as f32;
+                }
+            } else {
+                for x in row.iter_mut() {
+                    *x = 1.0 / e as f32;
+                }
+            }
+        }
+    }
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +473,7 @@ mod tests {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         }
     }
 
@@ -547,6 +683,84 @@ mod tests {
         assert_eq!(a[0].expert, 0);
         assert_eq!(a[1].expert, 1);
         assert_eq!(a[0].prob, 0.0);
+    }
+
+    /// A zero bias under the aux-loss-free balancer is the plain router,
+    /// bit-for-bit — bias only matters once `update_bias` has moved it.
+    #[test]
+    fn aux_free_zero_bias_matches_plain_router() {
+        let mut rng = Rng::seed_from_u64(50);
+        let plain = Router::init(cfg(8, 2, 1.0, DropPolicy::SubSequence), &mut rng);
+        let mut c = plain.config;
+        c.balancer = Balancer::AuxFree { update_rate: 0.1 };
+        let free = Router::new(c, plain.weight.clone());
+        let t = tokens(64, 16, 51);
+        assert_eq!(plain.route(&t).assignments, free.route(&t).assignments);
+    }
+
+    /// Bias steers selection but never the gate weight: a bias large
+    /// enough to flip the pick still records the flipped expert's *raw*
+    /// softmax probability.
+    #[test]
+    fn aux_free_bias_changes_selection_not_gate_weight() {
+        let mut c = cfg(4, 1, 1.0, DropPolicy::Dropless);
+        c.balancer = Balancer::AuxFree { update_rate: 0.1 };
+        let r = Router::new(c, vec![0.0; 16 * 4]).with_bias(vec![-1.0, 0.0, 2.0, 0.0]);
+        // Raw probs favour expert 0; bias +2 on expert 2 flips selection.
+        let probs = [0.5f32, 0.2, 0.2, 0.1];
+        let a = r.topk(&probs, 1);
+        assert_eq!(a[0].expert, 2);
+        assert_eq!(a[0].prob, 0.2, "gate weight must stay the raw prob");
+    }
+
+    /// `update_bias` lowers overloaded experts' bias and raises
+    /// underloaded ones by exactly the update rate, and is a no-op for
+    /// the other balancers.
+    #[test]
+    fn update_bias_moves_against_load_error() {
+        let mut c = cfg(4, 1, 1.0, DropPolicy::Dropless);
+        c.balancer = Balancer::AuxFree { update_rate: 0.25 };
+        let mut r = Router::new(c, vec![0.0; 16 * 4]);
+        r.update_bias(&[10, 2, 4, 4]); // mean 5
+        assert_eq!(r.bias, vec![-0.25, 0.25, 0.25, 0.25]);
+        let mut plain = Router::new(cfg(4, 1, 1.0, DropPolicy::Dropless), vec![0.0; 16 * 4]);
+        plain.update_bias(&[10, 2, 4, 4]);
+        assert_eq!(plain.bias, vec![0.0; 4], "non-AuxFree balancers ignore updates");
+    }
+
+    /// Sinkhorn on an already-balanced (uniform) gate matrix is a fixed
+    /// point: selection matches the plain router bit-for-bit.
+    #[test]
+    fn sinkhorn_uniform_gates_match_plain_selection() {
+        let mut c = cfg(8, 2, 1.0, DropPolicy::Dropless);
+        c.balancer = Balancer::Sinkhorn { iters: 16 };
+        let s = Router::new(c, vec![0.0; 16 * 8]);
+        let plain = Router::new(cfg(8, 2, 1.0, DropPolicy::Dropless), vec![0.0; 16 * 8]);
+        let t = tokens(32, 16, 52);
+        assert_eq!(plain.route(&t).assignments, s.route(&t).assignments);
+    }
+
+    /// Sinkhorn selection survives NaN gate rows without panicking: the
+    /// sanitized row renormalizes (column passes may steer it toward
+    /// underloaded experts — that's the balancer working), selection stays
+    /// total and distinct, and the recorded gate weight for the NaN token
+    /// is 0 so it contributes nothing to the combine.
+    #[test]
+    fn sinkhorn_nan_row_selects_without_panic() {
+        let mut c = cfg(8, 2, 1.0, DropPolicy::SubSequence);
+        c.balancer = Balancer::Sinkhorn { iters: 8 };
+        let mut rng = Rng::seed_from_u64(53);
+        let r = Router::init(c, &mut rng);
+        let mut t = tokens(8, 16, 54);
+        for x in t[0..16].iter_mut() {
+            *x = f32::NAN;
+        }
+        let d = r.route(&t);
+        assert_eq!(d.assignments.len(), 16);
+        assert_ne!(d.assignments[0].expert, d.assignments[1].expert);
+        assert_eq!(d.assignments[0].prob, 0.0);
+        assert_eq!(d.assignments[1].prob, 0.0);
+        assert!(d.assignments[2..].iter().all(|a| a.prob.is_finite()));
     }
 
     /// Under-provisioned limits (`max_nodes · experts_per_node < top_k`)

@@ -1,0 +1,316 @@
+//! Deterministic skewed-workload generators (ROADMAP item 5): Zipf-over-
+//! experts gate skew, domain-shifted popularity phases, and bursty
+//! per-step token counts. Every stream is seeded via [`crate::util::Rng`],
+//! so the same `(profile, seed)` pair reproduces the same token bytes —
+//! which is what lets the skew differential suites compare distributed
+//! runs bit-for-bit against single-rank references.
+//!
+//! The trick that makes gate skew *controllable*: tokens are generated in
+//! feature space, but routed through [`gate_weight`] — an identity block
+//! embedded in the gating matrix — so a token's first `num_experts`
+//! features **are** its gate logits. A boost of [`GATE_BOOST`] on the
+//! preferred expert's feature over [`GATE_NOISE_STD`] background noise
+//! yields a softmax sharply peaked on the Zipf-drawn expert, while
+//! remaining an ordinary `[n × hidden]` f32 token batch any
+//! `DistributedMoeLayer` can dispatch.
+
+use super::router::{Router, RouterConfig};
+use crate::util::Rng;
+
+/// Logit boost applied to a token's preferred expert over the noise
+/// floor: softmax(4 over N(0, 0.5)) puts ~95% of the mass on the
+/// preferred expert without saturating f32.
+pub const GATE_BOOST: f32 = 4.0;
+/// Standard deviation of the background gate-feature noise.
+pub const GATE_NOISE_STD: f32 = 0.5;
+
+/// Which skew to impose on the expert-popularity distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SkewProfile {
+    /// No skew: pure N(0, 1) features, the near-uniform regime every
+    /// pre-existing differential suite routes.
+    Uniform,
+    /// Each token's preferred expert is drawn Zipf(`exponent`) over
+    /// expert ids — expert 0 most popular, pmf ∝ 1/(id+1)^exponent.
+    Zipf { exponent: f64 },
+    /// Zipf popularity whose preferred expert rotates by one position
+    /// every `period` emitted tokens — the mid-run domain shift that
+    /// breaks any balancer tuned to a static distribution.
+    DomainShift { exponent: f64, period: usize },
+}
+
+impl SkewProfile {
+    /// Short profile name for tables, bench rows, and CLI echo.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SkewProfile::Uniform => "uniform",
+            SkewProfile::Zipf { .. } => "zipf",
+            SkewProfile::DomainShift { .. } => "shift",
+        }
+    }
+
+    /// Parse a CLI profile string: `uniform`, `zipf` (exponent 1.2), or
+    /// `shift` (exponent 1.2, period 256).
+    pub fn parse(s: &str) -> Option<SkewProfile> {
+        match s {
+            "uniform" => Some(SkewProfile::Uniform),
+            "zipf" => Some(SkewProfile::Zipf { exponent: 1.2 }),
+            "shift" => Some(SkewProfile::DomainShift { exponent: 1.2, period: 256 }),
+            _ => None,
+        }
+    }
+}
+
+/// A seeded stream of skew-gated tokens.
+pub struct SkewGen {
+    pub profile: SkewProfile,
+    num_experts: usize,
+    hidden: usize,
+    rng: Rng,
+    /// Cumulative Zipf distribution over expert ids (empty for Uniform).
+    cdf: Vec<f64>,
+    /// Tokens emitted so far — drives the DomainShift phase rotation, so
+    /// a stream chunked into many `next_tokens` calls shifts exactly like
+    /// one generated in a single call.
+    emitted: usize,
+}
+
+impl SkewGen {
+    pub fn new(profile: SkewProfile, num_experts: usize, hidden: usize, seed: u64) -> Self {
+        assert!(
+            hidden >= num_experts,
+            "skewgen embeds gate logits in the first num_experts features"
+        );
+        let cdf = match profile {
+            SkewProfile::Uniform => Vec::new(),
+            SkewProfile::Zipf { exponent } | SkewProfile::DomainShift { exponent, .. } => {
+                zipf_cdf(num_experts, exponent)
+            }
+        };
+        Self { profile, num_experts, hidden, rng: Rng::seed_from_u64(seed), cdf, emitted: 0 }
+    }
+
+    /// The identity gating weight [hidden × num_experts]: expert `j`'s
+    /// logit is exactly feature `j`, so the generator controls routing.
+    pub fn gate_weight(hidden: usize, num_experts: usize) -> Vec<f32> {
+        assert!(hidden >= num_experts);
+        let mut w = vec![0.0f32; hidden * num_experts];
+        for j in 0..num_experts {
+            w[j * num_experts + j] = 1.0;
+        }
+        w
+    }
+
+    /// A router whose gate matrix is the identity embedding for this
+    /// generator's dimensions.
+    pub fn router(&self, config: RouterConfig) -> Router {
+        assert_eq!(config.hidden, self.hidden);
+        assert_eq!(config.num_experts, self.num_experts);
+        Router::new(config, Self::gate_weight(self.hidden, self.num_experts))
+    }
+
+    /// Emit the next `n` tokens of the stream as an `[n × hidden]` batch.
+    /// Deterministic in `(profile, seed, call history)`: the same total
+    /// prefix of the stream is byte-identical however it is chunked.
+    pub fn next_tokens(&mut self, n: usize) -> Vec<f32> {
+        let (e, h) = (self.num_experts, self.hidden);
+        let mut out = vec![0.0f32; n * h];
+        for t in 0..n {
+            let row = &mut out[t * h..(t + 1) * h];
+            match self.profile {
+                SkewProfile::Uniform => {
+                    for x in row.iter_mut() {
+                        *x = self.rng.next_normal_f32();
+                    }
+                }
+                SkewProfile::Zipf { .. } | SkewProfile::DomainShift { .. } => {
+                    for x in row.iter_mut() {
+                        *x = GATE_NOISE_STD * self.rng.next_normal_f32();
+                    }
+                    let mut preferred = draw_cdf(&self.cdf, self.rng.next_f64());
+                    if let SkewProfile::DomainShift { period, .. } = self.profile {
+                        preferred = (preferred + self.emitted / period.max(1)) % e;
+                    }
+                    row[preferred] += GATE_BOOST;
+                }
+            }
+            self.emitted += 1;
+        }
+        out
+    }
+
+    /// Deterministic bursty per-step token counts: a baseline of `base`
+    /// tokens (± up to 1/8 jitter) with a burst to `peak` for the first
+    /// quarter of every `period` steps. Every count is ≥ 1.
+    pub fn burst_schedule(
+        seed: u64,
+        steps: usize,
+        base: usize,
+        peak: usize,
+        period: usize,
+    ) -> Vec<usize> {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xB0057);
+        let period = period.max(1);
+        (0..steps)
+            .map(|s| {
+                let level = if s % period < period.div_ceil(4) { peak } else { base };
+                let jitter = level / 8;
+                let n = if jitter > 0 {
+                    level - jitter + rng.next_below(2 * jitter + 1)
+                } else {
+                    level
+                };
+                n.max(1)
+            })
+            .collect()
+    }
+}
+
+/// Cumulative Zipf(`s`) distribution over `e` ranks: pmf ∝ 1/(i+1)^s.
+fn zipf_cdf(e: usize, s: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (0..e).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Inverse-CDF draw: first index whose cumulative mass covers `r`.
+fn draw_cdf(cdf: &[f64], r: f64) -> usize {
+    cdf.iter().position(|&c| r < c).unwrap_or(cdf.len() - 1)
+}
+
+/// Expert-load summary statistics shared by the sweep, the trainer probe,
+/// and the imbalance pins: max/mean kept load and normalized entropy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadStats {
+    /// max(load) / mean(load); 1.0 is perfectly balanced.
+    pub imbalance: f64,
+    /// Shannon entropy of the load distribution normalized by ln(E);
+    /// 1.0 is perfectly balanced, 0.0 is all load on one expert.
+    pub entropy: f64,
+}
+
+impl LoadStats {
+    pub fn from_load(load: &[usize]) -> LoadStats {
+        let e = load.len().max(1);
+        let total: usize = load.iter().sum();
+        if total == 0 || e == 1 {
+            return LoadStats { imbalance: 1.0, entropy: 1.0 };
+        }
+        let mean = total as f64 / e as f64;
+        let max = *load.iter().max().unwrap() as f64;
+        let mut h = 0.0f64;
+        for &l in load {
+            if l > 0 {
+                let p = l as f64 / total as f64;
+                h -= p * p.ln();
+            }
+        }
+        LoadStats { imbalance: max / mean, entropy: h / (e as f64).ln() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DropPolicy;
+    use crate::dispatcher::Balancer;
+
+    fn base_cfg(e: usize, h: usize) -> RouterConfig {
+        RouterConfig {
+            hidden: h,
+            num_experts: e,
+            top_k: 1,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::Dropless,
+            capacity_override: None,
+            pad_to_capacity: false,
+            node_limit: None,
+            balancer: Balancer::AuxLoss,
+        }
+    }
+
+    #[test]
+    fn zipf_stream_is_seed_deterministic_and_chunk_invariant() {
+        let profile = SkewProfile::Zipf { exponent: 1.2 };
+        let mut a = SkewGen::new(profile, 8, 16, 77);
+        let mut b = SkewGen::new(profile, 8, 16, 77);
+        let whole = a.next_tokens(64);
+        let mut chunked = b.next_tokens(20);
+        chunked.extend(b.next_tokens(44));
+        assert_eq!(whole, chunked, "chunking must not change the stream");
+        let mut c = SkewGen::new(profile, 8, 16, 78);
+        assert_ne!(whole, c.next_tokens(64), "different seed, different stream");
+    }
+
+    #[test]
+    fn zipf_top1_concentrates_on_expert_zero() {
+        let mut g = SkewGen::new(SkewProfile::Zipf { exponent: 1.2 }, 8, 16, 5);
+        let router = g.router(base_cfg(8, 16));
+        let d = router.route(&g.next_tokens(2048));
+        let s = LoadStats::from_load(&d.expert_load);
+        assert!(s.imbalance > 1.8, "zipf load should be skewed, got {}", s.imbalance);
+        let top: usize = d.expert_load[0];
+        assert!(
+            top > d.expert_load[7] * 3,
+            "expert 0 ({top}) should dwarf expert 7 ({})",
+            d.expert_load[7]
+        );
+    }
+
+    #[test]
+    fn domain_shift_rotates_preferred_expert() {
+        let profile = SkewProfile::DomainShift { exponent: 2.0, period: 128 };
+        let mut g = SkewGen::new(profile, 8, 16, 9);
+        let router = g.router(base_cfg(8, 16));
+        // Phase 0: popularity peaks at expert 0; phase 1 (after `period`
+        // tokens): the whole ranking rotates by one.
+        let d0 = router.route(&g.next_tokens(128));
+        let d1 = router.route(&g.next_tokens(128));
+        let peak0 = d0.expert_load.iter().enumerate().max_by_key(|(_, &l)| l).unwrap().0;
+        let peak1 = d1.expert_load.iter().enumerate().max_by_key(|(_, &l)| l).unwrap().0;
+        assert_eq!(peak0, 0);
+        assert_eq!(peak1, 1, "phase 1 must rotate the popular expert");
+    }
+
+    #[test]
+    fn uniform_profile_stays_near_balanced() {
+        let mut g = SkewGen::new(SkewProfile::Uniform, 8, 16, 13);
+        let router = g.router(base_cfg(8, 16));
+        let d = router.route(&g.next_tokens(4096));
+        let s = LoadStats::from_load(&d.expert_load);
+        assert!(s.imbalance < 1.5, "uniform stream imbalance {}", s.imbalance);
+        assert!(s.entropy > 0.95, "uniform stream entropy {}", s.entropy);
+    }
+
+    #[test]
+    fn burst_schedule_is_deterministic_and_bounded() {
+        let a = SkewGen::burst_schedule(3, 64, 32, 128, 8);
+        let b = SkewGen::burst_schedule(3, 64, 32, 128, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&n| n >= 1));
+        let max = *a.iter().max().unwrap();
+        let min = *a.iter().min().unwrap();
+        assert!(max > 100, "burst steps should approach the peak, max {max}");
+        assert!(min < 64, "baseline steps should stay near base, min {min}");
+        // Bursts occupy the first quarter of each period.
+        assert!(a[0] > a[4], "step 0 bursts, step 4 does not");
+    }
+
+    #[test]
+    fn load_stats_extremes() {
+        let balanced = LoadStats::from_load(&[10, 10, 10, 10]);
+        assert!((balanced.imbalance - 1.0).abs() < 1e-12);
+        assert!((balanced.entropy - 1.0).abs() < 1e-12);
+        let collapsed = LoadStats::from_load(&[40, 0, 0, 0]);
+        assert!((collapsed.imbalance - 4.0).abs() < 1e-12);
+        assert!(collapsed.entropy.abs() < 1e-12);
+    }
+}

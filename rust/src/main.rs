@@ -10,12 +10,15 @@
 
 use moe_folding::autotune::{self, Constraints};
 use moe_folding::cluster::ClusterSpec;
-use moe_folding::config::{EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig};
-use moe_folding::coordinator;
+use moe_folding::config::{
+    DropPolicy, EpPlacement, ModelConfig, ParallelConfig, Precision, TrainConfig,
+};
+use moe_folding::coordinator::{self, RoutingPolicy};
+use moe_folding::dispatcher::{Balancer, SkewProfile};
 use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::perfmodel::{execute_step_traced, PerfModel, Strategy};
 use moe_folding::simcomm::chrome_trace_json;
-use moe_folding::train::{train, TrainerConfig};
+use moe_folding::train::{train, MoeProbe, TrainerConfig};
 use moe_folding::util::cli::Args;
 
 fn usage() -> ! {
@@ -59,9 +62,18 @@ COMMANDS:
             strong scaling over the paper's per-model GPU counts;
             --executed adds measured MFU/step plus the strided-EP twin
   fig5      [--model <name>] [--ep-etp 8|16]
-            [--executed [--tokens N] [--overlap]]
+            [--executed [--tokens N] [--overlap]
+             [--skew uniform|zipf|shift] [--cf F]
+             [--policy dropless|drop|pad] [--balancer aux|aux-free|sinkhorn]]
             --overlap runs the chunk-pipelined dispatcher and splits the
-            measured a2a into hidden vs exposed
+            measured a2a into hidden vs exposed; the policy knobs price
+            drop/pad capacity policies under skewed gate streams (the
+            trailing Drop % / A2A MB columns are the cost triangle)
+  sweep-capacity  [--model <name>] [--ep N] [--tokens N]
+            [--skew uniform|zipf|shift] [--cfs 1.0,1.5,2.0]
+            executed capacity-factor × {dropless,drop,pad} × balancer
+            sweep under one skew profile: drop rate, a2a MB, step µs,
+            and load-balance quality per cell on the clocked fabric
   fig4      [--model <name>] [--executed [--max-gpus N]]
             context scaling (Figure 4 / Table 5, one model); --executed
             runs each tuned point on the clocked simulator and adds
@@ -73,6 +85,11 @@ COMMANDS:
   train     [--preset test|e2e] [--steps N] [--dp N] [--lr F] [--artifacts DIR]
             [--clocked [--compute-us F] [--overlap]]  measured-in-sim step
             time; --overlap issues grad reduces nonblocking under backward
+            [--moe-probe [--moe-skew uniform|zipf|shift] [--moe-tokens N]
+             [--moe-experts N] [--cf F] [--policy dropless|drop|pad]
+             [--balancer aux|aux-free|sinkhorn] [--bursty]]
+            routes a skewed gate stream alongside each step and reports
+            drop rate, capacity violations, and load-balance quality
   artifacts [--dir DIR]
 
 MODELS: mixtral-8x22b, llama3-8x70b, qwen2-57b-a14b, mixtral-8x22b-g8t8, tiny
@@ -94,6 +111,37 @@ fn parse_strategy(s: &str) -> Strategy {
             std::process::exit(2);
         }
     }
+}
+
+fn parse_balancer(s: &str) -> Balancer {
+    match s {
+        "aux" | "aux-loss" => Balancer::AuxLoss,
+        "aux-free" => Balancer::AuxFree { update_rate: 0.05 },
+        "sinkhorn" => Balancer::Sinkhorn { iters: 32 },
+        _ => {
+            eprintln!("unknown balancer {s} (want aux|aux-free|sinkhorn)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_policy(s: &str) -> (DropPolicy, bool) {
+    match s {
+        "dropless" => (DropPolicy::Dropless, false),
+        "drop" => (DropPolicy::SubSequence, false),
+        "pad" => (DropPolicy::SubSequence, true),
+        _ => {
+            eprintln!("unknown policy {s} (want dropless|drop|pad)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_skew(s: &str) -> SkewProfile {
+    SkewProfile::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown skew profile {s} (want uniform|zipf|shift)");
+        std::process::exit(2);
+    })
 }
 
 fn model_arg(args: &Args, default: &str) -> ModelConfig {
@@ -341,19 +389,52 @@ fn main() -> moe_folding::util::error::Result<()> {
             let ep_etp = args.get_usize("ep-etp", 8);
             if args.flag("executed") {
                 let tokens = args.get_usize("tokens", 256);
+                let (drop_policy, pad_to_capacity) =
+                    parse_policy(args.get_or("policy", "dropless"));
+                let policy = RoutingPolicy {
+                    capacity_factor: args.get_f64("cf", 1.0),
+                    drop_policy,
+                    pad_to_capacity,
+                    balancer: parse_balancer(args.get_or("balancer", "aux")),
+                    skew: args.get("skew").map(parse_skew),
+                };
                 print!(
                     "{}",
                     coordinator::fig5_breakdown_executed(
                         &model,
                         ep_etp,
                         tokens,
-                        args.flag("overlap")
+                        args.flag("overlap"),
+                        &policy,
                     )
                     .markdown()
                 );
             } else {
                 print!("{}", coordinator::fig5_breakdown(&pm, &model, ep_etp).markdown());
             }
+        }
+        "sweep-capacity" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            let ep = args.get_usize("ep", 4);
+            let tokens = args.get_usize("tokens", 64);
+            let profile = parse_skew(args.get_or("skew", "zipf"));
+            let cfs: Vec<f64> = args
+                .get_or("cfs", "1.0,1.25,1.5,2.0")
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("bad --cfs entry {s} (want a comma list of floats)");
+                        std::process::exit(2);
+                    })
+                })
+                .collect();
+            println!(
+                "# {} | EP{ep} | {} tokens/rank | skew {}",
+                model.name,
+                tokens,
+                profile.name()
+            );
+            print!("{}", coordinator::sweep_capacity(&model, ep, tokens, profile, &cfs).markdown());
         }
         "fig4" => {
             let model = model_arg(&args, "mixtral-8x22b");
@@ -380,6 +461,20 @@ fn main() -> moe_folding::util::error::Result<()> {
             }
         }
         "train" => {
+            let moe_probe = args.flag("moe-probe").then(|| {
+                let (drop_policy, pad_to_capacity) = parse_policy(args.get_or("policy", "drop"));
+                MoeProbe {
+                    tokens_per_step: args.get_usize("moe-tokens", 64),
+                    num_experts: args.get_usize("moe-experts", 8),
+                    capacity_factor: args.get_f64("cf", 1.0),
+                    drop_policy,
+                    pad_to_capacity,
+                    balancer: parse_balancer(args.get_or("balancer", "aux")),
+                    skew: parse_skew(args.get_or("moe-skew", "zipf")),
+                    bursty: args.flag("bursty"),
+                    ..MoeProbe::default()
+                }
+            });
             let cfg = TrainerConfig {
                 preset: args.get_or("preset", "test").to_string(),
                 artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
@@ -392,6 +487,7 @@ fn main() -> moe_folding::util::error::Result<()> {
                 clocked: args.flag("clocked"),
                 compute_us_per_step: args.get_f64("compute-us", 0.0),
                 overlap_grad_reduce: args.flag("overlap"),
+                moe_probe,
                 ..TrainerConfig::default()
             };
             let report = train(&cfg)?;
@@ -420,6 +516,18 @@ fn main() -> moe_folding::util::error::Result<()> {
                         "measured-in-sim grad comm: {h:.1} µs hidden, {e:.1} µs exposed per step"
                     );
                 }
+            }
+            if let (Some(drop), Some(viol), Some(ent), Some(imb)) = (
+                report.moe_drop_rate,
+                report.moe_capacity_violations,
+                report.moe_balance_entropy,
+                report.moe_load_imbalance,
+            ) {
+                println!(
+                    "moe probe: drop rate {:.1}%, {viol} capacity violations, \
+                     load max/mean {imb:.2}, entropy {ent:.3}",
+                    drop * 100.0
+                );
             }
             if let Some(path) = args.get("loss-csv") {
                 std::fs::write(path, report.loss_csv())?;

@@ -10,4 +10,4 @@ pub mod trainer;
 
 pub use optimizer::Adam;
 pub use sync::{GradSync, ParamClass};
-pub use trainer::{train, CpAttnProbe, TrainerConfig, TrainReport};
+pub use trainer::{train, CpAttnProbe, MoeCounters, MoeProbe, TrainerConfig, TrainReport};

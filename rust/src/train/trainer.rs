@@ -18,7 +18,8 @@ use crate::anyhow;
 use crate::attention::{zigzag, AttnConfig, AttnPhaseCost, AttnWeights, DistributedAttentionLayer};
 use crate::cluster::ClusterSpec;
 use crate::collectives::CommCost;
-use crate::config::ParallelConfig;
+use crate::config::{DropPolicy, ParallelConfig};
+use crate::dispatcher::{Balancer, LoadStats, RouterConfig, SkewGen, SkewProfile};
 use crate::mapping::RuntimeTopology;
 use crate::runtime::{InputBuf, InputRef, Runtime};
 use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
@@ -82,6 +83,67 @@ pub struct TrainerConfig {
     /// ([`TrainReport::cp_attn_digest`]) is the bit-comparable witness the
     /// CP differential suite checks across `cp ∈ {1, 2, 4}`.
     pub cp_attention: Option<CpAttnProbe>,
+    /// Run a **skew-routing probe** each step ([`MoeProbe`]): every rank
+    /// routes a skewed token stream through a stand-in MoE router,
+    /// all-reduces the expert loads so replicated balancer state stays
+    /// identical, and the report carries the measured drop rate, capacity
+    /// violations, and load-balance quality (ISSUE 9). Payload-disjoint
+    /// from the artifact path — losses are bit-identical with and without
+    /// the probe.
+    pub moe_probe: Option<MoeProbe>,
+}
+
+/// Configuration of the trainer's skew-routing probe.
+#[derive(Debug, Clone)]
+pub struct MoeProbe {
+    /// Tokens routed per rank per step (the bursty schedule peaks at 4×).
+    pub tokens_per_step: usize,
+    /// Stand-in hidden size (must be ≥ `num_experts`: the probe routes
+    /// through the [`SkewGen`] identity gate).
+    pub hidden: usize,
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub capacity_factor: f64,
+    pub drop_policy: DropPolicy,
+    pub pad_to_capacity: bool,
+    pub balancer: Balancer,
+    pub skew: SkewProfile,
+    /// Vary the per-step token count with [`SkewGen::burst_schedule`]
+    /// (base `tokens_per_step`, peak 4×, period 8 steps).
+    pub bursty: bool,
+}
+
+impl Default for MoeProbe {
+    fn default() -> Self {
+        Self {
+            tokens_per_step: 64,
+            hidden: 32,
+            num_experts: 8,
+            top_k: 2,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::SubSequence,
+            pad_to_capacity: false,
+            balancer: Balancer::AuxLoss,
+            skew: SkewProfile::Zipf { exponent: 1.2 },
+            bursty: false,
+        }
+    }
+}
+
+/// Per-rank accumulated counters of the skew-routing probe.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MoeCounters {
+    pub tokens_routed: usize,
+    pub tokens_dropped: usize,
+    /// Expert-step events where the (globally reduced) kept load exceeded
+    /// the CF-nominal capacity — only dropless can violate, that's the
+    /// dynamic-shape overflow the capacity policies trade against.
+    pub capacity_violations: usize,
+    /// Sum over steps of the normalized global-load entropy.
+    pub entropy_sum: f64,
+    /// Sum over steps of global max/mean load imbalance.
+    pub imbalance_sum: f64,
+    pub steps: usize,
 }
 
 /// Configuration of the trainer's CP-sharded attention forward.
@@ -142,6 +204,7 @@ impl Default for TrainerConfig {
             flops_per_token: 0.0,
             overlap_grad_reduce: false,
             cp_attention: None,
+            moe_probe: None,
         }
     }
 }
@@ -176,6 +239,16 @@ pub struct TrainReport {
     /// (rank 0's TP × CP block, gathered + unsharded) — bit-identical
     /// across `cp` at a fixed TP, pinned by `tests/cp_equivalence.rs`.
     pub cp_attn_digest: Option<Vec<f32>>,
+    /// Fraction of the probe's token-copies dropped (runs with
+    /// [`TrainerConfig::moe_probe`]; rank 0's stream).
+    pub moe_drop_rate: Option<f64>,
+    /// Expert-step events where the global kept load exceeded the
+    /// CF-nominal capacity (dropless overflow pressure).
+    pub moe_capacity_violations: Option<usize>,
+    /// Mean normalized entropy of the global expert load (1.0 = balanced).
+    pub moe_balance_entropy: Option<f64>,
+    /// Mean max/mean global expert-load imbalance (1.0 = balanced).
+    pub moe_load_imbalance: Option<f64>,
 }
 
 impl TrainReport {
@@ -280,7 +353,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         Fabric::new_with(world, cfg.algos)
     };
-    type RankOut = (Vec<(usize, f32)>, f64, f64, f64, f64, Option<Vec<f32>>);
+    type RankOut = (Vec<(usize, f32)>, f64, f64, f64, f64, Option<Vec<f32>>, Option<MoeCounters>);
     let reports = run_ranks_on(&fabric, move |rank, comm| -> Result<RankOut> {
         let exe = runtime2.load(&step_name)?;
         // Reduction groups per parameter class: topology DP/EDP groups
@@ -323,6 +396,43 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         let mut cp_digest: Option<Vec<f32>> = None;
         let overlap = cfg2.overlap_grad_reduce && world > 1;
 
+        // Skew-routing probe: a per-rank skewed stream through a stand-in
+        // router. Balancer state (the aux-loss-free bias) updates from the
+        // *globally reduced* load, so every rank's router replica stays
+        // bit-identical — the DeepSeek-V3 global-batch bias rule.
+        let mut moe_state = cfg2.moe_probe.as_ref().map(|probe| {
+            let gen = SkewGen::new(
+                probe.skew,
+                probe.num_experts,
+                probe.hidden,
+                cfg2.seed ^ 0x5EED ^ rank as u64,
+            );
+            let router = gen.router(RouterConfig {
+                hidden: probe.hidden,
+                num_experts: probe.num_experts,
+                top_k: probe.top_k,
+                capacity_factor: probe.capacity_factor,
+                drop_policy: probe.drop_policy,
+                capacity_override: None,
+                pad_to_capacity: probe.pad_to_capacity,
+                node_limit: None,
+                balancer: probe.balancer,
+            });
+            let schedule = if probe.bursty {
+                SkewGen::burst_schedule(
+                    cfg2.seed,
+                    cfg2.steps,
+                    probe.tokens_per_step,
+                    probe.tokens_per_step * 4,
+                    8,
+                )
+            } else {
+                vec![probe.tokens_per_step; cfg2.steps]
+            };
+            (gen, router, schedule, MoeCounters::default())
+        });
+        let world_group: Vec<usize> = (0..world).collect();
+
         for step in 0..cfg2.steps {
             let ids = corpus.batch(batch, seq);
             let (inputs, targets) = SyntheticCorpus::split(&ids, batch, seq);
@@ -358,6 +468,30 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                     cp_digest = Some(zigzag::unshard(&shards, probe.hidden, probe.zigzag));
                 }
             }
+            // Skew-routing probe: route this step's (possibly bursty)
+            // token budget, reduce the loads globally, update balancer
+            // state, and accumulate the report counters. Route-only — no
+            // dispatch payload touches the artifact path.
+            if let Some((gen, router, schedule, counters)) = &mut moe_state {
+                let n = schedule[step];
+                let d = router.route(&gen.next_tokens(n));
+                let dropped = d.assignments.iter().filter(|a| !a.kept).count();
+                counters.tokens_routed += d.assignments.len() - dropped;
+                counters.tokens_dropped += dropped;
+                let mut global: Vec<f32> = d.expert_load.iter().map(|&l| l as f32).collect();
+                if world > 1 {
+                    comm.all_reduce_sum_into(&world_group, &mut global);
+                }
+                let global: Vec<usize> = global.iter().map(|&l| l.round() as usize).collect();
+                let nominal = router.capacity_for(n) * world;
+                counters.capacity_violations += global.iter().filter(|&&l| l > nominal).count();
+                let ls = LoadStats::from_load(&global);
+                counters.entropy_sum += ls.entropy;
+                counters.imbalance_sum += ls.imbalance;
+                counters.steps += 1;
+                router.update_bias(&global);
+            }
+
             // Model-scale compute charge for the artifact's fwd+bwd (the
             // clock's compute phase; no-op on unclocked fabrics). With
             // grad-reduce overlap the backward share is charged *after*
@@ -432,14 +566,22 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 eprintln!("step {step:>5}  loss {loss:.4}");
             }
         }
-        Ok((losses, hidden_us, exposed_us, cp_hidden_us, cp_exposed_us, cp_digest))
+        let moe_counters = moe_state.map(|(_, _, _, counters)| counters);
+        Ok((losses, hidden_us, exposed_us, cp_hidden_us, cp_exposed_us, cp_digest, moe_counters))
     });
 
-    let (losses, hidden_total_us, exposed_total_us, cp_hid_us, cp_exp_us, cp_attn_digest) =
-        reports
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("no rank output"))??;
+    let (
+        losses,
+        hidden_total_us,
+        exposed_total_us,
+        cp_hid_us,
+        cp_exp_us,
+        cp_attn_digest,
+        moe_counters,
+    ) = reports
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("no rank output"))??;
     let wall = t0.elapsed().as_secs_f64();
     let tokens = cfg.steps * batch * seq * world;
     // Measured-in-sim step time: the slowest rank's virtual clock, per
@@ -478,6 +620,20 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         } else {
             (None, None)
         };
+    let (moe_drop_rate, moe_capacity_violations, moe_balance_entropy, moe_load_imbalance) =
+        match moe_counters {
+            Some(c) => {
+                let total = (c.tokens_routed + c.tokens_dropped).max(1);
+                let steps = c.steps.max(1) as f64;
+                (
+                    Some(c.tokens_dropped as f64 / total as f64),
+                    Some(c.capacity_violations),
+                    Some(c.entropy_sum / steps),
+                    Some(c.imbalance_sum / steps),
+                )
+            }
+            None => (None, None, None, None),
+        };
     Ok(TrainReport {
         initial_loss: losses.first().map(|x| x.1).unwrap_or(f32::NAN),
         final_loss: losses.last().map(|x| x.1).unwrap_or(f32::NAN),
@@ -492,6 +648,10 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         sim_cp_hidden_us,
         sim_cp_exposed_us,
         cp_attn_digest,
+        moe_drop_rate,
+        moe_capacity_violations,
+        moe_balance_entropy,
+        moe_load_imbalance,
     })
 }
 

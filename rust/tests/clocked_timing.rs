@@ -16,7 +16,7 @@
 use moe_folding::cluster::{ClusterSpec, GpuSpec};
 use moe_folding::collectives::CommCost;
 use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
-use moe_folding::dispatcher::{DistributedMoeLayer, MoePhaseCost, Router, RouterConfig};
+use moe_folding::dispatcher::{Balancer, DistributedMoeLayer, MoePhaseCost, Router, RouterConfig};
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{execute_step, execute_step_traced, PerfModel, Strategy};
 use moe_folding::pipeline::execute_1f1b_mapped;
@@ -40,6 +40,7 @@ fn build_router(policy: DropPolicy, seed: u64) -> Router {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     )

@@ -27,7 +27,9 @@ use moe_folding::attention::{
 use moe_folding::cluster::{ClusterSpec, GpuSpec};
 use moe_folding::collectives::CommCost;
 use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
-use moe_folding::dispatcher::{reference_moe_forward, DistributedMoeLayer, Router, RouterConfig};
+use moe_folding::dispatcher::{
+    reference_moe_forward, Balancer, DistributedMoeLayer, Router, RouterConfig,
+};
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{execute_step, PerfModel, Strategy};
 use moe_folding::simcomm::{run_ranks_on, AlgoSelection, Fabric};
@@ -157,6 +159,7 @@ fn moe_parts(seed: u64) -> (Router, Vec<SwigluExpert>) {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );

@@ -4,7 +4,7 @@
 //! tests; these runs use larger shapes and all policies.)
 use moe_folding::config::DropPolicy;
 use moe_folding::dispatcher::{
-    reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
+    reference_moe_forward, Balancer, DistributedMoeLayer, Router, RouterConfig,
 };
 use moe_folding::simcomm::{run_ranks, Payload};
 use moe_folding::train::math::SwigluExpert;
@@ -26,6 +26,7 @@ fn setup(top_k: usize, policy: DropPolicy, cf: f64) -> (Router, Vec<SwigluExpert
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );

@@ -16,7 +16,7 @@
 use moe_folding::autotune;
 use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
 use moe_folding::dispatcher::{
-    reference_moe_forward, DistributedMoeLayer, Router, RouterConfig,
+    reference_moe_forward, Balancer, DistributedMoeLayer, Router, RouterConfig,
 };
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{PerfModel, Strategy};
@@ -41,6 +41,7 @@ fn build_router(num_experts: usize, top_k: usize, policy: DropPolicy, seed: u64)
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     )

@@ -5,7 +5,7 @@
 //! These tests require `make artifacts`; they skip (pass vacuously) when
 //! the artifacts directory is absent so `cargo test` works pre-build.
 use moe_folding::config::DropPolicy;
-use moe_folding::dispatcher::{reference_moe_forward, Router, RouterConfig};
+use moe_folding::dispatcher::{reference_moe_forward, Balancer, Router, RouterConfig};
 use moe_folding::runtime::{InputBuf, Runtime};
 use moe_folding::train::math::SwigluExpert;
 use moe_folding::util::Rng;
@@ -52,6 +52,7 @@ fn router_artifact_matches_rust_softmax() {
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         w,
     );
@@ -114,6 +115,7 @@ fn rust_dispatcher_matches_pallas_moe_block() {
             capacity_override: Some(cap),
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         wr,
     );

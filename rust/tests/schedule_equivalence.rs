@@ -21,7 +21,7 @@
 use moe_folding::cluster::ClusterSpec;
 use moe_folding::collectives::CommCost;
 use moe_folding::config::{DropPolicy, ModelConfig, ParallelConfig, TrainConfig};
-use moe_folding::dispatcher::{DistributedMoeLayer, Router, RouterConfig};
+use moe_folding::dispatcher::{Balancer, DistributedMoeLayer, Router, RouterConfig};
 use moe_folding::mapping::RuntimeTopology;
 use moe_folding::perfmodel::{execute_step, PerfModel, Strategy};
 use moe_folding::pipeline::{
@@ -285,6 +285,7 @@ fn folded_program(clocked: bool, vpp: usize, overlap_dispatch: bool) -> (Vec<f32
             capacity_override: None,
             pad_to_capacity: false,
             node_limit: None,
+            balancer: Balancer::AuxLoss,
         },
         &mut rng,
     );
