@@ -17,6 +17,7 @@ use moe_folding::perfmodel::layers::bytes_per_el;
 use moe_folding::perfmodel::{
     execute_step, execute_step_traced_on, ExecEngine, PerfModel, Strategy,
 };
+use moe_folding::serving;
 
 fn main() {
     let pm = PerfModel::default();
@@ -288,7 +289,14 @@ fn main() {
     let model = ModelConfig::mixtral_8x22b();
     let skew = SkewProfile::Zipf { exponent: 1.2 };
     let t0 = Instant::now();
-    let points = coordinator::sweep_capacity_points(&model, 8, 64, skew, &[1.0]);
+    let points = coordinator::sweep_capacity_points(
+        &model,
+        8,
+        64,
+        skew,
+        &[1.0],
+        coordinator::SWEEP_DEFAULT_SEED,
+    );
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3 / points.len().max(1) as f64;
     for p in &points {
         println!(
@@ -321,6 +329,58 @@ fn main() {
             p.imbalance,
             p.entropy
         ));
+    }
+    // Serving replay (ISSUE 10): seeded Poisson arrivals through continuous
+    // batching on the clocked fabric — prefill step + single-token decode
+    // microsteps — under packed vs histogram-optimized expert placement.
+    // p50/p99 token latency, tokens/s/GPU, and metered IB dispatch bytes
+    // are the serving trajectory; the placement delta is the MoETuner-style
+    // headline (negative % = optimized placement moves fewer IB bytes).
+    {
+        let model = ModelConfig::mixtral_8x22b();
+        let world = 16usize;
+        let mut spec = serving::ReplaySpec::small(world, 32, 42);
+        spec.bill_scale = model.hidden_size as f64 / spec.hidden as f64;
+        let t0 = Instant::now();
+        let packed = serving::replay(&spec, &serving::ExpertPlacement::packed(spec.num_experts));
+        let cluster = moe_folding::cluster::ClusterSpec::eos(world);
+        let placement = serving::optimize_placement(
+            &packed.histogram,
+            &cluster,
+            world,
+            spec.num_experts,
+        );
+        let optimized = serving::replay(&spec, &placement);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        for (pname, r) in [("packed", &packed), ("optimized", &optimized)] {
+            println!(
+                "serve-replay {pname:<10} p50 {:8.1} µs   p99 {:8.1} µs   \
+                 {:8.1} tok/s/gpu   IB {:12.0} B   ({} steps, harness wall {wall_ms:.0} ms)",
+                r.p50_us,
+                r.p99_us,
+                r.tokens_per_sec_per_gpu,
+                r.ib_bytes,
+                r.steps
+            );
+            rows.push(format!(
+                "{{\"model\":\"{}\",\"gpus\":{world},\"config\":\"ep{world}-etp1\",\
+                 \"variant\":\"serve-replay\",\"placement\":\"{pname}\",\
+                 \"requests\":{},\"prefill_tokens\":{},\"decode_tokens\":{},\
+                 \"p50_us\":{:.2},\"p99_us\":{:.2},\
+                 \"tokens_per_sec_per_gpu\":{:.2},\
+                 \"ib_dispatch_bytes\":{:.0},\"steps\":{},\
+                 \"harness_wall_ms\":{wall_ms:.1}}}",
+                model.name,
+                spec.requests,
+                spec.prefill_tokens,
+                spec.decode_tokens,
+                r.p50_us,
+                r.p99_us,
+                r.tokens_per_sec_per_gpu,
+                r.ib_bytes,
+                r.steps
+            ));
+        }
     }
     let json = format!(
         "{{\"bench\":\"timeline_step\",\"unit\":\"ms\",\"configs\":[\n{}\n]}}\n",

@@ -48,44 +48,52 @@ pub fn table1(pm: &PerfModel) -> Table {
 /// Table 2: BF16 vs FP8 on Mixtral 8x22B @ 128 GPUs.
 pub fn table2(pm: &PerfModel) -> Table {
     let model = ModelConfig::mixtral_8x22b();
-    let mut t = Table::new(&["Configuration", "Precision", "TFLOPS",
-                             "Speedup vs BF16", "Speedup w/ Folding"]);
     let mut results = Vec::new();
     for precision in [Precision::Bf16, Precision::Fp8] {
         let mut train = TrainConfig::paper_default(4096, 256);
         train.precision = precision;
         for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
             let r = autotune::tune(pm, &model, 128, &train, strategy);
-            let tflops = r.best.as_ref().map(|e| e.tflops_per_gpu).unwrap_or(0.0);
-            results.push((strategy, precision, tflops));
+            results.push((strategy, precision, r.best.as_ref().map(|e| e.tflops_per_gpu)));
         }
     }
-    // Baselines are looked up by (strategy, precision) key — positional
-    // indexing into `results` silently broke whenever the sweep order
-    // changed (ISSUE 8 satellite).
-    let cell = |s: Strategy, p: Precision| -> f64 {
+    render_table2(&results)
+}
+
+/// Render table 2 from per-(strategy, precision) tuned TFLOPS. `None`
+/// marks an infeasible tune (no candidate fit): it renders as `n/a` and is
+/// excluded from every speedup baseline — `unwrap_or(0.0)` used to print
+/// it as a real 0.0-TFLOPS row and poison the ratios with 0.00x / inf
+/// (ISSUE 10 satellite). Baselines are looked up by (strategy, precision)
+/// key — positional indexing into `results` silently broke whenever the
+/// sweep order changed (ISSUE 8 satellite).
+fn render_table2(results: &[(Strategy, Precision, Option<f64>)]) -> Table {
+    let mut t = Table::new(&["Configuration", "Precision", "TFLOPS",
+                             "Speedup vs BF16", "Speedup w/ Folding"]);
+    let cell = |s: Strategy, p: Precision| -> Option<f64> {
         results
             .iter()
             .find(|(rs, rp, _)| *rs == s && *rp == p)
-            .map(|(_, _, tf)| *tf)
-            .unwrap_or(f64::NAN)
+            .and_then(|(_, _, tf)| *tf)
     };
-    for (strategy, precision, tflops) in &results {
+    let speedup = |num: Option<f64>, den: Option<f64>| match (num, den) {
+        (Some(n), Some(d)) if d > 0.0 => format!("{:.2}x", n / d),
+        _ => "n/a".into(),
+    };
+    for (strategy, precision, tflops) in results {
         let vs_bf16 = match precision {
-            Precision::Fp8 => {
-                format!("{:.2}x", tflops / cell(*strategy, Precision::Bf16))
-            }
+            Precision::Fp8 => speedup(*tflops, cell(*strategy, Precision::Bf16)),
             _ => "-".into(),
         };
         let vs_fold = if *strategy == Strategy::MCoreFolding {
-            format!("{:.2}x", tflops / cell(Strategy::MCore, *precision))
+            speedup(*tflops, cell(Strategy::MCore, *precision))
         } else {
             "-".into()
         };
         t.row(&[
             strategy.name().to_string(),
             format!("{precision:?}"),
-            format!("{tflops:.1}"),
+            tflops.map_or_else(|| "n/a".into(), |x| format!("{x:.1}")),
             vs_bf16,
             vs_fold,
         ]);
@@ -598,6 +606,11 @@ impl Default for RoutingPolicy {
     }
 }
 
+/// Default seed of [`sweep_capacity_points`]: reproduces the historical
+/// hardcoded draw (experts and stream both 4242, warmup 9999)
+/// bit-for-bit.
+pub const SWEEP_DEFAULT_SEED: u64 = 4242;
+
 /// One measured point of the capacity-policy sweep: the cost triangle
 /// (a2a volume, drop rate, executed step time) plus load-balance quality
 /// for a (balancer, policy, capacity-factor) cell under one skew profile.
@@ -633,16 +646,27 @@ pub fn sweep_capacity_points(
     tokens_per_rank: usize,
     profile: SkewProfile,
     cfs: &[f64],
+    seed: u64,
 ) -> Vec<CapacityPoint> {
     let h_sim = 64usize.max(model.num_experts);
     let ff_sim = 128usize;
     let e = model.num_experts;
     let world = ep;
-    let mut rng = Rng::seed_from_u64(4242);
+    // The historical draw hardcoded 4242 for *both* RNG consumers (and
+    // 9999 for the aux-free warmup); [`SWEEP_DEFAULT_SEED`] reproduces it
+    // bit-for-bit. Any other seed derives disjoint sub-seeds per consumer
+    // so expert init, the measurement stream, and the warmup stream are
+    // decorrelated (ISSUE 10 satellite).
+    let (expert_seed, stream_seed, warm_seed) = if seed == SWEEP_DEFAULT_SEED {
+        (4242, 4242, 9999)
+    } else {
+        (seed, seed ^ 0x57AE_A11D, seed ^ 0x3A3A_9999)
+    };
+    let mut rng = Rng::seed_from_u64(expert_seed);
     let experts: Vec<SwigluExpert> =
         (0..e).map(|_| SwigluExpert::init(h_sim, ff_sim, &mut rng)).collect();
     let pc = MoePhaseCost::from_model(model, 1, &GpuSpec::h100());
-    let tokens = SkewGen::new(profile, e, h_sim, 4242).next_tokens(world * tokens_per_rank);
+    let tokens = SkewGen::new(profile, e, h_sim, stream_seed).next_tokens(world * tokens_per_rank);
     let balancers: [(&'static str, Balancer); 3] = [
         ("aux-loss", Balancer::AuxLoss),
         ("aux-free", Balancer::AuxFree { update_rate: 0.05 }),
@@ -672,7 +696,7 @@ pub fn sweep_capacity_points(
             // Warm the aux-loss-free bias on a disjoint stream so the
             // measurement stream stays identical across cells.
             if matches!(balancer, Balancer::AuxFree { .. }) {
-                let mut warm = SkewGen::new(profile, e, h_sim, 9999);
+                let mut warm = SkewGen::new(profile, e, h_sim, warm_seed);
                 for _ in 0..64 {
                     let d = router.route(&warm.next_tokens(tokens_per_rank.max(16)));
                     router.update_bias(&d.expert_load);
@@ -739,10 +763,11 @@ pub fn sweep_capacity(
     tokens_per_rank: usize,
     profile: SkewProfile,
     cfs: &[f64],
+    seed: u64,
 ) -> Table {
     let mut t = Table::new(&["Balancer", "Policy", "CF", "Drop %", "A2A (MB)",
                              "Step (µs)", "Load max/mean", "Entropy"]);
-    for p in sweep_capacity_points(model, ep, tokens_per_rank, profile, cfs) {
+    for p in sweep_capacity_points(model, ep, tokens_per_rank, profile, cfs, seed) {
         t.row(&[
             p.balancer.to_string(),
             p.policy.to_string(),
@@ -981,7 +1006,14 @@ mod tests {
     #[test]
     fn sweep_capacity_covers_cells_and_balancers_balance() {
         let model = ModelConfig::mixtral_8x22b();
-        let pts = sweep_capacity_points(&model, 4, 64, SkewProfile::Zipf { exponent: 1.2 }, &[1.0]);
+        let pts = sweep_capacity_points(
+            &model,
+            4,
+            64,
+            SkewProfile::Zipf { exponent: 1.2 },
+            &[1.0],
+            SWEEP_DEFAULT_SEED,
+        );
         assert_eq!(pts.len(), 9, "3 balancers × (dropless + drop + pad)");
         for p in &pts {
             assert!(p.step_us > 0.0);
@@ -997,6 +1029,62 @@ mod tests {
         assert!(plain > 1.5, "zipf stream must skew the plain router, got {plain}");
         assert!(imb("aux-free") < plain, "aux-free {} vs {plain}", imb("aux-free"));
         assert!(imb("sinkhorn") < plain, "sinkhorn {} vs {plain}", imb("sinkhorn"));
+    }
+
+    /// Regression (ISSUE 10 satellite): an infeasible strategy used to
+    /// render as a real `0.0` TFLOPS row, and its speedup baselines became
+    /// `inf`/`0.00x`. It must render `n/a` everywhere it appears.
+    #[test]
+    fn table2_renders_infeasible_as_na() {
+        let results = [
+            (Strategy::MCore, Precision::Bf16, None),
+            (Strategy::MCoreFolding, Precision::Bf16, Some(400.0)),
+            (Strategy::MCore, Precision::Fp8, None),
+            (Strategy::MCoreFolding, Precision::Fp8, Some(500.0)),
+        ];
+        let t = render_table2(&results);
+        assert_eq!(t.rows.len(), 4);
+        let row = |s: &str, p: &str| {
+            t.rows.iter().find(|r| r[0] == s && r[1] == p).unwrap()
+        };
+        let mcore_bf16 = row("MCore", "Bf16");
+        assert_eq!(mcore_bf16[2], "n/a", "infeasible TFLOPS must not print 0.0");
+        let mcore_fp8 = row("MCore", "Fp8");
+        assert_eq!(mcore_fp8[2], "n/a");
+        assert_eq!(mcore_fp8[3], "n/a", "fp8-vs-bf16 over an infeasible pair");
+        let fold_bf16 = row("MCore w/ Folding", "Bf16");
+        assert_eq!(fold_bf16[2], "400.0");
+        assert_eq!(
+            fold_bf16[4], "n/a",
+            "folding speedup against an infeasible MCore baseline must be n/a"
+        );
+        let fold_fp8 = row("MCore w/ Folding", "Fp8");
+        assert_eq!(fold_fp8[3], "1.25x", "feasible ratios still compute");
+        assert!(
+            t.rows.iter().all(|r| r.iter().all(|c| c != "inf" && c != "0.0" && c != "0.00x")),
+            "no infeasible cell may masquerade as a number"
+        );
+    }
+
+    /// Seed threading (ISSUE 10 satellite): the default seed reproduces
+    /// the historical hardcoded draw deterministically, while a custom
+    /// seed changes the measurement (decorrelated expert/stream draws).
+    #[test]
+    fn sweep_capacity_seed_threads_through() {
+        let model = ModelConfig::mixtral_8x22b();
+        let zipf = SkewProfile::Zipf { exponent: 1.2 };
+        let a = sweep_capacity_points(&model, 2, 32, zipf, &[], SWEEP_DEFAULT_SEED);
+        let b = sweep_capacity_points(&model, 2, 32, zipf, &[], SWEEP_DEFAULT_SEED);
+        assert_eq!(a.len(), 3, "dropless-only sweep: one point per balancer");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.imbalance, y.imbalance, "default seed must be deterministic");
+            assert_eq!(x.a2a_mb, y.a2a_mb);
+        }
+        let c = sweep_capacity_points(&model, 2, 32, zipf, &[], 7);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.imbalance != y.imbalance || x.a2a_mb != y.a2a_mb),
+            "a custom seed must change the draw"
+        );
     }
 
     /// Executed fig5 with the chunk-pipelined dispatcher: mappings with

@@ -197,10 +197,18 @@ pub struct LoadStats {
 }
 
 impl LoadStats {
+    /// An all-zero (or empty) load carries no balance information: calling
+    /// it "perfectly balanced" would let empty decode microsteps dilute
+    /// probe/serving averages toward 1.0. Both fields are NaN for such
+    /// loads; aggregation sites must skip NaN samples (see
+    /// [`Self::is_empty`]).
     pub fn from_load(load: &[usize]) -> LoadStats {
         let e = load.len().max(1);
         let total: usize = load.iter().sum();
-        if total == 0 || e == 1 {
+        if total == 0 {
+            return LoadStats { imbalance: f64::NAN, entropy: f64::NAN };
+        }
+        if e == 1 {
             return LoadStats { imbalance: 1.0, entropy: 1.0 };
         }
         let mean = total as f64 / e as f64;
@@ -213,6 +221,11 @@ impl LoadStats {
             }
         }
         LoadStats { imbalance: max / mean, entropy: h / (e as f64).ln() }
+    }
+
+    /// True for the NaN sentinel of an all-zero load (no routed tokens).
+    pub fn is_empty(&self) -> bool {
+        self.imbalance.is_nan()
     }
 }
 
@@ -312,5 +325,40 @@ mod tests {
         let collapsed = LoadStats::from_load(&[40, 0, 0, 0]);
         assert!((collapsed.imbalance - 4.0).abs() < 1e-12);
         assert!(collapsed.entropy.abs() < 1e-12);
+    }
+
+    /// Regression (ISSUE 10 satellite): an all-zero load used to report
+    /// `{imbalance: 1.0, entropy: 1.0}` — "perfectly balanced" — so empty
+    /// decode microsteps silently pulled stream averages toward 1.0. It
+    /// must be the NaN sentinel, and a mixed empty/non-empty stream's
+    /// NaN-skipping mean must equal the mean over the non-empty steps only.
+    #[test]
+    fn all_zero_load_is_nan_sentinel_not_balanced() {
+        let empty = LoadStats::from_load(&[0, 0, 0, 0]);
+        assert!(empty.imbalance.is_nan());
+        assert!(empty.entropy.is_nan());
+        assert!(empty.is_empty());
+        assert!(LoadStats::from_load(&[]).is_empty());
+        // Single-expert loads with actual tokens stay legitimately balanced.
+        let single = LoadStats::from_load(&[17]);
+        assert!((single.imbalance - 1.0).abs() < 1e-12);
+        assert!(!single.is_empty());
+
+        // Mixed stream: two skewed steps and two empty ones.
+        let steps: [&[usize]; 4] = [&[30, 10, 0, 0], &[0, 0, 0, 0], &[10, 10, 10, 10], &[0; 4]];
+        let stats: Vec<LoadStats> = steps.iter().map(|l| LoadStats::from_load(l)).collect();
+        let valid: Vec<&LoadStats> = stats.iter().filter(|s| !s.is_empty()).collect();
+        assert_eq!(valid.len(), 2, "the two empty steps must be skipped");
+        let mean_imb: f64 =
+            valid.iter().map(|s| s.imbalance).sum::<f64>() / valid.len() as f64;
+        let expected = (3.0 + 1.0) / 2.0; // [30,10,0,0] -> 3.0, balanced -> 1.0
+        assert!((mean_imb - expected).abs() < 1e-12, "got {mean_imb}");
+        // The pre-fix behaviour would have produced (3 + 1 + 1 + 1) / 4 = 1.5.
+        let diluted: f64 = stats
+            .iter()
+            .map(|s| if s.imbalance.is_nan() { 1.0 } else { s.imbalance })
+            .sum::<f64>()
+            / stats.len() as f64;
+        assert!((diluted - 1.5).abs() < 1e-12, "sanity: the old bug diluted to 1.5");
     }
 }

@@ -46,6 +46,7 @@ pub mod model;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 /// Crate version string for CLI banners.

@@ -17,6 +17,7 @@ use moe_folding::coordinator::{self, RoutingPolicy};
 use moe_folding::dispatcher::{Balancer, SkewProfile};
 use moe_folding::mapping::{ParallelMapping, RuntimeTopology};
 use moe_folding::perfmodel::{execute_step_traced, PerfModel, Strategy};
+use moe_folding::serving;
 use moe_folding::simcomm::chrome_trace_json;
 use moe_folding::train::{train, MoeProbe, TrainerConfig};
 use moe_folding::util::cli::Args;
@@ -70,10 +71,25 @@ COMMANDS:
             drop/pad capacity policies under skewed gate streams (the
             trailing Drop % / A2A MB columns are the cost triangle)
   sweep-capacity  [--model <name>] [--ep N] [--tokens N]
-            [--skew uniform|zipf|shift] [--cfs 1.0,1.5,2.0]
+            [--skew uniform|zipf|shift] [--cfs 1.0,1.5,2.0] [--seed S]
             executed capacity-factor × {dropless,drop,pad} × balancer
             sweep under one skew profile: drop rate, a2a MB, step µs,
             and load-balance quality per cell on the clocked fabric
+            (--seed reseeds expert weights and gate streams; the default
+            reproduces the historical sweep bit-for-bit)
+  serve     [--model <name>] [--gpus <n>] [--seqs N] [--ctx N] [--fp8]
+            [--hbm GIB]   serving autotuner: training candidate grids
+            re-gated by weights + KV cache (no optimizer states) and
+            ranked by analytic decode latency — prints the serving
+            winner next to the training winner per strategy
+            [--replay [--world N] [--requests N] [--prefill N] [--decode N]
+             [--mean-gap-us F | --diurnal] [--skew uniform|zipf|shift]
+             [--seed S] [--no-placement]]
+            replays seeded arrivals through continuous batching on the
+            clocked fabric (prefill step + single-token decode
+            microsteps): p50/p99 token latency, tokens/s/GPU, and the
+            metered IB bytes of packed vs histogram-optimized expert
+            placement
   fig4      [--model <name>] [--executed [--max-gpus N]]
             context scaling (Figure 4 / Table 5, one model); --executed
             runs each tuned point on the clocked simulator and adds
@@ -434,7 +450,146 @@ fn main() -> moe_folding::util::error::Result<()> {
                 tokens,
                 profile.name()
             );
-            print!("{}", coordinator::sweep_capacity(&model, ep, tokens, profile, &cfs).markdown());
+            let seed = args
+                .get("seed")
+                .map(|v| {
+                    v.parse().unwrap_or_else(|_| {
+                        eprintln!("bad --seed {v}");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(coordinator::SWEEP_DEFAULT_SEED);
+            print!(
+                "{}",
+                coordinator::sweep_capacity(&model, ep, tokens, profile, &cfs, seed).markdown()
+            );
+        }
+        "serve" => {
+            let model = model_arg(&args, "mixtral-8x22b");
+            let gpus = args.get_usize("gpus", 128);
+            let mut serve = serving::ServeConfig {
+                concurrent_seqs: args.get_usize("seqs", 64),
+                context_len: args.get_usize("ctx", 8192),
+                ..serving::ServeConfig::default()
+            };
+            if args.flag("fp8") {
+                serve.precision = Precision::Fp8;
+            }
+            serve.hbm_gib = args.get_f64("hbm", serve.hbm_gib);
+            let gib = (1u64 << 30) as f64;
+            println!(
+                "# serving plan | {} | {} GPUs | {} seqs x {} ctx | {} | {:.0} GiB/rank",
+                model.name,
+                gpus,
+                serve.concurrent_seqs,
+                serve.context_len,
+                serve.precision.name(),
+                serve.hbm_gib
+            );
+            let t = TrainConfig::paper_default(model.seq_len, 256);
+            for strategy in [Strategy::MCore, Strategy::MCoreFolding] {
+                let train_best = autotune::tune(&pm, &model, gpus, &t, strategy).best;
+                let r = serving::tune_serving(&pm, &model, gpus, &serve, strategy);
+                match &r.best {
+                    Some(b) => println!(
+                        "{:<16} serve {:<30} {:>8.1} µs/tok | {:>6.1} GiB (kv {:>5.1}) | \
+                         {} evaluated, {} KV-pruned | training best {}",
+                        strategy.name(),
+                        b.config.tag(),
+                        b.decode_us,
+                        b.memory.total_gib(),
+                        b.memory.kv_cache_bytes / gib,
+                        r.evaluated,
+                        r.oom_count,
+                        train_best
+                            .as_ref()
+                            .map_or_else(|| "n/a".to_string(), |e| e.config.tag()),
+                    ),
+                    None => println!(
+                        "{:<16} n/a — no config fits {} seqs x {} ctx in {:.0} GiB \
+                         ({} evaluated, {} KV-pruned)",
+                        strategy.name(),
+                        serve.concurrent_seqs,
+                        serve.context_len,
+                        serve.hbm_gib,
+                        r.evaluated,
+                        r.oom_count
+                    ),
+                }
+            }
+            if args.flag("replay") {
+                let world = args.get_usize("world", 16);
+                let seed = args.get_usize("seed", 42) as u64;
+                let mut spec =
+                    serving::ReplaySpec::small(world, args.get_usize("requests", 32), seed);
+                spec.prefill_tokens = args.get_usize("prefill", spec.prefill_tokens);
+                spec.decode_tokens = args.get_usize("decode", spec.decode_tokens);
+                if let Some(s) = args.get("skew") {
+                    spec.profile = parse_skew(s);
+                }
+                spec.arrivals = if args.flag("diurnal") {
+                    serving::ArrivalProcess::Diurnal {
+                        quiet_gap_us: 200.0,
+                        busy_gap_us: 20.0,
+                        period_us: 2000.0,
+                    }
+                } else {
+                    serving::ArrivalProcess::Poisson {
+                        mean_gap_us: args.get_f64("mean-gap-us", 50.0),
+                    }
+                };
+                spec.bill_scale = model.hidden_size as f64 / spec.hidden as f64;
+                let packed = serving::ExpertPlacement::packed(spec.num_experts);
+                let base = serving::replay(&spec, &packed);
+                let row = |tag: &str, r: &serving::ReplayReport| {
+                    println!(
+                        "{tag:<10} p50 {:>8.1} µs | p99 {:>8.1} µs | {:>8.1} tok/s/gpu | \
+                         IB {:>10.0} B | {} steps, {} tokens",
+                        r.p50_us,
+                        r.p99_us,
+                        r.tokens_per_sec_per_gpu,
+                        r.ib_bytes,
+                        r.steps,
+                        r.generated_tokens
+                    );
+                };
+                println!(
+                    "\n# replay | {} ranks | {} requests | prefill {} + decode {} | skew {}",
+                    world,
+                    spec.requests,
+                    spec.prefill_tokens,
+                    spec.decode_tokens,
+                    spec.profile.name()
+                );
+                row("packed", &base);
+                if !args.flag("no-placement") {
+                    let cluster = ClusterSpec::eos(world);
+                    let placement = serving::optimize_placement(
+                        &base.histogram,
+                        &cluster,
+                        world,
+                        spec.num_experts,
+                    );
+                    let opt = serving::replay(&spec, &placement);
+                    row("optimized", &opt);
+                    if placement.is_identity() {
+                        println!("placement: identity — traffic already node-aligned");
+                    } else {
+                        let moved = placement
+                            .slot_to_expert
+                            .iter()
+                            .enumerate()
+                            .filter(|&(s, &e)| s != e)
+                            .count();
+                        println!(
+                            "placement: moved {} of {} experts, IB bytes {:+.1}%",
+                            moved,
+                            spec.num_experts,
+                            (opt.ib_bytes / base.ib_bytes - 1.0) * 100.0
+                        );
+                    }
+                }
+            }
         }
         "fig4" => {
             let model = model_arg(&args, "mixtral-8x22b");

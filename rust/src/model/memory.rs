@@ -52,6 +52,9 @@ pub struct MemoryEstimate {
     pub activation_bytes: f64,
     pub transient_bytes: f64,
     pub overhead_bytes: f64,
+    /// KV-cache bytes (serving only — [`MemoryModel::estimate_serving`]);
+    /// 0.0 at training steady state, where no autoregressive cache exists.
+    pub kv_cache_bytes: f64,
 }
 
 impl MemoryEstimate {
@@ -62,6 +65,7 @@ impl MemoryEstimate {
             + self.activation_bytes
             + self.transient_bytes
             + self.overhead_bytes
+            + self.kv_cache_bytes
     }
 
     pub fn total_gib(&self) -> f64 {
@@ -221,6 +225,78 @@ impl MemoryModel {
             activation_bytes,
             transient_bytes: transient,
             overhead_bytes: k.framework_overhead_gib * (1u64 << 30) as f64,
+            kv_cache_bytes: 0.0,
+        }
+    }
+
+    /// Per-GPU memory at inference steady state (ISSUE 10 serving):
+    /// weights without gradients or optimizer state, a one-microstep
+    /// activation working set, and the **KV cache** — the class training
+    /// never has. The cache grows linearly with context (prompt + decoded
+    /// length), shards over TP (GQA KV heads) × CP (sequence dimension),
+    /// and is precision-aware like retained activations, so FP8 serving
+    /// doubles the contexts the same `hbm_gib` gate admits.
+    /// `concurrent_seqs` is the number of sequences resident on one model
+    /// replica (one DP group); `context_len` is the per-sequence context
+    /// the gate must provision for (prompt + max decode).
+    pub fn estimate_serving(
+        &self,
+        model: &ModelConfig,
+        parallel: &ParallelConfig,
+        precision: Precision,
+        concurrent_seqs: usize,
+        context_len: usize,
+    ) -> MemoryEstimate {
+        let k = &self.knobs;
+        let pp = parallel.pp as f64;
+        let tp = parallel.tp as f64;
+        let cp = parallel.cp as f64;
+
+        let expert_params_total = model.num_moe_layers() as u64
+            * model.num_experts as u64
+            * model.params_per_expert();
+        let non_expert_params_total = model.total_params() - expert_params_total;
+        let non_expert_local = non_expert_params_total as f64 / (tp * pp);
+        let expert_local =
+            expert_params_total as f64 / (parallel.ep as f64 * parallel.etp as f64 * pp);
+        // Serving stores weights at the serving width (no bf16 masters to
+        // keep — fp8 deployments quantize the checkpoint).
+        let width = match precision {
+            Precision::Bf16 => 2.0,
+            Precision::Fp8 => 1.0,
+        };
+        let param_bytes = width * (non_expert_local + expert_local);
+
+        let h = model.hidden_size as f64;
+        let layers_local = model.num_layers as f64 / pp;
+
+        // KV cache: 2 (K+V) · kv_heads · head_dim per token per layer,
+        // sharded over TP (heads) × CP (sequence), one entry per resident
+        // sequence token.
+        let kv_per_token_layer = 2.0 * model.num_query_groups as f64 * model.head_dim() as f64;
+        let kv_cache_bytes = concurrent_seqs as f64 * context_len as f64 * layers_local
+            * kv_per_token_layer
+            * width
+            / (tp * cp);
+
+        // Working set of one decode microstep: one token per resident
+        // sequence through attention + routed experts (no 1F1B in-flight
+        // multiplier, nothing retained for a backward pass).
+        // Only one layer's buffers are alive at a time without a backward
+        // pass, so no `layers_local` factor here.
+        let cf = 1.3; // dropless serving provisioning, as in training
+        let block_units = k.attn_act_factor + k.moe_act_factor * model.top_k as f64 * cf;
+        let activation_bytes =
+            concurrent_seqs as f64 * h * block_units * width / (tp * cp);
+
+        MemoryEstimate {
+            param_bytes,
+            grad_bytes: 0.0,
+            optim_bytes: 0.0,
+            activation_bytes,
+            transient_bytes: 0.0,
+            overhead_bytes: k.framework_overhead_gib * (1u64 << 30) as f64,
+            kv_cache_bytes,
         }
     }
 }
@@ -305,6 +381,67 @@ mod tests {
         assert_eq!(fp8.grad_bytes, bf16.grad_bytes, "fp32 main grads");
         assert_eq!(fp8.optim_bytes, bf16.optim_bytes, "fp32 optimizer masters");
         assert!(fp8.total_gib() < bf16.total_gib());
+    }
+
+    /// Serving memory (ISSUE 10): training has no KV class; the serving
+    /// estimate's cache grows linearly with context, shards over TP×CP,
+    /// halves under FP8, and drops grads/optimizer entirely.
+    #[test]
+    fn serving_kv_cache_class() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let train = mm.estimate(&m, &cfg(128, 2, 1, 4, 2, 8), &t, ZeroStage::Zero1);
+        assert_eq!(train.kv_cache_bytes, 0.0, "training has no KV cache");
+
+        let p = cfg(128, 2, 1, 8, 1, 8);
+        let short = mm.estimate_serving(&m, &p, Precision::Bf16, 64, 4096);
+        let long = mm.estimate_serving(&m, &p, Precision::Bf16, 64, 16384);
+        assert_eq!(short.grad_bytes, 0.0);
+        assert_eq!(short.optim_bytes, 0.0);
+        assert_eq!(long.kv_cache_bytes, 4.0 * short.kv_cache_bytes, "linear in context");
+        // Exact pin: 64 seqs · 16384 ctx · (56/8 layers) · 2·8·128 · 2 B / (2·1).
+        let expected = 64.0 * 16384.0 * 7.0 * (2.0 * 8.0 * 128.0) * 2.0 / 2.0;
+        assert_eq!(long.kv_cache_bytes, expected);
+
+        let tp4 = cfg(128, 4, 1, 8, 1, 4);
+        let sharded = mm.estimate_serving(&m, &tp4, Precision::Bf16, 64, 16384);
+        // tp 2→4 and pp 8→4: layers_local doubles, tp halves — KV per GPU
+        // is unchanged; the tp·cp shard is what moved.
+        assert_eq!(sharded.kv_cache_bytes, long.kv_cache_bytes);
+
+        let fp8 = mm.estimate_serving(&m, &p, Precision::Fp8, 64, 16384);
+        assert_eq!(fp8.kv_cache_bytes, long.kv_cache_bytes / 2.0, "precision-aware");
+        assert!(fp8.param_bytes < long.param_bytes, "serving weights at serving width");
+    }
+
+    /// The serving gate prunes what training admits: at heavy concurrency
+    /// and long context the KV cache pushes a training-feasible mapping
+    /// past `hbm_gib`, while a wider-TP mapping that shards the cache
+    /// harder still fits.
+    #[test]
+    fn serving_kv_gate_prunes_training_feasible_config() {
+        let m = ModelConfig::mixtral_8x22b();
+        let mm = MemoryModel::default();
+        let t = TrainConfig::paper_default(4096, 256);
+        let p = cfg(128, 2, 1, 4, 2, 8);
+        let train = mm.estimate(&m, &p, &t, ZeroStage::Zero1);
+        assert!(train.fits(80.0, &mm.knobs), "training admits TP2 EP4 PP8");
+        let serve = mm.estimate_serving(&m, &p, Precision::Bf16, 512, 16384);
+        assert!(
+            !serve.fits(80.0, &mm.knobs),
+            "512×16K KV ({:.1} GiB cache) must blow the same gate",
+            serve.kv_cache_bytes / (1u64 << 30) as f64
+        );
+        // KV per GPU scales as num_layers / (pp·tp·cp): TP8 at the same
+        // PP8 quarters the cache.
+        let wide = cfg(128, 8, 1, 8, 1, 8);
+        let serve_wide = mm.estimate_serving(&m, &wide, Precision::Bf16, 512, 16384);
+        assert!(
+            serve_wide.fits(80.0, &mm.knobs),
+            "TP8 shards the cache back under the gate, {:.1} GiB",
+            serve_wide.total_gib()
+        );
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Serving on the folded fabric: decode microsteps, expert placement, and
+//! traffic replay.
+//!
+//! The paper tunes parallelism for training throughput. Serving the same
+//! checkpoint flips every assumption: steps shrink from millions of tokens
+//! to one per sequence, the objective moves from MFU to token latency, the
+//! memory budget is dominated by a KV cache that grows with every decoded
+//! token, and traffic stops being balancer-flattened — request streams have
+//! domain affinity, so per-node routing histograms diverge. This module is
+//! the serving half of that split, built entirely on the training
+//! machinery:
+//!
+//! * [`replay`] — seeded Poisson/diurnal arrivals, continuous batching,
+//!   prefill as one training-shaped step followed by single-token decode
+//!   microsteps, all as real collective rounds on a clocked
+//!   [`crate::simcomm::Fabric`]. Reports nearest-rank p50/p99 token latency
+//!   and tokens/sec/GPU.
+//! * [`placement`] — MoETuner-style histogram-driven expert placement: a
+//!   pure expert-id permutation that provably cuts metered InfiniBand
+//!   dispatch bytes on skewed traffic and is the identity on uniform
+//!   traffic.
+//! * [`tune_serving`] — the serving autotuner: same candidate grids as
+//!   training, but gated by [`crate::model::MemoryModel::estimate_serving`]
+//!   (weights + KV cache, no optimizer states) and ranked by an analytic
+//!   decode-microstep latency. Prefill wants the training optima; decode
+//!   wants shallow pipelines and KV-friendly TP — the tuner exposes
+//!   exactly that disagreement.
+
+pub mod placement;
+pub mod replay;
+
+pub use placement::{
+    measure_ib_bytes, optimize_placement, ExpertPlacement, PlacementHistogram,
+};
+pub use replay::{
+    percentile_nearest_rank, replay, rotate_gate_features, ArrivalProcess, ReplayReport,
+    ReplaySpec,
+};
+
+use crate::cluster::ClusterSpec;
+use crate::config::{ModelConfig, ParallelConfig, Precision};
+use crate::model::memory::MemoryEstimate;
+use crate::perfmodel::{PerfModel, Strategy};
+
+/// The serving-side counterpart of [`crate::config::TrainConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Resident sequences per model replica (one DP group), i.e. the
+    /// continuous-batching depth the KV budget must carry.
+    pub concurrent_seqs: usize,
+    /// KV context length budgeted per sequence (prompt + generation).
+    pub context_len: usize,
+    pub precision: Precision,
+    /// Per-GPU HBM budget in GiB.
+    pub hbm_gib: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            concurrent_seqs: 64,
+            context_len: 8192,
+            precision: Precision::Bf16,
+            hbm_gib: crate::cluster::GpuSpec::h100().hbm_gib,
+        }
+    }
+}
+
+/// One serving-feasible parallel configuration, ranked by decode latency.
+#[derive(Debug, Clone)]
+pub struct ServingCandidate {
+    pub config: ParallelConfig,
+    /// Analytic per-token decode latency, µs (see [`decode_microstep_us`]).
+    pub decode_us: f64,
+    pub memory: MemoryEstimate,
+}
+
+/// Result of [`tune_serving`] for one strategy.
+#[derive(Debug, Clone)]
+pub struct ServingTuneResult {
+    pub strategy: Strategy,
+    /// Serving-feasible candidates, sorted by ascending decode latency.
+    pub candidates: Vec<ServingCandidate>,
+    pub best: Option<ServingCandidate>,
+    pub evaluated: usize,
+    /// Candidates the KV-aware memory gate pruned.
+    pub oom_count: usize,
+}
+
+/// Analytic decode-microstep latency, µs. Decode GEMMs at microstep batch
+/// sizes are HBM-bound, so the model is bandwidth-first:
+///
+/// * weight streaming — every resident weight byte is read once per token;
+///   a token passes all `num_layers` serially, so PP does **not** shrink
+///   the weight bytes on its critical path (it only splits them across
+///   stages and adds hops);
+/// * KV streaming — the resident cache (`concurrent_seqs · context_len`)
+///   is read once per microstep, sharded over TP·CP;
+/// * dispatch/combine all-to-all per MoE layer, priced NVLink while
+///   `ep·etp` fits in a node (folding packs EP innermost) and IB beyond;
+/// * TP sync latencies and one cross-stage hop per extra PP stage.
+pub fn decode_microstep_us(
+    model: &ModelConfig,
+    cfg: &ParallelConfig,
+    cluster: &ClusterSpec,
+    serve: &ServeConfig,
+) -> f64 {
+    let gpu = &cluster.gpu;
+    let hbm = gpu.hbm_bw_gbs * 1e9;
+    let width = match serve.precision {
+        Precision::Bf16 => 2.0,
+        Precision::Fp8 => 1.0,
+    };
+    let b = serve.concurrent_seqs as f64;
+    let layers = model.num_layers as f64;
+    let moe_layers = model.num_moe_layers() as f64;
+
+    let attn_w_us =
+        model.attn_params_per_layer() as f64 / cfg.tp as f64 * width / hbm * 1e6;
+    let e = model.num_experts.max(1) as f64;
+    let local_expert_bytes =
+        e * model.params_per_expert() as f64 / (cfg.ep * cfg.etp) as f64 * width;
+    // With b·k active tokens over e experts, the expected touched fraction
+    // of the local expert table saturates at 1.
+    let active_frac = (b * model.top_k as f64 / e).min(1.0);
+    let expert_w_us = local_expert_bytes * active_frac / hbm * 1e6;
+
+    let kv_row = 2.0 * model.num_query_groups as f64 * model.head_dim() as f64 * width;
+    let kv_us = b * serve.context_len as f64 * kv_row / (cfg.tp * cfg.cp) as f64
+        / hbm
+        * 1e6;
+
+    let (lat, bw_gbs) = if cfg.ep * cfg.etp <= cluster.gpus_per_node {
+        (cluster.nvlink_latency_us, cluster.nvlink_bw_gbs)
+    } else {
+        (cluster.ib_latency_us, cluster.ib_bw_gbs)
+    };
+    let a2a_bytes = b * model.top_k as f64 * model.hidden_size as f64 * width;
+    let a2a_us = if cfg.ep > 1 {
+        2.0 * (lat + a2a_bytes / (bw_gbs * 1e9) * 1e6)
+    } else {
+        0.0
+    };
+    let tp_us = if cfg.tp > 1 { 4.0 * cluster.nvlink_latency_us } else { 0.0 };
+    let pp_hop_us = (cfg.pp - 1) as f64 * cluster.ib_latency_us;
+
+    layers * (attn_w_us + kv_us + tp_us) + moe_layers * (expert_w_us + a2a_us) + pp_hop_us
+}
+
+/// The serving autotuner: the training candidate grid, re-gated and
+/// re-ranked for decode. Configurations the training tuner admits are
+/// pruned here whenever weights + KV cache blow the HBM budget, and the
+/// survivors are ordered by [`decode_microstep_us`] — latency, not MFU.
+pub fn tune_serving(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    gpus: usize,
+    serve: &ServeConfig,
+    strategy: Strategy,
+) -> ServingTuneResult {
+    let cluster = ClusterSpec::eos(gpus);
+    let mut evaluated = 0usize;
+    let mut oom_count = 0usize;
+    let mut candidates = Vec::new();
+    for cfg in strategy.candidates(model, gpus) {
+        if cfg.validate(model.num_experts, model.num_layers).is_err() {
+            continue;
+        }
+        evaluated += 1;
+        let memory = pm.memory.estimate_serving(
+            model,
+            &cfg,
+            serve.precision,
+            serve.concurrent_seqs,
+            serve.context_len,
+        );
+        if !memory.fits(serve.hbm_gib, &pm.memory.knobs) {
+            oom_count += 1;
+            continue;
+        }
+        let decode_us = decode_microstep_us(model, &cfg, &cluster, serve);
+        candidates.push(ServingCandidate { config: cfg, decode_us, memory });
+    }
+    candidates.sort_by(|a, b| a.decode_us.total_cmp(&b.decode_us));
+    let best = candidates.first().cloned();
+    ServingTuneResult { strategy, candidates, best, evaluated, oom_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::tune;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn decode_latency_shape() {
+        // The analytic decode model has the shapes the tuner relies on:
+        // deeper pipelines and longer contexts are strictly slower, wider
+        // TP is faster on the KV term.
+        let m = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::eos(128);
+        let serve = ServeConfig::default();
+        let shallow = ParallelConfig::new(128, 2, 1, 8, 1, 1);
+        let deep = ParallelConfig::new(128, 2, 1, 8, 1, 8);
+        assert!(
+            decode_microstep_us(&m, &deep, &cluster, &serve)
+                > decode_microstep_us(&m, &shallow, &cluster, &serve),
+            "PP must cost decode latency"
+        );
+        let long = ServeConfig { context_len: 4 * serve.context_len, ..serve };
+        assert!(
+            decode_microstep_us(&m, &shallow, &cluster, &long)
+                > decode_microstep_us(&m, &shallow, &cluster, &serve),
+            "longer context must cost decode latency"
+        );
+        let wide_tp = ParallelConfig::new(128, 8, 1, 8, 1, 1);
+        let narrow_tp = ParallelConfig::new(128, 1, 1, 8, 1, 1);
+        assert!(
+            decode_microstep_us(&m, &wide_tp, &cluster, &serve)
+                < decode_microstep_us(&m, &narrow_tp, &cluster, &serve),
+            "TP must shard the KV/weight stream"
+        );
+    }
+
+    #[test]
+    fn prefill_wants_training_optima_decode_does_not() {
+        // The headline split: the training tuner's winner is not the
+        // serving tuner's winner, and the disagreement is the pipeline
+        // depth (throughput loves PP, per-token latency does not).
+        let pm = PerfModel::default();
+        let m = ModelConfig::mixtral_8x22b();
+        let t = TrainConfig::paper_default(4096, 256);
+        let train_best = tune(&pm, &m, 128, &t, Strategy::MCoreFolding)
+            .best
+            .expect("training fixture must be feasible");
+        let serve = ServeConfig::default();
+        let r = tune_serving(&pm, &m, 128, &serve, Strategy::MCoreFolding);
+        let best = r.best.as_ref().expect("serving must find a config");
+        assert!(best.config.pp <= train_best.config.pp);
+        if train_best.config.pp > 1 {
+            assert!(
+                best.config.pp < train_best.config.pp,
+                "serving kept training's deep pipeline: serve {} vs train {}",
+                best.config.tag(),
+                train_best.config.tag()
+            );
+            let cluster = ClusterSpec::eos(128);
+            let train_decode = decode_microstep_us(&m, &train_best.config, &cluster, &serve);
+            assert!(
+                best.decode_us < train_decode,
+                "serving winner must beat the training winner on decode latency"
+            );
+        }
+        // Candidates come back latency-sorted.
+        assert!(r.candidates.windows(2).all(|w| w[0].decode_us <= w[1].decode_us));
+    }
+
+    #[test]
+    fn kv_gate_prunes_configs_training_admits() {
+        // A config the training memory model happily admits (pinned in
+        // model::memory) must vanish from the serving-feasible set once the
+        // KV budget (512 seqs x 16K context) enters the estimate.
+        let pm = PerfModel::default();
+        let m = ModelConfig::mixtral_8x22b();
+        let heavy = ParallelConfig::new(128, 2, 1, 4, 2, 8);
+        let light = ServeConfig::default();
+        let r_light = tune_serving(&pm, &m, 128, &light, Strategy::MCoreFolding);
+        assert!(
+            r_light.candidates.iter().any(|c| c.config == heavy),
+            "fixture config must be serving-feasible at the light working set"
+        );
+        let heavy_serve =
+            ServeConfig { concurrent_seqs: 512, context_len: 16384, ..ServeConfig::default() };
+        let r_heavy = tune_serving(&pm, &m, 128, &heavy_serve, Strategy::MCoreFolding);
+        assert!(
+            r_heavy.candidates.iter().all(|c| c.config != heavy),
+            "KV gate failed to prune the training-admitted config"
+        );
+        assert!(r_heavy.oom_count > r_light.oom_count);
+        // The gate prunes, it does not nuke: something still serves.
+        let best = r_heavy.best.as_ref().expect("a KV-friendly config must survive");
+        assert!(best.memory.kv_cache_bytes > 0.0);
+    }
+}

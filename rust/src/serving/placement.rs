@@ -1,0 +1,399 @@
+//! MoETuner-style expert placement for the serving fabric.
+//!
+//! Training shards experts packed over EP ranks (expert `e` on rank
+//! `e / experts_per_rank`) and never revisits the assignment: the balancers
+//! keep training traffic near-uniform, so no placement beats any other.
+//! Serving traffic is different — request streams carry domain affinity,
+//! hot experts stay hot for minutes, and the front door shards sequences
+//! over nodes without consulting the gate. The optimizer here aggregates
+//! per-*source-node* routing histograms
+//! ([`crate::dispatcher::RouteDecision::expert_load`] summed over the steps
+//! of a replay) and re-assigns logical experts to physical slots so the
+//! heaviest (node, expert) traffic stays on-node. Ground truth is never the
+//! histogram itself: it is the clocked fabric's own meter,
+//! [`crate::simcomm::Fabric::link_traffic`] on the InfiniBand class.
+//!
+//! A placement is an expert-id permutation, nothing more: physical slot `s`
+//! (owned by EP rank `s / experts_per_rank`) hosts logical expert
+//! `slot_to_expert[s]`. Applying it permutes the gate columns and the
+//! expert table *consistently*, so routing probabilities — and therefore
+//! model outputs — are unchanged; only the wire destinations move.
+
+use crate::cluster::{ClusterSpec, LinkKind};
+use crate::collectives::CommCost;
+use crate::config::ParallelConfig;
+use crate::dispatcher::{DistributedMoeLayer, Router};
+use crate::mapping::RuntimeTopology;
+use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+use crate::train::math::SwigluExpert;
+
+/// How much hotter (relative) a foreign node's traffic for an expert must be
+/// before the optimizer moves it off its packed home node. Keeps the
+/// optimizer a provable identity on uniform traffic, where per-node counts
+/// differ only by sampling noise.
+pub const HOME_STICKINESS: f64 = 0.10;
+
+/// An assignment of logical experts to physical expert slots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertPlacement {
+    /// `slot_to_expert[s]` = logical expert hosted in physical slot `s`.
+    /// Slot `s` lives on EP rank `s / experts_per_rank`. Always a
+    /// permutation of `0..num_experts`.
+    pub slot_to_expert: Vec<usize>,
+}
+
+impl ExpertPlacement {
+    /// The packed (training) placement: slot `s` hosts expert `s`.
+    pub fn packed(num_experts: usize) -> Self {
+        Self { slot_to_expert: (0..num_experts).collect() }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.slot_to_expert.len()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.slot_to_expert.iter().enumerate().all(|(s, &e)| s == e)
+    }
+
+    /// Inverse map: `expert_to_slot[e]` = physical slot hosting expert `e`.
+    pub fn expert_to_slot(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.slot_to_expert.len()];
+        for (s, &e) in self.slot_to_expert.iter().enumerate() {
+            inv[e] = s;
+        }
+        inv
+    }
+
+    /// Reorder a global expert table so `out[s]` holds the weights of the
+    /// logical expert placed in slot `s`.
+    pub fn apply_to_experts(&self, experts: &[SwigluExpert]) -> Vec<SwigluExpert> {
+        assert_eq!(experts.len(), self.slot_to_expert.len());
+        self.slot_to_expert.iter().map(|&e| experts[e].clone()).collect()
+    }
+
+    /// Permute a router's gate columns (and bias) into slot space: column
+    /// `s` of the placed gate scores the expert hosted in slot `s`. The
+    /// placed router selects the *same* logical experts with the same
+    /// probabilities; only the slot ids on the wire change.
+    pub fn apply_to_router(&self, router: &Router) -> Router {
+        let e = router.config.num_experts;
+        assert_eq!(e, self.slot_to_expert.len());
+        let h = router.config.hidden;
+        let mut w = vec![0.0f32; h * e];
+        for r in 0..h {
+            for (s, &le) in self.slot_to_expert.iter().enumerate() {
+                w[r * e + s] = router.weight[r * e + le];
+            }
+        }
+        let bias: Vec<f32> =
+            self.slot_to_expert.iter().map(|&le| router.bias[le]).collect();
+        Router::new(router.config, w).with_bias(bias)
+    }
+}
+
+/// Per-source-node routing traffic, in *logical* expert space.
+/// `per_node[m][e]` = tokens sourced on node `m` that routed to expert `e`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementHistogram {
+    pub per_node: Vec<Vec<f64>>,
+}
+
+impl PlacementHistogram {
+    pub fn new(num_nodes: usize, num_experts: usize) -> Self {
+        Self { per_node: vec![vec![0.0; num_experts]; num_nodes] }
+    }
+
+    /// Fold one step's per-expert load from a rank on `node` into the
+    /// histogram. `load` is in logical expert space (un-permute a placed
+    /// run's slot loads first; see [`ExpertPlacement::expert_to_slot`]).
+    /// An all-zero step (idle rank) contributes nothing — the serving path
+    /// hits these constantly, which is exactly why
+    /// [`crate::dispatcher::LoadStats::from_load`] treats them as a NaN
+    /// sentinel rather than "perfectly balanced".
+    pub fn record(&mut self, node: usize, load: &[usize]) {
+        let row = &mut self.per_node[node];
+        assert_eq!(row.len(), load.len());
+        for (acc, &l) in row.iter_mut().zip(load) {
+            *acc += l as f64;
+        }
+    }
+
+    /// Total traffic to one logical expert across all source nodes.
+    pub fn expert_total(&self, expert: usize) -> f64 {
+        self.per_node.iter().map(|row| row[expert]).sum()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.per_node.len()
+    }
+}
+
+/// Greedy MoETuner-style node assignment. Experts are visited in descending
+/// total-traffic order; each is pinned to the node sourcing most of its
+/// traffic, unless its packed home node is within [`HOME_STICKINESS`] of
+/// that maximum (then it stays home — identity on uniform traffic). Node
+/// capacities are the slot counts the EP sharding dictates. Within a node,
+/// experts fill slots in ascending id order, so "every expert stays home"
+/// reproduces the packed placement bit-for-bit.
+pub fn optimize_placement(
+    hist: &PlacementHistogram,
+    cluster: &ClusterSpec,
+    ep: usize,
+    num_experts: usize,
+) -> ExpertPlacement {
+    assert!(num_experts % ep == 0, "experts must divide evenly over EP ranks");
+    let epr = num_experts / ep;
+    // Node of each physical slot under the serving layout (EP ranks are
+    // global ranks 0..ep, in order).
+    let node_of_slot = |s: usize| cluster.node_of(s / epr);
+    let num_nodes = node_of_slot(num_experts - 1) + 1;
+    if num_nodes <= 1 {
+        // Single node: no IB to optimize, keep packed.
+        return ExpertPlacement::packed(num_experts);
+    }
+    assert!(
+        hist.num_nodes() >= num_nodes,
+        "histogram covers {} nodes, layout needs {}",
+        hist.num_nodes(),
+        num_nodes
+    );
+    let mut capacity = vec![0usize; num_nodes];
+    for s in 0..num_experts {
+        capacity[node_of_slot(s)] += 1;
+    }
+
+    // Hot experts first; ties broken by ascending id for determinism.
+    let mut order: Vec<usize> = (0..num_experts).collect();
+    order.sort_by(|&a, &b| {
+        hist.expert_total(b)
+            .total_cmp(&hist.expert_total(a))
+            .then(a.cmp(&b))
+    });
+
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); num_nodes];
+    for &e in &order {
+        let home = node_of_slot(e);
+        // Node sourcing the most traffic for this expert, among those with
+        // free slots; ties go to the lowest node id.
+        let mut best: Option<(usize, f64)> = None;
+        for m in 0..num_nodes {
+            if assigned[m].len() >= capacity[m] {
+                continue;
+            }
+            let t = hist.per_node[m][e];
+            let better = match best {
+                None => true,
+                Some((_, bt)) => t > bt,
+            };
+            if better {
+                best = Some((m, t));
+            }
+        }
+        let (mut pick, best_t) = best.expect("capacities sum to num_experts");
+        if assigned[home].len() < capacity[home] {
+            let home_t = hist.per_node[home][e];
+            if best_t <= home_t * (1.0 + HOME_STICKINESS) {
+                pick = home;
+            }
+        }
+        assigned[pick].push(e);
+    }
+
+    // Fill each node's slots in ascending expert order.
+    let mut slot_to_expert = vec![usize::MAX; num_experts];
+    let mut cursor = vec![0usize; num_nodes];
+    let mut node_slots: Vec<Vec<usize>> = vec![Vec::new(); num_nodes];
+    for s in 0..num_experts {
+        node_slots[node_of_slot(s)].push(s);
+    }
+    for m in 0..num_nodes {
+        assigned[m].sort_unstable();
+        for &e in &assigned[m] {
+            slot_to_expert[node_slots[m][cursor[m]]] = e;
+            cursor[m] += 1;
+        }
+    }
+    debug_assert!(slot_to_expert.iter().all(|&e| e != usize::MAX));
+    ExpertPlacement { slot_to_expert }
+}
+
+/// Run one dispatch step per rank under `placement` on a clocked EP-only
+/// fabric and return the metered InfiniBand bytes. This is the ground-truth
+/// harness the placement tests and the `serve` CLI use to prove (or refute)
+/// a placement: same router, same experts, same per-rank token batches —
+/// only the slot permutation differs between candidates.
+pub fn measure_ib_bytes(
+    router: &Router,
+    experts: &[SwigluExpert],
+    placement: &ExpertPlacement,
+    per_rank_tokens: &[Vec<f32>],
+) -> f64 {
+    let world = per_rank_tokens.len();
+    let placed_router = placement.apply_to_router(router);
+    let placed_experts = placement.apply_to_experts(experts);
+    let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, world, 1, 1))
+        .expect("EP-only serving grid");
+    let cluster = ClusterSpec::eos(world);
+    let fabric = Fabric::new_clocked(world, AlgoSelection::fast(), CommCost::new(cluster));
+    run_ranks_on(&fabric, |rank, comm| {
+        let layer =
+            DistributedMoeLayer::from_topology(topo.view(rank), placed_router.clone(), &placed_experts);
+        layer.forward(&comm, &per_rank_tokens[rank]).0
+    });
+    fabric.link_traffic(LinkKind::InfiniBand).bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DropPolicy;
+    use crate::dispatcher::{Balancer, RouterConfig, SkewGen};
+
+    fn dropless(hidden: usize, e: usize, k: usize) -> RouterConfig {
+        RouterConfig {
+            hidden,
+            num_experts: e,
+            top_k: k,
+            capacity_factor: 1.0,
+            drop_policy: DropPolicy::Dropless,
+            capacity_override: None,
+            pad_to_capacity: false,
+            node_limit: None,
+            balancer: Balancer::AuxLoss,
+        }
+    }
+
+    #[test]
+    fn placement_permutes_router_and_experts_consistently() {
+        let (h, e) = (16, 8);
+        let router = Router::new(dropless(h, e, 2), SkewGen::gate_weight(h, e));
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let experts: Vec<SwigluExpert> =
+            (0..e).map(|_| SwigluExpert::init(h, 4, &mut rng)).collect();
+
+        // Packed placement is a strict no-op on both artifacts.
+        let packed = ExpertPlacement::packed(e);
+        assert!(packed.is_identity());
+        let same = packed.apply_to_router(&router);
+        assert_eq!(same.weight, router.weight);
+
+        // A rotation: slot s hosts expert (s + 3) % e.
+        let rot = ExpertPlacement {
+            slot_to_expert: (0..e).map(|s| (s + 3) % e).collect(),
+        };
+        let placed_router = rot.apply_to_router(&router);
+        let placed_experts = rot.apply_to_experts(&experts);
+        // Gate column s of the placed router is gate column perm[s] of the
+        // original — with the identity-embedding gate, that means feature
+        // perm[s] scores slot s.
+        for r in 0..h {
+            for s in 0..e {
+                assert_eq!(
+                    placed_router.weight[r * e + s],
+                    router.weight[r * e + rot.slot_to_expert[s]]
+                );
+            }
+        }
+        // Slot s's expert weights are the logical expert's, bit-for-bit.
+        for s in 0..e {
+            assert_eq!(placed_experts[s].w_gate, experts[rot.slot_to_expert[s]].w_gate);
+        }
+        // Inverse really inverts.
+        let inv = rot.expert_to_slot();
+        for s in 0..e {
+            assert_eq!(inv[rot.slot_to_expert[s]], s);
+        }
+    }
+
+    #[test]
+    fn placement_preserves_routed_expert_identity() {
+        // The placed (router, experts) pair routes every token to the same
+        // logical expert weights as the unplaced pair — only slot ids move.
+        let (h, e, n) = (16, 8, 64);
+        let router = Router::new(dropless(h, e, 2), SkewGen::gate_weight(h, e));
+        let mut gen = SkewGen::new(
+            crate::dispatcher::SkewProfile::Zipf { exponent: 1.2 },
+            e,
+            h,
+            42,
+        );
+        let tokens = gen.next_tokens(n);
+        let rot = ExpertPlacement {
+            slot_to_expert: (0..e).map(|s| (s + 5) % e).collect(),
+        };
+        let placed = rot.apply_to_router(&router);
+        let base_dec = router.route(&tokens);
+        let placed_dec = placed.route(&tokens);
+        // The softmax denominator sums in permuted order, so probs can move
+        // by an ulp — compare per-token logical expert sets with a
+        // tolerance on the gate weight, not bit equality.
+        let per_token = |dec: &crate::dispatcher::RouteDecision, to_logical: bool| {
+            let mut by_tok: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
+            for a in &dec.assignments {
+                let le = if to_logical { rot.slot_to_expert[a.expert] } else { a.expert };
+                by_tok[a.token].push((le, a.prob));
+            }
+            for row in &mut by_tok {
+                row.sort_by_key(|&(le, _)| le);
+            }
+            by_tok
+        };
+        let base = per_token(&base_dec, false);
+        let plcd = per_token(&placed_dec, true);
+        for (bt, pt) in base.iter().zip(&plcd) {
+            let be: Vec<usize> = bt.iter().map(|&(le, _)| le).collect();
+            let pe: Vec<usize> = pt.iter().map(|&(le, _)| le).collect();
+            assert_eq!(be, pe, "placement changed the selected logical experts");
+            for (&(_, wa), &(_, wb)) in bt.iter().zip(pt) {
+                assert!((wa - wb).abs() < 1e-5, "gate weight moved: {wa} vs {wb}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimizer_swaps_cross_node_hotspots() {
+        // 16 ranks = 2 EOS nodes, 16 experts, 1 per rank. Node 0's traffic
+        // all targets experts 8..16 (homed on node 1) and vice versa — the
+        // optimizer must swap the two halves.
+        let world = 16;
+        let e = 16;
+        let cluster = ClusterSpec::eos(world);
+        let mut hist = PlacementHistogram::new(2, e);
+        for x in 8..16 {
+            hist.per_node[0][x] = 100.0;
+        }
+        for x in 0..8 {
+            hist.per_node[1][x] = 100.0;
+        }
+        let p = optimize_placement(&hist, &cluster, world, e);
+        let want: Vec<usize> = (8..16).chain(0..8).collect();
+        assert_eq!(p.slot_to_expert, want);
+    }
+
+    #[test]
+    fn optimizer_is_identity_on_uniform_traffic() {
+        // Near-uniform counts (small noise below the stickiness threshold)
+        // must leave the packed placement untouched.
+        let world = 16;
+        let e = 16;
+        let cluster = ClusterSpec::eos(world);
+        let mut hist = PlacementHistogram::new(2, e);
+        for m in 0..2 {
+            for x in 0..e {
+                hist.per_node[m][x] = 100.0 + ((m * 31 + x * 7) % 5) as f64;
+            }
+        }
+        let p = optimize_placement(&hist, &cluster, world, e);
+        assert!(p.is_identity(), "uniform traffic moved experts: {:?}", p.slot_to_expert);
+    }
+
+    #[test]
+    fn single_node_layout_stays_packed() {
+        let cluster = ClusterSpec::eos(8);
+        let mut hist = PlacementHistogram::new(1, 16);
+        hist.per_node[0][3] = 1e6;
+        let p = optimize_placement(&hist, &cluster, 8, 16);
+        assert!(p.is_identity());
+    }
+}

@@ -1,0 +1,473 @@
+//! Traffic replay: autoregressive decode microsteps on the clocked fabric.
+//!
+//! Training steps are huge, rectangular, and latency-oblivious; serving is
+//! the opposite — a trickle of requests arrives over wall-clock time, each
+//! does one training-shaped *prefill* step and then `decode_tokens` single
+//! token microsteps, and the number that matters is token latency, not MFU.
+//! This engine replays a seeded arrival process (Poisson or diurnal) through
+//! continuous batching on one long-lived clocked [`Fabric`]: every microstep
+//! is a real collective round through the existing
+//! [`DistributedMoeLayer::forward`] path, step durations are deltas of
+//! [`Fabric::max_sim_time_us`], and KV-read attention time is charged on the
+//! compute lane in proportion to resident context.
+//!
+//! Everything is deterministic in the spec seed: arrivals, per-sequence
+//! token streams (seeded independently per request id so outputs are
+//! invariant to how prefill is chunked across microsteps), and domain
+//! rotations. The per-(sequence, position) output digest in the report is
+//! therefore a replay fingerprint the differential suite pins across
+//! batching choices.
+
+use crate::cluster::{ClusterSpec, LinkKind};
+use crate::collectives::CommCost;
+use crate::config::{DropPolicy, ParallelConfig};
+use crate::dispatcher::{
+    Balancer, DistributedMoeLayer, Router, RouterConfig, SkewGen, SkewProfile,
+};
+use crate::mapping::RuntimeTopology;
+use crate::simcomm::{run_ranks_on, AlgoSelection, Fabric};
+use crate::train::math::SwigluExpert;
+use crate::util::Rng;
+
+use super::placement::{ExpertPlacement, PlacementHistogram};
+
+/// Request arrival process, in simulated microseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals: i.i.d. exponential inter-arrival gaps with the
+    /// given mean.
+    Poisson { mean_gap_us: f64 },
+    /// Diurnal tide: Poisson whose mean gap sweeps between `quiet_gap_us`
+    /// (edges of each period) and `busy_gap_us` (middle of each period) on
+    /// a triangle wave — a deterministic stand-in for day/night load.
+    Diurnal { quiet_gap_us: f64, busy_gap_us: f64, period_us: f64 },
+}
+
+impl ArrivalProcess {
+    /// The first `n` arrival times, nondecreasing, deterministic in `rng`.
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for _ in 0..n {
+            let mean = match *self {
+                ArrivalProcess::Poisson { mean_gap_us } => mean_gap_us,
+                ArrivalProcess::Diurnal { quiet_gap_us, busy_gap_us, period_us } => {
+                    let phase = (t / period_us).fract();
+                    let tri = 1.0 - (2.0 * phase - 1.0).abs();
+                    quiet_gap_us + (busy_gap_us - quiet_gap_us) * tri
+                }
+            };
+            let u = rng.next_f64();
+            t += -mean * (1.0 - u).ln();
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// One replay scenario. All fields are simulation-scale: `hidden` is the
+/// sim width (`>= num_experts`; bill-scaled to the real model via
+/// `bill_scale`), not the model's.
+#[derive(Debug, Clone)]
+pub struct ReplaySpec {
+    pub world: usize,
+    pub num_experts: usize,
+    pub hidden: usize,
+    pub top_k: usize,
+    /// Requests to replay to completion.
+    pub requests: usize,
+    /// Prompt length per request (the training-shaped prefill step).
+    pub prefill_tokens: usize,
+    /// Tokens generated after the first (one microstep each).
+    pub decode_tokens: usize,
+    pub arrivals: ArrivalProcess,
+    pub profile: SkewProfile,
+    /// Rotate each sequence's gate preference by a per-node offset — the
+    /// domain-sharded front door that gives expert placement its leverage.
+    /// Off, every node sees the same mix and placement is a no-op.
+    pub rotate_domains: bool,
+    /// Continuous-batching admission cap per rank (the sim-scale stand-in
+    /// for the KV-cache memory gate; `tune_serving` computes the
+    /// model-scale equivalent from [`crate::model::MemoryModel`]).
+    pub max_concurrent_per_rank: usize,
+    /// Max prefill rows a sequence contributes to one microstep; prompts
+    /// longer than this are chunked across steps. Outputs are invariant to
+    /// this knob (pinned by the differential suite); latency is not.
+    pub microstep_tokens: usize,
+    /// KV-read attention charge per resident context token per microstep,
+    /// µs (compute-lane `advance`, the decode-side analogue of
+    /// [`crate::dispatcher::MoePhaseCost`]).
+    pub attn_us_per_ctx_token: f64,
+    /// Fabric billing scale (real hidden / sim hidden).
+    pub bill_scale: f64,
+    pub seed: u64,
+}
+
+impl ReplaySpec {
+    /// A small deterministic scenario: one expert per rank, Zipf traffic,
+    /// Poisson arrivals. The differential suite's workhorse.
+    pub fn small(world: usize, requests: usize, seed: u64) -> Self {
+        let num_experts = world.max(4);
+        ReplaySpec {
+            world,
+            num_experts,
+            hidden: 64usize.max(num_experts),
+            top_k: 2,
+            requests,
+            prefill_tokens: 8,
+            decode_tokens: 8,
+            arrivals: ArrivalProcess::Poisson { mean_gap_us: 50.0 },
+            profile: SkewProfile::Zipf { exponent: 1.2 },
+            rotate_domains: true,
+            max_concurrent_per_rank: 4,
+            microstep_tokens: 8,
+            attn_us_per_ctx_token: 0.02,
+            bill_scale: 1.0,
+            seed,
+        }
+    }
+}
+
+/// What a replay measured.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub completed: usize,
+    /// Tokens generated (first token + decode tokens, all requests).
+    pub generated_tokens: usize,
+    /// Collective rounds executed.
+    pub steps: usize,
+    /// Nearest-rank percentiles over all per-token latencies (first-token
+    /// latency includes queue wait; decode latencies are inter-token).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub tokens_per_sec_per_gpu: f64,
+    /// Metered bytes over the IB link class — the placement ground truth.
+    pub ib_bytes: f64,
+    pub nvlink_bytes: f64,
+    pub total_us: f64,
+    /// Order-invariant digest over every (sequence, position) output row.
+    pub digest: u64,
+    pub token_latencies: Vec<f64>,
+    /// Per-source-node routing traffic in logical expert space — feed to
+    /// [`super::placement::optimize_placement`].
+    pub histogram: PlacementHistogram,
+}
+
+/// Nearest-rank percentile (`p` in (0, 1]): the ceil(p·n)-th smallest.
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    assert!(p > 0.0 && p <= 1.0);
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let idx = ((p * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+    v[idx]
+}
+
+/// Rotate the gate-logit features (the first `e` of each `h`-wide row) by
+/// `rot` positions: a token preferring expert `p` now prefers
+/// `(p + rot) % e`. This is the domain operator — same popularity shape,
+/// shifted support.
+pub fn rotate_gate_features(tokens: &mut [f32], e: usize, h: usize, rot: usize) {
+    if rot == 0 {
+        return;
+    }
+    let n = tokens.len() / h;
+    let mut buf = vec![0.0f32; e];
+    for t in 0..n {
+        let row = &mut tokens[t * h..t * h + e];
+        for (j, &x) in row.iter().enumerate() {
+            buf[(j + rot) % e] = x;
+        }
+        row.copy_from_slice(&buf);
+    }
+}
+
+fn seq_seed(seed: u64, id: usize) -> u64 {
+    seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+fn row_digest(id: usize, pos: usize, row: &[f32]) -> u64 {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64 ^ ((id as u64) << 32) ^ pos as u64;
+    for &v in row {
+        x = x.wrapping_mul(0x0000_0100_0000_01B3).wrapping_add(u64::from(v.to_bits()));
+    }
+    x
+}
+
+struct SeqState {
+    id: usize,
+    gen: SkewGen,
+    rotation: usize,
+    prefill_left: usize,
+    decode_left: usize,
+    context: usize,
+    emitted: usize,
+    arrival_us: f64,
+    last_token_us: f64,
+}
+
+/// Replay `spec` under `placement` and measure it. Every call builds its
+/// own fabric, router, and experts from `spec.seed`, so two calls with
+/// different placements but the same spec compare exactly the same traffic
+/// — the only degree of freedom is where the experts live.
+pub fn replay(spec: &ReplaySpec, placement: &ExpertPlacement) -> ReplayReport {
+    let (world, e, h) = (spec.world, spec.num_experts, spec.hidden);
+    assert!(h >= e, "gate logits embed in the first num_experts features");
+    assert_eq!(e % world, 0, "experts must divide evenly over EP ranks");
+    assert_eq!(placement.num_experts(), e);
+    assert!(spec.requests > 0 && spec.prefill_tokens > 0);
+
+    let cluster = ClusterSpec::eos(world);
+    let num_nodes = cluster.node_of(world - 1) + 1;
+    let cfg = RouterConfig {
+        hidden: h,
+        num_experts: e,
+        top_k: spec.top_k,
+        capacity_factor: 1.0,
+        // Dropless is load-bearing: it keeps per-token outputs independent
+        // of batch composition, which is what makes the replay digest
+        // invariant to chunking and admission order.
+        drop_policy: DropPolicy::Dropless,
+        capacity_override: None,
+        pad_to_capacity: false,
+        node_limit: None,
+        balancer: Balancer::AuxLoss,
+    };
+    let base_router = Router::new(cfg, SkewGen::gate_weight(h, e));
+    let router = placement.apply_to_router(&base_router);
+    let mut wrng = Rng::seed_from_u64(spec.seed ^ 0x00C0_FFEE);
+    let base_experts: Vec<SwigluExpert> =
+        (0..e).map(|_| SwigluExpert::init(h, h, &mut wrng)).collect();
+    let experts = placement.apply_to_experts(&base_experts);
+    let expert_of_slot = placement.slot_to_expert.clone();
+
+    let topo = RuntimeTopology::folded(ParallelConfig::new(world, 1, 1, world, 1, 1))
+        .expect("EP-only serving grid");
+    let fabric =
+        Fabric::new_clocked(world, AlgoSelection::fast(), CommCost::new(cluster.clone()));
+
+    let mut arr_rng = Rng::seed_from_u64(spec.seed ^ 0x0A22_17A1);
+    let mut pending: std::collections::VecDeque<(f64, usize)> = spec
+        .arrivals
+        .times(spec.requests, &mut arr_rng)
+        .into_iter()
+        .enumerate()
+        .map(|(id, t)| (t, id))
+        .collect();
+    let mut active: Vec<Vec<SeqState>> = (0..world).map(|_| Vec::new()).collect();
+
+    let mut idle_us = 0.0f64;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut digest = 0u64;
+    let mut hist = PlacementHistogram::new(num_nodes, e);
+    let mut generated = 0usize;
+    let mut completed = 0usize;
+    let mut steps = 0usize;
+
+    while completed < spec.requests {
+        assert!(steps < 1_000_000, "replay failed to converge");
+        let now = fabric.max_sim_time_us() + idle_us;
+        // Admit arrived requests. Sharding is static (`id % world`, the
+        // hash-sharded front door): the sequence->rank map — and with it
+        // every domain rotation and token stream — is independent of step
+        // timing, which is what makes the replay digest invariant to the
+        // microstep chunking knob. A full rank blocks its queue head.
+        while let Some(&(t, id)) = pending.front() {
+            if t > now {
+                break;
+            }
+            let rank = id % world;
+            if active[rank].len() >= spec.max_concurrent_per_rank {
+                break;
+            }
+            pending.pop_front();
+            let rotation = if spec.rotate_domains && num_nodes > 1 {
+                ((cluster.node_of(rank) + 1) % num_nodes) * (e / num_nodes).max(1)
+            } else {
+                0
+            };
+            active[rank].push(SeqState {
+                id,
+                gen: SkewGen::new(spec.profile, e, h, seq_seed(spec.seed, id)),
+                rotation,
+                prefill_left: spec.prefill_tokens,
+                decode_left: spec.decode_tokens,
+                context: 0,
+                emitted: 0,
+                arrival_us: t,
+                last_token_us: t,
+            });
+        }
+        if active.iter().all(|a| a.is_empty()) {
+            // Fleet idle: jump the engine clock to the next arrival.
+            let (t, _) = *pending.front().expect("idle with nothing pending");
+            idle_us += (t - now).max(0.0);
+            continue;
+        }
+
+        // Build this microstep's per-rank batches.
+        let mut batch: Vec<Vec<f32>> = (0..world).map(|_| Vec::new()).collect();
+        let mut rows_of: Vec<Vec<usize>> = (0..world).map(|_| Vec::new()).collect();
+        let mut attn_ctx = vec![0.0f64; world];
+        for r in 0..world {
+            for s in active[r].iter_mut() {
+                let rows = if s.prefill_left > 0 {
+                    s.prefill_left.min(spec.microstep_tokens.max(1))
+                } else {
+                    1
+                };
+                let mut toks = s.gen.next_tokens(rows);
+                rotate_gate_features(&mut toks, e, h, s.rotation);
+                batch[r].extend_from_slice(&toks);
+                rows_of[r].push(rows);
+                attn_ctx[r] += (s.context + rows) as f64;
+            }
+        }
+
+        // One collective round: every rank participates even when empty.
+        let outs: Vec<Vec<f32>> = run_ranks_on(&fabric, |rank, comm| {
+            comm.set_bill_scale(spec.bill_scale);
+            comm.advance("serve/attn", spec.attn_us_per_ctx_token * attn_ctx[rank]);
+            let layer =
+                DistributedMoeLayer::from_topology(topo.view(rank), router.clone(), &experts);
+            layer.forward(&comm, &batch[rank]).0
+        });
+        steps += 1;
+        let step_end = fabric.max_sim_time_us() + idle_us;
+
+        // Source-node routing histogram, folded back to logical experts.
+        for r in 0..world {
+            if batch[r].is_empty() {
+                continue;
+            }
+            let dec = router.route(&batch[r]);
+            let mut logical = vec![0usize; e];
+            for (slot, &cnt) in dec.expert_load.iter().enumerate() {
+                logical[expert_of_slot[slot]] += cnt;
+            }
+            hist.record(cluster.node_of(r), &logical);
+        }
+
+        // Token accounting.
+        for r in 0..world {
+            let mut off = 0usize;
+            for (k, s) in active[r].iter_mut().enumerate() {
+                let rows = rows_of[r][k];
+                let out_rows = &outs[r][off * h..(off + rows) * h];
+                off += rows;
+                s.context += rows;
+                if s.prefill_left > 0 {
+                    s.prefill_left -= rows;
+                    if s.prefill_left == 0 {
+                        // Prefill completion emits the first token.
+                        latencies.push(step_end - s.arrival_us);
+                        s.last_token_us = step_end;
+                        digest = digest
+                            .wrapping_add(row_digest(s.id, s.emitted, &out_rows[(rows - 1) * h..]));
+                        s.emitted += 1;
+                        generated += 1;
+                        if s.decode_left == 0 {
+                            completed += 1;
+                        }
+                    }
+                } else {
+                    latencies.push(step_end - s.last_token_us);
+                    s.last_token_us = step_end;
+                    digest = digest.wrapping_add(row_digest(s.id, s.emitted, out_rows));
+                    s.emitted += 1;
+                    generated += 1;
+                    s.decode_left -= 1;
+                    if s.decode_left == 0 {
+                        completed += 1;
+                    }
+                }
+            }
+            active[r].retain(|s| s.prefill_left > 0 || s.decode_left > 0);
+        }
+    }
+
+    let total_us = fabric.max_sim_time_us() + idle_us;
+    ReplayReport {
+        completed,
+        generated_tokens: generated,
+        steps,
+        p50_us: percentile_nearest_rank(&latencies, 0.50),
+        p99_us: percentile_nearest_rank(&latencies, 0.99),
+        tokens_per_sec_per_gpu: generated as f64 / (total_us / 1e6) / world as f64,
+        ib_bytes: fabric.link_traffic(LinkKind::InfiniBand).bytes,
+        nvlink_bytes: fabric.link_traffic(LinkKind::NvLink).bytes,
+        total_us,
+        digest,
+        token_latencies: latencies,
+        histogram: hist,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank_pinned() {
+        let xs: Vec<f64> = (1..=10).map(|i| (i * 10) as f64).collect();
+        assert_eq!(percentile_nearest_rank(&xs, 0.50), 50.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.90), 90.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.99), 100.0);
+        assert_eq!(percentile_nearest_rank(&xs, 1.0), 100.0);
+        assert_eq!(percentile_nearest_rank(&[7.0], 0.5), 7.0);
+        // Unsorted input sorts internally.
+        assert_eq!(percentile_nearest_rank(&[3.0, 1.0, 2.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn arrivals_deterministic_and_monotone() {
+        let p = ArrivalProcess::Poisson { mean_gap_us: 40.0 };
+        let a = p.times(200, &mut Rng::seed_from_u64(5));
+        let b = p.times(200, &mut Rng::seed_from_u64(5));
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let mean = a.last().unwrap() / 200.0;
+        assert!(mean > 10.0 && mean < 160.0, "poisson mean gap {mean}");
+
+        let d = ArrivalProcess::Diurnal {
+            quiet_gap_us: 200.0,
+            busy_gap_us: 20.0,
+            period_us: 4000.0,
+        };
+        let t = d.times(100, &mut Rng::seed_from_u64(5));
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn rotate_gate_features_shifts_preference() {
+        let (e, h) = (4, 8);
+        let mut row = vec![0.0f32; h];
+        row[1] = 5.0; // prefers expert 1
+        row[6] = 3.3; // non-gate feature untouched
+        rotate_gate_features(&mut row, e, h, 3);
+        assert_eq!(row[(1 + 3) % e], 5.0);
+        assert_eq!(row[6], 3.3);
+        // rot == 0 is a strict no-op.
+        let before = row.clone();
+        rotate_gate_features(&mut row, e, h, 0);
+        assert_eq!(row, before);
+    }
+
+    #[test]
+    fn replay_smoke_and_determinism() {
+        let spec = ReplaySpec::small(4, 6, 99);
+        let packed = ExpertPlacement::packed(spec.num_experts);
+        let a = replay(&spec, &packed);
+        assert_eq!(a.completed, 6);
+        assert_eq!(a.generated_tokens, 6 * (1 + spec.decode_tokens));
+        assert!(a.steps > 0 && a.total_us > 0.0);
+        assert!(a.p50_us > 0.0 && a.p99_us >= a.p50_us);
+        assert!(a.tokens_per_sec_per_gpu > 0.0);
+        // Same spec, same placement => bit-identical report.
+        let b = replay(&spec, &packed);
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.p50_us.to_bits(), b.p50_us.to_bits());
+        assert_eq!(a.ib_bytes.to_bits(), b.ib_bytes.to_bits());
+        assert_eq!(a.histogram, b.histogram);
+    }
+}

@@ -139,11 +139,17 @@ pub struct MoeCounters {
     /// the CF-nominal capacity — only dropless can violate, that's the
     /// dynamic-shape overflow the capacity policies trade against.
     pub capacity_violations: usize,
-    /// Sum over steps of the normalized global-load entropy.
+    /// Sum over balance-carrying steps of the normalized global-load
+    /// entropy. Steps whose global load was all-zero (every copy dropped,
+    /// or an empty decode microstep) yield the [`LoadStats`] NaN sentinel
+    /// and are excluded — they carry no balance information.
     pub entropy_sum: f64,
-    /// Sum over steps of global max/mean load imbalance.
+    /// Sum over balance-carrying steps of global max/mean load imbalance.
     pub imbalance_sum: f64,
     pub steps: usize,
+    /// Steps that contributed to `entropy_sum`/`imbalance_sum` (non-empty
+    /// global load). The balance means divide by this, not `steps`.
+    pub balance_steps: usize,
 }
 
 /// Configuration of the trainer's CP-sharded attention forward.
@@ -486,8 +492,11 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
                 let nominal = router.capacity_for(n) * world;
                 counters.capacity_violations += global.iter().filter(|&&l| l > nominal).count();
                 let ls = LoadStats::from_load(&global);
-                counters.entropy_sum += ls.entropy;
-                counters.imbalance_sum += ls.imbalance;
+                if !ls.is_empty() {
+                    counters.entropy_sum += ls.entropy;
+                    counters.imbalance_sum += ls.imbalance;
+                    counters.balance_steps += 1;
+                }
                 counters.steps += 1;
                 router.update_bias(&global);
             }
@@ -624,7 +633,9 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         match moe_counters {
             Some(c) => {
                 let total = (c.tokens_routed + c.tokens_dropped).max(1);
-                let steps = c.steps.max(1) as f64;
+                // Balance means divide by the steps that actually carried
+                // load — all-zero steps are NaN sentinels and were skipped.
+                let steps = c.balance_steps.max(1) as f64;
                 (
                     Some(c.tokens_dropped as f64 / total as f64),
                     Some(c.capacity_violations),

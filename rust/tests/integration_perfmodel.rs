@@ -99,9 +99,16 @@ fn context_scaling_moderate_drop() {
         .best.map(|e| e.mfu).unwrap();
     assert!(long > 0.55 * short, "128K {long:.3} vs 16K {short:.3}");
     // And folding beats coupled MCore at long context (the CP-folding win).
-    let long_mcore = tune(&pm, &m, 1024, &TrainConfig::paper_default(131072, 128), Strategy::MCore)
-        .best.map(|e| e.mfu).unwrap_or(0.0);
-    assert!(long >= long_mcore);
+    // An infeasible MCore tune is a pass of this claim in itself, not a
+    // fake 0.0-MFU baseline (ISSUE 10: infeasible != 0.0).
+    if let Some(long_mcore) = tune(
+        &pm, &m, 1024, &TrainConfig::paper_default(131072, 128), Strategy::MCore,
+    )
+    .best
+    .map(|e| e.mfu)
+    {
+        assert!(long >= long_mcore, "folded {long:.3} < mcore {long_mcore:.3}");
+    }
 }
 
 /// Table 2 shape: FP8 gives 1.15-1.45x over BF16, and folding still helps
